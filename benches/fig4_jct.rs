@@ -1,0 +1,41 @@
+//! Bench for Fig 4: end-to-end experiment runtime per (edges, method),
+//! plus the regenerated JCT series (emulation profile, VGG-16).
+//!
+//! `cargo bench --bench fig4_jct` (set SROLE_BENCH_FAST=1 for smoke runs).
+
+use srole::config::ExperimentConfig;
+use srole::coordinator::{Experiment, Method};
+use srole::dnn::ModelKind;
+use srole::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new("fig4: JCT vs #edges (vgg16, emulation)");
+    let mut rows = Vec::new();
+    for edges in [5usize, 15, 25] {
+        let cfg = ExperimentConfig {
+            model: ModelKind::Vgg16,
+            n_edges: edges,
+            repetitions: 1,
+            ..Default::default()
+        };
+        let exp = Experiment::new(cfg);
+        let mut vals = Vec::new();
+        for m in Method::ALL {
+            let name = format!("edges{edges}/{}", m.name());
+            let mut med = 0.0;
+            bench.measure(&name, || {
+                med = exp.run_once(m, 1).jct_summary().median;
+                med
+            });
+            vals.push(med);
+        }
+        rows.push((edges.to_string(), vals));
+    }
+    bench.print_report();
+    Bench::report_series(
+        "fig4 series: JCT median [s]",
+        "edges",
+        &["RL", "MARL", "SROLE-C", "SROLE-D"],
+        &rows,
+    );
+}

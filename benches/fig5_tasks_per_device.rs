@@ -1,0 +1,38 @@
+//! Bench for Fig 5: tasks-per-device sweep over workload levels.
+
+use srole::config::ExperimentConfig;
+use srole::coordinator::{Experiment, Method};
+use srole::dnn::ModelKind;
+use srole::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new("fig5: tasks/device vs workload (vgg16)");
+    let mut rows = Vec::new();
+    for w in [0.6, 0.8, 1.0] {
+        let cfg = ExperimentConfig {
+            model: ModelKind::Vgg16,
+            workload: w,
+            repetitions: 1,
+            ..Default::default()
+        };
+        let exp = Experiment::new(cfg);
+        let mut vals = Vec::new();
+        for m in Method::ALL {
+            let name = format!("w{:.0}%/{}", w * 100.0, m.name());
+            let mut med = 0.0;
+            bench.measure(&name, || {
+                med = exp.run_once(m, 1).tasks_summary().map(|s| s.median).unwrap_or(0.0);
+                med
+            });
+            vals.push(med);
+        }
+        rows.push((format!("{:.0}%", w * 100.0), vals));
+    }
+    bench.print_report();
+    Bench::report_series(
+        "fig5 series: tasks/device median",
+        "workload",
+        &["RL", "MARL", "SROLE-C", "SROLE-D"],
+        &rows,
+    );
+}

@@ -1,0 +1,35 @@
+//! Bench for Fig 6: per-resource utilization medians at 25 edges / 100%.
+
+use srole::config::ExperimentConfig;
+use srole::coordinator::{Experiment, Method};
+use srole::dnn::ModelKind;
+use srole::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new("fig6: utilization (vgg16, emulation)");
+    let cfg = ExperimentConfig { model: ModelKind::Vgg16, repetitions: 1, ..Default::default() };
+    let exp = Experiment::new(cfg);
+    let mut per_method = Vec::new();
+    for m in Method::ALL {
+        let mut metrics = None;
+        bench.measure(m.name(), || {
+            metrics = Some(exp.run_once(m, 1));
+        });
+        per_method.push(metrics.unwrap());
+    }
+    bench.print_report();
+    let mut rows = Vec::new();
+    for res in ["cpu", "mem", "bw"] {
+        let vals: Vec<f64> = per_method
+            .iter()
+            .map(|r| r.util_summary(res).map(|s| s.median).unwrap_or(0.0))
+            .collect();
+        rows.push((res.to_string(), vals));
+    }
+    Bench::report_series(
+        "fig6 series: utilization median",
+        "resource",
+        &["RL", "MARL", "SROLE-C", "SROLE-D"],
+        &rows,
+    );
+}

@@ -1,0 +1,35 @@
+//! Bench for Fig 7: per-job decision overhead (scheduling + shielding)
+//! per method.  The paper's expected ordering is
+//! MARL < SROLE-D < SROLE-C < RL for the total.
+
+use srole::config::ExperimentConfig;
+use srole::coordinator::{Experiment, Method};
+use srole::dnn::ModelKind;
+use srole::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new("fig7: decision overhead (vgg16, emulation)");
+    let cfg = ExperimentConfig { model: ModelKind::Vgg16, repetitions: 1, ..Default::default() };
+    let exp = Experiment::new(cfg);
+    let mut rows = Vec::new();
+    let mut sched = Vec::new();
+    let mut shield = Vec::new();
+    for m in Method::ALL {
+        let mut r = None;
+        bench.measure(m.name(), || {
+            r = Some(exp.run_once(m, 1));
+        });
+        let r = r.unwrap();
+        sched.push(r.mean_sched_secs());
+        shield.push(r.mean_shield_secs());
+    }
+    bench.print_report();
+    rows.push(("scheduling".to_string(), sched));
+    rows.push(("shielding".to_string(), shield));
+    Bench::report_series(
+        "fig7 series: overhead [s]",
+        "component",
+        &["RL", "MARL", "SROLE-C", "SROLE-D"],
+        &rows,
+    );
+}

@@ -1,0 +1,34 @@
+//! Bench for Fig 8: action collisions vs the shield penalty κ.
+//! Shielded methods must trend down as |κ| grows; RL/MARL stay flat.
+
+use srole::config::ExperimentConfig;
+use srole::coordinator::{Experiment, Method};
+use srole::dnn::ModelKind;
+use srole::util::benchkit::Bench;
+
+fn main() {
+    let mut bench = Bench::new("fig8: collisions vs kappa (vgg16)");
+    let mut rows = Vec::new();
+    for kappa in [25.0, 100.0, 200.0] {
+        let mut cfg =
+            ExperimentConfig { model: ModelKind::Vgg16, repetitions: 1, ..Default::default() };
+        cfg.reward.kappa = kappa;
+        let exp = Experiment::new(cfg);
+        let mut vals = Vec::new();
+        for m in Method::ALL {
+            let mut coll = 0usize;
+            bench.measure(&format!("k{kappa:.0}/{}", m.name()), || {
+                coll = exp.run_once(m, 1).collisions;
+            });
+            vals.push(coll as f64);
+        }
+        rows.push((format!("{kappa:.0}"), vals));
+    }
+    bench.print_report();
+    Bench::report_series(
+        "fig8 series: action collisions",
+        "kappa",
+        &["RL", "MARL", "SROLE-C", "SROLE-D"],
+        &rows,
+    );
+}

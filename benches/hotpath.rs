@@ -1,0 +1,84 @@
+//! Hot-path micro-benchmarks (the §Perf targets in EXPERIMENTS.md):
+//!
+//! * Algorithm-1 shield check throughput (actions/sec);
+//! * DES execution throughput (events/sec proxy: jobs×iterations/sec);
+//! * MARL wave decision latency (full wave, 3 jobs × 21 layers);
+//! * PJRT `qnet_fwd` action-scoring latency (the DQN request path),
+//!   skipped when artifacts are absent.
+
+use srole::cluster::{Deployment, Resources, CONTAINER_PROFILE};
+use srole::config::ExperimentConfig;
+use srole::coordinator::pretrain;
+use srole::dnn::ModelKind;
+use srole::rl::{RewardParams, TabularQ};
+use srole::sched::marl_wave;
+use srole::shield::{CentralShield, ProposedAction, Shield};
+use srole::sim::{Executor, ResourceState};
+use srole::util::benchkit::Bench;
+use srole::util::Rng;
+use srole::workload::{Workload, WorkloadSpec};
+
+fn main() {
+    let mut bench = Bench::new("hotpath");
+    let mut rng = Rng::new(1);
+    let dep = Deployment::generate(&mut rng, 25, 5, &CONTAINER_PROFILE);
+    let graph = ModelKind::Vgg16.build();
+    let params = RewardParams::default();
+
+    // --- shield check throughput
+    let state = ResourceState::new(&dep);
+    let members = dep.clusters[0].members.clone();
+    let proposals: Vec<ProposedAction> = (0..64)
+        .map(|i| ProposedAction {
+            idx: i,
+            agent: members[i % members.len()],
+            job: i % 3,
+            layer_id: i % graph.n_layers(),
+            demand: Resources { cpu: 0.05 + 0.01 * (i % 7) as f64, mem: 60.0, bw: 1.0 },
+            target: members[(i * 7) % members.len()],
+        })
+        .collect();
+    let thr = bench.measure_throughput("shield_check_64_actions", proposals.len(), || {
+        let mut shield = CentralShield::new();
+        shield.check(&proposals, &state, &dep, params.alpha)
+    });
+    println!("shield throughput: {thr:.0} actions/sec");
+
+    // --- MARL wave decision latency (pretrained policy)
+    let cfg = ExperimentConfig { model: ModelKind::Vgg16, pretrain_episodes: 50, ..Default::default() };
+    let mut policy = TabularQ::new(cfg.lr, cfg.epsilon);
+    pretrain(&mut policy, &cfg, &mut rng.fork(1));
+    let spec = WorkloadSpec { model: ModelKind::Vgg16, ..Default::default() };
+    let wl = Workload::generate(&mut rng, &dep, &spec, 100_000.0);
+    let jobs: Vec<_> = wl.dl_jobs.iter().filter(|j| j.cluster == 0).cloned().collect();
+    bench.measure("marl_wave_3jobs_vgg16", || {
+        let mut st = ResourceState::new(&dep);
+        marl_wave(&dep, &mut st, &graph, &jobs, &mut policy, None, &params, 3, &mut rng)
+    });
+
+    // --- DES execution throughput
+    let iters_total: usize = jobs.iter().map(|j| j.iterations).sum();
+    let thr = bench.measure_throughput("des_execute_3jobs_50iters", iters_total, || {
+        let mut st = ResourceState::new(&dep);
+        let out = marl_wave(
+            &dep, &mut st, &graph, &jobs, &mut policy, None, &params, 3, &mut rng.fork(2),
+        );
+        let mut schedules = out.schedules;
+        let exec = Executor::new(&dep, &wl, &graph, params.alpha);
+        exec.run(&mut st, &mut schedules)
+    });
+    println!("DES throughput: {thr:.0} job-iterations/sec");
+
+    // --- PJRT qnet forward latency (request path of the DQN policy)
+    let dir = srole::runtime::Engine::default_dir();
+    if dir.join("manifest.json").exists() {
+        let mut engine = srole::runtime::Engine::open(&dir).expect("open engine");
+        let mut q = srole::runtime::qnet::QNetSession::new(&mut engine, 0).expect("qnet");
+        let state_vec = vec![0.2f32; q.state_dim];
+        bench.measure("pjrt_qnet_fwd", || q.fwd(&state_vec).unwrap());
+    } else {
+        eprintln!("skipping pjrt_qnet_fwd: no artifacts (run `make artifacts`)");
+    }
+
+    bench.print_report();
+}

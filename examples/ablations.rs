@@ -1,0 +1,95 @@
+//! Ablations over the design knobs DESIGN.md calls out:
+//!
+//! * α (overload threshold) — how aggressive may packing be;
+//! * sub-cluster count k — SROLE-D's shielding-cost/missed-collision
+//!   trade-off;
+//! * state-refresh staleness — how stale agent views drive collisions.
+//!
+//! Run: `cargo run --release --example ablations`
+
+use srole::config::ExperimentConfig;
+use srole::coordinator::{Experiment, Method};
+use srole::dnn::ModelKind;
+use srole::util::table::{f, Table};
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig {
+        model: ModelKind::Vgg16,
+        repetitions: 2,
+        iterations: 25,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    // --- alpha sweep (SROLE-C): looser alpha packs harder but overloads.
+    let mut t = Table::new(
+        "ablation: overload threshold α (SROLE-C, vgg16)",
+        &["alpha", "jct_median_s", "collisions", "corrections"],
+    );
+    for alpha in [0.7, 0.8, 0.9, 0.95] {
+        let mut cfg = base();
+        cfg.reward.alpha = alpha;
+        let r = Experiment::new(cfg).run(Method::SroleC);
+        t.row(vec![
+            format!("{alpha:.2}"),
+            f(r.metrics.jct_summary().median),
+            r.metrics.collisions.to_string(),
+            r.metrics.shield_corrections.to_string(),
+        ]);
+    }
+    t.print();
+
+    // --- sub-cluster count (SROLE-D): more shields = more parallel
+    // checking but more boundary misses.
+    let mut t = Table::new(
+        "ablation: sub-clusters k (SROLE-D, vgg16)",
+        &["k", "jct_median_s", "collisions", "shield_s"],
+    );
+    for k in [1usize, 2, 3, 4] {
+        let mut cfg = base();
+        cfg.subclusters = k;
+        let r = Experiment::new(cfg).run(Method::SroleD);
+        t.row(vec![
+            k.to_string(),
+            f(r.metrics.jct_summary().median),
+            r.metrics.collisions.to_string(),
+            format!("{:.3}", r.metrics.mean_shield_secs()),
+        ]);
+    }
+    t.print();
+
+    // --- view staleness (MARL): stale views are the collision engine.
+    let mut t = Table::new(
+        "ablation: state-refresh staleness (MARL, vgg16)",
+        &["refresh_rounds", "jct_median_s", "collisions"],
+    );
+    for rr in [1usize, 3, 6, 12] {
+        let mut cfg = base();
+        cfg.refresh_rounds = rr;
+        let r = Experiment::new(cfg).run(Method::Marl);
+        t.row(vec![
+            rr.to_string(),
+            f(r.metrics.jct_summary().median),
+            r.metrics.collisions.to_string(),
+        ]);
+    }
+    t.print();
+
+    // --- pretraining budget: how much offline RL the agents need.
+    let mut t = Table::new(
+        "ablation: pretraining episodes (SROLE-C, vgg16)",
+        &["episodes", "jct_median_s", "collisions"],
+    );
+    for ep in [0usize, 50, 300, 1000] {
+        let mut cfg = base();
+        cfg.pretrain_episodes = ep;
+        let r = Experiment::new(cfg).run(Method::SroleC);
+        t.row(vec![
+            ep.to_string(),
+            f(r.metrics.jct_summary().median),
+            r.metrics.collisions.to_string(),
+        ]);
+    }
+    t.print();
+}

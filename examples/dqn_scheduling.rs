@@ -1,0 +1,86 @@
+//! DQN-policy scheduling: the MARL agents score placements with the
+//! AOT-compiled Q-network through PJRT (`qnet_fwd`) and keep training it
+//! online (`qnet_train`) from the realized training times — the paper's
+//! "the RL is initially pre-trained ... and keeps training the RL model",
+//! with the RL itself on the Rust request path.
+//!
+//! Run: `make artifacts && cargo run --release --example dqn_scheduling`
+
+use srole::cluster::{Deployment, CONTAINER_PROFILE};
+use srole::dnn::ModelKind;
+use srole::rl::dqn::DqnPolicy;
+use srole::rl::RewardParams;
+use srole::runtime::Engine;
+use srole::sched::marl_wave;
+use srole::shield::{CentralShield, Shield};
+use srole::sim::{Executor, ResourceState};
+use srole::util::table::Table;
+use srole::util::Rng;
+use srole::workload::{Workload, WorkloadSpec};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("artifacts not built — run `make artifacts` first");
+    }
+    let mut engine = Engine::open(&dir)?;
+    println!("PJRT platform: {}", engine.platform());
+    let mut policy = DqnPolicy::new(&mut engine, 42)?;
+    policy.epsilon = 0.15;
+
+    let mut rng = Rng::new(9);
+    let dep = Deployment::generate(&mut rng, 10, 5, &CONTAINER_PROFILE);
+    let graph = ModelKind::GoogleNet.build();
+    let params = RewardParams::default();
+
+    // Several scheduling waves; the policy trains between them through
+    // qnet_train, so later waves should collide less / finish faster.
+    let mut t = Table::new(
+        "DQN-over-PJRT scheduling (GoogleNet, SROLE-C, 5 waves)",
+        &["wave", "collisions", "corrections", "jct_mean_s"],
+    );
+    for wave in 0..5 {
+        let spec = WorkloadSpec { model: ModelKind::GoogleNet, iterations: 10, ..Default::default() };
+        let wl = Workload::generate(&mut rng, &dep, &spec, 100_000.0);
+        let jobs: Vec<_> = wl.dl_jobs.iter().filter(|j| j.cluster == 0).cloned().collect();
+        let mut state = ResourceState::new(&dep);
+        let pre = srole::sim::engine::place_initial_background(&mut state, &wl);
+        let mut shield = CentralShield::new();
+        let out = marl_wave(
+            &dep,
+            &mut state,
+            &graph,
+            &jobs,
+            &mut policy,
+            Some(&mut shield as &mut dyn Shield),
+            &params,
+            3,
+            &mut rng,
+        );
+        let mut schedules = out.schedules;
+        let exec = Executor::new(&dep, &wl, &graph, params.alpha);
+        let report = exec.run_with_background(&mut state, &mut schedules, pre);
+        // Online learning: each finished job closes its episode (TD
+        // mini-batches through the qnet_train artifact).
+        let mut jct_sum = 0.0;
+        for s in &schedules {
+            if let Some(j) = report.jobs.iter().find(|j| j.job_id == s.job.id) {
+                use srole::rl::Policy as _;
+                policy.learn(&s.episode, j.train_secs, &params);
+                jct_sum += j.train_secs;
+            }
+        }
+        t.row(vec![
+            wave.to_string(),
+            out.collisions.to_string(),
+            out.shield_corrections.to_string(),
+            format!("{:.0}", jct_sum / jobs.len() as f64),
+        ]);
+    }
+    t.print();
+    println!("policy: {} (Q-network executed via PJRT on every decision)", {
+        use srole::rl::Policy as _;
+        policy.name()
+    });
+    Ok(())
+}

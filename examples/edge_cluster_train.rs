@@ -1,0 +1,105 @@
+//! End-to-end driver: the full three-layer stack on one workload.
+//!
+//! 1. SROLE-C schedules a transformer-LM training job onto a simulated
+//!    5-node edge cluster (L3 coordination, paper's contribution);
+//! 2. the emulated cluster then *actually trains* the transformer with
+//!    the parameter-server strategy: one worker thread per edge node
+//!    hosting partitions, each executing the AOT-compiled `lm_grad`
+//!    artifact through PJRT (L2 JAX graph, L1 Pallas kernels inside) on
+//!    its own synthetic data shard, gradients averaged by the Rust PS;
+//! 3. the loss curve is printed — it falls from ~ln(512) toward the
+//!    entropy of the synthetic cyclic corpus, proving all layers compose.
+//!
+//! Run: `make artifacts && cargo run --release --example edge_cluster_train`
+//! (Pallas kernels run in interpret mode on CPU, so a step takes a few
+//! seconds; pass `--steps N` to shorten.)
+
+use srole::cluster::{Deployment, CONTAINER_PROFILE};
+use srole::dnn::ModelKind;
+use srole::emu::{train_data_parallel, PsConfig};
+use srole::rl::{RewardParams, TabularQ};
+use srole::runtime::Engine;
+use srole::sched::marl_wave;
+use srole::shield::{CentralShield, Shield};
+use srole::sim::ResourceState;
+use srole::util::table::Table;
+use srole::util::Rng;
+use srole::workload::DlJob;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps = args
+        .iter()
+        .position(|a| a == "--steps")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40usize);
+
+    // ---- Phase 1: SROLE-C schedules the job on the simulated cluster.
+    let mut rng = Rng::new(7);
+    let dep = Deployment::generate(&mut rng, 5, 5, &CONTAINER_PROFILE);
+    let graph = ModelKind::TransformerLm.build();
+    let job = DlJob {
+        id: 0,
+        cluster: 0,
+        owner: 1,
+        model: ModelKind::TransformerLm,
+        arrival: 0.0,
+        iterations: steps,
+    };
+    let mut state = ResourceState::new(&dep);
+    let mut policy = TabularQ::new(0.15, 0.1);
+    let mut shield = CentralShield::new();
+    let out = marl_wave(
+        &dep,
+        &mut state,
+        &graph,
+        &[job],
+        &mut policy,
+        Some(&mut shield as &mut dyn Shield),
+        &RewardParams::default(),
+        3,
+        &mut rng,
+    );
+    let sched = &out.schedules[0];
+    let mut hosts: Vec<usize> = sched.placement.clone();
+    hosts.sort_unstable();
+    hosts.dedup();
+    println!(
+        "SROLE-C placed {} transformer partitions on nodes {:?} (decision {:.3}s, {} collisions)",
+        graph.n_layers(),
+        hosts,
+        sched.decision_secs,
+        out.collisions
+    );
+
+    // ---- Phase 2: real data-parallel training across the hosting nodes.
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("artifacts not built — run `make artifacts` first");
+    }
+    let workers = hosts.len().clamp(2, 4);
+    println!("spawning {workers} worker threads (one per hosting edge node), PS on the cluster head");
+    let cfg = PsConfig { workers, steps, lr: 0.5, seed: 7, log_every: 5 };
+    let logs = train_data_parallel(&dir, &cfg)?;
+
+    let mut t = Table::new("transformer LM loss curve (real PJRT training)", &["step", "loss", "wall_ms/step"]);
+    for l in &logs {
+        t.row(vec![l.step.to_string(), format!("{:.4}", l.loss), format!("{:.0}", l.wall_ms)]);
+    }
+    t.print();
+
+    let first = logs.first().map(|l| l.loss).unwrap_or(f32::NAN);
+    let last = logs.last().map(|l| l.loss).unwrap_or(f32::NAN);
+    println!(
+        "loss {first:.3} -> {last:.3} over {steps} steps ({} workers, ln(512)={:.3})",
+        workers,
+        (512f32).ln()
+    );
+    if last < 0.8 * first {
+        println!("OK: the distributed training demonstrably learns.");
+    } else {
+        println!("WARNING: loss did not fall by 20% — increase --steps.");
+    }
+    Ok(())
+}

@@ -1,0 +1,206 @@
+"""AOT lowering: JAX/Pallas (L1+L2) -> HLO text artifacts for the Rust runtime.
+
+Run once by `make artifacts`; Python never runs on the request path.
+
+Interchange format is HLO *text*, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all lowered with return_tuple=True; Rust unwraps tuples):
+
+  qnet_init      (seed i32[])                              -> 6 qnet params
+  qnet_fwd       (6 params, states f32[B,36])              -> qvalues f32[B,11]
+  qnet_train     (6 params, 6 target params, batch, lr, gamma)
+                                                           -> 6 params', loss
+  lm_init        (seed i32[])                              -> 14 LM params
+  lm_grad        (14 params, tokens i32[B,T+1])            -> 14 grads, loss
+  lm_update      (14 params, 14 grads, lr f32[])           -> 14 params'
+  lm_eval        (14 params, tokens i32[B,T+1])            -> loss
+
+`artifacts/manifest.json` records, for every artifact, the ordered input
+and output names/shapes/dtypes plus model hyper-parameters, so the Rust
+side can bind buffers positionally without guessing.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32, I32 = jnp.float32, jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_name(d) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(d).name]
+
+
+def _io_entry(names, specs):
+    return [
+        {"name": n, "shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+        for n, s in zip(names, specs)
+    ]
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": {}, "meta": {}}
+
+    def emit(self, name, fn, in_names, in_specs, out_names, out_specs):
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": _io_entry(in_names, in_specs),
+            "outputs": _io_entry(out_names, out_specs),
+        }
+        print(f"  {name}: {len(text)} chars, {len(in_specs)} in, {len(out_specs)} out")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1, sort_keys=True)
+        print(f"  manifest: {path}")
+
+
+def build_qnet(b: Builder, batch: int):
+    pn = list(M.QNET_PARAM_NAMES)
+    ps = [spec(s) for s in M.QNET_PARAM_SHAPES]
+    b.manifest["meta"]["qnet"] = {
+        "state_dim": M.STATE_DIM,
+        "num_actions": M.NUM_ACTIONS,
+        "max_neighbors": M.MAX_NEIGHBORS,
+        "hidden": M.QNET_HIDDEN,
+        "train_batch": batch,
+    }
+
+    b.emit("qnet_init", M.qnet_init, ["seed"], [spec((), I32)], pn, ps)
+
+    # Action selection runs per agent decision; B=1 keeps latency minimal.
+    b.emit(
+        "qnet_fwd",
+        M.qnet_fwd,
+        pn + ["states"],
+        ps + [spec((1, M.STATE_DIM))],
+        ["qvalues"],
+        [spec((1, M.NUM_ACTIONS))],
+    )
+
+    batch_in = [
+        ("s", spec((batch, M.STATE_DIM))),
+        ("a", spec((batch,), I32)),
+        ("r", spec((batch,))),
+        ("s2", spec((batch, M.STATE_DIM))),
+        ("done", spec((batch,))),
+        ("lr", spec(())),
+        ("gamma", spec(())),
+    ]
+    b.emit(
+        "qnet_train",
+        M.qnet_train,
+        pn + ["t_" + n for n in pn] + [n for n, _ in batch_in],
+        ps + ps + [s for _, s in batch_in],
+        pn + ["loss"],
+        ps + [spec(())],
+    )
+
+
+def build_lm(b: Builder, cfg: M.LmConfig, batch: int):
+    pn = list(M.LM_PARAM_NAMES)
+    ps = [spec(s) for s in M.lm_param_shapes(cfg)]
+    gn = ["d_" + n for n in pn]
+    tok = spec((batch, cfg.seq + 1), I32)
+    b.manifest["meta"]["lm"] = {
+        "vocab": cfg.vocab,
+        "seq": cfg.seq,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "batch": batch,
+        "param_count": M.lm_param_count(cfg),
+    }
+
+    b.emit("lm_init", lambda seed: M.lm_init(seed, cfg), ["seed"], [spec((), I32)], pn, ps)
+    b.emit(
+        "lm_grad",
+        lambda *a: M.lm_grad(*a, cfg=cfg),
+        pn + ["tokens"],
+        ps + [tok],
+        gn + ["loss"],
+        ps + [spec(())],
+    )
+    b.emit(
+        "lm_update",
+        M.lm_update,
+        pn + gn + ["lr"],
+        ps + ps + [spec(())],
+        pn,
+        ps,
+    )
+    b.emit(
+        "lm_eval",
+        lambda *a: M.lm_eval_loss(*a, cfg=cfg),
+        pn + ["tokens"],
+        ps + [tok],
+        ["loss"],
+        [spec(())],
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land in its directory")
+    ap.add_argument("--qnet-batch", type=int, default=32)
+    ap.add_argument("--lm-batch", type=int, default=8)
+    ap.add_argument("--lm-vocab", type=int, default=512)
+    ap.add_argument("--lm-seq", type=int, default=64)
+    ap.add_argument("--lm-dmodel", type=int, default=128)
+    ap.add_argument("--lm-layers", type=int, default=2)
+    ap.add_argument("--lm-heads", type=int, default=4)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+    b = Builder(out_dir)
+
+    print("lowering qnet artifacts ...")
+    build_qnet(b, args.qnet_batch)
+    cfg = M.LmConfig(
+        vocab=args.lm_vocab,
+        seq=args.lm_seq,
+        d_model=args.lm_dmodel,
+        n_layers=args.lm_layers,
+        n_heads=args.lm_heads,
+        d_ff=4 * args.lm_dmodel,
+    )
+    print(f"lowering lm artifacts ({M.lm_param_count(cfg)} params) ...")
+    build_lm(b, cfg, args.lm_batch)
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Fused causal attention as a Pallas kernel, with a recompute-based
+backward kernel (flash-attention style: probabilities are never stored
+between forward and backward).
+
+One grid program per (batch, head): load that head's q/k/v [T, Dh] into
+VMEM, compute the full [T, T] score block on the MXU, apply the causal
+mask and a numerically-stable softmax in-register, and write the [T, Dh]
+context block back.  For edge-scale sequence lengths (T <= 256) the whole
+head fits in VMEM, so no K/V streaming loop is needed — the BlockSpec
+grid expresses the HBM->VMEM schedule directly.
+
+Backward (one program per (batch, head), recomputes the softmax):
+
+    p  = softmax(mask(q k^T * scale))
+    dv = p^T do
+    dp = do v^T
+    ds = p * (dp - rowsum(dp * p))
+    dq = ds k * scale;  dk = ds^T q * scale
+
+interpret=True for CPU-PJRT execution; see fused_dense.py for the
+hardware-adaptation note.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_scores(q, k, causal: bool, scale: float):
+    t = q.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+        scores = jnp.where(rows >= cols, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool, scale: float):
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    p = _softmax_scores(q, k, causal, scale)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def _bwd_kernel(
+    q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref, *, causal: bool, scale: float
+):
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    p = _softmax_scores(q, k, causal, scale)
+    dv = jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq_ref[0] = (jnp.dot(ds, k, preferred_element_type=jnp.float32) * scale).astype(
+        dq_ref.dtype
+    )
+    dk_ref[0] = (jnp.dot(ds.T, q, preferred_element_type=jnp.float32) * scale).astype(
+        dk_ref.dtype
+    )
+    dv_ref[0] = dv.astype(dv_ref.dtype)
+
+
+def _flat_call(kernel, n_out, bh, t, dh, dtype, *args):
+    spec = pl.BlockSpec((1, t, dh), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[spec] * len(args),
+        out_specs=[spec] * n_out if n_out > 1 else spec,
+        out_shape=(
+            [jax.ShapeDtypeStruct((bh, t, dh), dtype)] * n_out
+            if n_out > 1
+            else jax.ShapeDtypeStruct((bh, t, dh), dtype)
+        ),
+        interpret=True,
+    )(*args)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _attention(q, k, v, causal):
+    return _attention_fwd(q, k, v, causal)[0]
+
+
+def _attention_fwd(q, k, v, causal):
+    b, h, t, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    flat = lambda a: a.reshape(b * h, t, dh)
+    out = _flat_call(
+        functools.partial(_fwd_kernel, causal=causal, scale=scale),
+        1, b * h, t, dh, q.dtype, flat(q), flat(k), flat(v),
+    )
+    return out.reshape(b, h, t, dh), (q, k, v)
+
+
+def _attention_bwd(causal, res, dout):
+    q, k, v = res
+    b, h, t, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    flat = lambda a: a.reshape(b * h, t, dh)
+    dq, dk, dv = _flat_call(
+        functools.partial(_bwd_kernel, causal=causal, scale=scale),
+        3, b * h, t, dh, q.dtype, flat(q), flat(k), flat(v), flat(dout),
+    )
+    unflat = lambda a: a.reshape(b, h, t, dh)
+    return unflat(dq), unflat(dk), unflat(dv)
+
+
+_attention.defvjp(lambda q, k, v, causal: _attention_fwd(q, k, v, causal), _attention_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def attention(q, k, v, causal: bool = True):
+    """Scaled dot-product attention.  q,k,v: [B, H, T, Dh] -> [B, H, T, Dh]."""
+    b, h, t, dh = q.shape
+    assert k.shape == (b, h, t, dh) and v.shape == (b, h, t, dh)
+    return _attention(q, k, v, causal)

@@ -1,0 +1,157 @@
+"""Fused dense layer as a Pallas kernel: y = act(x @ w + b), with a
+hand-written VJP whose backward matmuls are Pallas kernels as well.
+
+This is the MLP hot-spot of both the Q-network (L2 `qnet_*`) and the
+transformer feed-forward block.  The kernel is written TPU-shaped:
+
+  * the grid tiles the output into (bm, bn) blocks sized for the MXU
+    (128x128 by default, clamped to the problem size);
+  * each program loads an (bm, K) strip of x and a (K, bn) strip of w
+    into VMEM, runs one MXU matmul with fp32 accumulation, fuses the
+    bias add and activation in-register, and writes one output block;
+  * inputs are padded to block multiples in the wrapper so the kernel
+    never reads out of bounds (zero padding is exact for matmul).
+
+pallas_call does not support reverse-mode autodiff, so `fused_dense`
+carries a custom_vjp: the forward saves (x, w, z) with z the
+pre-activation, and the backward computes
+
+    dz = dy * act'(z);  dx = dz @ w^T;  dw = x^T @ dz;  db = sum(dz)
+
+where both backward matmuls reuse the same tiled kernel.
+
+On this CPU testbed kernels execute with interpret=True (Mosaic
+custom-calls cannot run on the CPU PJRT plugin); the BlockSpec structure
+is still what a real TPU lowering would use — see DESIGN.md §8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _act(z, activation: str):
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "gelu":
+        return 0.5 * z * (1.0 + jnp.tanh(0.7978845608028654 * (z + 0.044715 * z**3)))
+    if activation == "none":
+        return z
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _act_grad(z, activation: str):
+    """d act(z) / dz, elementwise."""
+    if activation == "relu":
+        return (z > 0.0).astype(z.dtype)
+    if activation == "gelu":
+        c = 0.7978845608028654
+        u = c * (z + 0.044715 * z**3)
+        th = jnp.tanh(u)
+        du = c * (1.0 + 3 * 0.044715 * z * z)
+        return 0.5 * (1.0 + th) + 0.5 * z * (1.0 - th * th) * du
+    if activation == "none":
+        return jnp.ones_like(z)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, z_ref):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    z_ref[...] = (acc + b_ref[...].astype(jnp.float32)).astype(z_ref.dtype)
+
+
+def _pad_to(a, axis, mult):
+    rem = (-a.shape[axis]) % mult
+    if rem == 0:
+        return a
+    pads = [(0, 0)] * a.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(a, pads)
+
+
+def _block(m, n, block_m, block_n):
+    return (min(block_m, m) if m > 0 else 1, min(block_n, n) if n > 0 else 1)
+
+
+def matmul(x, w, block_m: int = 128, block_n: int = 128):
+    """Tiled Pallas matmul x[M,K] @ w[K,N] (no bias / activation)."""
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn = _block(m, n, block_m, block_n)
+    xp, wp = _pad_to(x, 0, bm), _pad_to(w, 1, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+def _dense_pre(x, w, b, block_m: int = 128, block_n: int = 128):
+    """z = x @ w + b (pre-activation), tiled."""
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn = _block(m, n, block_m, block_n)
+    xp, wp, bp = _pad_to(x, 0, bm), _pad_to(w, 1, bn), _pad_to(b, 0, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    z = pl.pallas_call(
+        _dense_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return z[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _dense(x, w, b, activation):
+    return _act(_dense_pre(x, w, b), activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    z = _dense_pre(x, w, b)
+    return _act(z, activation), (x, w, z)
+
+
+def _dense_bwd(activation, res, dy):
+    x, w, z = res
+    dz = (dy * _act_grad(z, activation)).astype(dy.dtype)
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+_dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("activation",))
+def fused_dense(x, w, b, activation: str = "none"):
+    """act(x @ w + b) with a VMEM-tiled Pallas matmul and custom VJP.
+
+    x: [M, K], w: [K, N], b: [N]  ->  [M, N] (dtype of x).
+    """
+    assert x.shape[1] == w.shape[0], (x.shape, w.shape)
+    assert b.shape == (w.shape[1],), (b.shape, w.shape)
+    return _dense(x, w, b, activation)

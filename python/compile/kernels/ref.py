@@ -1,0 +1,35 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every kernel in this package has an oracle here with the same signature.
+`python/tests/test_kernels.py` sweeps shapes/dtypes with hypothesis and
+asserts allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def dense_ref(x, w, b, activation: str = "none"):
+    """y = act(x @ w + b).  x:[M,K] w:[K,N] b:[N]."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "gelu":
+        # tanh-approximation GELU, matching the kernel.
+        y = 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y**3)))
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y.astype(x.dtype)
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """Scaled dot-product attention.  q,k,v:[B,H,T,Dh] -> [B,H,T,Dh]."""
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        t = q.shape[2]
+        mask = jnp.tril(jnp.ones((t, t), bool))
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), v)
+    return out

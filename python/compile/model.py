@@ -1,0 +1,242 @@
+"""Layer 2: JAX compute graphs, AOT-lowered to HLO for the Rust runtime.
+
+Two model families:
+
+  * Q-network — the function approximator behind the DQN variant of the
+    paper's multi-agent RL scheduler.  Each edge-node agent scores its
+    candidate placements with `qnet_fwd`; the coordinator keeps training
+    the policy online with `qnet_train` (TD update against a target
+    network), exactly as §IV-B prescribes ("keeps training the RL model").
+
+  * Transformer LM — the *DL training job* itself for the end-to-end
+    example: the emulated edge cluster trains this model data-parallel
+    through `lm_grad` (per-worker gradients) + `lm_update` (parameter-
+    server SGD), the JAX analog of the paper's TensorFlow parameter-server
+    strategy.
+
+All functions take and return *flat tuples* of arrays in a fixed,
+documented order (see QNET_PARAM_NAMES / LM_PARAM_NAMES) so the Rust side
+can bind buffers positionally; aot.py records the order in
+artifacts/manifest.json.
+
+Everything here is build-time only: Python never runs on the request path.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import attention
+from .kernels.fused_dense import fused_dense
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Q-network (DQN policy for MARL agents)
+# ---------------------------------------------------------------------------
+
+# State features per agent decision (see rust/src/rl/features.rs, which must
+# stay in sync):  3 layer-demand features + 3 own-utilization features +
+# MAX_NEIGHBORS * 3 candidate features (cpu_avail, mem_avail, bw).
+MAX_NEIGHBORS = 10
+STATE_DIM = 3 + 3 + 3 * MAX_NEIGHBORS  # 36
+NUM_ACTIONS = MAX_NEIGHBORS + 1  # self + up to 10 neighbors
+QNET_HIDDEN = 64
+
+QNET_PARAM_NAMES = ("w1", "b1", "w2", "b2", "w3", "b3")
+QNET_PARAM_SHAPES = (
+    (STATE_DIM, QNET_HIDDEN),
+    (QNET_HIDDEN,),
+    (QNET_HIDDEN, QNET_HIDDEN),
+    (QNET_HIDDEN,),
+    (QNET_HIDDEN, NUM_ACTIONS),
+    (NUM_ACTIONS,),
+)
+
+
+def qnet_init(seed):
+    """seed: i32[] -> 6 param tensors (He-initialized)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in zip(QNET_PARAM_NAMES, QNET_PARAM_SHAPES):
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            fan_in = shape[0]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+            )
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return tuple(params)
+
+
+def qnet_fwd(w1, b1, w2, b2, w3, b3, states, *, use_pallas: bool = True):
+    """states: f32[B, STATE_DIM] -> q-values f32[B, NUM_ACTIONS]."""
+    dense = fused_dense if use_pallas else kref.dense_ref
+    h = dense(states, w1, b1, "relu")
+    h = dense(h, w2, b2, "relu")
+    return dense(h, w3, b3, "none")
+
+
+def _qnet_loss(params, tparams, s, a, r, s2, done, gamma):
+    q = qnet_fwd(*params, s)  # [B, A]
+    qa = jnp.take_along_axis(q, a[:, None], axis=1)[:, 0]
+    q2 = qnet_fwd(*tparams, s2)
+    target = r + gamma * (1.0 - done) * jnp.max(q2, axis=1)
+    target = jax.lax.stop_gradient(target)
+    err = qa - target
+    # Huber loss: robust to the paper's large negative shield rewards.
+    loss = jnp.where(jnp.abs(err) < 1.0, 0.5 * err * err, jnp.abs(err) - 0.5)
+    return jnp.mean(loss)
+
+
+def qnet_train(
+    w1, b1, w2, b2, w3, b3,
+    tw1, tb1, tw2, tb2, tw3, tb3,
+    s, a, r, s2, done, lr, gamma,
+):
+    """One TD step.  Returns (6 updated params..., loss)."""
+    params = (w1, b1, w2, b2, w3, b3)
+    tparams = (tw1, tb1, tw2, tb2, tw3, tb3)
+    loss, grads = jax.value_and_grad(_qnet_loss)(
+        params, tparams, s, a, r, s2, done, gamma
+    )
+    # Global-norm gradient clipping, then plain SGD.
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+    clip = jnp.minimum(1.0, 5.0 / gnorm)
+    new = tuple(p - lr * clip * g for p, g in zip(params, grads))
+    return new + (loss,)
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM (the DL training job for the end-to-end example)
+# ---------------------------------------------------------------------------
+
+
+class LmConfig(NamedTuple):
+    vocab: int = 512
+    seq: int = 64
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 512
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+LM_PARAM_NAMES = (
+    "embed", "pos",
+    "ln1_s", "ln1_b", "wqkv", "wo",
+    "ln2_s", "ln2_b", "w1", "b1", "w2", "b2",
+    "lnf_s", "lnf_b",
+)
+
+
+def lm_param_shapes(cfg: LmConfig):
+    V, T, D, L, F = cfg.vocab, cfg.seq, cfg.d_model, cfg.n_layers, cfg.d_ff
+    return (
+        (V, D), (T, D),
+        (L, D), (L, D), (L, D, 3 * D), (L, D, D),
+        (L, D), (L, D), (L, D, F), (L, F), (L, F, D), (L, D),
+        (D,), (D,),
+    )
+
+
+def lm_param_count(cfg: LmConfig) -> int:
+    return sum(
+        functools.reduce(lambda a, b: a * b, s, 1) for s in lm_param_shapes(cfg)
+    )
+
+
+def lm_init(seed, cfg: LmConfig):
+    """seed: i32[] -> LM params (flat tuple, LM_PARAM_NAMES order)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in zip(LM_PARAM_NAMES, lm_param_shapes(cfg)):
+        key, sub = jax.random.split(key)
+        if name in ("ln1_s", "ln2_s", "lnf_s"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name in ("ln1_b", "ln2_b", "lnf_b", "b1", "b2"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * (0.02 if name in ("embed", "pos") else jnp.sqrt(1.0 / fan_in))
+            )
+    return tuple(params)
+
+
+def _ln(x, s, b):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * s + b
+
+
+def lm_fwd(params, tokens, cfg: LmConfig, *, use_pallas: bool = True):
+    """tokens: i32[B, T] -> logits f32[B, T, V].  Scan over stacked layers."""
+    (embed, pos, ln1_s, ln1_b, wqkv, wo,
+     ln2_s, ln2_b, w1, b1, w2, b2, lnf_s, lnf_b) = params
+    B, T = tokens.shape
+    D, H, Dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    dense = fused_dense if use_pallas else kref.dense_ref
+    attn = attention if use_pallas else kref.attention_ref
+
+    x = embed[tokens] + pos[None, :T, :]
+
+    def layer(x, lp):
+        (l1s, l1b, qkv_w, o_w, l2s, l2b, f1_w, f1_b, f2_w, f2_b) = lp
+        h = _ln(x, l1s, l1b)
+        qkv = dense(h.reshape(B * T, D), qkv_w, jnp.zeros((3 * D,), x.dtype), "none")
+        qkv = qkv.reshape(B, T, 3, H, Dh).transpose(2, 0, 3, 1, 4)  # [3,B,H,T,Dh]
+        ctx = attn(qkv[0], qkv[1], qkv[2], True)  # [B,H,T,Dh]
+        ctx = ctx.transpose(0, 2, 1, 3).reshape(B * T, D)
+        x = x + dense(ctx, o_w, jnp.zeros((D,), x.dtype), "none").reshape(B, T, D)
+        h = _ln(x, l2s, l2b)
+        h = dense(h.reshape(B * T, D), f1_w, f1_b, "gelu")
+        h = dense(h, f2_w, f2_b, "none")
+        x = x + h.reshape(B, T, D)
+        return x, None
+
+    lp = (ln1_s, ln1_b, wqkv, wo, ln2_s, ln2_b, w1, b1, w2, b2)
+    x, _ = jax.lax.scan(layer, x, lp)
+    x = _ln(x, lnf_s, lnf_b)
+    return jnp.dot(x, embed.T)  # tied output head
+
+
+def _lm_loss(params, tokens, cfg: LmConfig, use_pallas: bool):
+    """tokens: i32[B, T+1]; next-token cross-entropy."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = lm_fwd(params, inp, cfg, use_pallas=use_pallas)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def lm_grad(*args, cfg: LmConfig, use_pallas: bool = True):
+    """(14 params..., tokens i32[B, T+1]) -> (14 grads..., loss)."""
+    params, tokens = args[:-1], args[-1]
+    loss, grads = jax.value_and_grad(
+        lambda p: _lm_loss(p, tokens, cfg, use_pallas)
+    )(tuple(params))
+    return tuple(grads) + (loss,)
+
+
+def lm_update(*args):
+    """(14 params..., 14 grads..., lr, mom..., ) — SGD with gradient clip.
+
+    Signature: (params..., grads..., lr) -> params'.
+    """
+    n = len(LM_PARAM_NAMES)
+    params, grads, lr = args[:n], args[n : 2 * n], args[2 * n]
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+    clip = jnp.minimum(1.0, 1.0 / gnorm)
+    return tuple(p - lr * clip * g for p, g in zip(params, grads))
+
+
+def lm_eval_loss(*args, cfg: LmConfig, use_pallas: bool = True):
+    """(14 params..., tokens) -> (loss,) — forward-only evaluation."""
+    params, tokens = args[:-1], args[-1]
+    return (_lm_loss(tuple(params), tokens, cfg, use_pallas),)

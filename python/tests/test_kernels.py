@@ -1,0 +1,189 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and value ranges; every property asserts
+allclose between the interpret-mode kernel and the oracle, forward and
+backward (the custom VJPs are part of the kernel contract).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import attention
+from compile.kernels.fused_dense import fused_dense, matmul
+from compile.kernels.ref import attention_ref, dense_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused_dense
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 96),
+    n=st.integers(1, 150),
+    act=st.sampled_from(["none", "relu", "gelu"]),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_matches_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+    got = fused_dense(x, w, b, act)
+    want = dense_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 48),
+    n=st.integers(1, 64),
+    act=st.sampled_from(["none", "relu", "gelu"]),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_grads_match_ref(m, k, n, act, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    b = _rand(seed + 2, (n,))
+
+    def loss_k(x, w, b):
+        return (fused_dense(x, w, b, act) ** 2).sum()
+
+    def loss_r(x, w, b):
+        return (dense_ref(x, w, b, act).astype(jnp.float32) ** 2).sum()
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w, b)
+    for a, bb in zip(gk, gr):
+        np.testing.assert_allclose(a, bb, rtol=1e-3, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(m=st.integers(1, 300), k=st.integers(1, 64), n=st.integers(1, 300), seed=st.integers(0, 2**16))
+def test_matmul_matches_jnp(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(matmul(x, w), x @ w, rtol=2e-5, atol=2e-5)
+
+
+def test_dense_block_boundaries():
+    # Shapes exactly at / around the 128 tile boundary.
+    for m in (127, 128, 129, 256):
+        for n in (127, 128, 129):
+            x = _rand(m, (m, 32))
+            w = _rand(n, (32, n))
+            b = jnp.zeros((n,))
+            np.testing.assert_allclose(
+                fused_dense(x, w, b, "relu"), dense_ref(x, w, b, "relu"), rtol=2e-5, atol=2e-5
+            )
+
+
+def test_dense_zero_padding_exact():
+    # Zero rows introduced by padding must not leak into the output.
+    x = jnp.zeros((5, 7))
+    w = _rand(0, (7, 3))
+    b = _rand(1, (3,))
+    got = fused_dense(x, w, b, "none")
+    np.testing.assert_allclose(got, jnp.broadcast_to(b, (5, 3)), rtol=1e-6, atol=1e-6)
+
+
+def test_dense_rejects_bad_shapes():
+    x = _rand(0, (4, 5))
+    w = _rand(1, (6, 3))
+    b = jnp.zeros((3,))
+    with pytest.raises(AssertionError):
+        fused_dense(x, w, b)
+
+
+def test_dense_unknown_activation():
+    x = _rand(0, (4, 5))
+    w = _rand(1, (5, 3))
+    b = jnp.zeros((3,))
+    with pytest.raises(ValueError):
+        fused_dense(x, w, b, "swish")
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    t=st.integers(1, 48),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(b, h, t, dh, causal, seed):
+    q = _rand(seed, (b, h, t, dh))
+    k = _rand(seed + 1, (b, h, t, dh))
+    v = _rand(seed + 2, (b, h, t, dh))
+    got = attention(q, k, v, causal)
+    want = attention_ref(q, k, v, causal)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    t=st.integers(2, 24),
+    dh=st.sampled_from([4, 8]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_grads_match_ref(b, h, t, dh, causal, seed):
+    q = _rand(seed, (b, h, t, dh))
+    k = _rand(seed + 1, (b, h, t, dh))
+    v = _rand(seed + 2, (b, h, t, dh))
+
+    def loss_k(q, k, v):
+        return (attention(q, k, v, causal) ** 2).sum()
+
+    def loss_r(q, k, v):
+        return (attention_ref(q, k, v, causal) ** 2).sum()
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2))(q, k, v)
+    for a, bb in zip(gk, gr):
+        np.testing.assert_allclose(a, bb, rtol=2e-3, atol=2e-3)
+
+
+def test_attention_causality():
+    # Future tokens must not influence earlier outputs under causal=True.
+    b, h, t, dh = 1, 1, 8, 4
+    q = _rand(0, (b, h, t, dh))
+    k = _rand(1, (b, h, t, dh))
+    v = _rand(2, (b, h, t, dh))
+    out1 = attention(q, k, v, True)
+    k2 = k.at[:, :, -1, :].set(99.0)
+    v2 = v.at[:, :, -1, :].set(-99.0)
+    out2 = attention(q, k2, v2, True)
+    np.testing.assert_allclose(out1[:, :, :-1], out2[:, :, :-1], rtol=1e-6, atol=1e-6)
+
+
+def test_attention_rows_are_convex_combos():
+    # Non-causal attention output rows lie in the convex hull of v rows:
+    # with v constant, output equals that constant.
+    b, h, t, dh = 2, 2, 12, 8
+    q = _rand(0, (b, h, t, dh))
+    k = _rand(1, (b, h, t, dh))
+    v = jnp.ones((b, h, t, dh)) * 3.5
+    out = attention(q, k, v, False)
+    np.testing.assert_allclose(out, jnp.full_like(out, 3.5), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,148 @@
+"""L2 correctness: Q-network and transformer LM (shapes, semantics,
+pallas-vs-ref agreement, and learning sanity)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import compile.model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.LmConfig(vocab=64, seq=16, d_model=32, n_layers=2, n_heads=2, d_ff=64)
+
+
+# ---------------------------------------------------------------------------
+# Q-network
+# ---------------------------------------------------------------------------
+
+
+def test_qnet_init_shapes():
+    p = M.qnet_init(0)
+    assert tuple(x.shape for x in p) == M.QNET_PARAM_SHAPES
+    # He init: weight scale roughly sqrt(2/fan_in), biases zero.
+    assert float(jnp.abs(p[1]).max()) == 0.0
+    assert 0.05 < float(p[0].std()) < 0.5
+
+
+def test_qnet_init_deterministic_in_seed():
+    a, b = M.qnet_init(7), M.qnet_init(7)
+    c = M.qnet_init(8)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_qnet_fwd_shapes_and_ref_agreement():
+    p = M.qnet_init(1)
+    s = jax.random.normal(jax.random.PRNGKey(0), (5, M.STATE_DIM))
+    q = M.qnet_fwd(*p, s)
+    assert q.shape == (5, M.NUM_ACTIONS)
+    qr = M.qnet_fwd(*p, s, use_pallas=False)
+    np.testing.assert_allclose(q, qr, rtol=2e-4, atol=2e-4)
+
+
+def test_qnet_train_reduces_td_error():
+    """Repeated TD steps on a fixed batch must drive the loss down."""
+    p = M.qnet_init(2)
+    key = jax.random.PRNGKey(3)
+    s = jax.random.normal(key, (16, M.STATE_DIM))
+    a = jax.random.randint(jax.random.PRNGKey(4), (16,), 0, M.NUM_ACTIONS)
+    r = jax.random.normal(jax.random.PRNGKey(5), (16,))
+    done = jnp.ones((16,))  # terminal: target = r, independent of params
+    lr, gamma = jnp.float32(0.05), jnp.float32(0.95)
+    losses = []
+    for _ in range(30):
+        out = M.qnet_train(*p, *p, s, a, r, s, done, lr, gamma)
+        p, loss = out[:-1], out[-1]
+        losses.append(float(loss))
+    assert losses[-1] < 0.5 * losses[0], losses[::10]
+
+
+def test_qnet_train_gradient_clipping_bounded_step():
+    """Huge rewards (the paper's -gamma/-kappa penalties) must not blow up
+    the parameters thanks to global-norm clipping."""
+    p = M.qnet_init(0)
+    s = jnp.zeros((4, M.STATE_DIM))
+    a = jnp.zeros((4,), jnp.int32)
+    r = jnp.full((4,), -1e6)
+    done = jnp.ones((4,))
+    out = M.qnet_train(*p, *p, s, a, r, s, done, jnp.float32(0.01), jnp.float32(0.95))
+    new = out[:-1]
+    delta = max(float(jnp.abs(n - o).max()) for n, o in zip(new, p))
+    assert delta <= 0.01 * 5.0 + 1e-6  # lr * clip_norm bound
+
+
+# ---------------------------------------------------------------------------
+# Transformer LM
+# ---------------------------------------------------------------------------
+
+
+def test_lm_param_shapes_and_count():
+    shapes = M.lm_param_shapes(TINY)
+    assert len(shapes) == len(M.LM_PARAM_NAMES)
+    p = M.lm_init(0, TINY)
+    assert tuple(x.shape for x in p) == shapes
+    assert M.lm_param_count(TINY) == sum(int(np.prod(s)) for s in shapes)
+
+
+def test_lm_fwd_shapes():
+    p = M.lm_init(0, TINY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (3, TINY.seq), 0, TINY.vocab)
+    logits = M.lm_fwd(p, toks, TINY, use_pallas=False)
+    assert logits.shape == (3, TINY.seq, TINY.vocab)
+
+
+def test_lm_initial_loss_near_uniform():
+    p = M.lm_init(0, TINY)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (4, TINY.seq + 1), 0, TINY.vocab)
+    out = M.lm_eval_loss(*p, toks, cfg=TINY, use_pallas=False)
+    assert abs(float(out[0]) - np.log(TINY.vocab)) < 0.5
+
+
+def test_lm_grad_pallas_matches_ref():
+    p = M.lm_init(0, TINY)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, TINY.seq + 1), 0, TINY.vocab)
+    gk = M.lm_grad(*p, toks, cfg=TINY, use_pallas=True)
+    gr = M.lm_grad(*p, toks, cfg=TINY, use_pallas=False)
+    np.testing.assert_allclose(gk[-1], gr[-1], rtol=1e-3, atol=1e-3)
+    for a, b in zip(gk[:-1], gr[:-1]):
+        np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3)
+
+
+def test_lm_sgd_learns_constant_sequence():
+    """A few SGD steps on a trivially predictable stream must cut the loss."""
+    p = M.lm_init(0, TINY)
+    toks = jnp.tile(jnp.arange(TINY.seq + 1, dtype=jnp.int32) % 7, (4, 1))
+    lr = jnp.float32(0.5)
+    first = None
+    for i in range(25):
+        out = M.lm_grad(*p, toks, cfg=TINY, use_pallas=False)
+        grads, loss = out[:-1], out[-1]
+        if first is None:
+            first = float(loss)
+        p = M.lm_update(*p, *grads, lr)
+    assert float(loss) < 0.5 * first, (first, float(loss))
+
+
+def test_lm_update_moves_against_gradient():
+    p = M.lm_init(0, TINY)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, TINY.seq + 1), 0, TINY.vocab)
+    out = M.lm_grad(*p, toks, cfg=TINY, use_pallas=False)
+    grads = out[:-1]
+    newp = M.lm_update(*p, *grads, jnp.float32(0.1))
+    # direction check: dot(new - old, grad) < 0 overall
+    dot = sum(float(jnp.vdot(n - o, g)) for n, o, g in zip(newp, p, grads))
+    assert dot < 0.0
+
+
+def test_lm_causality_loss_independent_of_future():
+    """Loss at position i only depends on tokens <= i+1: perturbing the
+    final target token must not change the loss contributions before it."""
+    p = M.lm_init(0, TINY)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, TINY.seq + 1), 0, TINY.vocab)
+    logits1 = M.lm_fwd(p, toks[:, :-1], TINY, use_pallas=False)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % TINY.vocab)
+    logits2 = M.lm_fwd(p, toks2[:, :-1], TINY, use_pallas=False)
+    np.testing.assert_allclose(logits1, logits2, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,282 @@
+//! `figures` — regenerates every figure of the paper's evaluation
+//! (Figures 4–13) as console tables.
+//!
+//! Usage: `figures <fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|all>`
+//!        `[--reps N] [--seed S] [--iterations N] [--models vgg16,googlenet,rnn]`
+//!
+//! Absolute numbers live on this simulated testbed, not the authors' EC2
+//! cluster; the *shape* (who wins, by what factor, trends along the
+//! sweeps) is the reproduction target — see EXPERIMENTS.md.
+
+use srole::config::ExperimentConfig;
+use srole::coordinator::{Experiment, Method};
+use srole::dnn::ModelKind;
+use srole::util::cli::{Cli, CliError};
+use srole::util::table::{f, Table};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("figures", "regenerate the paper's figures")
+        .opt("reps", Some("3"), "repetitions per configuration")
+        .opt("seed", Some("1"), "base seed")
+        .opt("iterations", Some("50"), "training iterations per job")
+        .opt("models", Some("vgg16,googlenet,rnn"), "comma-separated models");
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(CliError::Help) => {
+            print!("{}", cli.usage());
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let which = args.positional.first().cloned().unwrap_or_else(|| "all".to_string());
+    let ctx = Ctx {
+        reps: args.usize("reps").unwrap_or(3),
+        seed: args.u64("seed").unwrap_or(1),
+        iterations: args.usize("iterations").unwrap_or(50),
+        models: args
+            .get("models")
+            .unwrap()
+            .split(',')
+            .map(|m| ModelKind::parse(m).unwrap_or_else(|| panic!("unknown model {m}")))
+            .collect(),
+    };
+
+    let all = which == "all";
+    let mut matched = false;
+    if all || which == "fig4" {
+        matched = true;
+        fig4_jct_vs_edges(&ctx);
+    }
+    if all || which == "fig5" {
+        matched = true;
+        fig5_tasks_vs_workload(&ctx);
+    }
+    if all || which == "fig6" {
+        matched = true;
+        utilization_figure(&ctx, false, "Fig 6");
+    }
+    if all || which == "fig7" {
+        matched = true;
+        overhead_figure(&ctx, false, "Fig 7");
+    }
+    if all || which == "fig8" {
+        matched = true;
+        collisions_figure(&ctx, false, "Fig 8");
+    }
+    if all || which == "fig9" {
+        matched = true;
+        fig9_jct_real(&ctx);
+    }
+    if all || which == "fig10" {
+        matched = true;
+        fig10_tasks_real(&ctx);
+    }
+    if all || which == "fig11" {
+        matched = true;
+        utilization_figure(&ctx, true, "Fig 11");
+    }
+    if all || which == "fig12" {
+        matched = true;
+        overhead_figure(&ctx, true, "Fig 12");
+    }
+    if all || which == "fig13" {
+        matched = true;
+        collisions_figure(&ctx, true, "Fig 13");
+    }
+    if !matched {
+        eprintln!("unknown figure {which}; use fig4..fig13 or all");
+        std::process::exit(2);
+    }
+}
+
+struct Ctx {
+    reps: usize,
+    seed: u64,
+    iterations: usize,
+    models: Vec<ModelKind>,
+}
+
+impl Ctx {
+    fn base(&self, model: ModelKind) -> ExperimentConfig {
+        ExperimentConfig {
+            model,
+            seed: self.seed,
+            repetitions: self.reps,
+            iterations: self.iterations,
+            ..Default::default()
+        }
+    }
+
+    fn real(&self, model: ModelKind) -> ExperimentConfig {
+        ExperimentConfig {
+            model,
+            seed: self.seed,
+            repetitions: self.reps,
+            iterations: self.iterations,
+            ..ExperimentConfig::real_device()
+        }
+    }
+}
+
+/// Fig 4a–c: job completion time vs number of edges (emulation).
+fn fig4_jct_vs_edges(ctx: &Ctx) {
+    for model in &ctx.models {
+        let mut t = Table::new(
+            &format!("Fig 4 ({}): JCT median [s] vs #edges", model.name()),
+            &["edges", "RL", "MARL", "SROLE-C", "SROLE-D"],
+        );
+        for edges in [5usize, 10, 15, 20, 25] {
+            let mut cfg = ctx.base(*model);
+            cfg.n_edges = edges;
+            let exp = Experiment::new(cfg);
+            let mut row = vec![edges.to_string()];
+            for m in Method::ALL {
+                row.push(f(exp.run(m).metrics.jct_summary().median));
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+}
+
+/// Fig 5a–c: tasks per device vs workload (emulation, 25 edges).
+fn fig5_tasks_vs_workload(ctx: &Ctx) {
+    for model in &ctx.models {
+        let mut t = Table::new(
+            &format!("Fig 5 ({}): tasks/device median (min..max) vs workload", model.name()),
+            &["workload", "RL", "MARL", "SROLE-C", "SROLE-D"],
+        );
+        for w in [0.6, 0.7, 0.8, 0.9, 1.0] {
+            let mut cfg = ctx.base(*model);
+            cfg.workload = w;
+            let exp = Experiment::new(cfg);
+            let mut row = vec![format!("{:.0}%", w * 100.0)];
+            for m in Method::ALL {
+                let r = exp.run(m);
+                match r.metrics.tasks_summary() {
+                    Some(s) => row.push(format!("{:.1} ({:.0}..{:.0})", s.median, s.min, s.max)),
+                    None => row.push("-".into()),
+                }
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+}
+
+/// Fig 6/11: per-resource utilization.
+fn utilization_figure(ctx: &Ctx, real: bool, fig: &str) {
+    for model in &ctx.models {
+        let cfg = if real { ctx.real(*model) } else { ctx.base(*model) };
+        let exp = Experiment::new(cfg);
+        let mut t = Table::new(
+            &format!("{fig} ({}): utilization median (min..max) per resource", model.name()),
+            &["resource", "RL", "MARL", "SROLE-C", "SROLE-D"],
+        );
+        let results: Vec<_> = Method::ALL.iter().map(|&m| exp.run(m)).collect();
+        for res in ["cpu", "mem", "bw"] {
+            let mut row = vec![res.to_string()];
+            for r in &results {
+                match r.metrics.util_summary(res) {
+                    Some(s) => row.push(format!("{:.2} ({:.2}..{:.2})", s.median, s.min, s.max)),
+                    None => row.push("-".into()),
+                }
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+}
+
+/// Fig 7/12: computation overhead split into scheduling + shielding.
+fn overhead_figure(ctx: &Ctx, real: bool, fig: &str) {
+    for model in &ctx.models {
+        let cfg = if real { ctx.real(*model) } else { ctx.base(*model) };
+        let exp = Experiment::new(cfg);
+        let mut t = Table::new(
+            &format!("{fig} ({}): per-job overhead [s]", model.name()),
+            &["component", "RL", "MARL", "SROLE-C", "SROLE-D"],
+        );
+        let results: Vec<_> = Method::ALL.iter().map(|&m| exp.run(m)).collect();
+        let mut sched = vec!["scheduling".to_string()];
+        let mut shield = vec!["shielding".to_string()];
+        let mut total = vec!["total".to_string()];
+        for r in &results {
+            // Scheduling bar = decision latency minus shielding (for
+            // centralized RL this includes queueing at the head).
+            sched.push(format!(
+                "{:.3}",
+                r.metrics.mean_decision_secs() - r.metrics.mean_shield_secs()
+            ));
+            shield.push(format!("{:.3}", r.metrics.mean_shield_secs()));
+            total.push(format!("{:.3}", r.metrics.mean_overhead_secs()));
+        }
+        t.row(sched);
+        t.row(shield);
+        t.row(total);
+        t.print();
+    }
+}
+
+/// Fig 8/13: action collisions vs the κ penalty.
+fn collisions_figure(ctx: &Ctx, real: bool, fig: &str) {
+    for model in &ctx.models {
+        let mut t = Table::new(
+            &format!("{fig} ({}): action collisions vs κ", model.name()),
+            &["kappa", "RL", "MARL", "SROLE-C", "SROLE-D"],
+        );
+        for kappa in [25.0, 50.0, 100.0, 200.0] {
+            let mut cfg = if real { ctx.real(*model) } else { ctx.base(*model) };
+            cfg.reward.kappa = kappa;
+            let exp = Experiment::new(cfg);
+            let mut row = vec![format!("{kappa:.0}")];
+            for m in Method::ALL {
+                row.push(exp.run(m).metrics.collisions.to_string());
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+}
+
+/// Fig 9: JCT on the real-device testbed (10 Pis, one cluster).
+fn fig9_jct_real(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Fig 9: JCT median [s], real-device testbed",
+        &["model", "RL", "MARL", "SROLE-C", "SROLE-D"],
+    );
+    for model in &ctx.models {
+        let exp = Experiment::new(ctx.real(*model));
+        let mut row = vec![model.name().to_string()];
+        for m in Method::ALL {
+            row.push(f(exp.run(m).metrics.jct_summary().median));
+        }
+        t.row(row);
+    }
+    t.print();
+}
+
+/// Fig 10: tasks per device, real-device testbed.
+fn fig10_tasks_real(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Fig 10: tasks/device median (min..max), real-device testbed",
+        &["model", "RL", "MARL", "SROLE-C", "SROLE-D"],
+    );
+    for model in &ctx.models {
+        let exp = Experiment::new(ctx.real(*model));
+        let mut row = vec![model.name().to_string()];
+        for m in Method::ALL {
+            let r = exp.run(m);
+            match r.metrics.tasks_summary() {
+                Some(s) => row.push(format!("{:.1} ({:.0}..{:.0})", s.median, s.min, s.max)),
+                None => row.push("-".into()),
+            }
+        }
+        t.row(row);
+    }
+    t.print();
+}

@@ -1,0 +1,264 @@
+//! Edge nodes, resource capacities, cluster formation and sub-clusters.
+//!
+//! Mirrors §III of the paper: clusters are proximity-close groups of edge
+//! nodes; each cluster elects the highest-capacity node as *cluster head*
+//! (which runs the centralized RL scheduler and/or the SROLE-C shield);
+//! SROLE-D splits a cluster into geographic *sub-clusters*, one shield
+//! each, with boundary nodes handled by neighboring-shield delegates.
+
+pub mod profiles;
+pub mod subcluster;
+
+pub use profiles::{ResourceProfile, CONTAINER_PROFILE, REAL_EDGE_PROFILE};
+pub use subcluster::SubClusters;
+
+use crate::net::Topology;
+use crate::util::Rng;
+
+/// Index of an edge node within an experiment.
+pub type NodeId = usize;
+
+/// Resource types tracked per node (paper Eq. 1: CPU, memory, bandwidth).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ResourceKind {
+    Cpu,
+    Mem,
+    Bw,
+}
+
+impl ResourceKind {
+    pub const ALL: [ResourceKind; 3] = [ResourceKind::Cpu, ResourceKind::Mem, ResourceKind::Bw];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResourceKind::Cpu => "cpu",
+            ResourceKind::Mem => "mem",
+            ResourceKind::Bw => "bw",
+        }
+    }
+}
+
+/// A bundle of the three resources.  Units: CPU in host-ratio (1.0 = one
+/// full core of the reference host), memory in MB, bandwidth in Mbps.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Resources {
+    pub cpu: f64,
+    pub mem: f64,
+    pub bw: f64,
+}
+
+impl Resources {
+    pub fn new(cpu: f64, mem: f64, bw: f64) -> Resources {
+        Resources { cpu, mem, bw }
+    }
+
+    pub fn get(&self, k: ResourceKind) -> f64 {
+        match k {
+            ResourceKind::Cpu => self.cpu,
+            ResourceKind::Mem => self.mem,
+            ResourceKind::Bw => self.bw,
+        }
+    }
+
+    pub fn get_mut(&mut self, k: ResourceKind) -> &mut f64 {
+        match k {
+            ResourceKind::Cpu => &mut self.cpu,
+            ResourceKind::Mem => &mut self.mem,
+            ResourceKind::Bw => &mut self.bw,
+        }
+    }
+
+    pub fn add(&self, other: &Resources) -> Resources {
+        Resources { cpu: self.cpu + other.cpu, mem: self.mem + other.mem, bw: self.bw + other.bw }
+    }
+
+    pub fn sub(&self, other: &Resources) -> Resources {
+        Resources { cpu: self.cpu - other.cpu, mem: self.mem - other.mem, bw: self.bw - other.bw }
+    }
+
+    pub fn scale(&self, f: f64) -> Resources {
+        Resources { cpu: self.cpu * f, mem: self.mem * f, bw: self.bw * f }
+    }
+
+    /// Per-resource utilization of `demand` against `self` as capacity
+    /// (paper Eq. 1: u_k = D_k / C_k).
+    pub fn utilization(&self, demand: &Resources, k: ResourceKind) -> f64 {
+        let cap = self.get(k);
+        if cap <= 0.0 {
+            return f64::INFINITY;
+        }
+        demand.get(k) / cap
+    }
+
+    /// Combined utilization across resource types (paper Eq. 2:
+    /// u = Π_k u_k).
+    pub fn combined_utilization(&self, demand: &Resources) -> f64 {
+        ResourceKind::ALL.iter().map(|&k| self.utilization(demand, k)).product()
+    }
+}
+
+/// One edge device.
+#[derive(Debug, Clone)]
+pub struct EdgeNode {
+    pub id: NodeId,
+    pub caps: Resources,
+}
+
+/// A cluster: members, head, and (for SROLE-D) sub-clusters.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub members: Vec<NodeId>,
+    pub head: NodeId,
+}
+
+/// The full emulated edge deployment for one experiment.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub nodes: Vec<EdgeNode>,
+    pub topo: Topology,
+    pub clusters: Vec<ClusterSpec>,
+}
+
+impl Deployment {
+    /// Build a deployment per the paper's setup: `n` nodes in clusters of
+    /// `cluster_size`, resources assigned round-robin from `profile`
+    /// ("the resources of the devices were assigned in a round-robin
+    /// way", §V-A), positions geographically grouped.
+    pub fn generate(rng: &mut Rng, n: usize, cluster_size: usize, profile: &ResourceProfile) -> Deployment {
+        let topo = Topology::generate_clustered(
+            rng,
+            n,
+            cluster_size,
+            profile.cluster_spread_m,
+            profile.range_m,
+            &profile.bw_choices,
+            profile.latency_s,
+        );
+        let nodes: Vec<EdgeNode> =
+            (0..n).map(|id| EdgeNode { id, caps: profile.round_robin(id) }).collect();
+        let n_clusters = n.div_ceil(cluster_size);
+        let clusters = (0..n_clusters)
+            .map(|c| {
+                let members: Vec<NodeId> = ((c * cluster_size)..n.min((c + 1) * cluster_size)).collect();
+                // Head = the highest-capacity member ("the cluster head that
+                // has relatively high capacity").
+                let head = *members
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        let ka = nodes[a].caps.cpu * nodes[a].caps.mem;
+                        let kb = nodes[b].caps.cpu * nodes[b].caps.mem;
+                        ka.partial_cmp(&kb).unwrap()
+                    })
+                    .unwrap();
+                ClusterSpec { members, head }
+            })
+            .collect();
+        Deployment { nodes, topo, clusters }
+    }
+
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The cluster index containing `node`.
+    pub fn cluster_of(&self, node: NodeId) -> usize {
+        self.clusters.iter().position(|c| c.members.contains(&node)).expect("node in no cluster")
+    }
+
+    /// Neighbors of `node` restricted to its own cluster (the MARL agent's
+    /// candidate set).
+    pub fn cluster_neighbors(&self, node: NodeId) -> Vec<NodeId> {
+        let c = self.cluster_of(node);
+        self.topo
+            .neighbors(node)
+            .into_iter()
+            .filter(|m| self.clusters[c].members.contains(m))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn deployment(n: usize) -> Deployment {
+        let mut rng = Rng::new(7);
+        Deployment::generate(&mut rng, n, 5, &CONTAINER_PROFILE)
+    }
+
+    #[test]
+    fn utilization_math() {
+        let caps = Resources::new(1.0, 2048.0, 100.0);
+        let demand = Resources::new(0.5, 1024.0, 25.0);
+        assert_eq!(caps.utilization(&demand, ResourceKind::Cpu), 0.5);
+        assert_eq!(caps.utilization(&demand, ResourceKind::Mem), 0.5);
+        assert_eq!(caps.utilization(&demand, ResourceKind::Bw), 0.25);
+        assert!((caps.combined_utilization(&demand) - 0.0625).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_capacity_is_infinite_utilization() {
+        let caps = Resources::new(0.0, 100.0, 100.0);
+        let demand = Resources::new(0.1, 0.0, 0.0);
+        assert!(caps.utilization(&demand, ResourceKind::Cpu).is_infinite());
+    }
+
+    #[test]
+    fn clusters_partition_nodes() {
+        let d = deployment(25);
+        assert_eq!(d.clusters.len(), 5);
+        let mut all: Vec<NodeId> = d.clusters.iter().flat_map(|c| c.members.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..25).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn head_is_member_with_max_capacity() {
+        let d = deployment(25);
+        for c in &d.clusters {
+            assert!(c.members.contains(&c.head));
+            let kh = d.nodes[c.head].caps.cpu * d.nodes[c.head].caps.mem;
+            for &m in &c.members {
+                let km = d.nodes[m].caps.cpu * d.nodes[m].caps.mem;
+                assert!(kh >= km);
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_cluster_sizes() {
+        let d = deployment(12); // 5 + 5 + 2
+        assert_eq!(d.clusters.len(), 3);
+        assert_eq!(d.clusters[2].members.len(), 2);
+    }
+
+    #[test]
+    fn cluster_neighbors_stay_in_cluster() {
+        let d = deployment(25);
+        for id in 0..25 {
+            let c = d.cluster_of(id);
+            for nb in d.cluster_neighbors(id) {
+                assert_eq!(d.cluster_of(nb), c);
+                assert_ne!(nb, id);
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_members_are_mutually_reachable() {
+        // The clustered generator must place cluster members within range
+        // so MARL agents actually have candidates.
+        let d = deployment(25);
+        for id in 0..25 {
+            assert!(!d.cluster_neighbors(id).is_empty(), "node {id} isolated");
+        }
+    }
+
+    #[test]
+    fn round_robin_resources_cycle() {
+        let d = deployment(25);
+        let p = &CONTAINER_PROFILE;
+        assert_eq!(d.nodes[0].caps.mem, p.mem_choices[0]);
+        assert_eq!(d.nodes[1].caps.mem, p.mem_choices[1 % p.mem_choices.len()]);
+    }
+}

@@ -1,0 +1,254 @@
+//! Sub-cluster partitioning for decentralized shielding (§IV-D).
+//!
+//! "A large cluster is divided into multiple sub-clusters according to the
+//! geographical proximity" — implemented as k-means on node positions
+//! (deterministic farthest-point initialization, fixed iteration count).
+//! Boundary nodes are those within transmission range of a node in a
+//! different sub-cluster; each pair of *neighboring* sub-clusters elects a
+//! delegate shield for its shared boundary.
+
+use super::NodeId;
+use crate::net::Topology;
+
+/// The sub-cluster decomposition of one cluster.
+#[derive(Debug, Clone)]
+pub struct SubClusters {
+    /// `assignment[i]` = sub-cluster index of `members[i]`.
+    pub members: Vec<NodeId>,
+    pub assignment: Vec<usize>,
+    pub k: usize,
+    /// Boundary node set per sub-cluster pair `(a, b)`, a < b: nodes of
+    /// either sub-cluster within the boundary distance of the other.
+    pub boundaries: Vec<((usize, usize), Vec<NodeId>)>,
+}
+
+/// A node counts as *on the boundary* when it sits within this fraction
+/// of the transmission range of a node in another sub-cluster.  Below
+/// 1.0 this admits missed collisions from across the (larger) full
+/// transmission range — the fidelity gap §IV-D accepts by design.
+pub const BOUNDARY_RANGE_FRAC: f64 = 0.6;
+
+impl SubClusters {
+    /// Partition `members` into `k` sub-clusters by position.
+    pub fn build(members: &[NodeId], topo: &Topology, k: usize) -> SubClusters {
+        let k = k.clamp(1, members.len().max(1));
+        let assignment = kmeans(members, topo, k);
+        let mut sc = SubClusters { members: members.to_vec(), assignment, k, boundaries: Vec::new() };
+        sc.boundaries = sc.find_boundaries(topo);
+        sc
+    }
+
+    pub fn sub_of(&self, node: NodeId) -> usize {
+        let idx = self.members.iter().position(|&m| m == node).expect("node not a member");
+        self.assignment[idx]
+    }
+
+    pub fn members_of(&self, sub: usize) -> Vec<NodeId> {
+        self.members
+            .iter()
+            .zip(&self.assignment)
+            .filter(|(_, &a)| a == sub)
+            .map(|(&m, _)| m)
+            .collect()
+    }
+
+    /// Delegate for a sub-cluster pair: the lowest node id among the pair's
+    /// boundary nodes' sub-cluster shields — deterministic election.
+    pub fn delegate(&self, a: usize, b: usize) -> usize {
+        a.min(b)
+    }
+
+    fn find_boundaries(&self, topo: &Topology) -> Vec<((usize, usize), Vec<NodeId>)> {
+        let mut out: Vec<((usize, usize), Vec<NodeId>)> = Vec::new();
+        for (i, &m) in self.members.iter().enumerate() {
+            for (j, &n) in self.members.iter().enumerate() {
+                if i >= j || self.assignment[i] == self.assignment[j] {
+                    continue;
+                }
+                if topo.positions[m].dist(&topo.positions[n]) <= topo.range * BOUNDARY_RANGE_FRAC {
+                    let key = if self.assignment[i] < self.assignment[j] {
+                        (self.assignment[i], self.assignment[j])
+                    } else {
+                        (self.assignment[j], self.assignment[i])
+                    };
+                    let entry = match out.iter_mut().find(|(k2, _)| *k2 == key) {
+                        Some(e) => e,
+                        None => {
+                            out.push((key, Vec::new()));
+                            out.last_mut().unwrap()
+                        }
+                    };
+                    for node in [m, n] {
+                        if !entry.1.contains(&node) {
+                            entry.1.push(node);
+                        }
+                    }
+                }
+            }
+        }
+        out.sort_by_key(|(k2, _)| *k2);
+        out
+    }
+
+    /// All boundary nodes (union over pairs).
+    pub fn boundary_nodes(&self) -> Vec<NodeId> {
+        let mut out: Vec<NodeId> = Vec::new();
+        for (_, nodes) in &self.boundaries {
+            for &n in nodes {
+                if !out.contains(&n) {
+                    out.push(n);
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+/// Deterministic k-means on member positions: farthest-point init, 16
+/// Lloyd iterations (converges long before that at this scale).
+fn kmeans(members: &[NodeId], topo: &Topology, k: usize) -> Vec<usize> {
+    let pts: Vec<(f64, f64)> =
+        members.iter().map(|&m| (topo.positions[m].x, topo.positions[m].y)).collect();
+    if k <= 1 || members.len() <= k {
+        return (0..members.len()).map(|i| if members.len() <= k { i } else { 0 }).collect();
+    }
+    // Farthest-point initialization from the centroid-closest point.
+    let mut centers: Vec<(f64, f64)> = Vec::with_capacity(k);
+    centers.push(pts[0]);
+    while centers.len() < k {
+        let far = pts
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| {
+                let da = centers.iter().map(|c| d2(**a, *c)).fold(f64::MAX, f64::min);
+                let db = centers.iter().map(|c| d2(**b, *c)).fold(f64::MAX, f64::min);
+                da.partial_cmp(&db).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        centers.push(pts[far]);
+    }
+    let mut assignment = vec![0usize; pts.len()];
+    for _ in 0..16 {
+        for (i, p) in pts.iter().enumerate() {
+            assignment[i] = centers
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| d2(*p, **a).partial_cmp(&d2(*p, **b)).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+        }
+        for (j, c) in centers.iter_mut().enumerate() {
+            let mine: Vec<&(f64, f64)> =
+                pts.iter().zip(&assignment).filter(|(_, &a)| a == j).map(|(p, _)| p).collect();
+            if !mine.is_empty() {
+                c.0 = mine.iter().map(|p| p.0).sum::<f64>() / mine.len() as f64;
+                c.1 = mine.iter().map(|p| p.1).sum::<f64>() / mine.len() as f64;
+            }
+        }
+    }
+    assignment
+}
+
+fn d2(a: (f64, f64), b: (f64, f64)) -> f64 {
+    (a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::Topology;
+    use crate::util::Rng;
+
+    fn topo(n: usize) -> Topology {
+        let mut rng = Rng::new(3);
+        Topology::generate(&mut rng, n, 60.0, 30.0, &[100.0], 0.001)
+    }
+
+    #[test]
+    fn partitions_all_members() {
+        let t = topo(20);
+        let members: Vec<NodeId> = (0..20).collect();
+        let sc = SubClusters::build(&members, &t, 4);
+        assert_eq!(sc.assignment.len(), 20);
+        for sub in 0..4 {
+            assert!(!sc.members_of(sub).is_empty(), "empty sub-cluster {sub}");
+        }
+        let total: usize = (0..4).map(|s| sc.members_of(s).len()).sum();
+        assert_eq!(total, 20);
+    }
+
+    #[test]
+    fn geographic_coherence() {
+        // Sub-cluster diameter should be smaller than the full spread.
+        let t = topo(30);
+        let members: Vec<NodeId> = (0..30).collect();
+        let sc = SubClusters::build(&members, &t, 3);
+        let full_diam = max_diam(&members, &t);
+        for sub in 0..3 {
+            let m = sc.members_of(sub);
+            if m.len() >= 2 {
+                assert!(max_diam(&m, &t) <= full_diam);
+            }
+        }
+    }
+
+    fn max_diam(nodes: &[NodeId], t: &Topology) -> f64 {
+        let mut d = 0.0f64;
+        for &a in nodes {
+            for &b in nodes {
+                d = d.max(t.positions[a].dist(&t.positions[b]));
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn boundaries_are_cross_subcluster_and_in_range() {
+        let t = topo(24);
+        let members: Vec<NodeId> = (0..24).collect();
+        let sc = SubClusters::build(&members, &t, 3);
+        for ((a, b), nodes) in &sc.boundaries {
+            assert!(a < b);
+            for &n in nodes {
+                let sn = sc.sub_of(n);
+                assert!(sn == *a || sn == *b);
+                // Each boundary node must be within range of some node of
+                // the *other* sub-cluster of the pair.
+                let other = if sn == *a { *b } else { *a };
+                let reach = sc
+                    .members_of(other)
+                    .iter()
+                    .any(|&m| t.positions[n].dist(&t.positions[m]) <= t.range * BOUNDARY_RANGE_FRAC);
+                assert!(reach, "node {n} not actually on boundary");
+            }
+        }
+    }
+
+    #[test]
+    fn k_one_is_single_subcluster() {
+        let t = topo(10);
+        let members: Vec<NodeId> = (0..10).collect();
+        let sc = SubClusters::build(&members, &t, 1);
+        assert!(sc.assignment.iter().all(|&a| a == 0));
+        assert!(sc.boundaries.is_empty());
+    }
+
+    #[test]
+    fn delegate_is_deterministic() {
+        let t = topo(12);
+        let sc = SubClusters::build(&(0..12).collect::<Vec<_>>(), &t, 3);
+        assert_eq!(sc.delegate(2, 1), 1);
+        assert_eq!(sc.delegate(0, 2), 0);
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let t = topo(18);
+        let m: Vec<NodeId> = (0..18).collect();
+        let a = SubClusters::build(&m, &t, 3);
+        let b = SubClusters::build(&m, &t, 3);
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

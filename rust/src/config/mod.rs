@@ -1,0 +1,272 @@
+//! Experiment configuration: a single struct covering every knob of the
+//! paper's evaluation, plus a TOML-subset file parser so deployments can
+//! version their setups (`srole run --config exp.toml`).
+//!
+//! The parser supports the subset needed for flat experiment configs:
+//! `key = value` lines with string / number / boolean values, `#`
+//! comments, and `[section]` headers that prefix keys (`section.key`).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::profiles::{ResourceProfile, CONTAINER_PROFILE, REAL_EDGE_PROFILE};
+use crate::dnn::ModelKind;
+use crate::rl::RewardParams;
+
+/// Which testbed profile (Table I row group) to emulate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Profile {
+    Container,
+    RealEdge,
+}
+
+impl Profile {
+    pub fn resource_profile(&self) -> &'static ResourceProfile {
+        match self {
+            Profile::Container => &CONTAINER_PROFILE,
+            Profile::RealEdge => &REAL_EDGE_PROFILE,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Profile> {
+        match s {
+            "container" | "emulation" => Some(Profile::Container),
+            "real_edge" | "real" | "realdevice" => Some(Profile::RealEdge),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Profile::Container => "container",
+            Profile::RealEdge => "real_edge",
+        }
+    }
+}
+
+/// Full experiment configuration (defaults = paper §V-A).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    /// Total edge nodes (25 containers / 10 Pis in the paper).
+    pub n_edges: usize,
+    /// Edges per cluster ("each cluster has 5 edge nodes").
+    pub cluster_size: usize,
+    pub profile: Profile,
+    pub model: ModelKind,
+    /// Workload fraction (1.0 = six PageRank jobs per cluster).
+    pub workload: f64,
+    /// DL jobs per cluster.
+    pub jobs_per_cluster: usize,
+    /// Training iterations per job.
+    pub iterations: usize,
+    pub reward: RewardParams,
+    /// Sub-clusters per cluster for SROLE-D.
+    pub subclusters: usize,
+    /// Rounds between agent state-view refreshes.
+    pub refresh_rounds: usize,
+    /// Offline pre-training episodes before the measured run.
+    pub pretrain_episodes: usize,
+    /// Experiment repetitions (the paper repeats 5x).
+    pub repetitions: usize,
+    /// Tabular policy learning rate / exploration.
+    pub lr: f64,
+    pub epsilon: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            seed: 1,
+            n_edges: 25,
+            cluster_size: 5,
+            profile: Profile::Container,
+            model: ModelKind::Vgg16,
+            workload: 1.0,
+            jobs_per_cluster: 3,
+            iterations: 50,
+            reward: RewardParams::default(),
+            subclusters: 2,
+            refresh_rounds: 3,
+            pretrain_episodes: 300,
+            repetitions: 5,
+            lr: 0.15,
+            epsilon: 0.1,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Paper's real-device testbed: 10 Raspberry Pis, one cluster.
+    pub fn real_device() -> Self {
+        ExperimentConfig {
+            n_edges: 10,
+            cluster_size: 10,
+            profile: Profile::RealEdge,
+            subclusters: 2,
+            ..Default::default()
+        }
+    }
+
+    /// Load overrides from a TOML-subset string.
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let kv = parse_toml_subset(text)?;
+        let mut cfg = ExperimentConfig::default();
+        for (key, val) in &kv {
+            cfg.apply(key, val)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one `key = value` override.
+    pub fn apply(&mut self, key: &str, val: &str) -> Result<(), String> {
+        let parse_f64 = |v: &str| v.parse::<f64>().map_err(|_| format!("bad number {v} for {key}"));
+        let parse_usize =
+            |v: &str| v.parse::<usize>().map_err(|_| format!("bad integer {v} for {key}"));
+        match key {
+            "seed" => self.seed = val.parse().map_err(|_| format!("bad seed {val}"))?,
+            "n_edges" | "edges" => self.n_edges = parse_usize(val)?,
+            "cluster_size" => self.cluster_size = parse_usize(val)?,
+            "profile" => {
+                self.profile = Profile::parse(val).ok_or(format!("unknown profile {val}"))?
+            }
+            "model" => self.model = ModelKind::parse(val).ok_or(format!("unknown model {val}"))?,
+            "workload" => self.workload = parse_f64(val)?,
+            "jobs_per_cluster" => self.jobs_per_cluster = parse_usize(val)?,
+            "iterations" => self.iterations = parse_usize(val)?,
+            "reward.alpha" | "alpha" => self.reward.alpha = parse_f64(val)?,
+            "reward.rho" | "rho" => self.reward.rho = parse_f64(val)?,
+            "reward.gamma" | "gamma" => self.reward.gamma = parse_f64(val)?,
+            "reward.kappa" | "kappa" => self.reward.kappa = parse_f64(val)?,
+            "subclusters" => self.subclusters = parse_usize(val)?,
+            "refresh_rounds" => self.refresh_rounds = parse_usize(val)?,
+            "pretrain_episodes" => self.pretrain_episodes = parse_usize(val)?,
+            "repetitions" => self.repetitions = parse_usize(val)?,
+            "lr" => self.lr = parse_f64(val)?,
+            "epsilon" => self.epsilon = parse_f64(val)?,
+            other => return Err(format!("unknown config key {other}")),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_edges == 0 || self.cluster_size == 0 {
+            return Err("n_edges and cluster_size must be positive".into());
+        }
+        if self.cluster_size > self.n_edges {
+            return Err("cluster_size exceeds n_edges".into());
+        }
+        if !(0.0..=1.0).contains(&self.workload) {
+            return Err("workload must be in [0, 1]".into());
+        }
+        if !(0.0..=1.0).contains(&self.reward.alpha) {
+            return Err("alpha must be in [0, 1]".into());
+        }
+        if self.subclusters == 0 {
+            return Err("subclusters must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Parse the TOML subset: sections, key=value, comments, quoted strings.
+pub fn parse_toml_subset(text: &str) -> Result<BTreeMap<String, String>, String> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap().trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(stripped) = line.strip_prefix('[') {
+            let name = stripped.strip_suffix(']').ok_or(format!("line {}: bad section", lineno + 1))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or(format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        let mut val = val.trim().to_string();
+        if (val.starts_with('"') && val.ends_with('"') && val.len() >= 2)
+            || (val.starts_with('\'') && val.ends_with('\'') && val.len() >= 2)
+        {
+            val = val[1..val.len() - 1].to_string();
+        }
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        out.insert(full_key, val);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.n_edges, 25);
+        assert_eq!(c.cluster_size, 5);
+        assert_eq!(c.jobs_per_cluster, 3);
+        assert_eq!(c.iterations, 50);
+        assert_eq!(c.repetitions, 5);
+        assert_eq!(c.reward.alpha, 0.9);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn real_device_testbed() {
+        let c = ExperimentConfig::real_device();
+        assert_eq!(c.n_edges, 10);
+        assert_eq!(c.cluster_size, 10);
+        assert_eq!(c.profile, Profile::RealEdge);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_subset_parses() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            # experiment
+            seed = 7
+            model = "googlenet"
+            workload = 0.8
+            [reward]
+            kappa = 200
+            alpha = 0.95
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.model, ModelKind::GoogleNet);
+        assert_eq!(cfg.workload, 0.8);
+        assert_eq!(cfg.reward.kappa, 200.0);
+        assert_eq!(cfg.reward.alpha, 0.95);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(ExperimentConfig::from_toml("bogus = 1").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = ExperimentConfig::default();
+        c.workload = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.cluster_size = 100;
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.subclusters = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn profile_parse() {
+        assert_eq!(Profile::parse("container"), Some(Profile::Container));
+        assert_eq!(Profile::parse("real"), Some(Profile::RealEdge));
+        assert_eq!(Profile::parse("x"), None);
+    }
+}

@@ -1,0 +1,270 @@
+//! DNN model graphs and per-layer resource demands.
+//!
+//! In the paper, a DL training job is a DNN whose layers (grouped into
+//! *levels* that can run in parallel) are the schedulable tasks; the
+//! cluster head (or each agent) must know the "resource demands of all
+//! the layers".  The paper profiles demands with the TensorFlow benchmark
+//! tool; here [`profile`] computes them analytically from layer dimensions
+//! (FLOPs, parameter + activation memory, output transfer size), which
+//! plays the same role: a per-layer `(cpu, mem, out_bytes)` demand vector.
+//!
+//! [`models`] builds the paper's three evaluation models (VGG-16,
+//! GoogleNet/Inception, a 2-layer LSTM RNN) plus the transformer LM that
+//! the end-to-end example actually trains through PJRT.
+
+pub mod models;
+pub mod profile;
+
+use crate::cluster::Resources;
+
+/// What kind of computation a layer performs (drives profiling).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// 2-D convolution: spatial size, channels in/out, kernel size.
+    Conv { hw: usize, cin: usize, cout: usize, k: usize },
+    /// Max/avg pooling.
+    Pool { hw: usize, c: usize },
+    /// Fully connected.
+    Dense { din: usize, dout: usize },
+    /// LSTM over a sequence.
+    Lstm { din: usize, hidden: usize, steps: usize },
+    /// Token/positional embedding lookup.
+    Embed { vocab: usize, dim: usize, seq: usize },
+    /// Multi-head self-attention block.
+    Attention { seq: usize, dim: usize, heads: usize },
+    /// Branch concatenation (inception merge) — negligible compute.
+    Concat { hw: usize, c: usize },
+}
+
+/// One schedulable task: a layer (or fused group) of the DNN.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub id: usize,
+    pub name: String,
+    pub kind: LayerKind,
+    /// GFLOPs per training iteration (fwd+bwd, batch included).
+    pub flops_g: f64,
+    /// Resident memory demand in MB (weights + activations + gradients).
+    pub mem_mb: f64,
+    /// Activation output size in MB per iteration (transfer to next level).
+    pub out_mb: f64,
+    /// Pipeline level (layers in the same level may run in parallel).
+    pub level: usize,
+    /// Precomputed demand vector (hot path: consulted for every pricing
+    /// and shielding decision).
+    demand: Resources,
+}
+
+impl Layer {
+    pub fn new(
+        id: usize,
+        name: String,
+        kind: LayerKind,
+        flops_g: f64,
+        mem_mb: f64,
+        out_mb: f64,
+        level: usize,
+    ) -> Layer {
+        let demand = Resources {
+            cpu: profile::cpu_demand(flops_g),
+            mem: mem_mb,
+            bw: profile::bw_demand(out_mb),
+        };
+        Layer { id, name, kind, flops_g, mem_mb, out_mb, level, demand }
+    }
+
+    /// The demand vector used for utilization math (Eq. 1) and the
+    /// shield's resource-demand weight (Eq. 3).  CPU demand is the
+    /// host-ratio share this layer would need to sustain the reference
+    /// iteration rate; bandwidth demand is the egress rate at that rate.
+    pub fn demand(&self) -> Resources {
+        self.demand
+    }
+
+    /// Resource-demand weight ω(l) = Π_k b_k(l)/C_k(d) (paper Eq. 3).
+    pub fn demand_weight(&self, caps: &Resources) -> f64 {
+        let d = self.demand();
+        (d.cpu / caps.cpu) * (d.mem / caps.mem) * (d.bw / caps.bw)
+    }
+}
+
+/// Which evaluation model (paper §V-A: three ML models).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    Vgg16,
+    GoogleNet,
+    Rnn,
+    /// The transformer LM the end-to-end example trains for real.
+    TransformerLm,
+}
+
+impl ModelKind {
+    pub const PAPER_MODELS: [ModelKind; 3] = [ModelKind::Vgg16, ModelKind::GoogleNet, ModelKind::Rnn];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Vgg16 => "vgg16",
+            ModelKind::GoogleNet => "googlenet",
+            ModelKind::Rnn => "rnn",
+            ModelKind::TransformerLm => "transformer_lm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s {
+            "vgg16" | "vgg" => Some(ModelKind::Vgg16),
+            "googlenet" | "inception" => Some(ModelKind::GoogleNet),
+            "rnn" | "lstm" => Some(ModelKind::Rnn),
+            "transformer_lm" | "transformer" | "lm" => Some(ModelKind::TransformerLm),
+            _ => None,
+        }
+    }
+
+    pub fn build(&self) -> ModelGraph {
+        match self {
+            ModelKind::Vgg16 => models::vgg16(),
+            ModelKind::GoogleNet => models::googlenet(),
+            ModelKind::Rnn => models::rnn(),
+            ModelKind::TransformerLm => models::transformer_lm(),
+        }
+    }
+}
+
+/// A DNN as a DAG of layers grouped into topological levels.
+#[derive(Debug, Clone)]
+pub struct ModelGraph {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Data-flow edges between layer ids (producer, consumer).
+    pub edges: Vec<(usize, usize)>,
+    /// Layer ids per level, in level order.
+    pub levels: Vec<Vec<usize>>,
+}
+
+impl ModelGraph {
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total model size in MB (for parameter-synchronization transfers).
+    pub fn param_mb(&self) -> f64 {
+        self.layers.iter().map(|l| profile::weight_mb(&l.kind)).sum()
+    }
+
+    /// Total GFLOPs per training iteration.
+    pub fn total_flops_g(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops_g).sum()
+    }
+
+    /// Consumers of layer `id`.
+    pub fn successors(&self, id: usize) -> Vec<usize> {
+        self.edges.iter().filter(|(a, _)| *a == id).map(|(_, b)| *b).collect()
+    }
+
+    /// Validate structural invariants (used by tests and on construction).
+    pub fn check(&self) -> Result<(), String> {
+        // ids are dense and match indices
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.id != i {
+                return Err(format!("layer {i} has id {}", l.id));
+            }
+        }
+        // levels partition the ids
+        let mut seen = vec![false; self.layers.len()];
+        for lvl in &self.levels {
+            for &id in lvl {
+                if id >= self.layers.len() || seen[id] {
+                    return Err(format!("bad level entry {id}"));
+                }
+                seen[id] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("levels do not cover all layers".into());
+        }
+        // edges go strictly forward in level order
+        for &(a, b) in &self.edges {
+            if self.layers[a].level >= self.layers[b].level {
+                return Err(format!("edge {a}->{b} not level-increasing"));
+            }
+        }
+        // layer.level matches its index in `levels`
+        for (li, lvl) in self.levels.iter().enumerate() {
+            for &id in lvl {
+                if self.layers[id].level != li {
+                    return Err(format!("layer {id} level mismatch"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_structurally_valid() {
+        for kind in [ModelKind::Vgg16, ModelKind::GoogleNet, ModelKind::Rnn, ModelKind::TransformerLm] {
+            let g = kind.build();
+            g.check().unwrap_or_else(|e| panic!("{}: {e}", g.name));
+            assert!(g.n_layers() >= 5, "{} too small", g.name);
+            assert!(g.total_flops_g() > 0.0);
+            assert!(g.param_mb() > 0.0);
+        }
+    }
+
+    #[test]
+    fn demands_are_positive_and_bounded() {
+        for kind in ModelKind::PAPER_MODELS {
+            for l in &kind.build().layers {
+                let d = l.demand();
+                assert!(d.cpu > 0.0 && d.cpu <= 1.0, "{}: cpu {}", l.name, d.cpu);
+                assert!(d.mem > 0.0);
+                assert!(d.bw >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn demand_weight_monotone_in_demand() {
+        let caps = Resources::new(1.0, 2048.0, 100.0);
+        let g = ModelKind::Vgg16.build();
+        // The giant fc1 layer (411 MB of weights) must out-weigh the small
+        // final classifier fc3.
+        let fc1 = g.layers.iter().find(|l| l.name == "fc1").unwrap();
+        let fc3 = g.layers.iter().find(|l| l.name == "fc3").unwrap();
+        assert!(fc1.demand_weight(&caps) > fc3.demand_weight(&caps));
+    }
+
+    #[test]
+    fn model_kind_parse_roundtrip() {
+        for kind in [ModelKind::Vgg16, ModelKind::GoogleNet, ModelKind::Rnn, ModelKind::TransformerLm] {
+            assert_eq!(ModelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(ModelKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn googlenet_has_parallel_levels() {
+        let g = ModelKind::GoogleNet.build();
+        assert!(
+            g.levels.iter().any(|l| l.len() >= 3),
+            "inception branches should occupy one level"
+        );
+    }
+
+    #[test]
+    fn vgg_is_sequential() {
+        let g = ModelKind::Vgg16.build();
+        assert!(g.levels.iter().all(|l| l.len() == 1));
+    }
+
+    #[test]
+    fn vgg16_total_sizes_realistic() {
+        let g = ModelKind::Vgg16.build();
+        // VGG-16 has ~138M params ≈ 528 MB fp32.
+        assert!((400.0..700.0).contains(&g.param_mb()), "param_mb={}", g.param_mb());
+    }
+}

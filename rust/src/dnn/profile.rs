@@ -1,0 +1,168 @@
+//! Analytic layer profiler.
+//!
+//! Stands in for the paper's TensorFlow-benchmark-tool profiling step:
+//! given a [`LayerKind`] and the training batch size it
+//! produces the per-iteration demands the schedulers consume —
+//! GFLOPs (fwd+bwd), resident memory (weights + activations + gradients),
+//! and activation-output transfer size.
+//!
+//! Constants are calibrated to edge-class devices: a reference host core
+//! (CPU host-ratio 1.0) sustains [`GFLOPS_PER_HOST`] GFLOP/s, the target
+//! scheduling rate is one iteration per [`TARGET_ITER_SECS`].
+
+use super::LayerKind;
+
+/// GFLOP/s a full reference core sustains on DNN kernels.
+pub const GFLOPS_PER_HOST: f64 = 8.0;
+/// Nominal iteration period used to convert per-iteration work into
+/// demand *rates* (CPU host-ratio, Mbps).  Calibrated so a cluster of
+/// five Table-I edges can host its three concurrent DL jobs just under
+/// the α threshold when scheduled well — the regime the paper evaluates
+/// (good schedules avoid overload, bad ones collide).
+pub const TARGET_ITER_SECS: f64 = 240.0;
+/// Bytes per fp32 scalar.
+const BYTES_F32: f64 = 4.0;
+/// Backward pass costs ~2x the forward FLOPs (standard rule of thumb).
+const BWD_FACTOR: f64 = 3.0;
+
+/// Forward GFLOPs for one sample through the layer.
+pub fn fwd_gflops(kind: &LayerKind) -> f64 {
+    let flops = match kind {
+        LayerKind::Conv { hw, cin, cout, k } => {
+            2.0 * (hw * hw) as f64 * (*cin as f64) * (*cout as f64) * (k * k) as f64
+        }
+        LayerKind::Pool { hw, c } => (hw * hw * c) as f64 * 4.0,
+        LayerKind::Dense { din, dout } => 2.0 * (*din as f64) * (*dout as f64),
+        LayerKind::Lstm { din, hidden, steps } => {
+            // 4 gates, input + recurrent matmuls, per step.
+            (*steps as f64) * 2.0 * 4.0 * ((din + hidden) * hidden) as f64
+        }
+        LayerKind::Embed { dim, seq, .. } => (seq * dim) as f64,
+        LayerKind::Attention { seq, dim, .. } => {
+            // qkv + out projections + 2 * (seq x seq x dim) score/context.
+            2.0 * 4.0 * (dim * dim * seq) as f64 + 2.0 * 2.0 * (seq * seq * dim) as f64
+        }
+        LayerKind::Concat { hw, c } => (hw * hw * c) as f64,
+    };
+    flops / 1e9
+}
+
+/// Parameter memory in MB.
+pub fn weight_mb(kind: &LayerKind) -> f64 {
+    let params = match kind {
+        LayerKind::Conv { cin, cout, k, .. } => (cin * cout * k * k + cout) as f64,
+        LayerKind::Pool { .. } | LayerKind::Concat { .. } => 0.0,
+        LayerKind::Dense { din, dout } => (din * dout + dout) as f64,
+        LayerKind::Lstm { din, hidden, .. } => (4 * ((din + hidden) * hidden + hidden)) as f64,
+        LayerKind::Embed { vocab, dim, .. } => (vocab * dim) as f64,
+        LayerKind::Attention { dim, .. } => (4 * dim * dim) as f64,
+    };
+    params * BYTES_F32 / 1e6
+}
+
+/// Activation output size in MB for one sample.
+pub fn out_mb(kind: &LayerKind) -> f64 {
+    let elems = match kind {
+        LayerKind::Conv { hw, cout, .. } => (hw * hw * cout) as f64,
+        LayerKind::Pool { hw, c } => ((hw / 2).max(1).pow(2) * c) as f64,
+        LayerKind::Dense { dout, .. } => *dout as f64,
+        LayerKind::Lstm { hidden, steps, .. } => (hidden * steps) as f64,
+        LayerKind::Embed { dim, seq, .. } => (seq * dim) as f64,
+        LayerKind::Attention { seq, dim, .. } => (seq * dim) as f64,
+        LayerKind::Concat { hw, c } => (hw * hw * c) as f64,
+    };
+    elems * BYTES_F32 / 1e6
+}
+
+/// Full per-iteration profile for a layer at the given batch size:
+/// `(flops_g, mem_mb, out_mb)`.
+pub fn profile(kind: &LayerKind, batch: usize) -> (f64, f64, f64) {
+    let b = batch as f64;
+    let flops_g = fwd_gflops(kind) * b * BWD_FACTOR;
+    // Resident set: weights + in/out activations.  Gradients are pushed
+    // to the parameter server as they are produced (PS strategy), so they
+    // do not stay resident.
+    let act_mb = out_mb(kind) * b;
+    let mem_mb = weight_mb(kind) + 2.0 * act_mb;
+    (flops_g, mem_mb.max(0.1), out_mb(kind) * b)
+}
+
+/// CPU host-ratio demand to run `flops_g` GFLOPs within the target
+/// iteration period, clamped to one full host core.
+pub fn cpu_demand(flops_g: f64) -> f64 {
+    (flops_g / (GFLOPS_PER_HOST * TARGET_ITER_SECS)).clamp(0.005, 1.0)
+}
+
+/// Bandwidth demand (Mbps) to ship `out_mb` per iteration.
+pub fn bw_demand(out_mb: f64) -> f64 {
+    out_mb * 8.0 / TARGET_ITER_SECS
+}
+
+/// Compute seconds for `flops_g` GFLOPs on `cpu_share` host-ratio worth
+/// of CPU (the simulator's core speed law).
+pub fn compute_secs(flops_g: f64, cpu_share: f64) -> f64 {
+    if flops_g <= 0.0 {
+        return 0.0;
+    }
+    flops_g / (GFLOPS_PER_HOST * cpu_share.max(1e-6))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_flops_formula() {
+        // 2 * HW^2 * cin * cout * k^2
+        let k = LayerKind::Conv { hw: 10, cin: 3, cout: 8, k: 3 };
+        let expect = 2.0 * 100.0 * 3.0 * 8.0 * 9.0 / 1e9;
+        assert!((fwd_gflops(&k) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dense_weight_memory() {
+        let k = LayerKind::Dense { din: 1000, dout: 500 };
+        let expect = (1000.0 * 500.0 + 500.0) * 4.0 / 1e6;
+        assert!((weight_mb(&k) - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn vgg_fc1_is_heavy() {
+        // 25088 -> 4096: ~102.8M params ≈ 411 MB.
+        let k = LayerKind::Dense { din: 25088, dout: 4096 };
+        assert!((weight_mb(&k) - 411.0).abs() < 5.0);
+    }
+
+    #[test]
+    fn profile_scales_with_batch() {
+        let k = LayerKind::Conv { hw: 28, cin: 32, cout: 64, k: 3 };
+        let (f1, m1, o1) = profile(&k, 1);
+        let (f32_, _m32, o32) = profile(&k, 32);
+        assert!((f32_ / f1 - 32.0).abs() < 1e-9);
+        assert!((o32 / o1 - 32.0).abs() < 1e-9);
+        assert!(m1 > 0.0);
+    }
+
+    #[test]
+    fn cpu_demand_clamped() {
+        assert_eq!(cpu_demand(0.0), 0.005);
+        assert_eq!(cpu_demand(1e9), 1.0);
+        let mid = cpu_demand(GFLOPS_PER_HOST * TARGET_ITER_SECS * 0.5);
+        assert!((mid - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_secs_inverse_in_share() {
+        let t1 = compute_secs(80.0, 1.0);
+        let t2 = compute_secs(80.0, 0.5);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        assert_eq!(compute_secs(0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn lstm_flops_scale_with_steps() {
+        let a = LayerKind::Lstm { din: 5, hidden: 64, steps: 10 };
+        let b = LayerKind::Lstm { din: 5, hidden: 64, steps: 20 };
+        assert!((fwd_gflops(&b) / fwd_gflops(&a) - 2.0).abs() < 1e-9);
+    }
+}

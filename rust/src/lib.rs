@@ -1,0 +1,51 @@
+//! # SROLE — Shielded Reinforcement Learning for DL training on edges
+//!
+//! Production-quality reproduction of *"Distributed Training for Deep
+//! Learning Models On An Edge Computing Network Using Shielded
+//! Reinforcement Learning"* (Sen & Shen, 2022).
+//!
+//! The paper schedules the partitions (layers) of DNN training jobs onto
+//! a cluster of edge nodes and compares four methods:
+//!
+//! * **RL** — centralized RL at the cluster head;
+//! * **MARL** — every edge node schedules its own jobs with local RL
+//!   (action collisions possible);
+//! * **SROLE-C** — MARL plus a centralized shield (paper's Algorithm 1)
+//!   that detects collisions and substitutes minimal-interference safe
+//!   actions;
+//! * **SROLE-D** — MARL plus decentralized per-sub-cluster shields that
+//!   coordinate through delegates on sub-cluster boundaries.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the coordinator: edge-network substrate,
+//!   discrete-event simulator, MARL agents, shields, metrics and the
+//!   figure-regeneration harness.
+//! * **L2 (python/compile/model.py)** — JAX compute graphs (Q-network,
+//!   transformer LM) AOT-lowered to HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (fused dense,
+//!   fused causal attention) called from L2.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO text
+//! artifacts through PJRT (`xla` crate) and [`emu`] drives real
+//! data-parallel training with them.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod dnn;
+pub mod emu;
+pub mod metrics;
+pub mod net;
+pub mod rl;
+pub mod runtime;
+pub mod sched;
+pub mod shield;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+pub use cluster::{ClusterSpec, EdgeNode, NodeId, ResourceKind, Resources};
+pub use config::ExperimentConfig;
+pub use coordinator::{Experiment, ExperimentResult, Method};
+pub use dnn::{Layer, ModelGraph, ModelKind};

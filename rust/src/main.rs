@@ -1,0 +1,223 @@
+//! `srole` — CLI for the SROLE reproduction.
+//!
+//! Subcommands:
+//! * `run` — run one experiment configuration for one/all methods and
+//!   print the metric summaries (optionally `--json`).
+//! * `emu` — live data-parallel training on the thread-based cluster
+//!   emulation (real PJRT compute; prints the loss curve).
+//! * `figures` — points at the `figures` binary regenerating Fig 4–13.
+
+use srole::config::ExperimentConfig;
+use srole::coordinator::{Experiment, Method};
+use srole::util::cli::{Cli, CliError};
+use srole::util::table::{f, Table};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&argv[1..]),
+        Some("pretrain") => cmd_pretrain(&argv[1..]),
+        Some("emu") => cmd_emu(&argv[1..]),
+        Some("figures") => {
+            eprintln!("use the dedicated binary: cargo run --release --bin figures -- <fig4|fig5|...|all>");
+            2
+        }
+        _ => {
+            eprintln!("usage: srole <run|pretrain|emu|figures> [flags]   (--help per subcommand)");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_run(argv: &[String]) -> i32 {
+    let cli = Cli::new("srole run", "run one experiment configuration")
+        .opt("config", None, "TOML config file (flat keys, see config module)")
+        .opt("method", Some("all"), "RL | MARL | SROLE-C | SROLE-D | all")
+        .opt("model", Some("vgg16"), "vgg16 | googlenet | rnn")
+        .opt("edges", Some("25"), "number of edge nodes")
+        .opt("workload", Some("1.0"), "background workload fraction")
+        .opt("kappa", Some("100"), "shield penalty κ")
+        .opt("seed", Some("1"), "base RNG seed")
+        .opt("repetitions", Some("5"), "independent repetitions")
+        .opt("iterations", Some("50"), "training iterations per job")
+        .flag("real", "use the real-device profile (10 Pis, one cluster)")
+        .flag("json", "emit raw metrics as JSON");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::Help) => {
+            print!("{}", cli.usage());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+
+    let build = || -> Result<ExperimentConfig, String> {
+        let mut cfg = if args.has("real") {
+            ExperimentConfig::real_device()
+        } else {
+            ExperimentConfig::default()
+        };
+        if let Some(path) = args.get("config") {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            cfg = ExperimentConfig::from_toml(&text)?;
+        }
+        cfg.apply("model", args.get("model").unwrap())?;
+        if !args.has("real") {
+            cfg.apply("edges", args.get("edges").unwrap())?;
+        }
+        cfg.apply("workload", args.get("workload").unwrap())?;
+        cfg.apply("kappa", args.get("kappa").unwrap())?;
+        cfg.apply("seed", args.get("seed").unwrap())?;
+        cfg.apply("repetitions", args.get("repetitions").unwrap())?;
+        cfg.apply("iterations", args.get("iterations").unwrap())?;
+        cfg.validate()?;
+        Ok(cfg)
+    };
+    let cfg = match build() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+
+    let methods: Vec<Method> = match args.get("method") {
+        Some("all") | None => Method::ALL.to_vec(),
+        Some(m) => match Method::parse(m) {
+            Some(m) => vec![m],
+            None => {
+                eprintln!("unknown method {m}");
+                return 2;
+            }
+        },
+    };
+
+    let exp = Experiment::new(cfg.clone());
+    let mut table = Table::new(
+        &format!(
+            "srole run: model={} edges={} workload={:.0}% κ={} ({} reps)",
+            cfg.model.name(),
+            cfg.n_edges,
+            cfg.workload * 100.0,
+            cfg.reward.kappa,
+            cfg.repetitions
+        ),
+        &["method", "jct_median_s", "jct_p95_s", "collisions", "sched_s", "shield_s", "util_cpu_med"],
+    );
+    for m in methods {
+        let r = exp.run(m);
+        let jct = r.metrics.jct_summary();
+        if args.has("json") {
+            println!("{{\"method\":\"{}\",\"metrics\":{}}}", m.name(), r.metrics.to_json().to_string());
+        }
+        table.row(vec![
+            m.name().into(),
+            f(jct.median),
+            f(jct.p95),
+            r.metrics.collisions.to_string(),
+            format!("{:.3}", r.metrics.mean_sched_secs()),
+            format!("{:.3}", r.metrics.mean_shield_secs()),
+            r.metrics.util_summary("cpu").map(|s| f(s.median)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    table.print();
+    0
+}
+
+/// Offline pre-training with persistence: the paper's "the RL is
+/// initially pre-trained and distributed to each edge node".
+fn cmd_pretrain(argv: &[String]) -> i32 {
+    let cli = Cli::new("srole pretrain", "pre-train the scheduling policy offline")
+        .opt("episodes", Some("1000"), "pre-training episodes")
+        .opt("model", Some("vgg16"), "vgg16 | googlenet | rnn")
+        .opt("seed", Some("1"), "seed")
+        .opt("save", Some("policy.json"), "output path for the Q-table");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::Help) => {
+            print!("{}", cli.usage());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let mut cfg = ExperimentConfig::default();
+    if let Err(e) = cfg.apply("model", args.get("model").unwrap()) {
+        eprintln!("{e}");
+        return 2;
+    }
+    cfg.pretrain_episodes = args.usize("episodes").unwrap_or(1000);
+    cfg.seed = args.u64("seed").unwrap_or(1);
+    let mut policy = srole::rl::TabularQ::new(cfg.lr, cfg.epsilon);
+    let mut rng = srole::util::Rng::new(cfg.seed);
+    srole::coordinator::pretrain(&mut policy, &cfg, &mut rng);
+    let path = args.get("save").unwrap();
+    let visited = policy.visits.iter().filter(|&&v| v > 0).count();
+    match std::fs::write(path, policy.to_json().to_string()) {
+        Ok(()) => {
+            println!(
+                "pre-trained {} episodes on {}; {}/{} table cells visited; saved to {path}",
+                cfg.pretrain_episodes,
+                cfg.model.name(),
+                visited,
+                srole::rl::TABLE_SIZE
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("write {path}: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_emu(argv: &[String]) -> i32 {
+    let cli = Cli::new("srole emu", "live PS-strategy training on the thread emulation")
+        .opt("workers", Some("3"), "worker threads (edge nodes)")
+        .opt("steps", Some("60"), "training steps")
+        .opt("lr", Some("0.5"), "learning rate")
+        .opt("seed", Some("1"), "seed")
+        .opt("artifacts", None, "artifacts directory (default: auto-detect)");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(CliError::Help) => {
+            print!("{}", cli.usage());
+            return 0;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(srole::runtime::Engine::default_dir);
+    let cfg = srole::emu::PsConfig {
+        workers: args.usize("workers").unwrap_or(3),
+        steps: args.usize("steps").unwrap_or(60),
+        lr: args.f64("lr").unwrap_or(0.5) as f32,
+        seed: args.u64("seed").unwrap_or(1),
+        log_every: 5,
+    };
+    match srole::emu::train_data_parallel(&dir, &cfg) {
+        Ok(logs) => {
+            let mut t = Table::new("PS training (loss curve)", &["step", "loss", "wall_ms"]);
+            for l in &logs {
+                t.row(vec![l.step.to_string(), format!("{:.4}", l.loss), format!("{:.1}", l.wall_ms)]);
+            }
+            t.print();
+            0
+        }
+        Err(e) => {
+            eprintln!("emu failed: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! Metric collection and summarization for the paper's four evaluation
+//! metrics (§V-C): job completion time, tasks per device, resource
+//! utilization, computation-time overhead — plus action collisions.
+
+use crate::util::json::{obj, Json};
+use crate::util::stats::Summary;
+
+/// Raw metrics of one experiment run (one method × one configuration ×
+/// one seed).
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    /// Per-job training time (the paper's JCT).
+    pub jct: Vec<f64>,
+    /// Per-job total decision latency (scheduling + shielding + queue).
+    pub decision_secs: Vec<f64>,
+    /// Per-job scheduling-only time (Fig 7 blue bar).
+    pub sched_secs: Vec<f64>,
+    /// Per-job shielding-only time (Fig 7 orange bar).
+    pub shield_secs: Vec<f64>,
+    /// Action collisions (scheduling-time, pre-correction) + runtime
+    /// overload onsets (Fig 8 metric).
+    pub collisions: usize,
+    /// Nodes entering actual overload during execution (kept separate
+    /// from the paper's action-collision count).
+    pub runtime_overloads: usize,
+    pub shield_corrections: usize,
+    pub memory_violations: usize,
+    /// Per-(node, sample) task counts.
+    pub tasks_per_device: Vec<f64>,
+    /// Per-(node, sample) utilization per resource.
+    pub util_cpu: Vec<f64>,
+    pub util_mem: Vec<f64>,
+    pub util_bw: Vec<f64>,
+    pub makespan: f64,
+}
+
+impl RunMetrics {
+    pub fn jct_summary(&self) -> Summary {
+        Summary::of(&self.jct)
+    }
+
+    pub fn tasks_summary(&self) -> Option<Summary> {
+        if self.tasks_per_device.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.tasks_per_device))
+        }
+    }
+
+    pub fn util_summary(&self, kind: &str) -> Option<Summary> {
+        let v = match kind {
+            "cpu" => &self.util_cpu,
+            "mem" => &self.util_mem,
+            "bw" => &self.util_bw,
+            _ => panic!("unknown resource {kind}"),
+        };
+        if v.is_empty() {
+            None
+        } else {
+            Some(Summary::of(v))
+        }
+    }
+
+    pub fn mean_sched_secs(&self) -> f64 {
+        if self.sched_secs.is_empty() {
+            0.0
+        } else {
+            self.sched_secs.iter().sum::<f64>() / self.sched_secs.len() as f64
+        }
+    }
+
+    pub fn mean_shield_secs(&self) -> f64 {
+        if self.shield_secs.is_empty() {
+            0.0
+        } else {
+            self.shield_secs.iter().sum::<f64>() / self.shield_secs.len() as f64
+        }
+    }
+
+    /// Mean full decision latency (queue + scheduling + shielding) —
+    /// the paper's "time from when a job is initiated to when the task
+    /// assignment schedule is made".
+    pub fn mean_decision_secs(&self) -> f64 {
+        if self.decision_secs.is_empty() {
+            0.0
+        } else {
+            self.decision_secs.iter().sum::<f64>() / self.decision_secs.len() as f64
+        }
+    }
+
+    /// Combined per-job decision overhead (Fig 7 total bar height):
+    /// decision latency, split by the figures into a scheduling part
+    /// (`mean_decision_secs - mean_shield_secs`, which for centralized RL
+    /// includes queueing at the head) and the shielding part.
+    pub fn mean_overhead_secs(&self) -> f64 {
+        self.mean_decision_secs()
+    }
+
+    /// Serialize for `--json` output.
+    pub fn to_json(&self) -> Json {
+        let arr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+        obj(vec![
+            ("jct", arr(&self.jct)),
+            ("decision_secs", arr(&self.decision_secs)),
+            ("sched_secs", arr(&self.sched_secs)),
+            ("shield_secs", arr(&self.shield_secs)),
+            ("collisions", Json::Num(self.collisions as f64)),
+            ("runtime_overloads", Json::Num(self.runtime_overloads as f64)),
+            ("shield_corrections", Json::Num(self.shield_corrections as f64)),
+            ("memory_violations", Json::Num(self.memory_violations as f64)),
+            ("tasks_per_device", arr(&self.tasks_per_device)),
+            ("util_cpu", arr(&self.util_cpu)),
+            ("util_mem", arr(&self.util_mem)),
+            ("util_bw", arr(&self.util_bw)),
+            ("makespan", Json::Num(self.makespan)),
+        ])
+    }
+
+    /// Merge another run (repetition) into a pooled sample.
+    pub fn absorb(&mut self, other: &RunMetrics) {
+        self.jct.extend_from_slice(&other.jct);
+        self.decision_secs.extend_from_slice(&other.decision_secs);
+        self.sched_secs.extend_from_slice(&other.sched_secs);
+        self.shield_secs.extend_from_slice(&other.shield_secs);
+        self.collisions += other.collisions;
+        self.runtime_overloads += other.runtime_overloads;
+        self.shield_corrections += other.shield_corrections;
+        self.memory_violations += other.memory_violations;
+        self.tasks_per_device.extend_from_slice(&other.tasks_per_device);
+        self.util_cpu.extend_from_slice(&other.util_cpu);
+        self.util_mem.extend_from_slice(&other.util_mem);
+        self.util_bw.extend_from_slice(&other.util_bw);
+        self.makespan = self.makespan.max(other.makespan);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunMetrics {
+        RunMetrics {
+            jct: vec![100.0, 200.0, 300.0],
+            decision_secs: vec![1.0, 2.0, 3.0],
+            sched_secs: vec![0.5, 0.5, 0.5],
+            shield_secs: vec![0.1, 0.1, 0.1],
+            collisions: 4,
+            runtime_overloads: 0,
+            shield_corrections: 2,
+            memory_violations: 1,
+            tasks_per_device: vec![2.0, 3.0, 5.0],
+            util_cpu: vec![0.5, 0.6],
+            util_mem: vec![0.4, 0.5],
+            util_bw: vec![0.1, 0.2],
+            makespan: 1234.0,
+        }
+    }
+
+    #[test]
+    fn summaries() {
+        let m = sample();
+        assert_eq!(m.jct_summary().median, 200.0);
+        assert_eq!(m.tasks_summary().unwrap().median, 3.0);
+        assert_eq!(m.util_summary("cpu").unwrap().n, 2);
+        assert!((m.mean_decision_secs() - 2.0).abs() < 1e-12);
+        assert!((m.mean_overhead_secs() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absorb_pools_samples() {
+        let mut a = sample();
+        let b = sample();
+        a.absorb(&b);
+        assert_eq!(a.jct.len(), 6);
+        assert_eq!(a.collisions, 8);
+        assert_eq!(a.makespan, 1234.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let m = sample();
+        let j = m.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("collisions").unwrap().as_usize(), Some(4));
+        assert_eq!(parsed.get("jct").unwrap().as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_resource_panics() {
+        sample().util_summary("gpu");
+    }
+}

@@ -1,0 +1,205 @@
+//! Edge-network substrate: 2-D geography, transmission ranges, and the
+//! pairwise bandwidth/latency model.
+//!
+//! The paper's testbeds shape bandwidth with `tcconfig` (containers) and
+//! `wondershaper` (Raspberry Pis); here a [`Topology`] carries an explicit
+//! symmetric bandwidth matrix plus node positions.  Geographic proximity
+//! drives both cluster formation (§III) and the neighbor sets that bound
+//! every MARL agent's action space ("edge nodes in its transmission
+//! range", §I).
+
+use crate::util::Rng;
+
+/// 2-D position in meters (arbitrary plane).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pos {
+    pub x: f64,
+    pub y: f64,
+}
+
+impl Pos {
+    pub fn dist(&self, other: &Pos) -> f64 {
+        ((self.x - other.x).powi(2) + (self.y - other.y).powi(2)).sqrt()
+    }
+}
+
+/// Network topology over `n` edge nodes.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub positions: Vec<Pos>,
+    /// Transmission range in meters: nodes within range are neighbors.
+    pub range: f64,
+    /// Symmetric pairwise bandwidth in Mbps (`bw[i][j]`, `bw[i][i] = inf`).
+    pub bw: Vec<Vec<f64>>,
+    /// One-way latency in seconds for control messages.
+    pub latency: Vec<Vec<f64>>,
+}
+
+impl Topology {
+    pub fn n(&self) -> usize {
+        self.positions.len()
+    }
+
+    /// All nodes within transmission range of `i` (excluding `i`).
+    pub fn neighbors(&self, i: usize) -> Vec<usize> {
+        (0..self.n())
+            .filter(|&j| j != i && self.positions[i].dist(&self.positions[j]) <= self.range)
+            .collect()
+    }
+
+    pub fn bandwidth(&self, a: usize, b: usize) -> f64 {
+        if a == b {
+            f64::INFINITY
+        } else {
+            self.bw[a][b]
+        }
+    }
+
+    pub fn latency(&self, a: usize, b: usize) -> f64 {
+        if a == b {
+            0.0
+        } else {
+            self.latency[a][b]
+        }
+    }
+
+    /// Transfer time in seconds for `mb` megabytes between `a` and `b`,
+    /// with `flows` concurrent flows sharing the link.
+    pub fn transfer_secs(&self, a: usize, b: usize, mb: f64, flows: usize) -> f64 {
+        if a == b || mb <= 0.0 {
+            return 0.0;
+        }
+        let bw = self.bandwidth(a, b) / flows.max(1) as f64; // Mbps
+        self.latency(a, b) + mb * 8.0 / bw
+    }
+
+    /// Generate a topology: positions uniform in a `side`×`side` square,
+    /// bandwidth sampled uniformly from `bw_choices` per unordered pair.
+    pub fn generate(
+        rng: &mut Rng,
+        n: usize,
+        side: f64,
+        range: f64,
+        bw_choices: &[f64],
+        latency_s: f64,
+    ) -> Topology {
+        let positions: Vec<Pos> =
+            (0..n).map(|_| Pos { x: rng.range_f64(0.0, side), y: rng.range_f64(0.0, side) }).collect();
+        let mut bw = vec![vec![0.0; n]; n];
+        let mut latency = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            bw[i][i] = f64::INFINITY;
+            for j in (i + 1)..n {
+                let b = *rng.choose(bw_choices);
+                bw[i][j] = b;
+                bw[j][i] = b;
+                let l = latency_s * rng.range_f64(0.5, 1.5);
+                latency[i][j] = l;
+                latency[j][i] = l;
+            }
+        }
+        Topology { positions, range, bw, latency }
+    }
+
+    /// Generate positions pre-grouped into geographic clusters of
+    /// `cluster_size`: each cluster gets a well-separated center and its
+    /// members are placed within `spread` of it.  This mirrors the paper's
+    /// "clusters of edges are created according to geographical locations".
+    pub fn generate_clustered(
+        rng: &mut Rng,
+        n: usize,
+        cluster_size: usize,
+        spread: f64,
+        range: f64,
+        bw_choices: &[f64],
+        latency_s: f64,
+    ) -> Topology {
+        let n_clusters = n.div_ceil(cluster_size);
+        let grid = (n_clusters as f64).sqrt().ceil() as usize;
+        let cell = spread * 4.0;
+        let mut positions = Vec::with_capacity(n);
+        for c in 0..n_clusters {
+            let cx = (c % grid) as f64 * cell + cell / 2.0;
+            let cy = (c / grid) as f64 * cell + cell / 2.0;
+            let members = ((c * cluster_size)..n.min((c + 1) * cluster_size)).count();
+            for _ in 0..members {
+                let ang = rng.range_f64(0.0, std::f64::consts::TAU);
+                let r = spread * rng.f64().sqrt();
+                positions.push(Pos { x: cx + r * ang.cos(), y: cy + r * ang.sin() });
+            }
+        }
+        let mut topo = Topology::generate(rng, n, 1.0, range, bw_choices, latency_s);
+        topo.positions = positions;
+        topo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo(n: usize) -> Topology {
+        let mut rng = Rng::new(1);
+        Topology::generate(&mut rng, n, 100.0, 40.0, &[50.0, 100.0], 0.002)
+    }
+
+    #[test]
+    fn symmetric_bandwidth() {
+        let t = topo(10);
+        for i in 0..10 {
+            for j in 0..10 {
+                assert_eq!(t.bw[i][j], t.bw[j][i]);
+            }
+        }
+    }
+
+    #[test]
+    fn neighbors_within_range_and_symmetric() {
+        let t = topo(15);
+        for i in 0..15 {
+            for &j in &t.neighbors(i) {
+                assert!(t.positions[i].dist(&t.positions[j]) <= t.range);
+                assert!(t.neighbors(j).contains(&i));
+            }
+            assert!(!t.neighbors(i).contains(&i));
+        }
+    }
+
+    #[test]
+    fn transfer_time_scales_with_size_and_flows() {
+        let t = topo(5);
+        let t1 = t.transfer_secs(0, 1, 10.0, 1);
+        let t2 = t.transfer_secs(0, 1, 20.0, 1);
+        let t4 = t.transfer_secs(0, 1, 10.0, 2);
+        assert!(t2 > t1);
+        assert!(t4 > t1);
+        assert_eq!(t.transfer_secs(3, 3, 10.0, 1), 0.0);
+    }
+
+    #[test]
+    fn clustered_positions_are_grouped() {
+        let mut rng = Rng::new(2);
+        let t = Topology::generate_clustered(&mut rng, 25, 5, 10.0, 25.0, &[100.0], 0.001);
+        assert_eq!(t.n(), 25);
+        // Within-cluster distances are bounded by the spread diameter.
+        for c in 0..5 {
+            for i in 0..5 {
+                for j in 0..5 {
+                    let a = c * 5 + i;
+                    let b = c * 5 + j;
+                    assert!(t.positions[a].dist(&t.positions[b]) <= 20.0 + 1e-9);
+                }
+            }
+        }
+        // Different clusters are farther apart than cluster members.
+        assert!(t.positions[0].dist(&t.positions[24]) > 20.0);
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = topo(8);
+        let b = topo(8);
+        assert_eq!(a.positions, b.positions);
+        assert_eq!(a.bw, b.bw);
+    }
+}

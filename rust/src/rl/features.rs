@@ -1,0 +1,145 @@
+//! State featurization shared by the tabular and DQN policies.
+//!
+//! The dense vector layout MUST stay in sync with
+//! `python/compile/model.py` (`STATE_DIM = 3 + 3 + 3*MAX_NEIGHBORS`):
+//! 3 layer-demand features, 3 owner-utilization features, then
+//! `(cpu_avail, mem_avail, bw)` per candidate, zero-padded/truncated to
+//! [`MAX_NEIGHBORS`] + the implicit self slot handled as candidate 0.
+
+use crate::cluster::NodeId;
+use crate::dnn::Layer;
+
+use super::BUCKETS;
+
+/// Maximum neighbor count encoded in the DQN state (mirrors python).
+pub const MAX_NEIGHBORS: usize = 10;
+/// DQN state dimension (mirrors python STATE_DIM).
+pub const STATE_DIM: usize = 3 + 3 + 3 * MAX_NEIGHBORS;
+/// DQN action count (self + MAX_NEIGHBORS, mirrors python NUM_ACTIONS).
+pub const NUM_ACTIONS: usize = MAX_NEIGHBORS + 1;
+
+/// What an agent sees about one candidate edge node: availability
+/// fractions in [0, 1] per resource (1 = fully idle) and the link
+/// bandwidth back to the job owner.
+#[derive(Debug, Clone)]
+pub struct CandidateView {
+    pub node: NodeId,
+    pub avail_cpu: f64,
+    pub avail_mem: f64,
+    pub avail_bw: f64,
+    pub bw_to_owner: f64,
+}
+
+/// Equal-width low/medium/high bucket of a [0, 1] fraction (§IV-B).
+pub fn bucket(frac: f64) -> usize {
+    let f = frac.clamp(0.0, 1.0);
+    ((f * BUCKETS as f64) as usize).min(BUCKETS - 1)
+}
+
+/// Size class of a layer (small / medium / large) from its CPU and
+/// memory demands — the layer half of the tabular state.
+pub fn layer_class(layer: &Layer) -> usize {
+    let d = layer.demand();
+    // Normalize against an edge-class reference node (1 core, 4 GB).
+    let score = (d.cpu / 1.0) + (d.mem / 4096.0);
+    if score < 0.03 {
+        0
+    } else if score < 0.09 {
+        1
+    } else {
+        2
+    }
+}
+
+/// Dense DQN state vector for one decision step.
+pub fn state_vector(layer: &Layer, owner_util: [f64; 3], cands: &[CandidateView]) -> Vec<f32> {
+    let d = layer.demand();
+    let mut v = Vec::with_capacity(STATE_DIM);
+    v.push(d.cpu as f32);
+    v.push((d.mem / 4096.0) as f32);
+    v.push((d.bw / 100.0) as f32);
+    for u in owner_util {
+        v.push(u.clamp(0.0, 2.0) as f32);
+    }
+    for i in 0..MAX_NEIGHBORS {
+        if let Some(c) = cands.get(i) {
+            v.push(c.avail_cpu as f32);
+            v.push(c.avail_mem as f32);
+            v.push((c.bw_to_owner / 1000.0) as f32);
+        } else {
+            v.extend_from_slice(&[0.0, 0.0, 0.0]);
+        }
+    }
+    debug_assert_eq!(v.len(), STATE_DIM);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::ModelKind;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket(0.0), 0);
+        assert_eq!(bucket(0.32), 0);
+        assert_eq!(bucket(0.34), 1);
+        assert_eq!(bucket(0.65), 1);
+        assert_eq!(bucket(0.67), 2);
+        assert_eq!(bucket(1.0), 2);
+        // Out-of-range clamps.
+        assert_eq!(bucket(-0.5), 0);
+        assert_eq!(bucket(7.0), 2);
+    }
+
+    #[test]
+    fn layer_classes_spread() {
+        let vgg = ModelKind::Vgg16.build();
+        let classes: Vec<usize> = vgg.layers.iter().map(layer_class).collect();
+        // VGG has both small (pool) and large (fc1 / late conv) layers.
+        assert!(classes.contains(&0) || classes.contains(&1));
+        assert!(classes.contains(&2), "{classes:?}");
+    }
+
+    #[test]
+    fn state_vector_dimension_matches_python() {
+        let l = &ModelKind::Rnn.build().layers[0];
+        let cands: Vec<CandidateView> = (0..4)
+            .map(|i| CandidateView {
+                node: i,
+                avail_cpu: 0.5,
+                avail_mem: 0.5,
+                avail_bw: 0.5,
+                bw_to_owner: 100.0,
+            })
+            .collect();
+        let v = state_vector(l, [0.1, 0.2, 0.3], &cands);
+        assert_eq!(v.len(), STATE_DIM);
+        assert_eq!(STATE_DIM, 36);
+        assert_eq!(NUM_ACTIONS, 11);
+    }
+
+    #[test]
+    fn state_vector_pads_missing_candidates() {
+        let l = &ModelKind::Rnn.build().layers[0];
+        let v = state_vector(l, [0.0; 3], &[]);
+        // All candidate slots zero.
+        assert!(v[6..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn state_vector_truncates_excess_candidates() {
+        let l = &ModelKind::Rnn.build().layers[0];
+        let cands: Vec<CandidateView> = (0..20)
+            .map(|i| CandidateView {
+                node: i,
+                avail_cpu: 1.0,
+                avail_mem: 1.0,
+                avail_bw: 1.0,
+                bw_to_owner: 500.0,
+            })
+            .collect();
+        let v = state_vector(l, [0.0; 3], &cands);
+        assert_eq!(v.len(), STATE_DIM);
+    }
+}

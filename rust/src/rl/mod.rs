@@ -1,0 +1,406 @@
+//! Reinforcement-learning machinery for the schedulers (§III, §IV-B).
+//!
+//! The scheduling MDP: an agent assigns the layers of a DL job one per
+//! timestep to a candidate edge (itself or a neighbor).  States are
+//! discretized into low/medium/high buckets exactly as the paper
+//! prescribes ("we discretize the continuous space by dividing their
+//! value range into a number (e.g., three) of equal-width ranges").
+//!
+//! Two interchangeable policies implement [`Policy`]:
+//!
+//! * [`TabularQ`] — the paper-faithful CQ-learning table over the
+//!   factored (layer-class × candidate-availability) state;
+//! * `rl::dqn::DqnPolicy` — a Q-network executed through the AOT-compiled
+//!   PJRT artifact (`qnet_fwd` / `qnet_train`), the "keeps training the
+//!   RL model" path.
+
+pub mod dqn;
+pub mod features;
+pub mod replay;
+
+pub use features::{bucket, layer_class, state_vector, CandidateView};
+
+use crate::dnn::Layer;
+use crate::util::Rng;
+
+/// Number of buckets per discretized dimension (low / medium / high).
+pub const BUCKETS: usize = 3;
+
+/// Reward hyper-parameters (§V-A: α=0.9, ρ=1, γ=50, κ=100).
+#[derive(Debug, Clone, Copy)]
+pub struct RewardParams {
+    /// Overload threshold α on any per-resource utilization.
+    pub alpha: f64,
+    /// Reward scale ρ in ρ/√O.
+    pub rho: f64,
+    /// Memory-violation penalty γ (positive; applied as −γ).
+    pub gamma: f64,
+    /// Shield-correction penalty κ (positive; applied as −κ).
+    pub kappa: f64,
+}
+
+impl Default for RewardParams {
+    fn default() -> Self {
+        RewardParams { alpha: 0.9, rho: 1.0, gamma: 50.0, kappa: 100.0 }
+    }
+}
+
+/// Reward normalization.  The paper leaves the unit of O unspecified; with
+/// O in raw seconds ρ/√O ≈ 0.005 while κ = 100, so a single shield
+/// correction would permanently dominate every completion signal (and the
+/// policy collapses onto never-corrected — i.e. worst — actions).  We keep
+/// the paper's *parameters* but normalize both sides to the same scale:
+/// completions are measured in `ρ·(100/√O)` (≈1 for a 3-hour job) and
+/// penalties in units of [`PENALTY_UNIT`] (κ=100 → −4).
+pub const COMPLETION_SCALE: f64 = 100.0;
+pub const PENALTY_UNIT: f64 = 100.0;
+
+impl RewardParams {
+    /// Terminal reward for a completed job with training time `o` seconds
+    /// (paper: r = ρ/√O, normalized — see [`COMPLETION_SCALE`]).
+    pub fn completion_reward(&self, o: f64) -> f64 {
+        self.rho * COMPLETION_SCALE / o.max(1e-9).sqrt()
+    }
+}
+
+/// Per-step penalty flags accumulated while an episode runs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StepPenalty {
+    pub memory_violated: bool,
+    pub shielded: bool,
+}
+
+impl StepPenalty {
+    pub fn value(&self, p: &RewardParams) -> f64 {
+        let mut v = 0.0;
+        if self.memory_violated {
+            v -= p.gamma / PENALTY_UNIT;
+        }
+        if self.shielded {
+            v -= p.kappa / PENALTY_UNIT;
+        }
+        v
+    }
+}
+
+/// One recorded decision of an episode (for the episodic update).
+#[derive(Debug, Clone)]
+pub struct EpisodeStep {
+    /// Tabular state-action key.
+    pub key: usize,
+    /// Dense features (for the DQN path).
+    pub state: Vec<f32>,
+    pub action: usize,
+    pub n_candidates: usize,
+    pub penalty: StepPenalty,
+}
+
+/// A finished episode: all decisions for one DL job plus the realized
+/// training time.
+#[derive(Debug, Clone, Default)]
+pub struct Episode {
+    pub steps: Vec<EpisodeStep>,
+}
+
+/// A scheduling policy: picks a candidate index for the current layer.
+/// (Not `Send`: the DQN variant holds PJRT handles; the simulator is
+/// single-threaded by design for determinism.)
+pub trait Policy {
+    /// Choose among `cands` for `layer`; `explore` enables ε-greedy.
+    fn choose(&mut self, layer: &Layer, cands: &[CandidateView], rng: &mut Rng, explore: bool) -> usize;
+
+    /// Episodic update once the job's training time is known.
+    fn learn(&mut self, episode: &Episode, training_time: f64, params: &RewardParams);
+
+    /// Immediate feedback when the shield replaces this step's action
+    /// ("the shield also notifies the edges within the cluster of the
+    /// safe action and assigns a constant negative reward (κ)", §IV-C).
+    /// Default: no-op (the DQN path gets κ through the episodic replay).
+    fn notify_shielded(&mut self, _step: &EpisodeStep, _params: &RewardParams) {}
+
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// Tabular CQ-learning
+// ---------------------------------------------------------------------------
+
+/// Factored tabular Q: the state of a (layer, candidate) pair is
+/// `(layer class, cpu-avail bucket, mem-avail bucket, bw bucket)` —
+/// 3⁴ = 81 cells.  Action selection scores every candidate with its own
+/// cell and takes the ε-greedy argmax; the episodic update regresses the
+/// visited cells toward the realized return.  This is the tractable
+/// factorization of the paper's CQ-learning local-state scheme.
+#[derive(Debug, Clone)]
+pub struct TabularQ {
+    pub table: Vec<f64>,
+    pub visits: Vec<u32>,
+    pub lr: f64,
+    pub epsilon: f64,
+}
+
+pub const TABLE_SIZE: usize = BUCKETS * BUCKETS * BUCKETS * BUCKETS;
+
+/// Key for a (layer, candidate) pair.
+pub fn table_key(layer_cls: usize, cand: &CandidateView) -> usize {
+    let c = bucket(cand.avail_cpu);
+    let m = bucket(cand.avail_mem);
+    let b = bucket(cand.avail_bw);
+    ((layer_cls * BUCKETS + c) * BUCKETS + m) * BUCKETS + b
+}
+
+impl TabularQ {
+    pub fn new(lr: f64, epsilon: f64) -> TabularQ {
+        TabularQ { table: vec![0.0; TABLE_SIZE], visits: vec![0; TABLE_SIZE], lr, epsilon }
+    }
+
+    pub fn q(&self, key: usize) -> f64 {
+        self.table[key]
+    }
+
+    /// Serialize to JSON (for `srole pretrain --save`; the paper's
+    /// "pre-trained and distributed to each edge node").
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        obj(vec![
+            ("lr", Json::Num(self.lr)),
+            ("epsilon", Json::Num(self.epsilon)),
+            ("table", Json::Arr(self.table.iter().map(|&v| Json::Num(v)).collect())),
+            ("visits", Json::Arr(self.visits.iter().map(|&v| Json::Num(v as f64)).collect())),
+        ])
+    }
+
+    /// Deserialize from [`TabularQ::to_json`] output.
+    pub fn from_json(j: &crate::util::json::Json) -> Result<TabularQ, String> {
+        use crate::util::json::Json;
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("missing {k}"));
+        let arr = |k: &str| -> Result<Vec<f64>, String> {
+            Ok(j.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("missing {k}"))?
+                .iter()
+                .map(|x| x.as_f64().unwrap_or(0.0))
+                .collect())
+        };
+        let table = arr("table")?;
+        if table.len() != TABLE_SIZE {
+            return Err(format!("table size {} != {TABLE_SIZE}", table.len()));
+        }
+        Ok(TabularQ {
+            table,
+            visits: arr("visits")?.iter().map(|&v| v as u32).collect(),
+            lr: num("lr")?,
+            epsilon: num("epsilon")?,
+        })
+    }
+}
+
+impl Policy for TabularQ {
+    fn choose(&mut self, layer: &Layer, cands: &[CandidateView], rng: &mut Rng, explore: bool) -> usize {
+        assert!(!cands.is_empty(), "no candidates");
+        if explore && rng.chance(self.epsilon) {
+            return rng.below(cands.len());
+        }
+        let cls = layer_class(layer);
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for (i, c) in cands.iter().enumerate() {
+            let q = self.table[table_key(cls, c)];
+            // Prefer higher combined availability among equals; in live
+            // (explore) mode add a tiny random jitter — each edge node
+            // trains its own RL replica in the paper, so equal-Q agents do
+            // not all argmax onto the same node.
+            let jitter = if explore { 1e-6 * rng.f64() } else { 0.0 };
+            let score = q + 1e-9 * (c.avail_cpu + c.avail_mem + c.avail_bw) + jitter;
+            if score > best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        best
+    }
+
+    fn learn(&mut self, episode: &Episode, training_time: f64, params: &RewardParams) {
+        let terminal = params.completion_reward(training_time);
+        for step in &episode.steps {
+            let g = terminal + step.penalty.value(params);
+            let k = step.key;
+            self.visits[k] += 1;
+            self.table[k] += self.lr * (g - self.table[k]);
+        }
+    }
+
+    fn notify_shielded(&mut self, step: &EpisodeStep, params: &RewardParams) {
+        // Immediate TD step toward the κ penalty: within the same run,
+        // later decision rounds already avoid the penalized cell.  Higher
+        // |κ| → stronger aversion → fewer collisions (Fig 8).
+        let k = step.key;
+        self.visits[k] += 1;
+        self.table[k] += self.lr * (-params.kappa / PENALTY_UNIT - self.table[k]);
+    }
+
+    fn name(&self) -> &'static str {
+        "tabular_cq"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::ModelKind;
+
+    fn cand(cpu: f64, mem: f64, bw: f64) -> CandidateView {
+        CandidateView { node: 0, avail_cpu: cpu, avail_mem: mem, avail_bw: bw, bw_to_owner: 100.0 }
+    }
+
+    fn some_layer() -> Layer {
+        ModelKind::Rnn.build().layers[1].clone()
+    }
+
+    #[test]
+    fn reward_params_default_match_paper() {
+        let p = RewardParams::default();
+        assert_eq!(p.alpha, 0.9);
+        assert_eq!(p.rho, 1.0);
+        assert_eq!(p.gamma, 50.0);
+        assert_eq!(p.kappa, 100.0);
+    }
+
+    #[test]
+    fn completion_reward_decreases_with_time() {
+        let p = RewardParams::default();
+        assert!(p.completion_reward(100.0) > p.completion_reward(400.0));
+        // O = 10_000 s -> rho * 100/100 = 1.0 (the normalization anchor).
+        assert!((p.completion_reward(10_000.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn penalties_apply() {
+        let p = RewardParams::default();
+        let none = StepPenalty::default();
+        assert_eq!(none.value(&p), 0.0);
+        let mem = StepPenalty { memory_violated: true, shielded: false };
+        assert_eq!(mem.value(&p), -50.0 / PENALTY_UNIT);
+        let both = StepPenalty { memory_violated: true, shielded: true };
+        assert_eq!(both.value(&p), -150.0 / PENALTY_UNIT);
+    }
+
+    #[test]
+    fn table_keys_in_range_and_distinct() {
+        let l = some_layer();
+        let cls = layer_class(&l);
+        let k_low = table_key(cls, &cand(0.1, 0.1, 0.1));
+        let k_high = table_key(cls, &cand(0.9, 0.9, 0.9));
+        assert!(k_low < TABLE_SIZE && k_high < TABLE_SIZE);
+        assert_ne!(k_low, k_high);
+    }
+
+    #[test]
+    fn greedy_prefers_higher_q() {
+        let mut q = TabularQ::new(0.5, 0.0);
+        let l = some_layer();
+        let cls = layer_class(&l);
+        let good = cand(0.9, 0.9, 0.9);
+        let bad = cand(0.1, 0.1, 0.1);
+        q.table[table_key(cls, &good)] = 1.0;
+        q.table[table_key(cls, &bad)] = -1.0;
+        let mut rng = Rng::new(1);
+        let pick = q.choose(&l, &[bad.clone(), good.clone()], &mut rng, false);
+        assert_eq!(pick, 1);
+    }
+
+    #[test]
+    fn learning_moves_q_toward_return() {
+        let mut q = TabularQ::new(0.5, 0.0);
+        let l = some_layer();
+        let c = cand(0.5, 0.5, 0.5);
+        let key = table_key(layer_class(&l), &c);
+        let ep = Episode {
+            steps: vec![EpisodeStep {
+                key,
+                state: vec![],
+                action: 0,
+                n_candidates: 1,
+                penalty: StepPenalty::default(),
+            }],
+        };
+        let params = RewardParams::default();
+        q.learn(&ep, 10_000.0, &params);
+        let expected = 0.5 * params.completion_reward(10_000.0);
+        assert!((q.q(key) - expected).abs() < 1e-12);
+        assert_eq!(q.visits[key], 1);
+    }
+
+    #[test]
+    fn kappa_penalty_depresses_q() {
+        let params = RewardParams { kappa: 100.0, ..Default::default() };
+        let mut q = TabularQ::new(0.3, 0.0);
+        let l = some_layer();
+        let c = cand(0.5, 0.5, 0.5);
+        let key = table_key(layer_class(&l), &c);
+        let ep = Episode {
+            steps: vec![EpisodeStep {
+                key,
+                state: vec![],
+                action: 0,
+                n_candidates: 1,
+                penalty: StepPenalty { memory_violated: false, shielded: true },
+            }],
+        };
+        // Immediate shield notification drives the cell negative
+        // (κ=100 → −1 in normalized units).
+        q.notify_shielded(&ep.steps[0], &params);
+        assert!(q.q(key) < -0.2, "q={}", q.q(key));
+        // Larger kappa must depress the cell further (Fig 8 mechanism).
+        let mut q2 = TabularQ::new(0.3, 0.0);
+        let params2 = RewardParams { kappa: 300.0, ..Default::default() };
+        q2.notify_shielded(&ep.steps[0], &params2);
+        assert!(q2.q(key) < q.q(key));
+        // Episodic return also nets the κ penalty against the terminal.
+        q.learn(&ep, 10_000.0, &params);
+        assert!(q.q(key) < 0.1);
+    }
+
+    #[test]
+    fn exploration_randomizes() {
+        let mut q = TabularQ::new(0.5, 1.0); // always explore
+        let l = some_layer();
+        let cands = vec![cand(0.1, 0.1, 0.1), cand(0.9, 0.9, 0.9), cand(0.5, 0.5, 0.5)];
+        let mut rng = Rng::new(2);
+        let picks: Vec<usize> = (0..60).map(|_| q.choose(&l, &cands, &mut rng, true)).collect();
+        for i in 0..3 {
+            assert!(picks.contains(&i));
+        }
+    }
+
+    #[test]
+    fn qtable_json_roundtrip() {
+        let mut q = TabularQ::new(0.2, 0.05);
+        q.table[3] = -1.5;
+        q.table[80] = 2.25;
+        q.visits[3] = 7;
+        let j = q.to_json();
+        let q2 = TabularQ::from_json(&crate::util::json::Json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        assert_eq!(q2.table, q.table);
+        assert_eq!(q2.visits, q.visits);
+        assert_eq!(q2.lr, 0.2);
+        assert_eq!(q2.epsilon, 0.05);
+        // Corrupted input is rejected.
+        assert!(TabularQ::from_json(&crate::util::json::Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn no_exploration_when_disabled() {
+        let mut q = TabularQ::new(0.5, 1.0);
+        let l = some_layer();
+        let cands = vec![cand(0.2, 0.2, 0.2), cand(0.9, 0.9, 0.9)];
+        let mut rng = Rng::new(3);
+        // epsilon=1 but explore=false must be deterministic greedy.
+        let first = q.choose(&l, &cands, &mut rng, false);
+        for _ in 0..20 {
+            assert_eq!(q.choose(&l, &cands, &mut rng, false), first);
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Experience replay buffer for the DQN policy.
+//!
+//! Fixed-capacity ring buffer of transitions; uniform sampling without
+//! replacement per mini-batch.  The layout mirrors the `qnet_train`
+//! artifact batch: `(s, a, r, s2, done)`.
+
+use crate::util::Rng;
+
+/// One transition.
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    pub action: usize,
+    pub reward: f32,
+    pub next_state: Vec<f32>,
+    pub done: bool,
+}
+
+/// Ring-buffer replay memory.
+#[derive(Debug)]
+pub struct Replay {
+    buf: Vec<Transition>,
+    capacity: usize,
+    next: usize,
+}
+
+impl Replay {
+    pub fn new(capacity: usize) -> Replay {
+        assert!(capacity > 0);
+        Replay { buf: Vec::with_capacity(capacity), capacity, next: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.next] = t;
+        }
+        self.next = (self.next + 1) % self.capacity;
+    }
+
+    /// Sample `n` transitions uniformly (with replacement if n > len).
+    pub fn sample<'a>(&'a self, n: usize, rng: &mut Rng) -> Vec<&'a Transition> {
+        assert!(!self.buf.is_empty(), "sample from empty replay");
+        (0..n).map(|_| &self.buf[rng.below(self.buf.len())]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(v: f32) -> Transition {
+        Transition { state: vec![v], action: 0, reward: v, next_state: vec![v], done: false }
+    }
+
+    #[test]
+    fn push_grows_to_capacity() {
+        let mut r = Replay::new(3);
+        assert!(r.is_empty());
+        for i in 0..3 {
+            r.push(t(i as f32));
+        }
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn overwrites_oldest_when_full() {
+        let mut r = Replay::new(3);
+        for i in 0..5 {
+            r.push(t(i as f32));
+        }
+        assert_eq!(r.len(), 3);
+        let rewards: Vec<f32> = r.buf.iter().map(|x| x.reward).collect();
+        // 0 and 1 were overwritten by 3 and 4.
+        assert!(rewards.contains(&3.0) && rewards.contains(&4.0) && rewards.contains(&2.0));
+        assert!(!rewards.contains(&0.0));
+    }
+
+    #[test]
+    fn sample_returns_requested_count() {
+        let mut r = Replay::new(10);
+        for i in 0..4 {
+            r.push(t(i as f32));
+        }
+        let mut rng = Rng::new(1);
+        assert_eq!(r.sample(8, &mut rng).len(), 8);
+        assert_eq!(r.sample(2, &mut rng).len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sample_empty_panics() {
+        let r = Replay::new(4);
+        let mut rng = Rng::new(1);
+        r.sample(1, &mut rng);
+    }
+}

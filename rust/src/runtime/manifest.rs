@@ -1,0 +1,158 @@
+//! Typed view of `artifacts/manifest.json`.
+//!
+//! The manifest is the contract between `python/compile/aot.py` and the
+//! Rust runtime: for every artifact, the ordered input/output tensor
+//! names, shapes and dtypes, plus model hyper-parameters under `meta`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor dtypes used by the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's file and signature.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    meta: Json,
+}
+
+fn tensor_list(j: &Json, what: &str) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().with_context(|| format!("{what} not an array"))?;
+    arr.iter()
+        .map(|t| {
+            let name = t.get("name").and_then(Json::as_str).context("tensor name")?.to_string();
+            let dtype = Dtype::parse(t.get("dtype").and_then(Json::as_str).context("dtype")?)?;
+            let shape = t
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("shape")?
+                .iter()
+                .map(|d| d.as_usize().context("dim"))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("manifest json")?;
+        let arts = j.get("artifacts").and_then(Json::as_obj).context("artifacts key")?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in arts {
+            let file = a.get("file").and_then(Json::as_str).context("file")?.to_string();
+            let inputs = tensor_list(a.get("inputs").context("inputs")?, "inputs")?;
+            let outputs = tensor_list(a.get("outputs").context("outputs")?, "outputs")?;
+            artifacts.insert(name.clone(), ArtifactSpec { file, inputs, outputs });
+        }
+        let meta = j.get("meta").cloned().unwrap_or(Json::Obj(BTreeMap::new()));
+        Ok(Manifest { artifacts, meta })
+    }
+
+    /// Lookup `meta.<section>.<key>` as usize.
+    pub fn meta_usize(&self, section: &str, key: &str) -> Result<usize> {
+        self.meta
+            .at(&[section, key])
+            .and_then(Json::as_usize)
+            .with_context(|| format!("meta.{section}.{key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "qnet_fwd": {
+          "file": "qnet_fwd.hlo.txt",
+          "inputs": [
+            {"dtype": "f32", "name": "w1", "shape": [36, 64]},
+            {"dtype": "f32", "name": "states", "shape": [1, 36]}
+          ],
+          "outputs": [{"dtype": "f32", "name": "qvalues", "shape": [1, 11]}]
+        }
+      },
+      "meta": {"qnet": {"state_dim": 36, "num_actions": 11}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["qnet_fwd"];
+        assert_eq!(a.file, "qnet_fwd.hlo.txt");
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![36, 64]);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(a.inputs[0].elems(), 36 * 64);
+        assert_eq!(a.outputs[0].name, "qvalues");
+        assert_eq!(m.meta_usize("qnet", "state_dim").unwrap(), 36);
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_meta_key_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.meta_usize("qnet", "nope").is_err());
+        assert!(m.meta_usize("lm", "vocab").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = crate::runtime::Engine::default_dir();
+        let path = dir.join("manifest.json");
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            eprintln!("skipping: no {}", path.display());
+            return;
+        };
+        let m = Manifest::parse(&text).unwrap();
+        for name in ["qnet_init", "qnet_fwd", "qnet_train", "lm_init", "lm_grad", "lm_update", "lm_eval"] {
+            assert!(m.artifacts.contains_key(name), "missing {name}");
+        }
+    }
+}

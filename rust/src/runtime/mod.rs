@@ -1,0 +1,244 @@
+//! PJRT runtime: loads the AOT-compiled HLO text artifacts and executes
+//! them on the request path — Python is never involved at run time.
+//!
+//! Flow (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  HLO *text* is the interchange format:
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! [`manifest`] mirrors `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`); [`Engine`] compiles artifacts on demand and
+//! validates every call against the declared input/output signature.
+
+pub mod lm;
+pub mod manifest;
+pub mod qnet;
+
+pub use manifest::{Dtype, Manifest, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A compiled artifact ready to execute.
+pub struct Artifact {
+    pub name: String,
+    pub spec: manifest::ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with positional literal inputs; returns the decomposed
+    /// output tuple as literals, validated against the manifest.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let out = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+}
+
+/// The PJRT engine: one CPU client plus lazily compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    compiled: HashMap<String, Artifact>,
+}
+
+impl Engine {
+    /// Open `dir` (containing `manifest.json` + `*.hlo.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, dir, manifest, compiled: HashMap::new() })
+    }
+
+    /// Default artifacts directory: `$SROLE_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SROLE_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            // Walk up from cwd to find an `artifacts/manifest.json`.
+            let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            loop {
+                let cand = cur.join("artifacts");
+                if cand.join("manifest.json").exists() {
+                    return cand;
+                }
+                if !cur.pop() {
+                    return PathBuf::from("artifacts");
+                }
+            }
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and return the named artifact.
+    pub fn artifact(&mut self, name: &str) -> Result<&Artifact> {
+        if !self.compiled.contains_key(name) {
+            let spec = self
+                .manifest
+                .artifacts
+                .get(name)
+                .with_context(|| format!("artifact {name} not in manifest"))?
+                .clone();
+            let path = self.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+            self.compiled
+                .insert(name.to_string(), Artifact { name: name.to_string(), spec, exe });
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Convenience: run an artifact by name.
+    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.artifact(name)?.run(inputs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: shape {:?} wants {} elems, got {}", shape, n, data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: shape {:?} wants {} elems, got {}", shape, n, data.len());
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar literals.
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read back an f32 literal as a vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read back a scalar f32.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>()?;
+    if v.len() != 1 {
+        bail!("expected scalar, got {} elems", v.len());
+    }
+    Ok(v[0])
+}
+
+/// Test helper: open a fresh engine if artifacts exist, else None
+/// (lets `cargo test` pass before `make artifacts`).
+#[cfg(test)]
+pub(crate) fn test_engine_owned() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping runtime test: no artifacts at {}", dir.display());
+        return None;
+    }
+    Some(Engine::open(dir).expect("open engine"))
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = lit_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(lit_f32(&[2, 2], &[1.0]).is_err());
+        assert!(lit_i32(&[3], &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn engine_opens_and_compiles_qnet_fwd() {
+        let Some(mut eng) = test_engine_owned() else { return };
+        assert_eq!(eng.platform(), "cpu");
+        let art = eng.artifact("qnet_fwd").unwrap();
+        assert_eq!(art.spec.inputs.len(), 7);
+        assert_eq!(art.spec.outputs.len(), 1);
+    }
+
+    #[test]
+    fn qnet_init_then_fwd_roundtrip() {
+        let Some(mut eng) = test_engine_owned() else { return };
+        let params = eng.run("qnet_init", &[scalar_i32(0)]).unwrap();
+        assert_eq!(params.len(), 6);
+        let state_dim = eng.manifest.meta_usize("qnet", "state_dim").unwrap();
+        let na = eng.manifest.meta_usize("qnet", "num_actions").unwrap();
+        let state = lit_f32(&[1, state_dim], &vec![0.1; state_dim]).unwrap();
+        let mut inputs: Vec<xla::Literal> = params;
+        inputs.push(state);
+        let out = eng.run("qnet_fwd", &inputs).unwrap();
+        let q = to_vec_f32(&out[0]).unwrap();
+        assert_eq!(q.len(), na);
+        assert!(q.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn wrong_arity_is_rejected() {
+        let Some(mut eng) = test_engine_owned() else { return };
+        let err = eng.run("qnet_fwd", &[scalar_i32(0)]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn qnet_init_deterministic_in_seed() {
+        let Some(mut eng) = test_engine_owned() else { return };
+        let a = eng.run("qnet_init", &[scalar_i32(7)]).unwrap();
+        let b = eng.run("qnet_init", &[scalar_i32(7)]).unwrap();
+        let c = eng.run("qnet_init", &[scalar_i32(8)]).unwrap();
+        assert_eq!(to_vec_f32(&a[0]).unwrap(), to_vec_f32(&b[0]).unwrap());
+        assert_ne!(to_vec_f32(&a[0]).unwrap(), to_vec_f32(&c[0]).unwrap());
+    }
+}

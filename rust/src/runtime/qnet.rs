@@ -1,0 +1,155 @@
+//! Q-network session over the `qnet_*` artifacts.
+//!
+//! Parameters live in Rust as literals; every call is a pure PJRT
+//! execution.  This is the function approximator behind
+//! [`DqnPolicy`](crate::rl::dqn::DqnPolicy): `fwd` scores a single
+//! decision state (B=1 artifact), `train` runs one TD mini-batch step
+//! against a target-network copy.
+
+use anyhow::{bail, Result};
+
+use super::{lit_f32, lit_i32, scalar_f32, scalar_i32, to_scalar_f32, Engine};
+
+/// Owned Q-network parameters + target-network copy.
+pub struct QNetSession<'e> {
+    engine: &'e mut Engine,
+    pub params: Vec<xla::Literal>,
+    pub target: Vec<xla::Literal>,
+    pub state_dim: usize,
+    pub num_actions: usize,
+    pub train_batch: usize,
+    train_steps: usize,
+    /// Sync the target network every this many train steps.
+    pub target_sync_every: usize,
+}
+
+/// One TD training batch (row-major, `len == batch`).
+pub struct TdBatch {
+    pub states: Vec<f32>,
+    pub actions: Vec<i32>,
+    pub rewards: Vec<f32>,
+    pub next_states: Vec<f32>,
+    pub dones: Vec<f32>,
+}
+
+impl<'e> QNetSession<'e> {
+    /// Initialize from the `qnet_init` artifact with the given seed.
+    pub fn new(engine: &'e mut Engine, seed: i32) -> Result<QNetSession<'e>> {
+        let state_dim = engine.manifest.meta_usize("qnet", "state_dim")?;
+        let num_actions = engine.manifest.meta_usize("qnet", "num_actions")?;
+        let train_batch = engine.manifest.meta_usize("qnet", "train_batch")?;
+        let params = engine.run("qnet_init", &[scalar_i32(seed)])?;
+        let target = engine.run("qnet_init", &[scalar_i32(seed)])?;
+        Ok(QNetSession {
+            engine,
+            params,
+            target,
+            state_dim,
+            num_actions,
+            train_batch,
+            train_steps: 0,
+            target_sync_every: 16,
+        })
+    }
+
+    /// Q-values for one state (the per-decision request path).
+    pub fn fwd(&mut self, state: &[f32]) -> Result<Vec<f32>> {
+        if state.len() != self.state_dim {
+            bail!("state dim {} != {}", state.len(), self.state_dim);
+        }
+        let mut inputs = clone_literals(&self.params)?;
+        inputs.push(lit_f32(&[1, self.state_dim], state)?);
+        let out = self.engine.run("qnet_fwd", &inputs)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// One TD step; returns the loss.  Syncs the target network
+    /// periodically.
+    pub fn train(&mut self, batch: &TdBatch, lr: f32, gamma: f32) -> Result<f32> {
+        let b = self.train_batch;
+        if batch.actions.len() != b {
+            bail!("batch size {} != artifact batch {}", batch.actions.len(), b);
+        }
+        let mut inputs = clone_literals(&self.params)?;
+        inputs.extend(clone_literals(&self.target)?);
+        inputs.push(lit_f32(&[b, self.state_dim], &batch.states)?);
+        inputs.push(lit_i32(&[b], &batch.actions)?);
+        inputs.push(lit_f32(&[b], &batch.rewards)?);
+        inputs.push(lit_f32(&[b, self.state_dim], &batch.next_states)?);
+        inputs.push(lit_f32(&[b], &batch.dones)?);
+        inputs.push(scalar_f32(lr));
+        inputs.push(scalar_f32(gamma));
+        let mut out = self.engine.run("qnet_train", &inputs)?;
+        let loss = to_scalar_f32(&out.pop().expect("loss"))?;
+        self.params = out;
+        self.train_steps += 1;
+        if self.train_steps % self.target_sync_every == 0 {
+            self.target = clone_literals(&self.params)?;
+        }
+        Ok(loss)
+    }
+}
+
+/// Literals are not `Clone`; round-trip through host bytes.
+pub fn clone_literals(lits: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+    lits.iter()
+        .map(|l| {
+            let shape = l.shape()?;
+            match &shape {
+                xla::Shape::Array(a) => {
+                    let dims: Vec<usize> = a.dims().iter().map(|&d| d as usize).collect();
+                    match a.element_type() {
+                        xla::ElementType::F32 => lit_f32(&dims, &l.to_vec::<f32>()?),
+                        xla::ElementType::S32 => lit_i32(&dims, &l.to_vec::<i32>()?),
+                        other => bail!("clone_literals: unsupported element type {other:?}"),
+                    }
+                }
+                _ => bail!("clone_literals: non-array literal"),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::test_engine_owned;
+
+    #[test]
+    fn fwd_scores_and_train_reduces_loss() {
+        let Some(mut eng) = test_engine_owned() else { return };
+        
+        let mut q = QNetSession::new(&mut eng, 3).unwrap();
+        let s = vec![0.25f32; q.state_dim];
+        let q0 = q.fwd(&s).unwrap();
+        assert_eq!(q0.len(), q.num_actions);
+
+        // Fixed terminal batch: loss must fall over repeated steps.
+        let b = q.train_batch;
+        let batch = TdBatch {
+            states: vec![0.1; b * q.state_dim],
+            actions: (0..b as i32).map(|i| i % q.num_actions as i32).collect(),
+            rewards: vec![1.0; b],
+            next_states: vec![0.1; b * q.state_dim],
+            dones: vec![1.0; b],
+        };
+        let first = q.train(&batch, 0.05, 0.95).unwrap();
+        let mut last = first;
+        for _ in 0..25 {
+            last = q.train(&batch, 0.05, 0.95).unwrap();
+        }
+        assert!(last < 0.6 * first, "first={first} last={last}");
+
+        // Training must change the policy's scores.
+        let q1 = q.fwd(&s).unwrap();
+        assert_ne!(q0, q1);
+    }
+
+    #[test]
+    fn bad_state_dim_rejected() {
+        let Some(mut eng) = test_engine_owned() else { return };
+        
+        let mut q = QNetSession::new(&mut eng, 0).unwrap();
+        assert!(q.fwd(&[0.0; 3]).is_err());
+    }
+}

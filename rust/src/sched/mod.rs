@@ -1,0 +1,580 @@
+//! Schedulers: the decision processes that assign DNN layers to edges.
+//!
+//! Scheduling happens in *waves*: the jobs of a cluster that arrive
+//! together are scheduled concurrently, one layer per agent per round
+//! (§IV-B's per-timestep joint action).  Two processes are implemented:
+//!
+//! * [`marl_wave`] — every job's owner is an independent agent choosing
+//!   among itself + its transmission-range neighbors, on a *discretized,
+//!   periodically refreshed* view of the cluster state.  Agents deciding
+//!   in the same round do not see each other's picks — the action-
+//!   collision source.  An optional [`Shield`] vets each round's joint
+//!   action (SROLE-C / SROLE-D).
+//! * [`central_wave`] — the cluster head schedules every job serially
+//!   with a cluster-wide (but equally discretized) view; jobs queue at
+//!   the head, which is exactly the overhead the paper's Fig 7 charges
+//!   to centralized RL.
+//!
+//! Decision-time accounting uses explicit per-operation cost constants so
+//! Fig 7/12 can be regenerated; the constants are calibrated to
+//! edge-class hardware and documented inline.
+
+use crate::cluster::{Deployment, NodeId, ResourceKind, Resources};
+use crate::dnn::ModelGraph;
+use crate::rl::{features::MAX_NEIGHBORS, table_key, layer_class, state_vector, CandidateView, Episode, EpisodeStep, Policy, RewardParams, StepPenalty};
+use crate::shield::{ProposedAction, Shield};
+use crate::sim::state::{ResourceState, TaskHandle};
+use crate::util::Rng;
+use crate::workload::DlJob;
+
+/// Evaluating the policy for one candidate edge (table/Q-net lookup plus
+/// feature assembly) on edge-class hardware.
+pub const POLICY_EVAL_SECS_PER_CAND: f64 = 0.002;
+/// Collecting one node's resource report when building the observation.
+pub const OBS_SECS_PER_NODE: f64 = 0.0008;
+/// Rounds between refreshes of the agents' state views (staleness of the
+/// periodic utilization reports, §III).
+pub const DEFAULT_REFRESH_ROUNDS: usize = 3;
+/// Relative std-dev of actual vs estimated demands (the paper's
+/// "time-varying and dynamic" demands that shields cannot foresee).
+pub const DEMAND_NOISE_SD: f64 = 0.15;
+
+/// A fully scheduled job, ready for execution.
+#[derive(Debug)]
+pub struct JobSchedule {
+    pub job: DlJob,
+    /// Layer id -> host node.
+    pub placement: Vec<NodeId>,
+    /// Resource-state handles of the placed layers (released on
+    /// completion).
+    pub handles: Vec<TaskHandle>,
+    pub episode: Episode,
+    /// Total decision latency the job experienced (queue + rounds).
+    pub decision_secs: f64,
+    /// Scheduling-only component (Fig 7 blue bar).
+    pub sched_secs: f64,
+    /// Shielding-only component (Fig 7 orange bar).
+    pub shield_secs: f64,
+    pub memory_violations: usize,
+}
+
+/// Wave-level outcome.
+#[derive(Debug)]
+pub struct WaveOutcome {
+    pub schedules: Vec<JobSchedule>,
+    /// Pre-correction action collisions over all rounds (Fig 8 metric).
+    pub collisions: usize,
+    /// Corrections the shield issued (κ-penalized actions).
+    pub shield_corrections: usize,
+}
+
+/// Discretize an availability fraction to its bucket midpoint — agents
+/// and the central RL head reason over low/medium/high, never the exact
+/// utilization (§IV-B).
+fn quantize(frac: f64) -> f64 {
+    (crate::rl::bucket(frac) as f64 + 0.5) / crate::rl::BUCKETS as f64
+}
+
+/// An agent's (possibly stale) view of node availability.
+#[derive(Debug, Clone)]
+struct View {
+    /// Estimated resident demand per node as of the last refresh.
+    demand: Vec<Resources>,
+}
+
+/// Reference scales for *absolute* availability features: the largest
+/// capacities of Table I.  Agents observe absolute free resources (the
+/// paper's state includes "the available CPU and memory of each edge"),
+/// normalized by these so a half-empty 1 GB node and a half-empty 4 GB
+/// node land in different buckets.
+pub const REF_CPU: f64 = 1.0;
+pub const REF_MEM_MB: f64 = 4096.0;
+pub const REF_BW_MBPS: f64 = 1000.0;
+
+impl View {
+    fn snapshot(state: &ResourceState) -> View {
+        View { demand: (0..state.n()).map(|n| *state.demand(n)).collect() }
+    }
+
+    /// Absolute free capacity of `node` for resource `k`, normalized to
+    /// the Table-I maximum, clamped to [0, 1].
+    fn avail(&self, state: &ResourceState, node: NodeId, k: ResourceKind) -> f64 {
+        let caps = state.caps(node);
+        let free = caps.get(k) - self.demand[node].get(k);
+        let reference = match k {
+            ResourceKind::Cpu => REF_CPU,
+            ResourceKind::Mem => REF_MEM_MB,
+            ResourceKind::Bw => REF_BW_MBPS,
+        };
+        (free / reference).clamp(0.0, 1.0)
+    }
+
+    /// The agent immediately accounts for its *own* placements.
+    fn add(&mut self, node: NodeId, demand: &Resources) {
+        self.demand[node] = self.demand[node].add(demand);
+    }
+}
+
+fn candidate_views(
+    dep: &Deployment,
+    state: &ResourceState,
+    view: &View,
+    owner: NodeId,
+    candidates: &[NodeId],
+) -> Vec<CandidateView> {
+    candidates
+        .iter()
+        .map(|&n| CandidateView {
+            node: n,
+            avail_cpu: quantize(view.avail(state, n, ResourceKind::Cpu)),
+            avail_mem: quantize(view.avail(state, n, ResourceKind::Mem)),
+            avail_bw: quantize(view.avail(state, n, ResourceKind::Bw)),
+            bw_to_owner: dep.topo.bandwidth(owner, n).min(1000.0),
+        })
+        .collect()
+}
+
+/// Candidate set of a MARL agent: itself plus cluster neighbors, capped
+/// to the DQN action-space size.
+pub fn marl_candidates(dep: &Deployment, owner: NodeId) -> Vec<NodeId> {
+    let mut cands = vec![owner];
+    cands.extend(dep.cluster_neighbors(owner));
+    cands.truncate(MAX_NEIGHBORS + 1);
+    cands
+}
+
+/// Sample the actual (noisy) demand realized at execution time.
+fn noisy_demand(est: &Resources, rng: &mut Rng) -> Resources {
+    let f = |v: f64, rng: &mut Rng| (v * (1.0 + DEMAND_NOISE_SD * rng.normal())).max(0.5 * v);
+    Resources { cpu: f(est.cpu, rng), mem: f(est.mem, rng), bw: f(est.bw, rng) }
+}
+
+struct Pending {
+    job: DlJob,
+    next_layer: usize,
+    placement: Vec<NodeId>,
+    handles: Vec<TaskHandle>,
+    episode: Episode,
+    decision_secs: f64,
+    sched_secs: f64,
+    shield_secs: f64,
+    memory_violations: usize,
+}
+
+impl Pending {
+    fn new(job: DlJob, n_layers: usize) -> Pending {
+        Pending {
+            job,
+            next_layer: 0,
+            placement: vec![usize::MAX; n_layers],
+            handles: Vec::with_capacity(n_layers),
+            episode: Episode::default(),
+            decision_secs: 0.0,
+            sched_secs: 0.0,
+            shield_secs: 0.0,
+            memory_violations: 0,
+        }
+    }
+
+    fn finish(self) -> JobSchedule {
+        JobSchedule {
+            job: self.job,
+            placement: self.placement,
+            handles: self.handles,
+            episode: self.episode,
+            decision_secs: self.decision_secs,
+            sched_secs: self.sched_secs,
+            shield_secs: self.shield_secs,
+            memory_violations: self.memory_violations,
+        }
+    }
+}
+
+/// Count collisions a shieldless method *would* incur for a round's
+/// joint action (the same pre-correction metric the shields report).
+fn detect_collisions(
+    proposals: &[ProposedAction],
+    state: &ResourceState,
+    alpha: f64,
+) -> usize {
+    let mut extra: std::collections::BTreeMap<NodeId, Resources> = Default::default();
+    for p in proposals {
+        let e = extra.entry(p.target).or_default();
+        *e = e.add(&p.demand);
+    }
+    extra
+        .iter()
+        .filter(|(&node, add)| {
+            ResourceKind::ALL.iter().any(|&k| state.util_with(node, add, k) > alpha)
+        })
+        .count()
+}
+
+/// Commit one proposal to the live state; returns the memory-violation
+/// flag (paper reward: −γ when memory is violated).
+fn commit(
+    state: &mut ResourceState,
+    pending: &mut Pending,
+    layer_id: usize,
+    target: NodeId,
+    est: &Resources,
+    rng: &mut Rng,
+) -> bool {
+    let actual = noisy_demand(est, rng);
+    let mem_violated =
+        state.demand(target).mem + est.mem > state.caps(target).mem;
+    let h = state.place(target, *est, actual, true);
+    pending.placement[layer_id] = target;
+    pending.handles.push(h);
+    if mem_violated {
+        pending.memory_violations += 1;
+    }
+    mem_violated
+}
+
+/// Multi-agent wave (MARL / SROLE-C / SROLE-D depending on `shield`).
+#[allow(clippy::too_many_arguments)]
+pub fn marl_wave(
+    dep: &Deployment,
+    state: &mut ResourceState,
+    graph: &ModelGraph,
+    jobs: &[DlJob],
+    policy: &mut dyn Policy,
+    mut shield: Option<&mut dyn Shield>,
+    params: &RewardParams,
+    refresh_rounds: usize,
+    rng: &mut Rng,
+) -> WaveOutcome {
+    let n_layers = graph.n_layers();
+    let mut pendings: Vec<Pending> =
+        jobs.iter().map(|j| Pending::new(j.clone(), n_layers)).collect();
+    // Per-agent stale views, refreshed every `refresh_rounds`.
+    let mut views: Vec<View> = jobs.iter().map(|_| View::snapshot(state)).collect();
+    let mut collisions = 0usize;
+    let mut shield_corrections = 0usize;
+
+    let mut round = 0usize;
+    loop {
+        let active: Vec<usize> =
+            (0..pendings.len()).filter(|&i| pendings[i].next_layer < n_layers).collect();
+        if active.is_empty() {
+            break;
+        }
+        if round > 0 && round % refresh_rounds == 0 {
+            for v in views.iter_mut() {
+                *v = View::snapshot(state);
+            }
+        }
+
+        // Each active agent proposes its current layer's placement.
+        let mut proposals: Vec<ProposedAction> = Vec::with_capacity(active.len());
+        let mut cand_sets: Vec<Vec<NodeId>> = Vec::with_capacity(active.len());
+        let mut round_agent_secs = 0.0f64;
+        for (pi, &ji) in active.iter().enumerate() {
+            let owner = pendings[ji].job.owner;
+            let layer = &graph.layers[pendings[ji].next_layer];
+            let cands = marl_candidates(dep, owner);
+            let cviews = candidate_views(dep, state, &views[ji], owner, &cands);
+            let choice = policy.choose(layer, &cviews, rng, true);
+            let target = cands[choice];
+            // Observation + per-candidate policy evaluation cost; agents
+            // run in parallel so the round costs the max over agents.
+            let agent_secs = cands.len() as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
+            round_agent_secs = round_agent_secs.max(agent_secs);
+            pendings[ji].sched_secs += agent_secs;
+
+            let owner_util = [
+                state.util(owner, ResourceKind::Cpu),
+                state.util(owner, ResourceKind::Mem),
+                state.util(owner, ResourceKind::Bw),
+            ];
+            pendings[ji].episode.steps.push(EpisodeStep {
+                key: table_key(layer_class(layer), &cviews[choice]),
+                state: state_vector(layer, owner_util, &cviews),
+                action: choice,
+                n_candidates: cands.len(),
+                penalty: StepPenalty::default(),
+            });
+            proposals.push(ProposedAction {
+                idx: pi,
+                agent: owner,
+                job: pendings[ji].job.id,
+                layer_id: pendings[ji].next_layer,
+                demand: layer.demand(),
+                target,
+            });
+            cand_sets.push(cands);
+        }
+
+        // Shield pass (or collision detection only).
+        let mut final_targets: Vec<NodeId> = proposals.iter().map(|p| p.target).collect();
+        let mut round_shield_secs = 0.0;
+        match shield.as_deref_mut() {
+            Some(s) => {
+                let out = s.check(&proposals, state, dep, params.alpha);
+                collisions += out.collisions;
+                shield_corrections += out.corrections.len();
+                round_shield_secs = out.shield_secs;
+                for (idx, new_target) in out.corrections {
+                    final_targets[idx] = new_target;
+                    let ji = active[idx];
+                    let step = pendings[ji].episode.steps.last_mut().unwrap();
+                    step.penalty.shielded = true;
+                    let step = step.clone();
+                    policy.notify_shielded(&step, params);
+                }
+            }
+            None => {
+                collisions += detect_collisions(&proposals, state, params.alpha);
+            }
+        }
+
+        // Commit the (possibly corrected) joint action.
+        for (pi, &ji) in active.iter().enumerate() {
+            let layer_id = pendings[ji].next_layer;
+            let est = proposals[pi].demand;
+            let target = final_targets[pi];
+            let violated = commit(state, &mut pendings[ji], layer_id, target, &est, rng);
+            if violated {
+                pendings[ji].episode.steps.last_mut().unwrap().penalty.memory_violated = true;
+            }
+            views[ji].add(target, &est);
+            pendings[ji].next_layer += 1;
+        }
+
+        // All active jobs experience the round's latency.
+        for &ji in &active {
+            pendings[ji].decision_secs += round_agent_secs + round_shield_secs;
+            pendings[ji].shield_secs += round_shield_secs;
+        }
+        round += 1;
+    }
+
+    WaveOutcome {
+        schedules: pendings.into_iter().map(Pending::finish).collect(),
+        collisions,
+        shield_corrections,
+    }
+}
+
+/// Centralized-RL wave: the cluster head schedules all jobs serially over
+/// a cluster-wide discretized view.
+pub fn central_wave(
+    dep: &Deployment,
+    state: &mut ResourceState,
+    graph: &ModelGraph,
+    jobs: &[DlJob],
+    policy: &mut dyn Policy,
+    params: &RewardParams,
+    rng: &mut Rng,
+) -> WaveOutcome {
+    let n_layers = graph.n_layers();
+    let mut collisions = 0usize;
+    let mut schedules = Vec::with_capacity(jobs.len());
+    let mut queue_secs = 0.0f64;
+
+    // Collecting cluster-wide observations is the head's expensive step
+    // (§III), so it snapshots once per wave; its own placements are
+    // tracked immediately in the virtual view (it is the single
+    // decision-maker).
+    let mut view = View::snapshot(state);
+    for job in jobs {
+        let mut pending = Pending::new(job.clone(), n_layers);
+        let members = dep.clusters[job.cluster].members.clone();
+        for layer_id in 0..n_layers {
+            let layer = &graph.layers[layer_id];
+            let cviews = candidate_views(dep, state, &view, job.owner, &members);
+            let choice = policy.choose(layer, &cviews, rng, true);
+            let target = members[choice];
+            let step_secs =
+                members.len() as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
+            pending.sched_secs += step_secs;
+
+            let owner_util = [
+                state.util(job.owner, ResourceKind::Cpu),
+                state.util(job.owner, ResourceKind::Mem),
+                state.util(job.owner, ResourceKind::Bw),
+            ];
+            pending.episode.steps.push(EpisodeStep {
+                key: table_key(layer_class(layer), &cviews[choice]),
+                state: state_vector(layer, owner_util, &cviews),
+                action: choice,
+                n_candidates: members.len(),
+                penalty: StepPenalty::default(),
+            });
+
+            let est = layer.demand();
+            // Collision check (same pre-commit metric): the head's coarse
+            // buckets can still drive a node past alpha.
+            let prop = ProposedAction {
+                idx: 0,
+                agent: job.owner,
+                job: job.id,
+                layer_id,
+                demand: est,
+                target,
+            };
+            collisions += detect_collisions(std::slice::from_ref(&prop), state, params.alpha);
+
+            let violated = commit(state, &mut pending, layer_id, target, &est, rng);
+            if violated {
+                pending.episode.steps.last_mut().unwrap().penalty.memory_violated = true;
+            }
+            view.add(target, &est);
+        }
+        // Jobs queue at the head: this job waited for all previous ones.
+        pending.decision_secs = queue_secs + pending.sched_secs;
+        queue_secs += pending.sched_secs;
+        schedules.push(pending.finish());
+    }
+
+    WaveOutcome { schedules, collisions, shield_corrections: 0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Deployment, CONTAINER_PROFILE};
+    use crate::dnn::ModelKind;
+    use crate::rl::TabularQ;
+    use crate::shield::CentralShield;
+    use crate::workload::{Workload, WorkloadSpec};
+
+    fn setup(n: usize) -> (Deployment, ResourceState, ModelGraph, Vec<DlJob>, Rng) {
+        let mut rng = Rng::new(42);
+        let dep = Deployment::generate(&mut rng, n, 5, &CONTAINER_PROFILE);
+        let state = ResourceState::new(&dep);
+        let graph = ModelKind::Rnn.build();
+        let spec = WorkloadSpec { model: ModelKind::Rnn, ..Default::default() };
+        let wl = Workload::generate(&mut rng, &dep, &spec, 1000.0);
+        let jobs: Vec<DlJob> = wl.dl_jobs.into_iter().filter(|j| j.cluster == 0).collect();
+        (dep, state, graph, jobs, rng)
+    }
+
+    #[test]
+    fn marl_wave_places_every_layer() {
+        let (dep, mut state, graph, jobs, mut rng) = setup(5);
+        let mut policy = TabularQ::new(0.2, 0.1);
+        let params = RewardParams::default();
+        let out = marl_wave(
+            &dep, &mut state, &graph, &jobs, &mut policy, None, &params, 3, &mut rng,
+        );
+        assert_eq!(out.schedules.len(), jobs.len());
+        for s in &out.schedules {
+            assert!(s.placement.iter().all(|&n| n != usize::MAX));
+            assert_eq!(s.placement.len(), graph.n_layers());
+            assert_eq!(s.handles.len(), graph.n_layers());
+            assert_eq!(s.episode.steps.len(), graph.n_layers());
+            assert!(s.decision_secs > 0.0);
+            assert!(s.sched_secs > 0.0);
+            assert_eq!(s.shield_secs, 0.0);
+        }
+        // All placements must be in the owner's candidate set.
+        for s in &out.schedules {
+            let cands = marl_candidates(&dep, s.job.owner);
+            for &n in &s.placement {
+                assert!(cands.contains(&n));
+            }
+        }
+    }
+
+    #[test]
+    fn central_wave_places_and_queues() {
+        let (dep, mut state, graph, jobs, mut rng) = setup(5);
+        let mut policy = TabularQ::new(0.2, 0.1);
+        let params = RewardParams::default();
+        let out = central_wave(&dep, &mut state, &graph, &jobs, &mut policy, &params, &mut rng);
+        assert_eq!(out.schedules.len(), jobs.len());
+        // Queueing: later jobs wait longer.
+        for w in out.schedules.windows(2) {
+            assert!(w[1].decision_secs > w[0].decision_secs);
+        }
+        // Placements restricted to the cluster.
+        for s in &out.schedules {
+            for &n in &s.placement {
+                assert!(dep.clusters[s.job.cluster].members.contains(&n));
+            }
+        }
+    }
+
+    #[test]
+    fn shielded_wave_records_penalties_and_reduces_overloads() {
+        let (dep, mut state0, graph, jobs, mut rng) = setup(5);
+        // Heavier model to force contention.
+        let graph = ModelKind::Vgg16.build();
+        let mut policy = TabularQ::new(0.2, 0.3);
+        let params = RewardParams::default();
+
+        // Run without shield.
+        let out_plain = marl_wave(
+            &dep, &mut state0, &graph, &jobs, &mut policy, None, &params, 3,
+            &mut rng.fork(1),
+        );
+        let overloaded_plain =
+            (0..dep.n()).filter(|&n| state0.overloaded(n, params.alpha)).count();
+
+        // Fresh state, same jobs, with central shield.
+        let mut state1 = ResourceState::new(&dep);
+        let mut shield = CentralShield::new();
+        let mut policy2 = TabularQ::new(0.2, 0.3);
+        let out_shielded = marl_wave(
+            &dep, &mut state1, &graph, &jobs, &mut policy2,
+            Some(&mut shield), &params, 3, &mut rng.fork(1),
+        );
+        let overloaded_shielded =
+            (0..dep.n()).filter(|&n| state1.overloaded(n, params.alpha)).count();
+
+        assert!(
+            overloaded_shielded <= overloaded_plain,
+            "shield should not increase overloads: {overloaded_shielded} vs {overloaded_plain}"
+        );
+        // Corrected steps carry the kappa flag.
+        if out_shielded.shield_corrections > 0 {
+            let flagged: usize = out_shielded
+                .schedules
+                .iter()
+                .map(|s| s.episode.steps.iter().filter(|st| st.penalty.shielded).count())
+                .sum();
+            assert_eq!(flagged, out_shielded.shield_corrections);
+            assert!(out_shielded.schedules.iter().any(|s| s.shield_secs > 0.0));
+        }
+        let _ = out_plain;
+    }
+
+    #[test]
+    fn collision_detection_counts_joint_overload() {
+        let (dep, mut state, _graph, _jobs, _rng) = setup(5);
+        let cap = state.caps(0).cpu;
+        let props = vec![
+            ProposedAction {
+                idx: 0, agent: 1, job: 0, layer_id: 0,
+                demand: Resources::new(cap * 0.6, 10.0, 1.0), target: 0,
+            },
+            ProposedAction {
+                idx: 1, agent: 2, job: 1, layer_id: 0,
+                demand: Resources::new(cap * 0.6, 10.0, 1.0), target: 0,
+            },
+        ];
+        assert_eq!(detect_collisions(&props, &state, 0.9), 1);
+        // Pre-load the node: a single proposal now also collides.
+        state.place(0, Resources::new(cap * 0.8, 0.0, 0.0), Resources::new(cap * 0.8, 0.0, 0.0), false);
+        assert_eq!(detect_collisions(&props[..1], &state, 0.9), 1);
+    }
+
+    #[test]
+    fn quantize_is_bucket_midpoint() {
+        assert!((quantize(0.1) - 1.0 / 6.0).abs() < 1e-12);
+        assert!((quantize(0.5) - 0.5).abs() < 1e-12);
+        assert!((quantize(0.95) - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noisy_demand_bounded_below() {
+        let mut rng = Rng::new(3);
+        let est = Resources::new(0.4, 100.0, 5.0);
+        for _ in 0..200 {
+            let d = noisy_demand(&est, &mut rng);
+            assert!(d.cpu >= 0.2 && d.mem >= 50.0 && d.bw >= 2.5);
+        }
+    }
+}

@@ -1,0 +1,331 @@
+//! Shielding (§IV-C, §IV-D): collision detection and minimal-interference
+//! safe-action substitution on top of MARL.
+//!
+//! A shield observes the *joint action* of one decision round before it
+//! is applied.  If the joint action would drive any edge node's
+//! per-resource utilization above α, the shield reassigns the
+//! highest-demand-weight layers to nearby under-utilized nodes
+//! (Algorithm 1) and notifies the owning agents with the −κ penalty.
+//!
+//! * [`central::CentralShield`] — one shield at the cluster head sees
+//!   every action (SROLE-C).
+//! * [`decentral::DecentralShield`] — one shield per sub-cluster plus
+//!   delegate checks on sub-cluster boundaries (SROLE-D).
+
+pub mod central;
+pub mod decentral;
+
+pub use central::CentralShield;
+pub use decentral::DecentralShield;
+
+use crate::cluster::{Deployment, NodeId, ResourceKind, Resources};
+use crate::sim::state::ResourceState;
+
+/// Per-action shield-check cost (seconds): one utilization evaluation
+/// against the reporting edge's state, on cluster-head-class hardware.
+pub const CHECK_SECS_PER_ACTION: f64 = 0.0015;
+/// Cost of synthesizing one safe action (ranking + candidate scan).
+pub const FIX_SECS_PER_CORRECTION: f64 = 0.004;
+
+/// One agent's proposed assignment of one layer in the current round.
+#[derive(Debug, Clone)]
+pub struct ProposedAction {
+    /// Index of the proposal in the round (stable identifier).
+    pub idx: usize,
+    /// The deciding agent (job owner).
+    pub agent: NodeId,
+    pub job: usize,
+    pub layer_id: usize,
+    /// Estimated demand of the layer.
+    pub demand: Resources,
+    /// Proposed host edge.
+    pub target: NodeId,
+}
+
+/// The shield's verdict for a round.
+#[derive(Debug, Clone, Default)]
+pub struct ShieldOutcome {
+    /// `(proposal idx, replacement target)` — the κ-penalized actions.
+    pub corrections: Vec<(usize, NodeId)>,
+    /// Action collisions detected pre-correction (per overloaded node).
+    pub collisions: usize,
+    /// Modeled wall-clock the shielding step would take.
+    pub shield_secs: f64,
+    /// Number of actions examined.
+    pub checked: usize,
+}
+
+/// A shield checks one round's joint action against the live state.
+pub trait Shield {
+    fn check(
+        &mut self,
+        proposals: &[ProposedAction],
+        state: &ResourceState,
+        dep: &Deployment,
+        alpha: f64,
+    ) -> ShieldOutcome;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Shared core of Algorithm 1, scoped to a set of *checkable* nodes and
+/// the subset of proposals the invoking shield can see.
+///
+/// Returns (corrections, collisions, corrections_cost_units).  The
+/// virtual state is `state` plus every proposal in `visible`; safe
+/// alternatives are searched among `dep` neighbors of the overloaded
+/// node restricted to `allowed_targets` (None = whole cluster of the
+/// node).
+pub(crate) fn algorithm1(
+    proposals: &[ProposedAction],
+    visible: &[usize],
+    checkable: impl Fn(NodeId) -> bool,
+    state: &ResourceState,
+    dep: &Deployment,
+    alpha: f64,
+    allowed_targets: Option<&[NodeId]>,
+) -> (Vec<(usize, NodeId)>, Vec<NodeId>) {
+    // Virtual placement: extra demand per node from the visible proposals.
+    let mut extra: Vec<Resources> = vec![Resources::default(); dep.n()];
+    // Which proposals currently land on each node (by visible index).
+    let mut on_node: Vec<Vec<usize>> = vec![Vec::new(); dep.n()];
+    // Current (possibly corrected) target per proposal idx.
+    let mut cur_target: std::collections::BTreeMap<usize, NodeId> = Default::default();
+    for &vi in visible {
+        let p = &proposals[vi];
+        extra[p.target] = extra[p.target].add(&p.demand);
+        on_node[p.target].push(vi);
+        cur_target.insert(p.idx, p.target);
+    }
+
+    let util_with = |node: NodeId, extra: &Resources, k: ResourceKind| -> f64 {
+        state.caps(node).utilization(&state.demand(node).add(extra), k)
+    };
+    let node_overloaded = |node: NodeId, extra: &[Resources]| -> bool {
+        ResourceKind::ALL.iter().any(|&k| util_with(node, &extra[node], k) > alpha)
+    };
+
+    let mut corrections: Vec<(usize, NodeId)> = Vec::new();
+    let mut collided: Vec<NodeId> = Vec::new();
+
+    // Line 4: for each edge node that received proposals and is checkable.
+    let mut nodes: Vec<NodeId> =
+        on_node.iter().enumerate().filter(|(_, v)| !v.is_empty()).map(|(n, _)| n).collect();
+    nodes.sort_unstable();
+    for node in nodes {
+        if !checkable(node) {
+            continue;
+        }
+        if !node_overloaded(node, &extra) {
+            continue;
+        }
+        // Pre-correction overload from the joint action = one collision
+        // event on this node in this round (the quantity Fig 8 counts);
+        // callers de-duplicate by node across shield phases.
+        collided.push(node);
+
+        // Line 6: rank assigned layers by resource-demand weight ω
+        // (Eq. 3) in descending order.
+        let caps = *state.caps(node);
+        on_node[node].sort_by(|&a, &b| {
+            let wa = weight(&proposals[a].demand, &caps);
+            let wb = weight(&proposals[b].demand, &caps);
+            wb.partial_cmp(&wa).unwrap()
+        });
+
+        // Candidate alternatives: nearby edges of the overloaded node,
+        // ordered once by combined virtual utilization ascending (the
+        // paper ranks per overloaded node, not per moved layer) — also
+        // keeps the hot path allocation-light.
+        let mut cands: Vec<NodeId> = dep
+            .cluster_neighbors(node)
+            .into_iter()
+            .filter(|&c| c != node)
+            .filter(|&c| allowed_targets.map(|a| a.contains(&c)).unwrap_or(true))
+            .collect();
+        cands.sort_by(|&a, &b| {
+            let ua = state.caps(a).combined_utilization(&state.demand(a).add(&extra[a]));
+            let ub = state.caps(b).combined_utilization(&state.demand(b).add(&extra[b]));
+            ua.partial_cmp(&ub).unwrap()
+        });
+
+        // Line 8: while overloaded, move the top layer elsewhere.
+        let mut queue: Vec<usize> = on_node[node].clone();
+        while node_overloaded(node, &extra) && !queue.is_empty() {
+            let vi = queue.remove(0);
+            let p = &proposals[vi];
+            let safe = cands.iter().copied().find(|&c| {
+                ResourceKind::ALL
+                    .iter()
+                    .all(|&k| util_with(c, &extra[c].add(&p.demand), k) <= alpha)
+            });
+            if let Some(new_target) = safe {
+                // Move the layer in the virtual state.
+                extra[node] = extra[node].sub(&p.demand);
+                extra[new_target] = extra[new_target].add(&p.demand);
+                corrections.push((p.idx, new_target));
+                cur_target.insert(p.idx, new_target);
+            }
+            // If no safe host exists the layer stays (the overload will be
+            // visible at execution) — matches the paper's residual unsafe
+            // actions.
+        }
+    }
+    (corrections, collided)
+}
+
+/// Resource-demand weight ω(l) = Π_k b_k(l)/C_k(d) (Eq. 3).
+pub(crate) fn weight(demand: &Resources, caps: &Resources) -> f64 {
+    (demand.cpu / caps.cpu) * (demand.mem / caps.mem) * (demand.bw / caps.bw)
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::cluster::{Deployment, CONTAINER_PROFILE};
+    use crate::util::Rng;
+
+    pub fn small_dep() -> Deployment {
+        let mut rng = Rng::new(11);
+        Deployment::generate(&mut rng, 5, 5, &CONTAINER_PROFILE)
+    }
+
+    pub fn proposal(idx: usize, agent: NodeId, target: NodeId, cpu: f64, mem: f64, bw: f64) -> ProposedAction {
+        ProposedAction {
+            idx,
+            agent,
+            job: 0,
+            layer_id: idx,
+            demand: Resources { cpu, mem, bw },
+            target,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+    use crate::sim::state::ResourceState;
+
+    #[test]
+    fn weight_formula() {
+        let caps = Resources::new(1.0, 1000.0, 100.0);
+        let d = Resources::new(0.5, 500.0, 50.0);
+        assert!((weight(&d, &caps) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn algorithm1_no_overload_no_action() {
+        let dep = small_dep();
+        let state = ResourceState::new(&dep);
+        let props = vec![proposal(0, 0, 1, 0.05, 50.0, 1.0)];
+        let (corr, coll) =
+            algorithm1(&props, &[0], |_| true, &state, &dep, 0.9, None);
+        assert!(corr.is_empty());
+        assert!(coll.is_empty());
+    }
+
+    #[test]
+    fn algorithm1_detects_and_fixes_collision() {
+        let dep = small_dep();
+        let state = ResourceState::new(&dep);
+        let target = 0usize;
+        let cap = state.caps(target).cpu;
+        // Two agents both pile CPU onto node 0 past alpha.
+        let props = vec![
+            proposal(0, 1, target, cap * 0.6, 50.0, 1.0),
+            proposal(1, 2, target, cap * 0.6, 50.0, 1.0),
+        ];
+        let (corr, coll) =
+            algorithm1(&props, &[0, 1], |_| true, &state, &dep, 0.9, None);
+        assert_eq!(coll.len(), 1);
+        assert_eq!(corr.len(), 1, "one layer moved suffices");
+        let (_, new_target) = corr[0];
+        assert_ne!(new_target, target);
+    }
+
+    #[test]
+    fn algorithm1_moves_highest_weight_first() {
+        let dep = small_dep();
+        let state = ResourceState::new(&dep);
+        let target = 0usize;
+        let cap = state.caps(target).cpu;
+        let heavy = proposal(0, 1, target, cap * 0.7, 400.0, 10.0);
+        let light = proposal(1, 2, target, cap * 0.3, 20.0, 1.0);
+        let (corr, _) = algorithm1(
+            &[heavy, light],
+            &[0, 1],
+            |_| true,
+            &state,
+            &dep,
+            0.9,
+            None,
+        );
+        // Moving the heavy one (idx 0) fixes the overload with minimal
+        // interference (criterion 2).
+        assert_eq!(corr.len(), 1);
+        assert_eq!(corr[0].0, 0);
+    }
+
+    #[test]
+    fn algorithm1_leaves_unfixable_overload() {
+        let dep = small_dep();
+        let mut state = ResourceState::new(&dep);
+        // Saturate every node so no safe alternative exists.
+        for n in 0..dep.n() {
+            let caps = *state.caps(n);
+            state.place(n, caps.scale(0.85), caps.scale(0.85), false);
+        }
+        let cap = state.caps(0).cpu;
+        let props = vec![proposal(0, 1, 0, cap * 0.3, 10.0, 1.0)];
+        let (corr, coll) =
+            algorithm1(&props, &[0], |_| true, &state, &dep, 0.9, None);
+        assert_eq!(coll.len(), 1);
+        assert!(corr.is_empty(), "no safe host anywhere");
+    }
+
+    #[test]
+    fn algorithm1_respects_checkable_scope() {
+        let dep = small_dep();
+        let state = ResourceState::new(&dep);
+        let cap = state.caps(0).cpu;
+        let props = vec![
+            proposal(0, 1, 0, cap * 0.8, 50.0, 1.0),
+            proposal(1, 2, 0, cap * 0.8, 50.0, 1.0),
+        ];
+        // Node 0 not checkable: the collision goes unseen.
+        let (corr, coll) =
+            algorithm1(&props, &[0, 1], |n| n != 0, &state, &dep, 0.9, None);
+        assert!(coll.is_empty());
+        assert!(corr.is_empty());
+    }
+
+    #[test]
+    fn algorithm1_correction_target_is_safe() {
+        let dep = small_dep();
+        let state = ResourceState::new(&dep);
+        let cap = state.caps(0).cpu;
+        let props: Vec<ProposedAction> = (0..3)
+            .map(|i| proposal(i, (i + 1) % 5, 0, cap * 0.45, 100.0, 2.0))
+            .collect();
+        let (corr, _) = algorithm1(
+            &props,
+            &[0, 1, 2],
+            |_| true,
+            &state,
+            &dep,
+            0.9,
+            None,
+        );
+        for &(idx, new_target) in &corr {
+            let d = &props[idx].demand;
+            // New host must not exceed alpha with just this layer (state
+            // was empty apart from proposals we can recompute).
+            for k in ResourceKind::ALL {
+                let u = state.caps(new_target).utilization(d, k);
+                assert!(u <= 0.9 + 1e-9, "unsafe correction");
+            }
+        }
+    }
+}

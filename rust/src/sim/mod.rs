@@ -1,0 +1,14 @@
+//! Discrete-event simulation of the edge deployment.
+//!
+//! [`state`] tracks resident demands and utilization; [`timing`] prices a
+//! training iteration for a given placement (compute, inter-level
+//! transfers, parameter synchronization, contention); [`engine`] advances
+//! simulated time across scheduled DL jobs, churning background
+//! workload, sampling utilization, and recording completions.
+
+pub mod engine;
+pub mod state;
+pub mod timing;
+
+pub use engine::{ExecutionReport, Executor};
+pub use state::{ResourceState, TaskHandle};

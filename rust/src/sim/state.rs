@@ -1,0 +1,288 @@
+//! Shared resource-state tracking: which demands are resident on which
+//! node, and the utilization math every component (agents, shields,
+//! execution engine) consults.
+//!
+//! Two demand ledgers per node are kept:
+//!
+//! * **estimated** — the profiled demands everyone *reasons* about
+//!   (agents observe them, shields check them: "the shield observes
+//!   whether the joint action actually changes the resource utilization
+//!   ... to a value higher than the threshold");
+//! * **actual** — the realized demands including the run-time noise the
+//!   paper blames for residual collisions ("the resource demands of
+//!   tasks are time-varying and dynamic and sometimes cannot be
+//!   accurately predicted").
+
+use crate::cluster::{Deployment, NodeId, ResourceKind, Resources};
+
+/// Opaque handle for a resident task's demands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TaskHandle(pub usize);
+
+#[derive(Debug, Clone)]
+struct Resident {
+    node: NodeId,
+    est: Resources,
+    actual: Resources,
+    /// true for DL partitions, false for background jobs.
+    is_dl: bool,
+}
+
+/// Live resource state over all nodes of a deployment.
+#[derive(Debug, Clone)]
+pub struct ResourceState {
+    caps: Vec<Resources>,
+    est: Vec<Resources>,
+    actual: Vec<Resources>,
+    dl_tasks: Vec<usize>,
+    bg_tasks: Vec<usize>,
+    residents: Vec<Option<Resident>>,
+}
+
+impl ResourceState {
+    pub fn new(dep: &Deployment) -> ResourceState {
+        let n = dep.n();
+        ResourceState {
+            caps: dep.nodes.iter().map(|d| d.caps).collect(),
+            est: vec![Resources::default(); n],
+            actual: vec![Resources::default(); n],
+            dl_tasks: vec![0; n],
+            bg_tasks: vec![0; n],
+            residents: Vec::new(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.caps.len()
+    }
+
+    #[inline]
+    pub fn caps(&self, node: NodeId) -> &Resources {
+        &self.caps[node]
+    }
+
+    /// Place a task; returns a handle for later release.
+    pub fn place(&mut self, node: NodeId, est: Resources, actual: Resources, is_dl: bool) -> TaskHandle {
+        self.est[node] = self.est[node].add(&est);
+        self.actual[node] = self.actual[node].add(&actual);
+        if is_dl {
+            self.dl_tasks[node] += 1;
+        } else {
+            self.bg_tasks[node] += 1;
+        }
+        self.residents.push(Some(Resident { node, est, actual, is_dl }));
+        TaskHandle(self.residents.len() - 1)
+    }
+
+    /// Release a previously placed task.
+    pub fn release(&mut self, h: TaskHandle) {
+        let r = self.residents[h.0].take().expect("double release");
+        self.est[r.node] = self.est[r.node].sub(&r.est);
+        self.actual[r.node] = self.actual[r.node].sub(&r.actual);
+        if r.is_dl {
+            self.dl_tasks[r.node] -= 1;
+        } else {
+            self.bg_tasks[r.node] -= 1;
+        }
+    }
+
+    /// Estimated utilization of one resource (Eq. 1) including an
+    /// hypothetical extra demand.
+    #[inline]
+    pub fn util_with(&self, node: NodeId, extra: &Resources, k: ResourceKind) -> f64 {
+        self.caps[node].utilization(&self.est[node].add(extra), k)
+    }
+
+    /// Estimated utilization of one resource (Eq. 1).
+    #[inline]
+    pub fn util(&self, node: NodeId, k: ResourceKind) -> f64 {
+        self.caps[node].utilization(&self.est[node], k)
+    }
+
+    /// Actual (noisy) utilization of one resource.
+    pub fn actual_util(&self, node: NodeId, k: ResourceKind) -> f64 {
+        self.caps[node].utilization(&self.actual[node], k)
+    }
+
+    /// Combined estimated utilization (Eq. 2).
+    pub fn combined_util(&self, node: NodeId) -> f64 {
+        self.caps[node].combined_utilization(&self.est[node])
+    }
+
+    /// Whether any resource exceeds `alpha` on `node` (estimates).
+    pub fn overloaded(&self, node: NodeId, alpha: f64) -> bool {
+        ResourceKind::ALL.iter().any(|&k| self.util(node, k) > alpha)
+    }
+
+    /// Whether any resource exceeds `alpha` on `node` (actuals).
+    pub fn actual_overloaded(&self, node: NodeId, alpha: f64) -> bool {
+        ResourceKind::ALL.iter().any(|&k| self.actual_util(node, k) > alpha)
+    }
+
+    /// Estimated resident demand.
+    #[inline]
+    pub fn demand(&self, node: NodeId) -> &Resources {
+        &self.est[node]
+    }
+
+    /// Actual resident demand.
+    pub fn actual_demand(&self, node: NodeId) -> &Resources {
+        &self.actual[node]
+    }
+
+    /// Number of resident DL partitions on `node`.
+    pub fn dl_task_count(&self, node: NodeId) -> usize {
+        self.dl_tasks[node]
+    }
+
+    /// Number of resident tasks (DL + background) on `node`.
+    pub fn task_count(&self, node: NodeId) -> usize {
+        self.dl_tasks[node] + self.bg_tasks[node]
+    }
+
+    /// CPU share actually granted to a task demanding `cpu_demand` on
+    /// `node`: work-conserving proportional processor sharing — the whole
+    /// capacity is divided among resident tasks in proportion to their
+    /// demands, so a task alone on an idle node runs at full node speed
+    /// and tasks on a piled-up node slow down proportionally.  This is
+    /// what makes balanced schedules (the shield's goal) faster.
+    #[inline]
+    pub fn cpu_share(&self, node: NodeId, cpu_demand: f64) -> f64 {
+        let total = self.actual[node].cpu;
+        let cap = self.caps[node].cpu;
+        cap * cpu_demand / total.max(cpu_demand).max(1e-9)
+    }
+
+    /// Memory pressure factor: 1.0 when resident memory fits, growing
+    /// steeply with oversubscription (swap-thrashing model: every page of
+    /// working set beyond RAM costs orders of magnitude more).
+    #[inline]
+    pub fn mem_pressure(&self, node: NodeId) -> f64 {
+        let u = self.actual_util(node, ResourceKind::Mem);
+        if u <= 1.0 {
+            1.0
+        } else {
+            1.0 + 2.0 * (u - 1.0)
+        }
+    }
+
+    /// Bandwidth contention factor in (0, 1]: fraction of a link's rate a
+    /// flow through `node` actually achieves when the node's aggregate
+    /// bandwidth demand exceeds its NIC capacity.
+    #[inline]
+    pub fn bw_share(&self, node: NodeId) -> f64 {
+        let total = self.actual[node].bw;
+        let cap = self.caps[node].bw;
+        if total <= cap {
+            1.0
+        } else {
+            cap / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Deployment, CONTAINER_PROFILE};
+    use crate::util::Rng;
+
+    fn state() -> ResourceState {
+        let mut rng = Rng::new(1);
+        ResourceState::new(&Deployment::generate(&mut rng, 10, 5, &CONTAINER_PROFILE))
+    }
+
+    fn r(cpu: f64, mem: f64, bw: f64) -> Resources {
+        Resources { cpu, mem, bw }
+    }
+
+    #[test]
+    fn place_and_release_roundtrip() {
+        let mut s = state();
+        let before = *s.demand(3);
+        let h = s.place(3, r(0.2, 100.0, 5.0), r(0.25, 110.0, 5.0), true);
+        assert_eq!(s.dl_task_count(3), 1);
+        assert!(s.demand(3).cpu > before.cpu);
+        s.release(h);
+        assert_eq!(s.dl_task_count(3), 0);
+        assert_eq!(s.demand(3).cpu, before.cpu);
+    }
+
+    #[test]
+    #[should_panic]
+    fn double_release_panics() {
+        let mut s = state();
+        let h = s.place(0, r(0.1, 10.0, 1.0), r(0.1, 10.0, 1.0), true);
+        s.release(h);
+        s.release(h);
+    }
+
+    #[test]
+    fn overload_detection_uses_alpha() {
+        let mut s = state();
+        let cap = s.caps(0).cpu;
+        s.place(0, r(cap * 0.85, 10.0, 1.0), r(cap * 0.85, 10.0, 1.0), true);
+        assert!(!s.overloaded(0, 0.9));
+        s.place(0, r(cap * 0.10, 10.0, 1.0), r(cap * 0.10, 10.0, 1.0), true);
+        assert!(s.overloaded(0, 0.9));
+    }
+
+    #[test]
+    fn estimates_and_actuals_tracked_separately() {
+        let mut s = state();
+        s.place(1, r(0.3, 50.0, 2.0), r(0.45, 80.0, 2.0), true);
+        assert!(s.actual_util(1, ResourceKind::Cpu) > s.util(1, ResourceKind::Cpu));
+    }
+
+    #[test]
+    fn processor_sharing_when_oversubscribed() {
+        let mut s = state();
+        let cap = s.caps(2).cpu;
+        // Two tasks each demanding the full capacity: each gets half.
+        s.place(2, r(cap, 1.0, 0.0), r(cap, 1.0, 0.0), true);
+        s.place(2, r(cap, 1.0, 0.0), r(cap, 1.0, 0.0), true);
+        let share = s.cpu_share(2, cap);
+        assert!((share - cap / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lone_task_gets_full_node() {
+        // Work-conserving: a task alone on the node runs at node speed.
+        let mut s = state();
+        s.place(2, r(0.1, 1.0, 0.0), r(0.1, 1.0, 0.0), true);
+        let cap = s.caps(2).cpu;
+        assert!((s.cpu_share(2, 0.1) - cap).abs() < 1e-12);
+    }
+
+    #[test]
+    fn share_proportional_to_demand() {
+        let mut s = state();
+        let cap = s.caps(3).cpu;
+        s.place(3, r(0.3, 1.0, 0.0), r(0.3, 1.0, 0.0), true);
+        s.place(3, r(0.1, 1.0, 0.0), r(0.1, 1.0, 0.0), true);
+        let big = s.cpu_share(3, 0.3);
+        let small = s.cpu_share(3, 0.1);
+        assert!((big / small - 3.0).abs() < 1e-9);
+        assert!((big + small - cap).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mem_pressure_kicks_in_past_capacity() {
+        let mut s = state();
+        let mem = s.caps(4).mem;
+        s.place(4, r(0.1, mem * 0.5, 0.0), r(0.1, mem * 0.5, 0.0), true);
+        assert_eq!(s.mem_pressure(4), 1.0);
+        s.place(4, r(0.1, mem * 0.75, 0.0), r(0.1, mem * 0.75, 0.0), true);
+        assert!(s.mem_pressure(4) > 1.0);
+    }
+
+    #[test]
+    fn util_with_is_hypothetical() {
+        let s = state();
+        let extra = r(0.5, 0.0, 0.0);
+        let u = s.util_with(0, &extra, ResourceKind::Cpu);
+        assert!(u > 0.0);
+        // State unchanged.
+        assert_eq!(s.util(0, ResourceKind::Cpu), 0.0);
+    }
+}

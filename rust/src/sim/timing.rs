@@ -1,0 +1,257 @@
+//! Iteration-time model (§6 of DESIGN.md).
+//!
+//! The paper's clusters train with *concurrent data/model parallelism*
+//! (its layer/level formulation follows PipeDream): every placed layer is
+//! a pipeline stage and all stages process (micro)batches concurrently.
+//! Steady-state throughput is therefore set by the **bottleneck stage**:
+//!
+//! ```text
+//! t_iter  = max( max_l t_compute(l, P(l)),  max_xfer,  t_sync )
+//! t_fill  = Σ_levels max_{l ∈ level} t_compute + Σ transfers   (once)
+//! JCT     ≈ t_fill + iterations × t_iter
+//! ```
+//!
+//! * `t_compute` — layer FLOPs over the CPU share the node grants
+//!   (work-conserving proportional sharing over resident demands — in a
+//!   pipeline every resident stage is active), inflated by the
+//!   memory-pressure factor when resident memory exceeds capacity.
+//!   This is how action collisions become longer training times: a
+//!   piled-up node dilutes every stage it hosts, and the slowest stage
+//!   *is* the iteration time.
+//! * `transfer` — activation bytes over the pairwise link for
+//!   consecutive layers on different nodes, throttled by NIC contention.
+//! * `t_sync` — parameter-server synchronization: replica parameters flow
+//!   owner → cluster head, and heads share the global PS ingress with
+//!   every other cluster — the cause of the paper's "JCT grows with the
+//!   number of edges" trend (Fig 4).
+
+use crate::cluster::{Deployment, NodeId};
+use crate::dnn::{profile, ModelGraph};
+
+use super::state::ResourceState;
+
+/// Aggregate ingress bandwidth of the global parameter server (Mbps),
+/// shared by all cluster heads synchronizing concurrently.
+pub const GLOBAL_PS_BW_MBPS: f64 = 150.0;
+/// Fraction of model parameters exchanged per iteration (gradient push +
+/// parameter pull, fp32, no compression).
+pub const SYNC_FRACTION: f64 = 2.0;
+
+/// Compute seconds for one layer on its host node under current load.
+pub fn layer_secs(state: &ResourceState, node: NodeId, cpu_demand: f64, flops_g: f64) -> f64 {
+    let share = state.cpu_share(node, cpu_demand);
+    profile::compute_secs(flops_g, share) * state.mem_pressure(node)
+}
+
+/// Slowest transfer between consecutive levels under current contention.
+fn max_transfer_secs(
+    dep: &Deployment,
+    state: &ResourceState,
+    graph: &ModelGraph,
+    placement: &[NodeId],
+) -> f64 {
+    let mut worst = 0.0f64;
+    for &(a, b) in &graph.edges {
+        let (na, nb) = (placement[a], placement[b]);
+        if na != nb {
+            let nic = state.bw_share(na).min(state.bw_share(nb));
+            worst = worst.max(dep.topo.transfer_secs(na, nb, graph.layers[a].out_mb, 1) / nic);
+        }
+    }
+    worst
+}
+
+/// Steady-state per-iteration time: the pipeline bottleneck.
+pub fn iteration_secs(
+    dep: &Deployment,
+    state: &ResourceState,
+    graph: &ModelGraph,
+    placement: &[NodeId],
+    owner: NodeId,
+    cluster_head: NodeId,
+    n_clusters: usize,
+) -> f64 {
+    let mut bottleneck = 0.0f64;
+    for layer in &graph.layers {
+        let node = placement[layer.id];
+        bottleneck = bottleneck.max(layer_secs(state, node, layer.demand().cpu, layer.flops_g));
+    }
+    bottleneck = bottleneck.max(max_transfer_secs(dep, state, graph, placement));
+    bottleneck.max(sync_secs(dep, graph, owner, cluster_head, n_clusters))
+}
+
+/// One-time pipeline fill: the full sequential walk through the levels.
+pub fn pipeline_fill_secs(
+    dep: &Deployment,
+    state: &ResourceState,
+    graph: &ModelGraph,
+    placement: &[NodeId],
+) -> f64 {
+    let mut total = 0.0f64;
+    for (li, level) in graph.levels.iter().enumerate() {
+        let mut t_level = 0.0f64;
+        for &lid in level {
+            let layer = &graph.layers[lid];
+            t_level =
+                t_level.max(layer_secs(state, placement[lid], layer.demand().cpu, layer.flops_g));
+        }
+        total += t_level;
+        if li + 1 < graph.levels.len() {
+            let mut t_xfer = 0.0f64;
+            for &(a, b) in &graph.edges {
+                if graph.layers[a].level == li && graph.layers[b].level == li + 1 {
+                    let (na, nb) = (placement[a], placement[b]);
+                    if na != nb {
+                        let nic = state.bw_share(na).min(state.bw_share(nb));
+                        t_xfer = t_xfer
+                            .max(dep.topo.transfer_secs(na, nb, graph.layers[a].out_mb, 1) / nic);
+                    }
+                }
+            }
+            total += t_xfer;
+        }
+    }
+    total
+}
+
+/// Parameter-synchronization seconds per iteration.
+pub fn sync_secs(
+    dep: &Deployment,
+    graph: &ModelGraph,
+    owner: NodeId,
+    cluster_head: NodeId,
+    n_clusters: usize,
+) -> f64 {
+    let mb = graph.param_mb() * SYNC_FRACTION;
+    // Intra-cluster: owner replica <-> cluster head.
+    let intra = dep.topo.transfer_secs(owner, cluster_head, mb, 1);
+    // Inter-cluster: heads share the global PS ingress.
+    let ps_bw = GLOBAL_PS_BW_MBPS / n_clusters.max(1) as f64;
+    let inter = if n_clusters > 1 { mb * 8.0 / ps_bw } else { 0.0 };
+    intra + inter
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Deployment, Resources, CONTAINER_PROFILE};
+    use crate::dnn::ModelKind;
+    use crate::util::Rng;
+
+    fn dep(n: usize) -> Deployment {
+        let mut rng = Rng::new(13);
+        Deployment::generate(&mut rng, n, 5, &CONTAINER_PROFILE)
+    }
+
+    fn all_on(node: NodeId, graph: &ModelGraph) -> Vec<NodeId> {
+        vec![node; graph.n_layers()]
+    }
+
+    #[test]
+    fn iteration_positive_and_scales_with_model() {
+        let d = dep(5);
+        let state = ResourceState::new(&d);
+        let rnn = ModelKind::Rnn.build();
+        let vgg = ModelKind::Vgg16.build();
+        let head = d.clusters[0].head;
+        let t_rnn = iteration_secs(&d, &state, &rnn, &all_on(0, &rnn), 0, head, 1);
+        let t_vgg = iteration_secs(&d, &state, &vgg, &all_on(0, &vgg), 0, head, 1);
+        assert!(t_rnn > 0.0);
+        assert!(t_vgg > 3.0 * t_rnn, "vgg={t_vgg} rnn={t_rnn}");
+    }
+
+    #[test]
+    fn fill_exceeds_bottleneck() {
+        let d = dep(5);
+        let state = ResourceState::new(&d);
+        let g = ModelKind::Vgg16.build();
+        let head = d.clusters[0].head;
+        let fill = pipeline_fill_secs(&d, &state, &g, &all_on(0, &g));
+        let iter = iteration_secs(&d, &state, &g, &all_on(0, &g), 0, head, 1);
+        assert!(fill > iter, "fill={fill} iter={iter}");
+    }
+
+    #[test]
+    fn contention_slows_iterations() {
+        let d = dep(5);
+        let mut state = ResourceState::new(&d);
+        let g = ModelKind::Vgg16.build();
+        let head = d.clusters[0].head;
+        let t_idle = iteration_secs(&d, &state, &g, &all_on(1, &g), 1, head, 1);
+        // Saturate node 1's CPU with background demand.
+        let cap = state.caps(1).cpu;
+        state.place(1, Resources::new(cap * 2.0, 10.0, 0.0), Resources::new(cap * 2.0, 10.0, 0.0), false);
+        let t_loaded = iteration_secs(&d, &state, &g, &all_on(1, &g), 1, head, 1);
+        assert!(t_loaded > 1.5 * t_idle, "idle={t_idle} loaded={t_loaded}");
+    }
+
+    #[test]
+    fn memory_oversubscription_penalizes() {
+        let d = dep(5);
+        let mut state = ResourceState::new(&d);
+        let g = ModelKind::Vgg16.build();
+        let head = d.clusters[0].head;
+        let t0 = iteration_secs(&d, &state, &g, &all_on(2, &g), 2, head, 1);
+        let mem = state.caps(2).mem;
+        state.place(2, Resources::new(0.0, mem * 1.5, 0.0), Resources::new(0.0, mem * 1.5, 0.0), false);
+        let t1 = iteration_secs(&d, &state, &g, &all_on(2, &g), 2, head, 1);
+        assert!(t1 > t0);
+    }
+
+    #[test]
+    fn balanced_beats_piled_bottleneck() {
+        // The core economic fact behind the paper: spreading stages over
+        // the cluster beats piling them onto one node.
+        let d = dep(5);
+        let g = ModelKind::Vgg16.build();
+        let head = d.clusters[0].head;
+        let mut piled_state = ResourceState::new(&d);
+        let piled: Vec<NodeId> = all_on(4, &g);
+        for l in &g.layers {
+            let dem = l.demand();
+            piled_state.place(4, dem, dem, true);
+        }
+        let t_piled = iteration_secs(&d, &piled_state, &g, &piled, 0, head, 1);
+
+        let mut spread_state = ResourceState::new(&d);
+        let spread: Vec<NodeId> = (0..g.n_layers()).map(|i| i % 5).collect();
+        for l in &g.layers {
+            let dem = l.demand();
+            spread_state.place(spread[l.id], dem, dem, true);
+        }
+        let t_spread = iteration_secs(&d, &spread_state, &g, &spread, 0, head, 1);
+        assert!(t_piled > 1.3 * t_spread, "piled={t_piled} spread={t_spread}");
+    }
+
+    #[test]
+    fn cross_node_placement_pays_transfers_in_fill() {
+        let d = dep(5);
+        let state = ResourceState::new(&d);
+        let g = ModelKind::Rnn.build();
+        let same = pipeline_fill_secs(&d, &state, &g, &all_on(0, &g));
+        let alt: Vec<NodeId> = (0..g.n_layers()).map(|i| if i % 2 == 0 { 0 } else { 1 }).collect();
+        let cross = pipeline_fill_secs(&d, &state, &g, &alt);
+        assert!(cross > same, "cross={cross} same={same}");
+    }
+
+    #[test]
+    fn sync_grows_with_cluster_count() {
+        let d = dep(25);
+        let g = ModelKind::GoogleNet.build();
+        let head = d.clusters[0].head;
+        let s1 = sync_secs(&d, &g, 0, head, 1);
+        let s5 = sync_secs(&d, &g, 0, head, 5);
+        assert!(s5 > s1, "s5={s5} s1={s1}");
+    }
+
+    #[test]
+    fn sync_bounds_iteration_from_below() {
+        let d = dep(25);
+        let g = ModelKind::Vgg16.build();
+        let state = ResourceState::new(&d);
+        let head = d.clusters[0].head;
+        let iter = iteration_secs(&d, &state, &g, &all_on(0, &g), 0, head, 5);
+        let sync = sync_secs(&d, &g, 0, head, 5);
+        assert!(iter >= sync);
+    }
+}

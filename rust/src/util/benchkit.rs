@@ -1,0 +1,187 @@
+//! Criterion-style measurement harness (offline substitute).
+//!
+//! Each `benches/*.rs` binary (built with `harness = false`) constructs a
+//! [`Bench`], registers closures, and gets warmup, repeated timed samples,
+//! outlier-robust statistics and a rendered report.  Figure benches also
+//! use [`Bench::report_series`] to print paper-figure series next to the
+//! timing numbers.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+use super::table::{f, Table};
+
+/// Configuration for one measurement run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// Soft wall-clock cap per benchmark; sampling stops early past this.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 3, samples: 20, max_time: Duration::from_secs(60) }
+    }
+}
+
+/// Result of one registered benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn median_secs(&self) -> f64 {
+        self.summary.median
+    }
+}
+
+/// A named collection of benchmarks (one per paper table/figure cell).
+pub struct Bench {
+    pub title: String,
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Bench {
+        let mut config = BenchConfig::default();
+        // Fast mode for CI / smoke runs: SROLE_BENCH_FAST=1.
+        if std::env::var("SROLE_BENCH_FAST").is_ok() {
+            config.warmup_iters = 1;
+            config.samples = 5;
+            config.max_time = Duration::from_secs(10);
+        }
+        Bench { title: title.to_string(), config, results: Vec::new() }
+    }
+
+    pub fn with_config(title: &str, config: BenchConfig) -> Bench {
+        Bench { title: title.to_string(), config, results: Vec::new() }
+    }
+
+    /// Measure `op` and record statistics under `name`.  The closure's
+    /// return value is black-boxed to keep the optimizer honest.
+    pub fn measure<T, F: FnMut() -> T>(&mut self, name: &str, mut op: F) -> &BenchResult {
+        for _ in 0..self.config.warmup_iters {
+            black_box(op());
+        }
+        let started = Instant::now();
+        let mut samples = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            black_box(op());
+            samples.push(t0.elapsed().as_secs_f64());
+            if started.elapsed() > self.config.max_time && samples.len() >= 3 {
+                break;
+            }
+        }
+        let summary = Summary::of(&samples);
+        self.results.push(BenchResult { name: name.to_string(), summary, samples });
+        self.results.last().unwrap()
+    }
+
+    /// Measure an op and report derived throughput (items/sec).
+    pub fn measure_throughput<T, F: FnMut() -> T>(
+        &mut self,
+        name: &str,
+        items: usize,
+        op: F,
+    ) -> f64 {
+        let r = self.measure(name, op);
+        items as f64 / r.summary.median
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render the timing table.
+    pub fn report(&self) -> String {
+        let mut t = Table::new(
+            &format!("bench: {}", self.title),
+            &["name", "median_s", "mean_s", "p5_s", "p95_s", "n"],
+        );
+        for r in &self.results {
+            t.row(vec![
+                r.name.clone(),
+                format!("{:.6}", r.summary.median),
+                format!("{:.6}", r.summary.mean),
+                format!("{:.6}", r.summary.p5),
+                format!("{:.6}", r.summary.p95),
+                r.summary.n.to_string(),
+            ]);
+        }
+        t.render()
+    }
+
+    pub fn print_report(&self) {
+        print!("{}", self.report());
+    }
+
+    /// Print a paper-figure series (x, per-method values) alongside timings.
+    pub fn report_series(title: &str, x_label: &str, methods: &[&str], rows: &[(String, Vec<f64>)]) {
+        let mut headers = vec![x_label];
+        headers.extend_from_slice(methods);
+        let mut t = Table::new(title, &headers);
+        for (x, vals) in rows {
+            let mut cells = vec![x.clone()];
+            cells.extend(vals.iter().map(|v| f(*v)));
+            t.row(cells);
+        }
+        t.print();
+    }
+}
+
+/// Optimizer barrier (stable-rust substitute for `std::hint::black_box`
+/// semantics; uses a volatile read).
+pub fn black_box<T>(x: T) -> T {
+    unsafe {
+        let y = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        let mut b = Bench::with_config(
+            "t",
+            BenchConfig { warmup_iters: 1, samples: 5, max_time: Duration::from_secs(5) },
+        );
+        b.measure("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert_eq!(b.results().len(), 1);
+        let r = &b.results()[0];
+        assert!(r.summary.median > 0.0);
+        assert!(b.report().contains("spin"));
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let mut b = Bench::with_config(
+            "t",
+            BenchConfig { warmup_iters: 0, samples: 3, max_time: Duration::from_secs(5) },
+        );
+        let thr = b.measure_throughput("noop", 1000, || 1 + 1);
+        assert!(thr > 0.0);
+    }
+
+    #[test]
+    fn black_box_identity() {
+        assert_eq!(black_box(42), 42);
+        assert_eq!(black_box(String::from("x")), "x");
+    }
+}

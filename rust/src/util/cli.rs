@@ -1,0 +1,210 @@
+//! Minimal declarative CLI flag parser (offline substitute for `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+enum Kind {
+    Bool,
+    Value { default: Option<String> },
+}
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: String,
+    kind: Kind,
+    help: String,
+}
+
+/// Declarative argument parser.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    Unknown(String),
+    #[error("flag --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+    #[error("help requested")]
+    Help,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Cli {
+        Cli { program: program.into(), about: about.into(), specs: Vec::new() }
+    }
+
+    /// Register a `--name <value>` flag with an optional default.
+    pub fn opt(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.into(),
+            kind: Kind::Value { default: default.map(|s| s.into()) },
+            help: help.into(),
+        });
+        self
+    }
+
+    /// Register a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec { name: name.into(), kind: Kind::Bool, help: help.into() });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nflags:\n", self.program, self.about);
+        for s in &self.specs {
+            let lhs = match &s.kind {
+                Kind::Bool => format!("--{}", s.name),
+                Kind::Value { default: Some(d) } => format!("--{} <v> [{}]", s.name, d),
+                Kind::Value { default: None } => format!("--{} <v>", s.name),
+            };
+            out.push_str(&format!("  {lhs:<28} {}\n", s.help));
+        }
+        out
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for s in &self.specs {
+            if let Kind::Value { default: Some(d) } = &s.kind {
+                args.values.insert(s.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                match &spec.kind {
+                    Kind::Bool => {
+                        args.flags.push(name);
+                    }
+                    Kind::Value { .. } => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| CliError::MissingValue(name.clone()))?
+                            }
+                        };
+                        args.values.insert(name, v);
+                    }
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.parse().map_err(|_| CliError::Invalid(name.into(), v.into()))
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.parse().map_err(|_| CliError::Invalid(name.into(), v.into()))
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.get(name).ok_or_else(|| CliError::MissingValue(name.into()))?;
+        v.parse().map_err(|_| CliError::Invalid(name.into(), v.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("edges", Some("25"), "number of edges")
+            .opt("model", None, "model name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&argv(&[])).unwrap();
+        assert_eq!(a.usize("edges").unwrap(), 25);
+        assert!(a.get("model").is_none());
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn parses_values_and_flags() {
+        let a = cli().parse(&argv(&["--edges", "10", "--verbose", "--model=vgg16", "pos1"])).unwrap();
+        assert_eq!(a.usize("edges").unwrap(), 10);
+        assert_eq!(a.get("model"), Some("vgg16"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(cli().parse(&argv(&["--nope"])), Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(cli().parse(&argv(&["--model"])), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = cli().parse(&argv(&["--edges", "abc"])).unwrap();
+        assert!(matches!(a.usize("edges"), Err(CliError::Invalid(..))));
+    }
+
+    #[test]
+    fn help_flag() {
+        assert!(matches!(cli().parse(&argv(&["-h"])), Err(CliError::Help)));
+        assert!(cli().usage().contains("--edges"));
+    }
+}

@@ -1,0 +1,22 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline with only the `xla` crate
+//! closure vendored, so the roles usually played by `rand`, `serde_json`,
+//! `clap` and `criterion` are implemented here from scratch:
+//!
+//! * [`rng`] — PCG-XSH-RR 64/32 deterministic PRNG;
+//! * [`stats`] — medians, percentiles, summary statistics;
+//! * [`json`] — a small JSON emitter + recursive-descent parser (used for
+//!   `artifacts/manifest.json` and metric dumps);
+//! * [`table`] — aligned console tables for the figure harness;
+//! * [`cli`] — a minimal declarative flag parser for the binaries;
+//! * [`benchkit`] — a criterion-style measurement harness for `benches/`.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;

@@ -1,0 +1,175 @@
+//! Summary statistics used by the metric collectors and figure harness.
+//!
+//! The paper reports medians with 5th/95th-percentile error bars
+//! (Figures 4–13); [`Summary`] carries exactly those fields plus
+//! min/max/mean for the task-per-device and utilization plots.
+
+/// Percentile by linear interpolation on the sorted sample (inclusive).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+pub fn median(values: &[f64]) -> f64 {
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile(&v, 50.0)
+}
+
+pub fn mean(values: &[f64]) -> f64 {
+    assert!(!values.is_empty());
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+pub fn stddev(values: &[f64]) -> f64 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(values);
+    (values.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (values.len() - 1) as f64).sqrt()
+}
+
+/// Five-number-style summary matching the paper's plotting convention.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub min: f64,
+    pub p5: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub stddev: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Summary {
+        assert!(!values.is_empty(), "Summary::of(empty)");
+        let mut v = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            n: v.len(),
+            min: v[0],
+            p5: percentile(&v, 5.0),
+            median: percentile(&v, 50.0),
+            p95: percentile(&v, 95.0),
+            max: v[v.len() - 1],
+            mean: mean(&v),
+            stddev: stddev(&v),
+        }
+    }
+
+    /// Spread of the error bars (max − min), the paper's variance proxy.
+    pub fn spread(&self) -> f64 {
+        self.max - self.min
+    }
+}
+
+/// Streaming accumulator when samples are too many to keep.
+#[derive(Debug, Clone, Default)]
+pub struct Accum {
+    pub n: usize,
+    sum: f64,
+    sumsq: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Accum { n: 0, sum: 0.0, sumsq: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        self.sumsq += x * x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        ((self.sumsq / self.n as f64 - m * m).max(0.0) * self.n as f64 / (self.n - 1) as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_endpoints() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [0.0, 10.0];
+        assert_eq!(percentile(&v, 50.0), 5.0);
+        assert_eq!(percentile(&v, 25.0), 2.5);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = Summary::of(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.mean, 3.0);
+        assert!(s.spread() == 4.0);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.min, 7.0);
+        assert_eq!(s.p5, 7.0);
+        assert_eq!(s.median, 7.0);
+        assert_eq!(s.max, 7.0);
+        assert_eq!(s.stddev, 0.0);
+    }
+
+    #[test]
+    fn accum_matches_batch() {
+        let vals = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut a = Accum::new();
+        for &v in &vals {
+            a.push(v);
+        }
+        assert!((a.mean() - mean(&vals)).abs() < 1e-12);
+        assert!((a.stddev() - stddev(&vals)).abs() < 1e-9);
+        assert_eq!(a.min, 2.0);
+        assert_eq!(a.max, 9.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_empty_panics() {
+        percentile(&[], 50.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Workload generation: DL training jobs plus PageRank-like background
+//! jobs.
+//!
+//! §V-A: "we trained one DNN model in each cluster and add several other
+//! non-ML jobs (PageRank) from the HiBench benchmark to vary available
+//! resources on the edges. ... We run x = 2,3,...,6 PageRank jobs in each
+//! cluster throughout the whole training period to control the workload.
+//! Workload of 100% means there are 6 PageRank jobs running
+//! simultaneously."  Three DL jobs of the same model run per cluster,
+//! initiated by randomly chosen edge nodes.
+
+use crate::cluster::{Deployment, NodeId, Resources};
+use crate::dnn::ModelKind;
+use crate::util::Rng;
+
+/// Workload level as a fraction (1.0 = 100% = 6 PageRank jobs/cluster).
+pub const PAGERANK_AT_FULL: usize = 6;
+
+/// Map the paper's workload percentage to PageRank jobs per cluster
+/// (100%→6, 90%→5, 80%→4, ... §V-A).
+pub fn pagerank_jobs_for_workload(workload: f64) -> usize {
+    let jobs = PAGERANK_AT_FULL as f64 - (1.0 - workload) * 10.0;
+    jobs.round().clamp(0.0, PAGERANK_AT_FULL as f64) as usize
+}
+
+/// A background (non-ML) job occupying resources on one node.  Modeled on
+/// HiBench PageRank: an iterative graph kernel with a steady CPU/memory
+/// footprint and periodic shuffle traffic.
+#[derive(Debug, Clone)]
+pub struct BackgroundJob {
+    pub id: usize,
+    pub node: NodeId,
+    pub demand: Resources,
+    /// Active interval [start, end) in simulation seconds.
+    pub start: f64,
+    pub end: f64,
+}
+
+impl BackgroundJob {
+    pub fn active_at(&self, t: f64) -> bool {
+        t >= self.start && t < self.end
+    }
+}
+
+/// One DL training job: a model replica trained within one cluster,
+/// initiated by a member edge node (the MARL agent that schedules it).
+#[derive(Debug, Clone)]
+pub struct DlJob {
+    pub id: usize,
+    pub cluster: usize,
+    pub owner: NodeId,
+    pub model: ModelKind,
+    pub arrival: f64,
+    pub iterations: usize,
+}
+
+/// The full generated workload for one experiment run.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub dl_jobs: Vec<DlJob>,
+    pub background: Vec<BackgroundJob>,
+}
+
+/// Generation knobs (defaults follow §V-A).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub model: ModelKind,
+    /// DL jobs per cluster ("three DL training jobs of the same type").
+    pub jobs_per_cluster: usize,
+    /// Training iterations per job ("50 iterations").
+    pub iterations: usize,
+    /// Workload fraction (1.0 = 6 PageRank jobs per cluster).
+    pub workload: f64,
+    /// Jobs of one cluster arrive within this window (s): concurrent
+    /// decision-making is what makes action collisions possible.
+    pub arrival_window: f64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            model: ModelKind::Vgg16,
+            jobs_per_cluster: 3,
+            iterations: 50,
+            workload: 1.0,
+            arrival_window: 5.0,
+        }
+    }
+}
+
+impl Workload {
+    pub fn generate(rng: &mut Rng, dep: &Deployment, spec: &WorkloadSpec, horizon: f64) -> Workload {
+        let mut dl_jobs = Vec::new();
+        let mut background = Vec::new();
+        let mut job_id = 0;
+        let mut bg_id = 0;
+        for (ci, cluster) in dep.clusters.iter().enumerate() {
+            // DL jobs: random owners, near-simultaneous arrivals.
+            for _ in 0..spec.jobs_per_cluster {
+                let owner = *rng.choose(&cluster.members);
+                dl_jobs.push(DlJob {
+                    id: job_id,
+                    cluster: ci,
+                    owner,
+                    model: spec.model,
+                    arrival: rng.range_f64(0.0, spec.arrival_window),
+                    iterations: spec.iterations,
+                });
+                job_id += 1;
+            }
+            // PageRank background jobs: run "throughout the whole training
+            // period" — active across the horizon, re-spawning with churn
+            // so contention varies over time.
+            let n_bg = pagerank_jobs_for_workload(spec.workload);
+            for _ in 0..n_bg {
+                let mut t = 0.0;
+                while t < horizon {
+                    let node = *rng.choose(&cluster.members);
+                    // HiBench PageRank footprint: moderate CPU, a few
+                    // hundred MB, bursty shuffle bandwidth.
+                    let demand = Resources {
+                        cpu: rng.range_f64(0.10, 0.30),
+                        mem: rng.range_f64(96.0, 256.0),
+                        bw: rng.range_f64(2.0, 10.0),
+                    };
+                    let dur = rng.range_f64(0.2, 0.5) * horizon.max(60.0);
+                    background.push(BackgroundJob {
+                        id: bg_id,
+                        node,
+                        demand,
+                        start: t,
+                        end: (t + dur).min(horizon),
+                    });
+                    bg_id += 1;
+                    t += dur;
+                }
+            }
+        }
+        Workload { dl_jobs, background }
+    }
+
+    /// Total background demand resident on `node` at time `t`.
+    pub fn background_demand_at(&self, node: NodeId, t: f64) -> Resources {
+        let mut total = Resources::default();
+        for j in self.background.iter().filter(|j| j.node == node && j.active_at(t)) {
+            total = total.add(&j.demand);
+        }
+        total
+    }
+
+    /// Number of background tasks resident on `node` at `t`.
+    pub fn background_count_at(&self, node: NodeId, t: f64) -> usize {
+        self.background.iter().filter(|j| j.node == node && j.active_at(t)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Deployment, CONTAINER_PROFILE};
+
+    fn dep() -> Deployment {
+        let mut rng = Rng::new(5);
+        Deployment::generate(&mut rng, 25, 5, &CONTAINER_PROFILE)
+    }
+
+    #[test]
+    fn workload_mapping_matches_paper() {
+        assert_eq!(pagerank_jobs_for_workload(1.0), 6);
+        assert_eq!(pagerank_jobs_for_workload(0.9), 5);
+        assert_eq!(pagerank_jobs_for_workload(0.8), 4);
+        assert_eq!(pagerank_jobs_for_workload(0.7), 3);
+        assert_eq!(pagerank_jobs_for_workload(0.6), 2);
+    }
+
+    #[test]
+    fn three_jobs_per_cluster() {
+        let mut rng = Rng::new(1);
+        let d = dep();
+        let w = Workload::generate(&mut rng, &d, &WorkloadSpec::default(), 1000.0);
+        assert_eq!(w.dl_jobs.len(), 15);
+        for ci in 0..5 {
+            assert_eq!(w.dl_jobs.iter().filter(|j| j.cluster == ci).count(), 3);
+        }
+    }
+
+    #[test]
+    fn owners_belong_to_cluster() {
+        let mut rng = Rng::new(2);
+        let d = dep();
+        let w = Workload::generate(&mut rng, &d, &WorkloadSpec::default(), 1000.0);
+        for j in &w.dl_jobs {
+            assert!(d.clusters[j.cluster].members.contains(&j.owner));
+        }
+    }
+
+    #[test]
+    fn background_respects_workload_level() {
+        let mut rng = Rng::new(3);
+        let d = dep();
+        let mut spec = WorkloadSpec::default();
+        spec.workload = 0.6;
+        let w_low = Workload::generate(&mut rng, &d, &spec, 1000.0);
+        spec.workload = 1.0;
+        let mut rng = Rng::new(3);
+        let w_high = Workload::generate(&mut rng, &d, &spec, 1000.0);
+        let load = |w: &Workload| -> f64 {
+            d.nodes.iter().map(|n| w.background_demand_at(n.id, 500.0).cpu).sum()
+        };
+        assert!(load(&w_high) > load(&w_low));
+    }
+
+    #[test]
+    fn background_covers_horizon() {
+        let mut rng = Rng::new(4);
+        let d = dep();
+        let w = Workload::generate(&mut rng, &d, &WorkloadSpec::default(), 2000.0);
+        // At any sampled time, every cluster should have some active
+        // background demand at 100% workload.
+        for t in [10.0, 500.0, 1500.0, 1999.0] {
+            for c in &d.clusters {
+                let total: f64 = c.members.iter().map(|&m| w.background_demand_at(m, t).cpu).sum();
+                assert!(total > 0.0, "no background at t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_workload_means_no_background() {
+        let mut rng = Rng::new(6);
+        let d = dep();
+        let mut spec = WorkloadSpec::default();
+        spec.workload = 0.4; // maps to 0 jobs
+        let w = Workload::generate(&mut rng, &d, &spec, 1000.0);
+        assert_eq!(pagerank_jobs_for_workload(0.4), 0);
+        assert!(w.background.is_empty());
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let d = dep();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = Workload::generate(&mut r1, &d, &WorkloadSpec::default(), 1000.0);
+        let b = Workload::generate(&mut r2, &d, &WorkloadSpec::default(), 1000.0);
+        assert_eq!(a.dl_jobs.len(), b.dl_jobs.len());
+        for (x, y) in a.dl_jobs.iter().zip(&b.dl_jobs) {
+            assert_eq!(x.owner, y.owner);
+            assert_eq!(x.arrival, y.arrival);
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! Integration tests: whole-experiment invariants across modules, the
+//! paper's qualitative orderings, and failure injection.
+
+use srole::cluster::{Deployment, ResourceKind, CONTAINER_PROFILE};
+use srole::config::ExperimentConfig;
+use srole::coordinator::{Experiment, Method};
+use srole::dnn::ModelKind;
+use srole::rl::{RewardParams, TabularQ};
+use srole::sched::{marl_candidates, marl_wave};
+use srole::shield::{CentralShield, DecentralShield, ProposedAction, Shield};
+use srole::sim::ResourceState;
+use srole::util::Rng;
+use srole::workload::{Workload, WorkloadSpec};
+
+fn quick_cfg(model: ModelKind) -> ExperimentConfig {
+    ExperimentConfig {
+        model,
+        n_edges: 25,
+        iterations: 20,
+        pretrain_episodes: 150,
+        repetitions: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn paper_ordering_jct_srole_beats_marl() {
+    // Fig 4 headline: shielding reduces training time vs MARL/RL.
+    let exp = Experiment::new(quick_cfg(ModelKind::Vgg16));
+    let marl = exp.run(Method::Marl).metrics;
+    let srole_c = exp.run(Method::SroleC).metrics;
+    assert!(
+        srole_c.jct_summary().median < marl.jct_summary().median,
+        "SROLE-C {} !< MARL {}",
+        srole_c.jct_summary().median,
+        marl.jct_summary().median
+    );
+}
+
+#[test]
+fn paper_ordering_collisions() {
+    // Fig 8: shielded methods produce fewer action collisions than MARL.
+    let exp = Experiment::new(quick_cfg(ModelKind::Vgg16));
+    let marl = exp.run(Method::Marl).metrics.collisions;
+    let c = exp.run(Method::SroleC).metrics.collisions;
+    let d = exp.run(Method::SroleD).metrics.collisions;
+    assert!(c < marl, "SROLE-C {c} !< MARL {marl}");
+    assert!(d < marl, "SROLE-D {d} !< MARL {marl}");
+}
+
+#[test]
+fn paper_ordering_overhead() {
+    // Fig 7: overhead ordering MARL < SROLE-D/C < RL; scheduling time
+    // identical among the MARL-based methods; only shielded methods pay
+    // shielding time, and SROLE-D pays less than SROLE-C.
+    let exp = Experiment::new(quick_cfg(ModelKind::GoogleNet));
+    let rl = exp.run(Method::Rl).metrics;
+    let marl = exp.run(Method::Marl).metrics;
+    let c = exp.run(Method::SroleC).metrics;
+    let d = exp.run(Method::SroleD).metrics;
+    assert!(marl.mean_overhead_secs() < c.mean_overhead_secs());
+    assert!(
+        c.mean_overhead_secs() < rl.mean_overhead_secs(),
+        "SROLE-C {} !< RL {} (RL pays head queueing)",
+        c.mean_overhead_secs(),
+        rl.mean_overhead_secs()
+    );
+    assert_eq!(marl.mean_shield_secs(), 0.0);
+    assert!((marl.mean_sched_secs() - c.mean_sched_secs()).abs() < 1e-9);
+    assert!(c.mean_shield_secs() > 0.0);
+    assert!(d.mean_shield_secs() > 0.0);
+}
+
+#[test]
+fn kappa_sweep_bends_shielded_collisions_down() {
+    // Fig 8 trend: pooled over seeds, higher |κ| must not increase the
+    // shielded methods' collisions, while MARL stays flat (κ unused).
+    let mut lo = 0usize;
+    let mut hi = 0usize;
+    let mut marl_lo = 0usize;
+    let mut marl_hi = 0usize;
+    for seed in [1u64, 11, 21] {
+        let mut cfg = quick_cfg(ModelKind::Vgg16);
+        cfg.seed = seed;
+        cfg.reward.kappa = 25.0;
+        let e1 = Experiment::new(cfg.clone());
+        lo += e1.run(Method::SroleC).metrics.collisions;
+        marl_lo += e1.run(Method::Marl).metrics.collisions;
+        cfg.reward.kappa = 200.0;
+        let e2 = Experiment::new(cfg);
+        hi += e2.run(Method::SroleC).metrics.collisions;
+        marl_hi += e2.run(Method::Marl).metrics.collisions;
+    }
+    assert!(hi <= lo, "kappa 200 gave {hi} collisions vs {lo} at kappa 25");
+    assert_eq!(marl_lo, marl_hi, "MARL must be insensitive to kappa");
+}
+
+#[test]
+fn all_jobs_complete_for_every_model_and_method() {
+    for model in ModelKind::PAPER_MODELS {
+        let mut cfg = quick_cfg(model);
+        cfg.repetitions = 1;
+        cfg.iterations = 10;
+        let exp = Experiment::new(cfg);
+        for m in Method::ALL {
+            let r = exp.run_once(m, 5);
+            assert_eq!(r.jct.len(), 15, "{} {}", model.name(), m.name());
+            assert!(r.jct.iter().all(|&t| t.is_finite() && t > 0.0));
+        }
+    }
+}
+
+#[test]
+fn experiment_is_deterministic() {
+    let exp = Experiment::new(quick_cfg(ModelKind::Rnn));
+    let a = exp.run_once(Method::SroleD, 99);
+    let b = exp.run_once(Method::SroleD, 99);
+    assert_eq!(a.jct, b.jct);
+    assert_eq!(a.collisions, b.collisions);
+    assert_eq!(a.decision_secs, b.decision_secs);
+}
+
+// ---------------------------------------------------------------------------
+// Property-style tests (randomized invariants; offline proptest substitute)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_shield_corrections_always_safe_and_minimal() {
+    // Over random joint actions: (1) every corrected target satisfies
+    // u_k <= alpha given the committed state + that layer alone;
+    // (2) the shield never corrects when nothing is overloaded.
+    let mut rng = Rng::new(2024);
+    for case in 0..200 {
+        let n = 5 + rng.below(10);
+        let dep = Deployment::generate(&mut rng, n, n, &CONTAINER_PROFILE);
+        let members = dep.clusters[0].members.clone();
+        let mut state = ResourceState::new(&dep);
+        // Random pre-existing load.
+        for &m in &members {
+            if rng.chance(0.5) {
+                let caps = *state.caps(m);
+                let f = rng.range_f64(0.0, 0.7);
+                state.place(m, caps.scale(f), caps.scale(f), false);
+            }
+        }
+        let props: Vec<ProposedAction> = (0..1 + rng.below(6))
+            .map(|i| {
+                let target = members[rng.below(members.len())];
+                let caps = *state.caps(target);
+                ProposedAction {
+                    idx: i,
+                    agent: members[rng.below(members.len())],
+                    job: i,
+                    layer_id: i,
+                    demand: srole::cluster::Resources {
+                        cpu: caps.cpu * rng.range_f64(0.05, 0.6),
+                        mem: caps.mem * rng.range_f64(0.02, 0.4),
+                        bw: caps.bw * rng.range_f64(0.0, 0.2),
+                    },
+                    target,
+                }
+            })
+            .collect();
+        let alpha = 0.9;
+        let overloaded_before: Vec<bool> = {
+            // Would the uncorrected joint action overload anything?
+            let mut extra = vec![srole::cluster::Resources::default(); dep.n()];
+            for p in &props {
+                extra[p.target] = extra[p.target].add(&p.demand);
+            }
+            (0..dep.n())
+                .map(|node| {
+                    ResourceKind::ALL
+                        .iter()
+                        .any(|&k| state.util_with(node, &extra[node], k) > alpha)
+                })
+                .collect()
+        };
+        let mut shield = CentralShield::new();
+        let out = shield.check(&props, &state, &dep, alpha);
+        if !overloaded_before.iter().any(|&b| b) {
+            assert!(out.corrections.is_empty(), "case {case}: corrected a safe round");
+            assert_eq!(out.collisions, 0);
+        }
+        for &(idx, new_target) in &out.corrections {
+            let d = &props[idx].demand;
+            for k in ResourceKind::ALL {
+                assert!(
+                    state.util_with(new_target, d, k) <= alpha + 1e-9,
+                    "case {case}: unsafe correction"
+                );
+            }
+            assert_ne!(new_target, props[idx].target, "correction must move the layer");
+        }
+    }
+}
+
+#[test]
+fn prop_decentral_never_detects_more_than_central() {
+    let mut rng = Rng::new(7777);
+    for _ in 0..100 {
+        let n = 8 + rng.below(8);
+        let dep = Deployment::generate(&mut rng, n, n, &CONTAINER_PROFILE);
+        let members = dep.clusters[0].members.clone();
+        let state = ResourceState::new(&dep);
+        let props: Vec<ProposedAction> = (0..3 + rng.below(4))
+            .map(|i| {
+                let target = members[rng.below(members.len())];
+                let caps = *state.caps(target);
+                ProposedAction {
+                    idx: i,
+                    agent: members[rng.below(members.len())],
+                    job: i,
+                    layer_id: i,
+                    demand: srole::cluster::Resources {
+                        cpu: caps.cpu * rng.range_f64(0.2, 0.8),
+                        mem: caps.mem * rng.range_f64(0.1, 0.5),
+                        bw: 1.0,
+                    },
+                    target,
+                }
+            })
+            .collect();
+        let mut c = CentralShield::new();
+        let mut d = DecentralShield::new(&dep, &members, 2 + rng.below(2));
+        let cc = c.check(&props, &state, &dep, 0.9).collisions;
+        let dd = d.check(&props, &state, &dep, 0.9).collisions;
+        assert!(dd <= cc, "decentral {dd} > central {cc}");
+    }
+}
+
+#[test]
+fn prop_wave_places_all_layers_within_candidates() {
+    let mut rng = Rng::new(31337);
+    for _ in 0..25 {
+        let n = 5 + rng.below(15);
+        let cluster_size = 5;
+        let dep = Deployment::generate(&mut rng, n, cluster_size, &CONTAINER_PROFILE);
+        let graph = ModelKind::GoogleNet.build();
+        let spec = WorkloadSpec { model: ModelKind::GoogleNet, ..Default::default() };
+        let wl = Workload::generate(&mut rng, &dep, &spec, 10_000.0);
+        let jobs: Vec<_> = wl.dl_jobs.iter().filter(|j| j.cluster == 0).cloned().collect();
+        let mut policy = TabularQ::new(0.2, 0.2);
+        let mut state = ResourceState::new(&dep);
+        let out = marl_wave(
+            &dep, &mut state, &graph, &jobs, &mut policy, None,
+            &RewardParams::default(), 3, &mut rng,
+        );
+        for s in &out.schedules {
+            let cands = marl_candidates(&dep, s.job.owner);
+            for &node in &s.placement {
+                assert!(cands.contains(&node), "placement outside candidate set");
+            }
+            assert_eq!(s.episode.steps.len(), graph.n_layers());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shield_survives_fully_saturated_cluster() {
+    // Every node over alpha: the shield must not panic, not correct into
+    // unsafe hosts, and must report the overloads.
+    let mut rng = Rng::new(5);
+    let dep = Deployment::generate(&mut rng, 5, 5, &CONTAINER_PROFILE);
+    let mut state = ResourceState::new(&dep);
+    for n in 0..dep.n() {
+        let caps = *state.caps(n);
+        state.place(n, caps.scale(1.2), caps.scale(1.2), false);
+    }
+    let props = vec![ProposedAction {
+        idx: 0,
+        agent: 1,
+        job: 0,
+        layer_id: 0,
+        demand: srole::cluster::Resources { cpu: 0.1, mem: 50.0, bw: 1.0 },
+        target: 0,
+    }];
+    let mut shield = CentralShield::new();
+    let out = shield.check(&props, &state, &dep, 0.9);
+    assert_eq!(out.collisions, 1);
+    assert!(out.corrections.is_empty(), "no safe host exists");
+}
+
+#[test]
+fn single_node_cluster_degenerates_gracefully() {
+    // A cluster of one node: the only candidate is the owner itself.
+    let mut cfg = quick_cfg(ModelKind::Rnn);
+    cfg.n_edges = 1;
+    cfg.cluster_size = 1;
+    cfg.jobs_per_cluster = 2;
+    cfg.repetitions = 1;
+    cfg.iterations = 3;
+    let exp = Experiment::new(cfg);
+    for m in [Method::Marl, Method::SroleC] {
+        let r = exp.run_once(m, 3);
+        assert_eq!(r.jct.len(), 2);
+    }
+}
+
+#[test]
+fn zero_background_workload_runs() {
+    let mut cfg = quick_cfg(ModelKind::Rnn);
+    cfg.workload = 0.4; // maps to zero PageRank jobs
+    cfg.repetitions = 1;
+    cfg.iterations = 5;
+    let exp = Experiment::new(cfg);
+    let r = exp.run_once(Method::SroleD, 9);
+    assert_eq!(r.jct.len(), 15);
+}
+
+#[test]
+fn config_rejects_nonsense() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.n_edges = 0;
+    assert!(cfg.validate().is_err());
+    assert!(ExperimentConfig::from_toml("model = \"resnet\"").is_err());
+    assert!(ExperimentConfig::from_toml("workload = abc").is_err());
+}
+
+
+#[test]
+fn emu_ps_round_trains() {
+    // Full request-path stack: PS + 2 worker threads, each executing the
+    // AOT lm_grad artifact via PJRT.  Skipped when artifacts are absent.
+    let dir = srole::runtime::Engine::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping emu_ps_round_trains: run `make artifacts`");
+        return;
+    }
+    let cfg = srole::emu::PsConfig { workers: 2, steps: 4, lr: 0.5, seed: 3, log_every: 1 };
+    let logs = srole::emu::train_data_parallel(&dir, &cfg).expect("PS training");
+    assert_eq!(logs.len(), 4);
+    assert!(logs.iter().all(|l| l.loss.is_finite()));
+    // Near-uniform at the start; strictly below it after a few steps on
+    // the trivially predictable corpus.
+    assert!(logs[0].loss > 5.0, "start {}", logs[0].loss);
+    assert!(logs.last().unwrap().loss < logs[0].loss);
+}
