@@ -1,37 +1,33 @@
-//! Bench for Fig 4: end-to-end experiment runtime per (edges, method),
-//! plus the regenerated JCT series (emulation profile, VGG-16).
+//! Bench for Fig 4: the (edges × method) sweep through the parallel
+//! scenario harness, serial vs parallel, plus the regenerated JCT series
+//! (emulation profile, VGG-16).
 //!
 //! `cargo bench --bench fig4_jct` (set SROLE_BENCH_FAST=1 for smoke runs).
 
 use srole::config::ExperimentConfig;
-use srole::coordinator::{Experiment, Method};
+use srole::coordinator::Method;
 use srole::dnn::ModelKind;
-use srole::util::benchkit::Bench;
+use srole::harness::{run_parallel, ScenarioReport, Sweep};
+use srole::util::benchkit::{Bench, BenchConfig};
 
 fn main() {
-    let mut bench = Bench::new("fig4: JCT vs #edges (vgg16, emulation)");
-    let mut rows = Vec::new();
-    for edges in [5usize, 15, 25] {
-        let cfg = ExperimentConfig {
-            model: ModelKind::Vgg16,
-            n_edges: edges,
-            repetitions: 1,
-            ..Default::default()
-        };
-        let exp = Experiment::new(cfg);
-        let mut vals = Vec::new();
-        for m in Method::ALL {
-            let name = format!("edges{edges}/{}", m.name());
-            let mut med = 0.0;
-            bench.measure(&name, || {
-                med = exp.run_once(m, 1).jct_summary().median;
-                med
-            });
-            vals.push(med);
-        }
-        rows.push((edges.to_string(), vals));
-    }
+    let mut bench = Bench::with_config("fig4: JCT vs #edges (vgg16, emulation)", BenchConfig::sweep());
+    let edges = [5usize, 15, 25];
+    let base = ExperimentConfig { model: ModelKind::Vgg16, repetitions: 1, ..Default::default() };
+    let scenarios = Sweep::new(base).methods(&Method::ALL).edges(&edges).scenarios();
+
+    bench.measure("sweep_12_scenarios_serial", || run_parallel(&scenarios, 1));
+    let mut reports: Vec<ScenarioReport> = Vec::new();
+    bench.measure("sweep_12_scenarios_parallel", || {
+        reports = run_parallel(&scenarios, 0);
+    });
     bench.print_report();
+
+    let mut rows = Vec::new();
+    for (ei, chunk) in reports.chunks(Method::ALL.len()).enumerate() {
+        let vals: Vec<f64> = chunk.iter().map(|r| r.metrics.jct_summary().median).collect();
+        rows.push((edges[ei].to_string(), vals));
+    }
     Bench::report_series(
         "fig4 series: JCT median [s]",
         "edges",

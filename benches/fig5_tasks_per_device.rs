@@ -1,34 +1,34 @@
-//! Bench for Fig 5: tasks-per-device sweep over workload levels.
+//! Bench for Fig 5: tasks-per-device sweep over workload levels through
+//! the parallel scenario harness.
 
 use srole::config::ExperimentConfig;
-use srole::coordinator::{Experiment, Method};
+use srole::coordinator::Method;
 use srole::dnn::ModelKind;
-use srole::util::benchkit::Bench;
+use srole::harness::{run_parallel, ScenarioReport, Sweep};
+use srole::util::benchkit::{Bench, BenchConfig};
 
 fn main() {
-    let mut bench = Bench::new("fig5: tasks/device vs workload (vgg16)");
-    let mut rows = Vec::new();
-    for w in [0.6, 0.8, 1.0] {
-        let cfg = ExperimentConfig {
-            model: ModelKind::Vgg16,
-            workload: w,
-            repetitions: 1,
-            ..Default::default()
-        };
-        let exp = Experiment::new(cfg);
-        let mut vals = Vec::new();
-        for m in Method::ALL {
-            let name = format!("w{:.0}%/{}", w * 100.0, m.name());
-            let mut med = 0.0;
-            bench.measure(&name, || {
-                med = exp.run_once(m, 1).tasks_summary().map(|s| s.median).unwrap_or(0.0);
-                med
-            });
-            vals.push(med);
-        }
-        rows.push((format!("{:.0}%", w * 100.0), vals));
-    }
+    let mut bench =
+        Bench::with_config("fig5: tasks/device vs workload (vgg16)", BenchConfig::sweep());
+    let workloads = [0.6, 0.8, 1.0];
+    let base = ExperimentConfig { model: ModelKind::Vgg16, repetitions: 1, ..Default::default() };
+    let scenarios =
+        Sweep::new(base).methods(&Method::ALL).workloads(&workloads).scenarios();
+
+    let mut reports: Vec<ScenarioReport> = Vec::new();
+    bench.measure("sweep_12_scenarios_parallel", || {
+        reports = run_parallel(&scenarios, 0);
+    });
     bench.print_report();
+
+    let mut rows = Vec::new();
+    for (wi, chunk) in reports.chunks(Method::ALL.len()).enumerate() {
+        let vals: Vec<f64> = chunk
+            .iter()
+            .map(|r| r.metrics.tasks_summary().map(|s| s.median).unwrap_or(0.0))
+            .collect();
+        rows.push((format!("{:.0}%", workloads[wi] * 100.0), vals));
+    }
     Bench::report_series(
         "fig5 series: tasks/device median",
         "workload",

@@ -1,28 +1,28 @@
-//! Bench for Fig 6: per-resource utilization medians at 25 edges / 100%.
+//! Bench for Fig 6: per-resource utilization medians at 25 edges / 100%,
+//! all four methods as one parallel harness sweep.
 
 use srole::config::ExperimentConfig;
-use srole::coordinator::{Experiment, Method};
+use srole::coordinator::Method;
 use srole::dnn::ModelKind;
-use srole::util::benchkit::Bench;
+use srole::harness::{run_parallel, ScenarioReport, Sweep};
+use srole::util::benchkit::{Bench, BenchConfig};
 
 fn main() {
-    let mut bench = Bench::new("fig6: utilization (vgg16, emulation)");
-    let cfg = ExperimentConfig { model: ModelKind::Vgg16, repetitions: 1, ..Default::default() };
-    let exp = Experiment::new(cfg);
-    let mut per_method = Vec::new();
-    for m in Method::ALL {
-        let mut metrics = None;
-        bench.measure(m.name(), || {
-            metrics = Some(exp.run_once(m, 1));
-        });
-        per_method.push(metrics.unwrap());
-    }
+    let mut bench = Bench::with_config("fig6: utilization (vgg16, emulation)", BenchConfig::sweep());
+    let base = ExperimentConfig { model: ModelKind::Vgg16, repetitions: 1, ..Default::default() };
+    let scenarios = Sweep::new(base).methods(&Method::ALL).scenarios();
+
+    let mut reports: Vec<ScenarioReport> = Vec::new();
+    bench.measure("sweep_4_methods_parallel", || {
+        reports = run_parallel(&scenarios, 0);
+    });
     bench.print_report();
+
     let mut rows = Vec::new();
     for res in ["cpu", "mem", "bw"] {
-        let vals: Vec<f64> = per_method
+        let vals: Vec<f64> = reports
             .iter()
-            .map(|r| r.util_summary(res).map(|s| s.median).unwrap_or(0.0))
+            .map(|r| r.metrics.util_summary(res).map(|s| s.median).unwrap_or(0.0))
             .collect();
         rows.push((res.to_string(), vals));
     }

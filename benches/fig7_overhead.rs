@@ -1,31 +1,28 @@
 //! Bench for Fig 7: per-job decision overhead (scheduling + shielding)
-//! per method.  The paper's expected ordering is
-//! MARL < SROLE-D < SROLE-C < RL for the total.
+//! per method, all four methods as one parallel harness sweep.  The
+//! paper's expected ordering is MARL < SROLE-D < SROLE-C < RL.
 
 use srole::config::ExperimentConfig;
-use srole::coordinator::{Experiment, Method};
+use srole::coordinator::Method;
 use srole::dnn::ModelKind;
-use srole::util::benchkit::Bench;
+use srole::harness::{run_parallel, ScenarioReport, Sweep};
+use srole::util::benchkit::{Bench, BenchConfig};
 
 fn main() {
-    let mut bench = Bench::new("fig7: decision overhead (vgg16, emulation)");
-    let cfg = ExperimentConfig { model: ModelKind::Vgg16, repetitions: 1, ..Default::default() };
-    let exp = Experiment::new(cfg);
-    let mut rows = Vec::new();
-    let mut sched = Vec::new();
-    let mut shield = Vec::new();
-    for m in Method::ALL {
-        let mut r = None;
-        bench.measure(m.name(), || {
-            r = Some(exp.run_once(m, 1));
-        });
-        let r = r.unwrap();
-        sched.push(r.mean_sched_secs());
-        shield.push(r.mean_shield_secs());
-    }
+    let mut bench =
+        Bench::with_config("fig7: decision overhead (vgg16, emulation)", BenchConfig::sweep());
+    let base = ExperimentConfig { model: ModelKind::Vgg16, repetitions: 1, ..Default::default() };
+    let scenarios = Sweep::new(base).methods(&Method::ALL).scenarios();
+
+    let mut reports: Vec<ScenarioReport> = Vec::new();
+    bench.measure("sweep_4_methods_parallel", || {
+        reports = run_parallel(&scenarios, 0);
+    });
     bench.print_report();
-    rows.push(("scheduling".to_string(), sched));
-    rows.push(("shielding".to_string(), shield));
+
+    let sched: Vec<f64> = reports.iter().map(|r| r.metrics.mean_sched_secs()).collect();
+    let shield: Vec<f64> = reports.iter().map(|r| r.metrics.mean_shield_secs()).collect();
+    let rows = vec![("scheduling".to_string(), sched), ("shielding".to_string(), shield)];
     Bench::report_series(
         "fig7 series: overhead [s]",
         "component",

@@ -1,30 +1,30 @@
-//! Bench for Fig 8: action collisions vs the shield penalty κ.
-//! Shielded methods must trend down as |κ| grows; RL/MARL stay flat.
+//! Bench for Fig 8: action collisions vs the shield penalty κ, the whole
+//! (κ × method) grid as one parallel harness sweep.  Shielded methods
+//! must trend down as |κ| grows; RL/MARL stay flat.
 
 use srole::config::ExperimentConfig;
-use srole::coordinator::{Experiment, Method};
+use srole::coordinator::Method;
 use srole::dnn::ModelKind;
-use srole::util::benchkit::Bench;
+use srole::harness::{run_parallel, ScenarioReport, Sweep};
+use srole::util::benchkit::{Bench, BenchConfig};
 
 fn main() {
-    let mut bench = Bench::new("fig8: collisions vs kappa (vgg16)");
-    let mut rows = Vec::new();
-    for kappa in [25.0, 100.0, 200.0] {
-        let mut cfg =
-            ExperimentConfig { model: ModelKind::Vgg16, repetitions: 1, ..Default::default() };
-        cfg.reward.kappa = kappa;
-        let exp = Experiment::new(cfg);
-        let mut vals = Vec::new();
-        for m in Method::ALL {
-            let mut coll = 0usize;
-            bench.measure(&format!("k{kappa:.0}/{}", m.name()), || {
-                coll = exp.run_once(m, 1).collisions;
-            });
-            vals.push(coll as f64);
-        }
-        rows.push((format!("{kappa:.0}"), vals));
-    }
+    let mut bench = Bench::with_config("fig8: collisions vs kappa (vgg16)", BenchConfig::sweep());
+    let kappas = [25.0, 100.0, 200.0];
+    let base = ExperimentConfig { model: ModelKind::Vgg16, repetitions: 1, ..Default::default() };
+    let scenarios = Sweep::new(base).methods(&Method::ALL).kappas(&kappas).scenarios();
+
+    let mut reports: Vec<ScenarioReport> = Vec::new();
+    bench.measure("sweep_12_scenarios_parallel", || {
+        reports = run_parallel(&scenarios, 0);
+    });
     bench.print_report();
+
+    let mut rows = Vec::new();
+    for (ki, chunk) in reports.chunks(Method::ALL.len()).enumerate() {
+        let vals: Vec<f64> = chunk.iter().map(|r| r.metrics.collisions as f64).collect();
+        rows.push((format!("{:.0}", kappas[ki]), vals));
+    }
     Bench::report_series(
         "fig8 series: action collisions",
         "kappa",

@@ -1,41 +1,41 @@
 //! Bench for Figures 9–13: the real-device testbed (10 Raspberry Pis,
-//! one cluster) — JCT, tasks/device, utilization, overhead, collisions.
+//! one cluster) — JCT, tasks/device, utilization, overhead, collisions —
+//! all four methods as one parallel harness sweep.
 
 use srole::config::ExperimentConfig;
-use srole::coordinator::{Experiment, Method};
+use srole::coordinator::Method;
 use srole::dnn::ModelKind;
-use srole::util::benchkit::Bench;
+use srole::harness::{run_parallel, ScenarioReport, Sweep};
+use srole::util::benchkit::{Bench, BenchConfig};
 
 fn main() {
-    let mut bench = Bench::new("fig9-13: real-device testbed (vgg16)");
-    let cfg = ExperimentConfig {
+    let mut bench =
+        Bench::with_config("fig9-13: real-device testbed (vgg16)", BenchConfig::sweep());
+    let base = ExperimentConfig {
         model: ModelKind::Vgg16,
         repetitions: 1,
         ..ExperimentConfig::real_device()
     };
-    let exp = Experiment::new(cfg);
-    let mut results = Vec::new();
-    for m in Method::ALL {
-        let mut r = None;
-        bench.measure(m.name(), || {
-            r = Some(exp.run_once(m, 1));
-        });
-        results.push(r.unwrap());
-    }
+    let scenarios = Sweep::new(base).methods(&Method::ALL).scenarios();
+
+    let mut reports: Vec<ScenarioReport> = Vec::new();
+    bench.measure("sweep_4_methods_parallel", || {
+        reports = run_parallel(&scenarios, 0);
+    });
     bench.print_report();
 
     let methods = ["RL", "MARL", "SROLE-C", "SROLE-D"];
     let rows = vec![
         ("fig9 JCT median [s]".to_string(),
-         results.iter().map(|r| r.jct_summary().median).collect::<Vec<_>>()),
+         reports.iter().map(|r| r.metrics.jct_summary().median).collect::<Vec<_>>()),
         ("fig10 tasks/device".to_string(),
-         results.iter().map(|r| r.tasks_summary().map(|s| s.median).unwrap_or(0.0)).collect()),
+         reports.iter().map(|r| r.metrics.tasks_summary().map(|s| s.median).unwrap_or(0.0)).collect()),
         ("fig11 util cpu".to_string(),
-         results.iter().map(|r| r.util_summary("cpu").map(|s| s.median).unwrap_or(0.0)).collect()),
+         reports.iter().map(|r| r.metrics.util_summary("cpu").map(|s| s.median).unwrap_or(0.0)).collect()),
         ("fig12 overhead [s]".to_string(),
-         results.iter().map(|r| r.mean_overhead_secs()).collect()),
+         reports.iter().map(|r| r.metrics.mean_overhead_secs()).collect()),
         ("fig13 collisions".to_string(),
-         results.iter().map(|r| r.collisions as f64).collect()),
+         reports.iter().map(|r| r.metrics.collisions as f64).collect()),
     ];
     Bench::report_series("fig9-13 series (real device)", "metric", &methods, &rows);
 }

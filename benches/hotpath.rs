@@ -1,83 +1,182 @@
-//! Hot-path micro-benchmarks (the §Perf targets in EXPERIMENTS.md):
+//! Hot-path micro-benchmarks:
 //!
-//! * Algorithm-1 shield check throughput (actions/sec);
-//! * DES execution throughput (events/sec proxy: jobs×iterations/sec);
-//! * MARL wave decision latency (full wave, 3 jobs × 21 layers);
+//! * indexed vs scan-based shield check (SROLE-C and SROLE-D) on a
+//!   100-node cluster round — the de-quadratization target: the indexed
+//!   path must beat the seed's `Vec::contains` baseline by ≥2×;
+//! * parallel scenario harness: a 4-scenario sweep, serial vs parallel,
+//!   with a bit-identical-reports determinism check;
+//! * MARL wave decision latency and DES execution throughput;
 //! * PJRT `qnet_fwd` action-scoring latency (the DQN request path),
 //!   skipped when artifacts are absent.
 
 use srole::cluster::{Deployment, Resources, CONTAINER_PROFILE};
 use srole::config::ExperimentConfig;
-use srole::coordinator::pretrain;
+use srole::coordinator::{pretrain, Method};
 use srole::dnn::ModelKind;
+use srole::harness::{run_parallel, Sweep};
 use srole::rl::{RewardParams, TabularQ};
 use srole::sched::marl_wave;
-use srole::shield::{CentralShield, ProposedAction, Shield};
+use srole::shield::reference::{CentralShieldScan, DecentralShieldScan};
+use srole::shield::{CentralShield, DecentralShield, ProposedAction, Shield};
 use srole::sim::{Executor, ResourceState};
 use srole::util::benchkit::Bench;
 use srole::util::Rng;
 use srole::workload::{Workload, WorkloadSpec};
 
-fn main() {
-    let mut bench = Bench::new("hotpath");
-    let mut rng = Rng::new(1);
-    let dep = Deployment::generate(&mut rng, 25, 5, &CONTAINER_PROFILE);
-    let graph = ModelKind::Vgg16.build();
-    let params = RewardParams::default();
-
-    // --- shield check throughput
+/// A 100-node single-cluster round: `n_props` proposals spread over the
+/// members with demands heavy enough to force collisions + corrections.
+fn big_round(n: usize, n_props: usize) -> (Deployment, ResourceState, Vec<ProposedAction>) {
+    let mut rng = Rng::new(7);
+    let dep = Deployment::generate(&mut rng, n, n, &CONTAINER_PROFILE);
     let state = ResourceState::new(&dep);
     let members = dep.clusters[0].members.clone();
-    let proposals: Vec<ProposedAction> = (0..64)
-        .map(|i| ProposedAction {
-            idx: i,
-            agent: members[i % members.len()],
-            job: i % 3,
-            layer_id: i % graph.n_layers(),
-            demand: Resources { cpu: 0.05 + 0.01 * (i % 7) as f64, mem: 60.0, bw: 1.0 },
-            target: members[(i * 7) % members.len()],
+    let proposals: Vec<ProposedAction> = (0..n_props)
+        .map(|i| {
+            let target = members[(i * 13) % members.len()];
+            let cap = *state.caps(target);
+            ProposedAction {
+                idx: i,
+                agent: members[(i * 7) % members.len()],
+                job: i % 8,
+                layer_id: i % 21,
+                demand: Resources {
+                    cpu: cap.cpu * (0.15 + 0.05 * (i % 5) as f64),
+                    mem: cap.mem * 0.04,
+                    bw: 1.0,
+                },
+                target,
+            }
         })
         .collect();
-    let thr = bench.measure_throughput("shield_check_64_actions", proposals.len(), || {
-        let mut shield = CentralShield::new();
-        shield.check(&proposals, &state, &dep, params.alpha)
-    });
-    println!("shield throughput: {thr:.0} actions/sec");
+    (dep, state, proposals)
+}
 
-    // --- MARL wave decision latency (pretrained policy)
+fn main() {
+    let mut bench = Bench::new("hotpath");
+    let params = RewardParams::default();
+
+    // --- indexed vs scan shield check, 100-node cluster round -----------
+    let (dep, state, proposals) = big_round(100, 256);
+    let mut central = CentralShield::new();
+    let mut central_scan = CentralShieldScan::new();
+    let members = dep.clusters[0].members.clone();
+    let mut decentral = DecentralShield::new(&dep, &members, 4);
+    let mut decentral_scan = DecentralShieldScan::new(&dep, &members, 4);
+
+    // Sanity: the indexed path must report exactly what the scan path
+    // reports before we time anything.
+    {
+        let a = central.check(&proposals, &state, &dep, params.alpha);
+        let b = central_scan.check(&proposals, &state, &dep, params.alpha);
+        assert_eq!(a.corrections, b.corrections, "central equivalence");
+        assert_eq!(a.collisions, b.collisions);
+        let c = decentral.check(&proposals, &state, &dep, params.alpha);
+        let d = decentral_scan.check(&proposals, &state, &dep, params.alpha);
+        assert_eq!(c.corrections, d.corrections, "decentral equivalence");
+        assert_eq!(c.collisions, d.collisions);
+    }
+
+    let t_c = bench
+        .measure("srole_c_indexed_100n_256p", || {
+            central.check(&proposals, &state, &dep, params.alpha)
+        })
+        .median_secs();
+    let t_c_scan = bench
+        .measure("srole_c_scan_100n_256p", || {
+            central_scan.check(&proposals, &state, &dep, params.alpha)
+        })
+        .median_secs();
+    let t_d = bench
+        .measure("srole_d_indexed_100n_256p", || {
+            decentral.check(&proposals, &state, &dep, params.alpha)
+        })
+        .median_secs();
+    let t_d_scan = bench
+        .measure("srole_d_scan_100n_256p", || {
+            decentral_scan.check(&proposals, &state, &dep, params.alpha)
+        })
+        .median_secs();
+    println!(
+        "shield speedup (scan/indexed): SROLE-C {:.1}x, SROLE-D {:.1}x (target ≥2x)",
+        t_c_scan / t_c.max(1e-12),
+        t_d_scan / t_d.max(1e-12)
+    );
+    println!(
+        "shield check throughput: {:.0} actions/sec indexed SROLE-C",
+        proposals.len() as f64 / t_c.max(1e-12)
+    );
+
+    // --- parallel harness: 4-scenario sweep, serial vs parallel ---------
+    let sweep_base = ExperimentConfig {
+        n_edges: 10,
+        cluster_size: 5,
+        model: ModelKind::Rnn,
+        iterations: 5,
+        pretrain_episodes: 50,
+        repetitions: 1,
+        ..Default::default()
+    };
+    let sweep = Sweep::new(sweep_base).methods(&Method::ALL);
+    let scenarios = sweep.scenarios();
+    assert!(scenarios.len() >= 4, "sweep must cover at least 4 scenarios");
+    // Every sample — serial AND parallel — must produce the same report:
+    // the determinism contract spans runs and thread counts.
+    let mut first: Option<Vec<Vec<f64>>> = None;
+    let mut check = |reports: &[srole::harness::ScenarioReport]| {
+        let jcts: Vec<Vec<f64>> = reports.iter().map(|r| r.metrics.jct.clone()).collect();
+        match first.take() {
+            None => first = Some(jcts),
+            Some(prev) => {
+                assert_eq!(prev, jcts, "same seed must give the same report");
+                first = Some(prev);
+            }
+        }
+    };
+    bench.measure("harness_4_scenarios_serial", || {
+        check(&run_parallel(&scenarios, 1));
+    });
+    bench.measure("harness_4_scenarios_parallel", || {
+        check(&run_parallel(&scenarios, 4));
+    });
+    println!("harness determinism: same seed → same report across runs/thread counts: OK");
+
+    // --- MARL wave decision latency (pretrained policy) -----------------
+    let mut rng = Rng::new(1);
+    let dep25 = Deployment::generate(&mut rng, 25, 5, &CONTAINER_PROFILE);
+    let graph = ModelKind::Vgg16.build();
     let cfg = ExperimentConfig { model: ModelKind::Vgg16, pretrain_episodes: 50, ..Default::default() };
     let mut policy = TabularQ::new(cfg.lr, cfg.epsilon);
     pretrain(&mut policy, &cfg, &mut rng.fork(1));
     let spec = WorkloadSpec { model: ModelKind::Vgg16, ..Default::default() };
-    let wl = Workload::generate(&mut rng, &dep, &spec, 100_000.0);
+    let wl = Workload::generate(&mut rng, &dep25, &spec, 100_000.0);
     let jobs: Vec<_> = wl.dl_jobs.iter().filter(|j| j.cluster == 0).cloned().collect();
     bench.measure("marl_wave_3jobs_vgg16", || {
-        let mut st = ResourceState::new(&dep);
-        marl_wave(&dep, &mut st, &graph, &jobs, &mut policy, None, &params, 3, &mut rng)
+        let mut st = ResourceState::new(&dep25);
+        marl_wave(&dep25, &mut st, &graph, &jobs, &mut policy, None, &params, 3, &mut rng)
     });
 
-    // --- DES execution throughput
+    // --- DES execution throughput ---------------------------------------
     let iters_total: usize = jobs.iter().map(|j| j.iterations).sum();
     let thr = bench.measure_throughput("des_execute_3jobs_50iters", iters_total, || {
-        let mut st = ResourceState::new(&dep);
+        let mut st = ResourceState::new(&dep25);
         let out = marl_wave(
-            &dep, &mut st, &graph, &jobs, &mut policy, None, &params, 3, &mut rng.fork(2),
+            &dep25, &mut st, &graph, &jobs, &mut policy, None, &params, 3, &mut rng.fork(2),
         );
         let mut schedules = out.schedules;
-        let exec = Executor::new(&dep, &wl, &graph, params.alpha);
+        let exec = Executor::new(&dep25, &wl, &graph, params.alpha);
         exec.run(&mut st, &mut schedules)
     });
     println!("DES throughput: {thr:.0} job-iterations/sec");
 
-    // --- PJRT qnet forward latency (request path of the DQN policy)
+    // --- PJRT qnet forward latency (request path of the DQN policy) -----
     let dir = srole::runtime::Engine::default_dir();
-    if dir.join("manifest.json").exists() {
+    if dir.join("manifest.json").exists() && srole::runtime::PJRT_AVAILABLE {
         let mut engine = srole::runtime::Engine::open(&dir).expect("open engine");
         let mut q = srole::runtime::qnet::QNetSession::new(&mut engine, 0).expect("qnet");
         let state_vec = vec![0.2f32; q.state_dim];
         bench.measure("pjrt_qnet_fwd", || q.fwd(&state_vec).unwrap());
     } else {
-        eprintln!("skipping pjrt_qnet_fwd: no artifacts (run `make artifacts`)");
+        eprintln!("skipping pjrt_qnet_fwd: artifacts or the pjrt feature are absent");
     }
 
     bench.print_report();

@@ -18,10 +18,10 @@ use srole::util::table::Table;
 use srole::util::Rng;
 use srole::workload::{Workload, WorkloadSpec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> srole::util::error::Result<()> {
     let dir = Engine::default_dir();
     if !dir.join("manifest.json").exists() {
-        anyhow::bail!("artifacts not built — run `make artifacts` first");
+        srole::bail!("artifacts not built — run `make artifacts` first");
     }
     let mut engine = Engine::open(&dir)?;
     println!("PJRT platform: {}", engine.platform());

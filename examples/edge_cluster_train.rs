@@ -26,7 +26,7 @@ use srole::util::table::Table;
 use srole::util::Rng;
 use srole::workload::DlJob;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> srole::util::error::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let steps = args
         .iter()
@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
     // ---- Phase 2: real data-parallel training across the hosting nodes.
     let dir = Engine::default_dir();
     if !dir.join("manifest.json").exists() {
-        anyhow::bail!("artifacts not built — run `make artifacts` first");
+        srole::bail!("artifacts not built — run `make artifacts` first");
     }
     let workers = hosts.len().clamp(2, 4);
     println!("spawning {workers} worker threads (one per hosting edge node), PS on the cluster head");

@@ -1,16 +1,23 @@
 //! `figures` — regenerates every figure of the paper's evaluation
-//! (Figures 4–13) as console tables.
+//! (Figures 4–13) as console tables, running the evaluation grid through
+//! the parallel scenario harness (`srole::harness`): every
+//! `(method × configuration)` cell is an independent, deterministic
+//! scenario, executed across OS threads.
 //!
-//! Usage: `figures <fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|all>`
-//!        `[--reps N] [--seed S] [--iterations N] [--models vgg16,googlenet,rnn]`
+//! Usage: `figures <fig4|fig5|...|fig13|scale|all>`
+//!        `[--reps N] [--seed S] [--iterations N] [--threads T]`
+//!        `[--models vgg16,googlenet,rnn] [--edges 5,10,15,20,25]`
 //!
-//! Absolute numbers live on this simulated testbed, not the authors' EC2
-//! cluster; the *shape* (who wins, by what factor, trends along the
-//! sweeps) is the reproduction target — see EXPERIMENTS.md.
+//! `figures scale` sweeps 10→100-node clusters concurrently (the
+//! ROADMAP scale target); `--edges` reshapes the Fig 4 sweep the same
+//! way.  Absolute numbers live on this simulated testbed, not the
+//! authors' EC2 cluster; the *shape* (who wins, by what factor, trends
+//! along the sweeps) is the reproduction target.
 
 use srole::config::ExperimentConfig;
-use srole::coordinator::{Experiment, Method};
+use srole::coordinator::Method;
 use srole::dnn::ModelKind;
+use srole::harness::{run_parallel, ScenarioReport, Sweep};
 use srole::util::cli::{Cli, CliError};
 use srole::util::table::{f, Table};
 
@@ -20,7 +27,9 @@ fn main() {
         .opt("reps", Some("3"), "repetitions per configuration")
         .opt("seed", Some("1"), "base seed")
         .opt("iterations", Some("50"), "training iterations per job")
-        .opt("models", Some("vgg16,googlenet,rnn"), "comma-separated models");
+        .opt("threads", Some("0"), "worker threads (0 = all cores)")
+        .opt("models", Some("vgg16,googlenet,rnn"), "comma-separated models")
+        .opt("edges", Some("5,10,15,20,25"), "comma-separated cluster sizes for fig4");
     let args = match cli.parse(&argv) {
         Ok(a) => a,
         Err(CliError::Help) => {
@@ -37,11 +46,18 @@ fn main() {
         reps: args.usize("reps").unwrap_or(3),
         seed: args.u64("seed").unwrap_or(1),
         iterations: args.usize("iterations").unwrap_or(50),
+        threads: args.usize("threads").unwrap_or(0),
         models: args
             .get("models")
             .unwrap()
             .split(',')
             .map(|m| ModelKind::parse(m).unwrap_or_else(|| panic!("unknown model {m}")))
+            .collect(),
+        edges: args
+            .get("edges")
+            .unwrap()
+            .split(',')
+            .map(|e| e.trim().parse().unwrap_or_else(|_| panic!("bad edge count {e}")))
             .collect(),
     };
 
@@ -87,8 +103,12 @@ fn main() {
         matched = true;
         collisions_figure(&ctx, true, "Fig 13");
     }
+    if which == "scale" {
+        matched = true;
+        scale_sweep(&ctx);
+    }
     if !matched {
-        eprintln!("unknown figure {which}; use fig4..fig13 or all");
+        eprintln!("unknown figure {which}; use fig4..fig13, scale, or all");
         std::process::exit(2);
     }
 }
@@ -97,7 +117,9 @@ struct Ctx {
     reps: usize,
     seed: u64,
     iterations: usize,
+    threads: usize,
     models: Vec<ModelKind>,
+    edges: Vec<usize>,
 }
 
 impl Ctx {
@@ -120,24 +142,51 @@ impl Ctx {
             ..ExperimentConfig::real_device()
         }
     }
+
+    /// Run one sweep through the parallel harness.
+    fn run(&self, sweep: &Sweep) -> Vec<ScenarioReport> {
+        run_parallel(&sweep.scenarios(), self.threads)
+    }
+
+    /// Base config for a multi-model sweep (the sweep's `models`
+    /// dimension overrides the model per scenario).
+    fn multi_base(&self) -> ExperimentConfig {
+        self.base(*self.models.first().expect("at least one model"))
+    }
+
+    /// Split one multi-model sweep's reports into per-model slices
+    /// (models are the outer dimension in `Sweep::scenarios`).
+    fn per_model<'a>(
+        &self,
+        reports: &'a [ScenarioReport],
+    ) -> impl Iterator<Item = (ModelKind, &'a [ScenarioReport])> {
+        let chunk = reports.len() / self.models.len().max(1);
+        self.models
+            .clone()
+            .into_iter()
+            .zip(reports.chunks(chunk.max(1)))
+    }
 }
 
 /// Fig 4a–c: job completion time vs number of edges (emulation).
+/// One sweep covers every (model × edges × method) cell concurrently.
 fn fig4_jct_vs_edges(ctx: &Ctx) {
-    for model in &ctx.models {
+    let sweep = Sweep::new(ctx.multi_base())
+        .models(&ctx.models)
+        .methods(&Method::ALL)
+        .edges(&ctx.edges);
+    let reports = ctx.run(&sweep);
+    for (model, model_reports) in ctx.per_model(&reports) {
         let mut t = Table::new(
             &format!("Fig 4 ({}): JCT median [s] vs #edges", model.name()),
             &["edges", "RL", "MARL", "SROLE-C", "SROLE-D"],
         );
-        for edges in [5usize, 10, 15, 20, 25] {
-            let mut cfg = ctx.base(*model);
-            cfg.n_edges = edges;
-            let exp = Experiment::new(cfg);
-            let mut row = vec![edges.to_string()];
-            for m in Method::ALL {
-                row.push(f(exp.run(m).metrics.jct_summary().median));
+        for (ei, row) in model_reports.chunks(Method::ALL.len()).enumerate() {
+            let mut cells = vec![ctx.edges[ei].to_string()];
+            for r in row {
+                cells.push(f(r.metrics.jct_summary().median));
             }
-            t.row(row);
+            t.row(cells);
         }
         t.print();
     }
@@ -145,24 +194,26 @@ fn fig4_jct_vs_edges(ctx: &Ctx) {
 
 /// Fig 5a–c: tasks per device vs workload (emulation, 25 edges).
 fn fig5_tasks_vs_workload(ctx: &Ctx) {
-    for model in &ctx.models {
+    let workloads = [0.6, 0.7, 0.8, 0.9, 1.0];
+    let sweep = Sweep::new(ctx.multi_base())
+        .models(&ctx.models)
+        .methods(&Method::ALL)
+        .workloads(&workloads);
+    let reports = ctx.run(&sweep);
+    for (model, model_reports) in ctx.per_model(&reports) {
         let mut t = Table::new(
             &format!("Fig 5 ({}): tasks/device median (min..max) vs workload", model.name()),
             &["workload", "RL", "MARL", "SROLE-C", "SROLE-D"],
         );
-        for w in [0.6, 0.7, 0.8, 0.9, 1.0] {
-            let mut cfg = ctx.base(*model);
-            cfg.workload = w;
-            let exp = Experiment::new(cfg);
-            let mut row = vec![format!("{:.0}%", w * 100.0)];
-            for m in Method::ALL {
-                let r = exp.run(m);
+        for (wi, row) in model_reports.chunks(Method::ALL.len()).enumerate() {
+            let mut cells = vec![format!("{:.0}%", workloads[wi] * 100.0)];
+            for r in row {
                 match r.metrics.tasks_summary() {
-                    Some(s) => row.push(format!("{:.1} ({:.0}..{:.0})", s.median, s.min, s.max)),
-                    None => row.push("-".into()),
+                    Some(s) => cells.push(format!("{:.1} ({:.0}..{:.0})", s.median, s.min, s.max)),
+                    None => cells.push("-".into()),
                 }
             }
-            t.row(row);
+            t.row(cells);
         }
         t.print();
     }
@@ -170,23 +221,22 @@ fn fig5_tasks_vs_workload(ctx: &Ctx) {
 
 /// Fig 6/11: per-resource utilization.
 fn utilization_figure(ctx: &Ctx, real: bool, fig: &str) {
-    for model in &ctx.models {
-        let cfg = if real { ctx.real(*model) } else { ctx.base(*model) };
-        let exp = Experiment::new(cfg);
+    let base = if real { ctx.real(ctx.models[0]) } else { ctx.multi_base() };
+    let reports = ctx.run(&Sweep::new(base).models(&ctx.models).methods(&Method::ALL));
+    for (model, model_reports) in ctx.per_model(&reports) {
         let mut t = Table::new(
             &format!("{fig} ({}): utilization median (min..max) per resource", model.name()),
             &["resource", "RL", "MARL", "SROLE-C", "SROLE-D"],
         );
-        let results: Vec<_> = Method::ALL.iter().map(|&m| exp.run(m)).collect();
         for res in ["cpu", "mem", "bw"] {
-            let mut row = vec![res.to_string()];
-            for r in &results {
+            let mut cells = vec![res.to_string()];
+            for r in model_reports {
                 match r.metrics.util_summary(res) {
-                    Some(s) => row.push(format!("{:.2} ({:.2}..{:.2})", s.median, s.min, s.max)),
-                    None => row.push("-".into()),
+                    Some(s) => cells.push(format!("{:.2} ({:.2}..{:.2})", s.median, s.min, s.max)),
+                    None => cells.push("-".into()),
                 }
             }
-            t.row(row);
+            t.row(cells);
         }
         t.print();
     }
@@ -194,18 +244,17 @@ fn utilization_figure(ctx: &Ctx, real: bool, fig: &str) {
 
 /// Fig 7/12: computation overhead split into scheduling + shielding.
 fn overhead_figure(ctx: &Ctx, real: bool, fig: &str) {
-    for model in &ctx.models {
-        let cfg = if real { ctx.real(*model) } else { ctx.base(*model) };
-        let exp = Experiment::new(cfg);
+    let base = if real { ctx.real(ctx.models[0]) } else { ctx.multi_base() };
+    let all = ctx.run(&Sweep::new(base).models(&ctx.models).methods(&Method::ALL));
+    for (model, reports) in ctx.per_model(&all) {
         let mut t = Table::new(
             &format!("{fig} ({}): per-job overhead [s]", model.name()),
             &["component", "RL", "MARL", "SROLE-C", "SROLE-D"],
         );
-        let results: Vec<_> = Method::ALL.iter().map(|&m| exp.run(m)).collect();
         let mut sched = vec!["scheduling".to_string()];
         let mut shield = vec!["shielding".to_string()];
         let mut total = vec!["total".to_string()];
-        for r in &results {
+        for r in reports {
             // Scheduling bar = decision latency minus shielding (for
             // centralized RL this includes queueing at the head).
             sched.push(format!(
@@ -224,20 +273,22 @@ fn overhead_figure(ctx: &Ctx, real: bool, fig: &str) {
 
 /// Fig 8/13: action collisions vs the κ penalty.
 fn collisions_figure(ctx: &Ctx, real: bool, fig: &str) {
-    for model in &ctx.models {
+    let kappas = [25.0, 50.0, 100.0, 200.0];
+    let base = if real { ctx.real(ctx.models[0]) } else { ctx.multi_base() };
+    let reports = ctx.run(
+        &Sweep::new(base).models(&ctx.models).methods(&Method::ALL).kappas(&kappas),
+    );
+    for (model, model_reports) in ctx.per_model(&reports) {
         let mut t = Table::new(
             &format!("{fig} ({}): action collisions vs κ", model.name()),
             &["kappa", "RL", "MARL", "SROLE-C", "SROLE-D"],
         );
-        for kappa in [25.0, 50.0, 100.0, 200.0] {
-            let mut cfg = if real { ctx.real(*model) } else { ctx.base(*model) };
-            cfg.reward.kappa = kappa;
-            let exp = Experiment::new(cfg);
-            let mut row = vec![format!("{kappa:.0}")];
-            for m in Method::ALL {
-                row.push(exp.run(m).metrics.collisions.to_string());
+        for (ki, row) in model_reports.chunks(Method::ALL.len()).enumerate() {
+            let mut cells = vec![format!("{:.0}", kappas[ki])];
+            for r in row {
+                cells.push(r.metrics.collisions.to_string());
             }
-            t.row(row);
+            t.row(cells);
         }
         t.print();
     }
@@ -245,38 +296,82 @@ fn collisions_figure(ctx: &Ctx, real: bool, fig: &str) {
 
 /// Fig 9: JCT on the real-device testbed (10 Pis, one cluster).
 fn fig9_jct_real(ctx: &Ctx) {
+    let reports = ctx
+        .run(&Sweep::new(ctx.real(ctx.models[0])).models(&ctx.models).methods(&Method::ALL));
     let mut t = Table::new(
         "Fig 9: JCT median [s], real-device testbed",
         &["model", "RL", "MARL", "SROLE-C", "SROLE-D"],
     );
-    for model in &ctx.models {
-        let exp = Experiment::new(ctx.real(*model));
-        let mut row = vec![model.name().to_string()];
-        for m in Method::ALL {
-            row.push(f(exp.run(m).metrics.jct_summary().median));
+    for (model, model_reports) in ctx.per_model(&reports) {
+        let mut cells = vec![model.name().to_string()];
+        for r in model_reports {
+            cells.push(f(r.metrics.jct_summary().median));
         }
-        t.row(row);
+        t.row(cells);
     }
     t.print();
 }
 
 /// Fig 10: tasks per device, real-device testbed.
 fn fig10_tasks_real(ctx: &Ctx) {
+    let reports = ctx
+        .run(&Sweep::new(ctx.real(ctx.models[0])).models(&ctx.models).methods(&Method::ALL));
     let mut t = Table::new(
         "Fig 10: tasks/device median (min..max), real-device testbed",
         &["model", "RL", "MARL", "SROLE-C", "SROLE-D"],
     );
-    for model in &ctx.models {
-        let exp = Experiment::new(ctx.real(*model));
-        let mut row = vec![model.name().to_string()];
-        for m in Method::ALL {
-            let r = exp.run(m);
+    for (model, model_reports) in ctx.per_model(&reports) {
+        let mut cells = vec![model.name().to_string()];
+        for r in model_reports {
             match r.metrics.tasks_summary() {
-                Some(s) => row.push(format!("{:.1} ({:.0}..{:.0})", s.median, s.min, s.max)),
-                None => row.push("-".into()),
+                Some(s) => cells.push(format!("{:.1} ({:.0}..{:.0})", s.median, s.min, s.max)),
+                None => cells.push("-".into()),
             }
         }
-        t.row(row);
+        t.row(cells);
     }
     t.print();
+}
+
+/// `figures scale`: the ROADMAP scale sweep — 10→100-node clusters, all
+/// methods, one concurrent harness run.
+fn scale_sweep(ctx: &Ctx) {
+    let edges = [10usize, 25, 50, 100];
+    let model = ctx.models.first().copied().unwrap_or(ModelKind::Vgg16);
+    let sweep = Sweep::new(ctx.base(model)).methods(&Method::ALL).edges(&edges);
+    let mut scenarios = sweep.scenarios();
+    // The point of this sweep is CLUSTER scale, not deployment size:
+    // grow one cluster (and its shield membership structures) to the
+    // full node count instead of tiling 5-node clusters.
+    for sc in &mut scenarios {
+        sc.cfg.cluster_size = sc.cfg.n_edges;
+        sc.cfg.subclusters = (sc.cfg.n_edges / 10).max(2);
+    }
+    let t0 = std::time::Instant::now();
+    let reports = run_parallel(&scenarios, ctx.threads);
+    let wall = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(
+        &format!("scale sweep ({}): JCT median [s] / collisions vs #edges", model.name()),
+        &["edges", "RL", "MARL", "SROLE-C", "SROLE-D"],
+    );
+    for (ei, row) in reports.chunks(Method::ALL.len()).enumerate() {
+        let mut cells = vec![edges[ei].to_string()];
+        for r in row {
+            cells.push(format!(
+                "{} / {}",
+                f(r.metrics.jct_summary().median),
+                r.metrics.collisions
+            ));
+        }
+        t.row(cells);
+    }
+    t.print();
+    let busy: f64 = reports.iter().map(|r| r.wall_secs).sum();
+    println!(
+        "{} scenarios in {:.1}s wall ({:.1}s of scenario work, {:.1}x parallel speedup)",
+        reports.len(),
+        wall,
+        busy,
+        busy / wall.max(1e-9)
+    );
 }

@@ -112,14 +112,51 @@ pub struct ClusterSpec {
 }
 
 /// The full emulated edge deployment for one experiment.
+///
+/// Cluster membership and the per-node cluster-neighbor lists are
+/// precomputed at construction ([`Deployment::new`]), so the per-round
+/// hot paths (shield checks, MARL candidate sets) answer membership and
+/// adjacency in O(1)/O(degree) instead of rescanning member vectors.
 #[derive(Debug, Clone)]
 pub struct Deployment {
     pub nodes: Vec<EdgeNode>,
     pub topo: Topology,
     pub clusters: Vec<ClusterSpec>,
+    /// `cluster_index[node]` = index into `clusters`.
+    cluster_index: Vec<usize>,
+    /// Per-node transmission-range neighbors restricted to the node's own
+    /// cluster, in ascending id order.
+    cluster_neighbors: Vec<Vec<NodeId>>,
 }
 
 impl Deployment {
+    /// Assemble a deployment from parts, building the membership and
+    /// adjacency indices.  Every member node must appear in exactly one
+    /// cluster.
+    pub fn new(nodes: Vec<EdgeNode>, topo: Topology, clusters: Vec<ClusterSpec>) -> Deployment {
+        let n = nodes.len();
+        let mut cluster_index = vec![usize::MAX; n];
+        for (ci, c) in clusters.iter().enumerate() {
+            for &m in &c.members {
+                assert_eq!(cluster_index[m], usize::MAX, "node {m} in two clusters");
+                cluster_index[m] = ci;
+            }
+        }
+        assert!(
+            cluster_index.iter().all(|&c| c != usize::MAX),
+            "every node must belong to a cluster"
+        );
+        let cluster_neighbors = (0..n)
+            .map(|node| {
+                topo.neighbors(node)
+                    .into_iter()
+                    .filter(|&m| cluster_index[m] == cluster_index[node])
+                    .collect()
+            })
+            .collect();
+        Deployment { nodes, topo, clusters, cluster_index, cluster_neighbors }
+    }
+
     /// Build a deployment per the paper's setup: `n` nodes in clusters of
     /// `cluster_size`, resources assigned round-robin from `profile`
     /// ("the resources of the devices were assigned in a round-robin
@@ -153,27 +190,30 @@ impl Deployment {
                 ClusterSpec { members, head }
             })
             .collect();
-        Deployment { nodes, topo, clusters }
+        Deployment::new(nodes, topo, clusters)
     }
 
     pub fn n(&self) -> usize {
         self.nodes.len()
     }
 
-    /// The cluster index containing `node`.
+    /// The cluster index containing `node` (O(1) table lookup).
+    #[inline]
     pub fn cluster_of(&self, node: NodeId) -> usize {
-        self.clusters.iter().position(|c| c.members.contains(&node)).expect("node in no cluster")
+        self.cluster_index[node]
     }
 
     /// Neighbors of `node` restricted to its own cluster (the MARL agent's
-    /// candidate set).
+    /// candidate set).  Precomputed; this clones — the hot paths use
+    /// [`Deployment::cluster_neighbors_ref`].
     pub fn cluster_neighbors(&self, node: NodeId) -> Vec<NodeId> {
-        let c = self.cluster_of(node);
-        self.topo
-            .neighbors(node)
-            .into_iter()
-            .filter(|m| self.clusters[c].members.contains(m))
-            .collect()
+        self.cluster_neighbors[node].clone()
+    }
+
+    /// Borrowed view of the precomputed cluster-neighbor list.
+    #[inline]
+    pub fn cluster_neighbors_ref(&self, node: NodeId) -> &[NodeId] {
+        &self.cluster_neighbors[node]
     }
 }
 

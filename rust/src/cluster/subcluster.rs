@@ -9,8 +9,15 @@
 
 use super::NodeId;
 use crate::net::Topology;
+use crate::util::NodeSet;
 
 /// The sub-cluster decomposition of one cluster.
+///
+/// Besides the raw partition, [`SubClusters::build`] precomputes dense
+/// lookup tables over the whole deployment's node-id space — sub-cluster
+/// id per node, boundary membership, per-pair boundary sets and per-pair
+/// allowed-target sets — so the SROLE-D shield's per-round checks are
+/// O(1) per query instead of `Vec::contains` scans.
 #[derive(Debug, Clone)]
 pub struct SubClusters {
     /// `assignment[i]` = sub-cluster index of `members[i]`.
@@ -20,6 +27,20 @@ pub struct SubClusters {
     /// Boundary node set per sub-cluster pair `(a, b)`, a < b: nodes of
     /// either sub-cluster within the boundary distance of the other.
     pub boundaries: Vec<((usize, usize), Vec<NodeId>)>,
+    /// `sub_index[node]` = sub-cluster of `node`, `usize::MAX` for
+    /// non-members.  Dense over the deployment's node ids.
+    sub_index: Vec<usize>,
+    /// Union of all boundary nodes.
+    boundary_set: NodeSet,
+    /// Members per sub-cluster (original `members` order).
+    per_sub: Vec<Vec<NodeId>>,
+    /// Member set per sub-cluster.
+    sub_sets: Vec<NodeSet>,
+    /// Boundary-node set per pair (parallel to `boundaries`).
+    pair_boundary: Vec<NodeSet>,
+    /// Allowed correction targets per pair: union of the pair's two
+    /// sub-cluster member sets (parallel to `boundaries`).
+    pair_allowed: Vec<NodeSet>,
 }
 
 /// A node counts as *on the boundary* when it sits within this fraction
@@ -29,27 +50,107 @@ pub struct SubClusters {
 pub const BOUNDARY_RANGE_FRAC: f64 = 0.6;
 
 impl SubClusters {
-    /// Partition `members` into `k` sub-clusters by position.
+    /// Partition `members` into `k` sub-clusters by position and build
+    /// the dense lookup tables.
     pub fn build(members: &[NodeId], topo: &Topology, k: usize) -> SubClusters {
         let k = k.clamp(1, members.len().max(1));
         let assignment = kmeans(members, topo, k);
-        let mut sc = SubClusters { members: members.to_vec(), assignment, k, boundaries: Vec::new() };
+        let n = topo.n();
+        let mut sc = SubClusters {
+            members: members.to_vec(),
+            assignment,
+            k,
+            boundaries: Vec::new(),
+            sub_index: Vec::new(),
+            boundary_set: NodeSet::with_universe(n),
+            per_sub: Vec::new(),
+            sub_sets: Vec::new(),
+            pair_boundary: Vec::new(),
+            pair_allowed: Vec::new(),
+        };
         sc.boundaries = sc.find_boundaries(topo);
+        sc.build_indices(n);
         sc
     }
 
+    /// Precompute the O(1) lookup tables from the raw partition.
+    fn build_indices(&mut self, n: usize) {
+        self.sub_index = vec![usize::MAX; n];
+        self.per_sub = vec![Vec::new(); self.k];
+        self.sub_sets = (0..self.k).map(|_| NodeSet::with_universe(n)).collect();
+        for (&m, &a) in self.members.iter().zip(&self.assignment) {
+            self.sub_index[m] = a;
+            self.per_sub[a].push(m);
+            self.sub_sets[a].insert(m);
+        }
+        self.boundary_set = NodeSet::with_universe(n);
+        self.pair_boundary = Vec::with_capacity(self.boundaries.len());
+        self.pair_allowed = Vec::with_capacity(self.boundaries.len());
+        for ((a, b), nodes) in &self.boundaries {
+            for &node in nodes {
+                self.boundary_set.insert(node);
+            }
+            self.pair_boundary.push(NodeSet::from_slice(n, nodes));
+            let mut allowed = self.sub_sets[*a].clone();
+            allowed.union_with(&self.sub_sets[*b]);
+            self.pair_allowed.push(allowed);
+        }
+    }
+
+    /// Sub-cluster of `node` (O(1); panics for non-members, matching the
+    /// previous scan-based behavior).
+    #[inline]
     pub fn sub_of(&self, node: NodeId) -> usize {
-        let idx = self.members.iter().position(|&m| m == node).expect("node not a member");
-        self.assignment[idx]
+        let s = self.sub_index.get(node).copied().unwrap_or(usize::MAX);
+        assert!(s != usize::MAX, "node not a member");
+        s
+    }
+
+    /// Whether `node` belongs to this decomposition (O(1)).
+    #[inline]
+    pub fn is_member(&self, node: NodeId) -> bool {
+        self.sub_index.get(node).copied().unwrap_or(usize::MAX) != usize::MAX
+    }
+
+    /// Whether `node` belongs to sub-cluster `sub` (O(1)).
+    #[inline]
+    pub fn in_sub(&self, node: NodeId, sub: usize) -> bool {
+        self.sub_index.get(node).copied() == Some(sub)
+    }
+
+    /// Whether `node` lies on any sub-cluster boundary (O(1)).
+    #[inline]
+    pub fn is_boundary(&self, node: NodeId) -> bool {
+        self.boundary_set.contains(node)
     }
 
     pub fn members_of(&self, sub: usize) -> Vec<NodeId> {
-        self.members
-            .iter()
-            .zip(&self.assignment)
-            .filter(|(_, &a)| a == sub)
-            .map(|(&m, _)| m)
-            .collect()
+        self.per_sub[sub].clone()
+    }
+
+    /// Borrowed member list of one sub-cluster.
+    #[inline]
+    pub fn sub_members(&self, sub: usize) -> &[NodeId] {
+        &self.per_sub[sub]
+    }
+
+    /// Member set of one sub-cluster (for O(1) allowed-target checks).
+    #[inline]
+    pub fn sub_set(&self, sub: usize) -> &NodeSet {
+        &self.sub_sets[sub]
+    }
+
+    /// Boundary-node set of pair `pair_idx` (parallel to `boundaries`).
+    #[inline]
+    pub fn pair_boundary_set(&self, pair_idx: usize) -> &NodeSet {
+        &self.pair_boundary[pair_idx]
+    }
+
+    /// Allowed correction targets of pair `pair_idx`: the union of the
+    /// pair's two sub-cluster member sets.
+    #[inline]
+    pub fn pair_allowed_set(&self, pair_idx: usize) -> &NodeSet {
+        &self.pair_allowed[pair_idx]
     }
 
     /// Delegate for a sub-cluster pair: the lowest node id among the pair's
@@ -90,18 +191,9 @@ impl SubClusters {
         out
     }
 
-    /// All boundary nodes (union over pairs).
+    /// All boundary nodes (union over pairs), ascending.
     pub fn boundary_nodes(&self) -> Vec<NodeId> {
-        let mut out: Vec<NodeId> = Vec::new();
-        for (_, nodes) in &self.boundaries {
-            for &n in nodes {
-                if !out.contains(&n) {
-                    out.push(n);
-                }
-            }
-        }
-        out.sort_unstable();
-        out
+        self.boundary_set.iter().collect()
     }
 }
 
@@ -250,5 +342,69 @@ mod tests {
         let a = SubClusters::build(&m, &t, 3);
         let b = SubClusters::build(&m, &t, 3);
         assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn indexed_lookups_agree_with_scans() {
+        // The O(1) tables must answer exactly like the Vec scans they
+        // replaced.
+        let t = topo(24);
+        let members: Vec<NodeId> = (0..24).collect();
+        let sc = SubClusters::build(&members, &t, 3);
+        let boundary = {
+            // Scan-based union over pairs (the pre-index implementation).
+            let mut out: Vec<NodeId> = Vec::new();
+            for (_, nodes) in &sc.boundaries {
+                for &n in nodes {
+                    if !out.contains(&n) {
+                        out.push(n);
+                    }
+                }
+            }
+            out.sort_unstable();
+            out
+        };
+        assert_eq!(sc.boundary_nodes(), boundary);
+        for n in 0..24 {
+            let scan_sub =
+                sc.members.iter().position(|&m| m == n).map(|i| sc.assignment[i]).unwrap();
+            assert_eq!(sc.sub_of(n), scan_sub);
+            assert!(sc.is_member(n));
+            assert!(sc.in_sub(n, scan_sub));
+            assert!(!sc.in_sub(n, scan_sub + 7));
+            assert_eq!(sc.is_boundary(n), boundary.contains(&n));
+        }
+        assert!(!sc.is_member(24), "out-of-universe node is not a member");
+        for (pi, ((a, b), nodes)) in sc.boundaries.iter().enumerate() {
+            for n in 0..24 {
+                assert_eq!(sc.pair_boundary_set(pi).contains(n), nodes.contains(&n));
+                let in_union =
+                    sc.members_of(*a).contains(&n) || sc.members_of(*b).contains(&n);
+                assert_eq!(sc.pair_allowed_set(pi).contains(n), in_union);
+            }
+        }
+        for s in 0..3 {
+            assert_eq!(sc.sub_members(s), &sc.members_of(s)[..]);
+            for &m in sc.sub_members(s) {
+                assert!(sc.sub_set(s).contains(m));
+            }
+            assert_eq!(sc.sub_set(s).len(), sc.sub_members(s).len());
+        }
+    }
+
+    #[test]
+    fn partial_membership_indexed() {
+        // Members are a strict subset of the topology's nodes: the index
+        // must distinguish non-members from members at O(1).
+        let t = topo(20);
+        let members: Vec<NodeId> = (0..10).collect();
+        let sc = SubClusters::build(&members, &t, 2);
+        for n in 0..10 {
+            assert!(sc.is_member(n));
+        }
+        for n in 10..20 {
+            assert!(!sc.is_member(n));
+            assert!(!sc.is_boundary(n));
+        }
     }
 }

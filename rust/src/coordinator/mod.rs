@@ -267,7 +267,7 @@ fn pretrain_deployment(rng: &mut Rng, n: usize) -> Deployment {
         })
         .unwrap();
     let clusters = vec![ClusterSpec { members: (0..n).collect(), head }];
-    Deployment { nodes, topo, clusters }
+    Deployment::new(nodes, topo, clusters)
 }
 
 #[cfg(test)]

@@ -13,9 +13,8 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
-
 use crate::runtime::lm::{average_grads, LmSession};
+use crate::util::error::{Context, Result};
 use crate::runtime::Engine;
 use crate::util::Rng;
 
@@ -143,7 +142,7 @@ pub fn train_data_parallel(artifacts_dir: &std::path::Path, cfg: &PsConfig) -> R
         for (w, tx) in cmd_txs.iter().enumerate() {
             let tokens = shards[w].batch(batch, seq);
             tx.send(Cmd::Step { params: params.clone(), tokens })
-                .map_err(|_| anyhow::anyhow!("worker {w} died"))?;
+                .map_err(|_| crate::format_err!("worker {w} died"))?;
         }
         let mut worker_grads = Vec::with_capacity(cfg.workers);
         let mut losses = Vec::with_capacity(cfg.workers);

@@ -1,0 +1,321 @@
+//! Parallel multi-scenario evaluation harness.
+//!
+//! A [`Scenario`] is one `(method × configuration)` cell of the paper's
+//! evaluation grid — cluster size, workload mix, model, κ, seed — and a
+//! [`Sweep`] expands the cartesian product into a scenario list.
+//! [`run_parallel`] executes independent scenarios across OS threads via
+//! a work-stealing index queue.
+//!
+//! Determinism: each scenario is self-contained — it builds its own
+//! deployment, policy and RNG stream from `cfg.seed` (the coordinator
+//! derives per-repetition streams as `seed + 1000·rep`), shares no
+//! mutable state with other scenarios, and its report is written back to
+//! its own slot.  The same sweep therefore produces bit-identical
+//! reports regardless of thread count or completion order — pinned by
+//! the `serial_and_parallel_agree` test below.
+//!
+//! This is the substrate the figure regeneration (`bin/figures.rs`), the
+//! CLI (`srole run`) and the `benches/` drivers run on.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{Experiment, Method};
+use crate::dnn::ModelKind;
+use crate::metrics::RunMetrics;
+use crate::util::table::{f, Table};
+
+/// One independent evaluation cell.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Human-readable cell label (method/edges/workload/model/seed).
+    pub label: String,
+    pub method: Method,
+    pub cfg: ExperimentConfig,
+}
+
+impl Scenario {
+    pub fn new(method: Method, cfg: ExperimentConfig) -> Scenario {
+        let label = format!(
+            "{}/e{}/w{:.0}%/{}/k{:.0}/s{}",
+            method.name(),
+            cfg.n_edges,
+            cfg.workload * 100.0,
+            cfg.model.name(),
+            cfg.reward.kappa,
+            cfg.seed
+        );
+        Scenario { label, method, cfg }
+    }
+}
+
+/// Result of one scenario: pooled metrics plus the wall-clock it took.
+#[derive(Debug)]
+pub struct ScenarioReport {
+    pub scenario: Scenario,
+    pub metrics: RunMetrics,
+    /// Wall-clock seconds this scenario took on its worker thread.
+    pub wall_secs: f64,
+}
+
+/// Cartesian sweep builder.  Dimensions left empty fall back to the base
+/// configuration's value, so a sweep over `(methods × edges)` is just
+/// those two setters.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    pub base: ExperimentConfig,
+    pub methods: Vec<Method>,
+    pub edges: Vec<usize>,
+    pub workloads: Vec<f64>,
+    pub models: Vec<ModelKind>,
+    pub kappas: Vec<f64>,
+    pub seeds: Vec<u64>,
+}
+
+impl Sweep {
+    pub fn new(base: ExperimentConfig) -> Sweep {
+        Sweep {
+            base,
+            methods: Vec::new(),
+            edges: Vec::new(),
+            workloads: Vec::new(),
+            models: Vec::new(),
+            kappas: Vec::new(),
+            seeds: Vec::new(),
+        }
+    }
+
+    pub fn methods(mut self, m: &[Method]) -> Sweep {
+        self.methods = m.to_vec();
+        self
+    }
+
+    pub fn edges(mut self, e: &[usize]) -> Sweep {
+        self.edges = e.to_vec();
+        self
+    }
+
+    pub fn workloads(mut self, w: &[f64]) -> Sweep {
+        self.workloads = w.to_vec();
+        self
+    }
+
+    pub fn models(mut self, m: &[ModelKind]) -> Sweep {
+        self.models = m.to_vec();
+        self
+    }
+
+    pub fn kappas(mut self, k: &[f64]) -> Sweep {
+        self.kappas = k.to_vec();
+        self
+    }
+
+    pub fn seeds(mut self, s: &[u64]) -> Sweep {
+        self.seeds = s.to_vec();
+        self
+    }
+
+    /// Expand the cartesian product, methods varying fastest (so a
+    /// figure row's four method cells are adjacent in the list).
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        fn dim<T: Clone>(v: &[T], base: T) -> Vec<T> {
+            if v.is_empty() {
+                vec![base]
+            } else {
+                v.to_vec()
+            }
+        }
+        let methods = dim(&self.methods, Method::SroleC);
+        let edges = dim(&self.edges, self.base.n_edges);
+        let workloads = dim(&self.workloads, self.base.workload);
+        let models = dim(&self.models, self.base.model);
+        let kappas = dim(&self.kappas, self.base.reward.kappa);
+        let seeds = dim(&self.seeds, self.base.seed);
+
+        let mut out = Vec::new();
+        for &seed in &seeds {
+            for &model in &models {
+                for &e in &edges {
+                    for &w in &workloads {
+                        for &kappa in &kappas {
+                            for &method in &methods {
+                                let mut cfg = self.base.clone();
+                                cfg.seed = seed;
+                                cfg.model = model;
+                                cfg.n_edges = e;
+                                cfg.workload = w;
+                                cfg.reward.kappa = kappa;
+                                // Keep cluster size valid on small sweeps.
+                                if cfg.cluster_size > e {
+                                    cfg.cluster_size = e.max(1);
+                                }
+                                out.push(Scenario::new(method, cfg));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Default worker count: one per available core.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run every scenario, `threads` at a time, and return the reports in
+/// scenario order.  `threads = 0` means [`default_threads`].
+pub fn run_parallel(scenarios: &[Scenario], threads: usize) -> Vec<ScenarioReport> {
+    let threads = if threads == 0 { default_threads() } else { threads };
+    let threads = threads.clamp(1, scenarios.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<ScenarioReport>>> =
+        Mutex::new((0..scenarios.len()).map(|_| None).collect());
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= scenarios.len() {
+                    break;
+                }
+                let sc = &scenarios[i];
+                let t0 = Instant::now();
+                let exp = Experiment::new(sc.cfg.clone());
+                let metrics = exp.run(sc.method).metrics;
+                let report = ScenarioReport {
+                    scenario: sc.clone(),
+                    metrics,
+                    wall_secs: t0.elapsed().as_secs_f64(),
+                };
+                slots.lock().unwrap()[i] = Some(report);
+            });
+        }
+    });
+
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("scenario slot unfilled"))
+        .collect()
+}
+
+/// Render a sweep's headline metrics as a console table.
+pub fn report_table(title: &str, reports: &[ScenarioReport]) -> Table {
+    let mut t = Table::new(
+        title,
+        &["scenario", "jct_median_s", "collisions", "sched_s", "shield_s", "wall_s"],
+    );
+    for r in reports {
+        t.row(vec![
+            r.scenario.label.clone(),
+            if r.metrics.jct.is_empty() { "-".into() } else { f(r.metrics.jct_summary().median) },
+            r.metrics.collisions.to_string(),
+            format!("{:.3}", r.metrics.mean_sched_secs()),
+            format!("{:.3}", r.metrics.mean_shield_secs()),
+            format!("{:.2}", r.wall_secs),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_base() -> ExperimentConfig {
+        ExperimentConfig {
+            n_edges: 5,
+            cluster_size: 5,
+            model: ModelKind::Rnn,
+            iterations: 3,
+            pretrain_episodes: 5,
+            repetitions: 1,
+            jobs_per_cluster: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sweep_expands_cartesian_product() {
+        let sw = Sweep::new(tiny_base())
+            .methods(&[Method::Marl, Method::SroleC])
+            .edges(&[5, 10])
+            .seeds(&[1, 2, 3]);
+        let scenarios = sw.scenarios();
+        assert_eq!(scenarios.len(), 2 * 2 * 3);
+        // Methods vary fastest.
+        assert_eq!(scenarios[0].method, Method::Marl);
+        assert_eq!(scenarios[1].method, Method::SroleC);
+        assert_eq!(scenarios[0].cfg.n_edges, scenarios[1].cfg.n_edges);
+        // Labels are unique.
+        let mut labels: Vec<&str> = scenarios.iter().map(|s| s.label.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), scenarios.len());
+    }
+
+    #[test]
+    fn empty_dims_use_base() {
+        let sw = Sweep::new(tiny_base()).methods(&[Method::Rl]);
+        let scenarios = sw.scenarios();
+        assert_eq!(scenarios.len(), 1);
+        assert_eq!(scenarios[0].cfg.n_edges, 5);
+        assert_eq!(scenarios[0].cfg.seed, 1);
+    }
+
+    #[test]
+    fn cluster_size_clamped_to_edges() {
+        let mut base = tiny_base();
+        base.cluster_size = 5;
+        let sw = Sweep::new(base).methods(&[Method::Marl]).edges(&[3]);
+        let scenarios = sw.scenarios();
+        assert_eq!(scenarios[0].cfg.cluster_size, 3);
+        scenarios[0].cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        // The determinism contract: same sweep → same reports, whether
+        // run on one thread or many, in any completion order.
+        let sw = Sweep::new(tiny_base())
+            .methods(&[Method::Marl, Method::SroleC, Method::SroleD, Method::Rl]);
+        let scenarios = sw.scenarios();
+        assert_eq!(scenarios.len(), 4, "a ≥4-scenario sweep");
+        let serial = run_parallel(&scenarios, 1);
+        let parallel = run_parallel(&scenarios, 4);
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.scenario.label, p.scenario.label, "order preserved");
+            assert_eq!(s.metrics.jct, p.metrics.jct, "{}", s.scenario.label);
+            assert_eq!(s.metrics.collisions, p.metrics.collisions);
+            assert_eq!(s.metrics.decision_secs, p.metrics.decision_secs);
+            assert_eq!(s.metrics.runtime_overloads, p.metrics.runtime_overloads);
+        }
+    }
+
+    #[test]
+    fn rerun_is_bit_identical() {
+        let sw = Sweep::new(tiny_base()).methods(&[Method::SroleD]).seeds(&[7, 8]);
+        let a = run_parallel(&sw.scenarios(), 2);
+        let b = run_parallel(&sw.scenarios(), 2);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.metrics.jct, y.metrics.jct);
+            assert_eq!(x.metrics.collisions, y.metrics.collisions);
+        }
+    }
+
+    #[test]
+    fn report_table_renders_all_rows() {
+        let sw = Sweep::new(tiny_base()).methods(&[Method::Marl]);
+        let reports = run_parallel(&sw.scenarios(), 1);
+        let t = report_table("test", &reports);
+        assert_eq!(t.n_rows(), 1);
+        assert!(t.render().contains("MARL"));
+    }
+}

@@ -27,14 +27,25 @@
 //!   fused causal attention) called from L2.
 //!
 //! Python never runs on the request path: [`runtime`] loads the HLO text
-//! artifacts through PJRT (`xla` crate) and [`emu`] drives real
-//! data-parallel training with them.
+//! artifacts through PJRT (`xla` crate, behind the `pjrt` feature; a
+//! host-literal stub otherwise) and [`emu`] drives real data-parallel
+//! training with them.
+//!
+//! Scale experiments run through [`harness`]: independent
+//! `(method × cluster size × workload × seed)` scenarios across OS
+//! threads with per-scenario deterministic RNG streams.
+
+// The shield/scheduler hot paths intentionally index parallel per-node
+// arrays, and Algorithm 1's signature mirrors the paper's parameters.
+#![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+#![allow(clippy::type_complexity, clippy::field_reassign_with_default)]
 
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod dnn;
 pub mod emu;
+pub mod harness;
 pub mod metrics;
 pub mod net;
 pub mod rl;
@@ -49,3 +60,4 @@ pub use cluster::{ClusterSpec, EdgeNode, NodeId, ResourceKind, Resources};
 pub use config::ExperimentConfig;
 pub use coordinator::{Experiment, ExperimentResult, Method};
 pub use dnn::{Layer, ModelGraph, ModelKind};
+pub use harness::{run_parallel, Scenario, ScenarioReport, Sweep};

@@ -8,7 +8,8 @@
 //! * `figures` — points at the `figures` binary regenerating Fig 4–13.
 
 use srole::config::ExperimentConfig;
-use srole::coordinator::{Experiment, Method};
+use srole::coordinator::Method;
+use srole::harness::{run_parallel, Scenario};
 use srole::util::cli::{Cli, CliError};
 use srole::util::table::{f, Table};
 
@@ -41,6 +42,7 @@ fn cmd_run(argv: &[String]) -> i32 {
         .opt("seed", Some("1"), "base RNG seed")
         .opt("repetitions", Some("5"), "independent repetitions")
         .opt("iterations", Some("50"), "training iterations per job")
+        .opt("threads", Some("0"), "worker threads for multi-method runs (0 = all cores)")
         .flag("real", "use the real-device profile (10 Pis, one cluster)")
         .flag("json", "emit raw metrics as JSON");
     let args = match cli.parse(argv) {
@@ -96,7 +98,14 @@ fn cmd_run(argv: &[String]) -> i32 {
         },
     };
 
-    let exp = Experiment::new(cfg.clone());
+    // One scenario per method, run concurrently through the harness
+    // (each scenario is deterministic in cfg.seed regardless of thread
+    // count or completion order).
+    let scenarios: Vec<Scenario> =
+        methods.iter().map(|&m| Scenario::new(m, cfg.clone())).collect();
+    let threads = args.usize("threads").unwrap_or(0);
+    let reports = run_parallel(&scenarios, threads);
+
     let mut table = Table::new(
         &format!(
             "srole run: model={} edges={} workload={:.0}% κ={} ({} reps)",
@@ -108,8 +117,8 @@ fn cmd_run(argv: &[String]) -> i32 {
         ),
         &["method", "jct_median_s", "jct_p95_s", "collisions", "sched_s", "shield_s", "util_cpu_med"],
     );
-    for m in methods {
-        let r = exp.run(m);
+    for r in &reports {
+        let m = r.scenario.method;
         let jct = r.metrics.jct_summary();
         if args.has("json") {
             println!("{{\"method\":\"{}\",\"metrics\":{}}}", m.name(), r.metrics.to_json().to_string());

@@ -7,9 +7,8 @@
 //! and runs TD mini-batches through `qnet_train` with an in-session
 //! target network.
 
-use anyhow::Result;
-
 use crate::dnn::Layer;
+use crate::util::error::Result;
 use crate::runtime::qnet::{QNetSession, TdBatch};
 use crate::runtime::Engine;
 use crate::util::Rng;

@@ -7,10 +7,14 @@
 //! parameter-server strategy, with every FLOP flowing through the
 //! AOT-compiled Pallas kernels.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 use super::qnet::clone_literals;
 use super::{lit_i32, scalar_f32, scalar_i32, to_scalar_f32, Engine};
+
+#[cfg(not(feature = "pjrt"))]
+use super::pjrt_stub as xla;
 
 /// Hyper-parameters mirrored from `manifest.meta.lm`.
 #[derive(Debug, Clone, Copy)]

@@ -6,8 +6,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 /// Tensor dtypes used by the artifacts.

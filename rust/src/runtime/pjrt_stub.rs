@@ -1,0 +1,248 @@
+//! Host-side stand-in for the vendored `xla` crate (used when the `pjrt`
+//! feature is off, which is the default in this offline build).
+//!
+//! Literals are fully functional on the host (create / reshape / read
+//! back), so literal-level code and tests work without PJRT.  Anything
+//! that would actually touch a PJRT client — compiling or executing an
+//! HLO artifact — returns a descriptive error instead.  Enabling the
+//! `pjrt` feature switches `runtime` back onto the real crate (which must
+//! then be vendored into `[dependencies]`).
+
+use crate::util::error::{Error, Result};
+
+fn unavailable(what: &str) -> Error {
+    Error::msg(format!(
+        "{what} unavailable: built without the `pjrt` feature (vendor the xla crate and enable it)"
+    ))
+}
+
+/// Element types (the artifacts only use F32/S32; the remaining variants
+/// mirror the real crate so `match` arms over them stay reachable).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[allow(dead_code)]
+pub enum ElementType {
+    F32,
+    S32,
+    F64,
+    S64,
+    U32,
+    Pred,
+}
+
+/// Array payload of a literal (public because [`NativeType`] mentions it).
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+}
+
+/// A host tensor: shape plus typed data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl PartialEq for Data {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Data::F32(a), Data::F32(b)) => a == b,
+            (Data::S32(a), Data::S32(b)) => a == b,
+            _ => false,
+        }
+    }
+}
+
+/// Scalar types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<f32>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::S32(data)
+    }
+    fn unwrap(data: &Data) -> Option<Vec<i32>> {
+        match data {
+            Data::S32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![v]) }
+    }
+
+    fn elems(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::S32(v) => v.len(),
+        }
+    }
+
+    /// Reshape to `dims` (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.elems() {
+            return Err(Error::msg(format!(
+                "reshape: {:?} wants {} elems, literal has {}",
+                dims,
+                want,
+                self.elems()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Read the data back as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error::msg("to_vec: element type mismatch"))
+    }
+
+    pub fn shape(&self) -> Result<Shape> {
+        let ty = match &self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::S32(_) => ElementType::S32,
+        };
+        Ok(Shape::Array(ArrayShape { dims: self.dims.clone(), ty }))
+    }
+
+    /// Decompose a tuple literal; the host stub never produces tuples
+    /// (they only come back from PJRT execution).
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("tuple literals"))
+    }
+}
+
+/// Array shape metadata.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Shape of a literal.
+#[derive(Debug, Clone)]
+pub enum Shape {
+    Array(ArrayShape),
+    /// Produced only by PJRT execution, never by the host stub.
+    #[allow(dead_code)]
+    Tuple(Vec<Shape>),
+}
+
+/// PJRT client stub: construction fails with a clear message.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PJRT compilation"))
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HLO text parsing"))
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PJRT buffers"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PJRT execution"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_shape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        match l.shape().unwrap() {
+            Shape::Array(a) => {
+                assert_eq!(a.dims(), &[2, 2]);
+                assert_eq!(a.element_type(), ElementType::F32);
+            }
+            _ => panic!("expected array shape"),
+        }
+        assert!(l.to_vec::<i32>().is_err(), "type mismatch rejected");
+    }
+
+    #[test]
+    fn scalar_and_bad_reshape() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[2]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+}

@@ -6,9 +6,13 @@
 //! decision state (B=1 artifact), `train` runs one TD mini-batch step
 //! against a target-network copy.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 use super::{lit_f32, lit_i32, scalar_f32, scalar_i32, to_scalar_f32, Engine};
+
+#[cfg(not(feature = "pjrt"))]
+use super::pjrt_stub as xla;
 
 /// Owned Q-network parameters + target-network copy.
 pub struct QNetSession<'e> {

@@ -135,10 +135,13 @@ fn candidate_views(
 }
 
 /// Candidate set of a MARL agent: itself plus cluster neighbors, capped
-/// to the DQN action-space size.
+/// to the DQN action-space size.  Uses the deployment's precomputed
+/// adjacency — O(degree), no topology rescan.
 pub fn marl_candidates(dep: &Deployment, owner: NodeId) -> Vec<NodeId> {
-    let mut cands = vec![owner];
-    cands.extend(dep.cluster_neighbors(owner));
+    let neighbors = dep.cluster_neighbors_ref(owner);
+    let mut cands = Vec::with_capacity(neighbors.len() + 1);
+    cands.push(owner);
+    cands.extend_from_slice(neighbors);
     cands.truncate(MAX_NEIGHBORS + 1);
     cands
 }
@@ -192,20 +195,27 @@ impl Pending {
 
 /// Count collisions a shieldless method *would* incur for a round's
 /// joint action (the same pre-correction metric the shields report).
+/// Dense per-node accumulation over the touched nodes only — no map
+/// lookups on the per-round hot path.
 fn detect_collisions(
     proposals: &[ProposedAction],
     state: &ResourceState,
     alpha: f64,
 ) -> usize {
-    let mut extra: std::collections::BTreeMap<NodeId, Resources> = Default::default();
+    let mut extra = vec![Resources::default(); state.n()];
+    let mut seen = vec![false; state.n()];
+    let mut touched: Vec<NodeId> = Vec::with_capacity(proposals.len());
     for p in proposals {
-        let e = extra.entry(p.target).or_default();
-        *e = e.add(&p.demand);
+        if !seen[p.target] {
+            seen[p.target] = true;
+            touched.push(p.target);
+        }
+        extra[p.target] = extra[p.target].add(&p.demand);
     }
-    extra
-        .iter()
-        .filter(|(&node, add)| {
-            ResourceKind::ALL.iter().any(|&k| state.util_with(node, add, k) > alpha)
+    touched
+        .into_iter()
+        .filter(|&node| {
+            ResourceKind::ALL.iter().any(|&k| state.util_with(node, &extra[node], k) > alpha)
         })
         .count()
 }
@@ -380,10 +390,10 @@ pub fn central_wave(
     let mut view = View::snapshot(state);
     for job in jobs {
         let mut pending = Pending::new(job.clone(), n_layers);
-        let members = dep.clusters[job.cluster].members.clone();
+        let members = &dep.clusters[job.cluster].members;
         for layer_id in 0..n_layers {
             let layer = &graph.layers[layer_id];
-            let cviews = candidate_views(dep, state, &view, job.owner, &members);
+            let cviews = candidate_views(dep, state, &view, job.owner, members);
             let choice = policy.choose(layer, &cviews, rng, true);
             let target = members[choice];
             let step_secs =
@@ -499,7 +509,7 @@ mod tests {
 
     #[test]
     fn shielded_wave_records_penalties_and_reduces_overloads() {
-        let (dep, mut state0, graph, jobs, mut rng) = setup(5);
+        let (dep, mut state0, _graph, jobs, mut rng) = setup(5);
         // Heavier model to force contention.
         let graph = ModelKind::Vgg16.build();
         let mut policy = TabularQ::new(0.2, 0.3);

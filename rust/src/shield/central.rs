@@ -5,17 +5,19 @@
 use crate::cluster::Deployment;
 use crate::sim::state::ResourceState;
 
-use super::{algorithm1, ProposedAction, Shield, ShieldOutcome, CHECK_SECS_PER_ACTION, FIX_SECS_PER_CORRECTION};
+use super::{algorithm1, ProposedAction, Shield, ShieldOutcome, ShieldScratch, CHECK_SECS_PER_ACTION, FIX_SECS_PER_CORRECTION};
 
 /// The SROLE-C shield.  Runs serially on the cluster head: its modeled
 /// cost is linear in the number of reported actions plus the correction
-/// work.
+/// work.  The per-round accumulators live in `scratch` and are reused
+/// across rounds (allocation-free steady state).
 #[derive(Debug, Default)]
 pub struct CentralShield {
     /// Lifetime statistics (exposed for the figure harness).
     pub total_checked: usize,
     pub total_corrections: usize,
     pub total_collisions: usize,
+    scratch: ShieldScratch,
 }
 
 impl CentralShield {
@@ -33,8 +35,9 @@ impl Shield for CentralShield {
         alpha: f64,
     ) -> ShieldOutcome {
         let visible: Vec<usize> = (0..proposals.len()).collect();
-        let (corrections, collided) =
-            algorithm1(proposals, &visible, |_| true, state, dep, alpha, None);
+        let (corrections, collided) = algorithm1(
+            proposals, &visible, |_| true, state, dep, alpha, None, &mut self.scratch,
+        );
         let collisions = collided.len();
         // The single head checks every action serially.
         let shield_secs = proposals.len() as f64 * CHECK_SECS_PER_ACTION

@@ -21,13 +21,20 @@
 
 use crate::cluster::{Deployment, NodeId, SubClusters};
 use crate::sim::state::ResourceState;
+use crate::util::NodeSet;
 
-use super::{algorithm1, ProposedAction, Shield, ShieldOutcome, CHECK_SECS_PER_ACTION, FIX_SECS_PER_CORRECTION};
+use super::{algorithm1, ProposedAction, Shield, ShieldOutcome, ShieldScratch, CHECK_SECS_PER_ACTION, FIX_SECS_PER_CORRECTION};
 
 /// One delegate round-trip (shield → delegate → shield) per boundary pair.
 pub const DELEGATE_RTT_SECS: f64 = 0.001;
 
 /// The SROLE-D shield set for one cluster.
+///
+/// Every membership question on the per-round hot path — which
+/// sub-cluster an agent belongs to, whether a target is on a boundary,
+/// which nodes a delegate may retarget onto — is answered by the
+/// precomputed [`SubClusters`] index tables in O(1), and the round's
+/// collided-node de-duplication uses a reusable [`NodeSet`].
 pub struct DecentralShield {
     pub subs: SubClusters,
     pub total_checked: usize,
@@ -35,6 +42,9 @@ pub struct DecentralShield {
     pub total_collisions: usize,
     /// Number of delegate exchanges performed.
     pub delegate_rounds: usize,
+    scratch: ShieldScratch,
+    /// Collided-node set of the current round (cleared per check).
+    collided: NodeSet,
 }
 
 impl DecentralShield {
@@ -47,6 +57,8 @@ impl DecentralShield {
             total_corrections: 0,
             total_collisions: 0,
             delegate_rounds: 0,
+            scratch: ShieldScratch::default(),
+            collided: NodeSet::with_universe(dep.n()),
         }
     }
 }
@@ -59,12 +71,15 @@ impl Shield for DecentralShield {
         dep: &Deployment,
         alpha: f64,
     ) -> ShieldOutcome {
-        let boundary = self.subs.boundary_nodes();
-        let is_member = |n: NodeId| self.subs.members.contains(&n);
-
         let mut corrections: Vec<(usize, NodeId)> = Vec::new();
+        // Proposal idxs corrected so far (a local shield correction wins
+        // over a later delegate correction for the same proposal).
+        let mut corrected = NodeSet::with_universe(proposals.len());
         // Collision events are counted once per overloaded node per round,
-        // even when several shields/delegates observe it.
+        // even when several shields/delegates observe it — e.g. a node on
+        // the boundary of several sub-cluster pairs is checked by every
+        // pair's delegate.
+        self.collided.clear();
         let mut collided_nodes: Vec<NodeId> = Vec::new();
         let mut per_shield_secs = vec![0.0f64; self.subs.k];
 
@@ -80,16 +95,12 @@ impl Shield for DecentralShield {
                 .iter()
                 .enumerate()
                 .filter(|(_, p)| {
-                    is_member(p.agent)
-                        && self.subs.sub_of(p.agent) == s
-                        && !boundary.contains(&p.target)
+                    self.subs.in_sub(p.agent, s) && !self.subs.is_boundary(p.target)
                 })
                 .map(|(i, _)| i)
                 .collect();
-            let local_members = self.subs.members_of(s);
-            let checkable = |n: NodeId| {
-                local_members.contains(&n) && !boundary.contains(&n)
-            };
+            let subs = &self.subs;
+            let checkable = |n: NodeId| subs.in_sub(n, s) && !subs.is_boundary(n);
             // Safe alternatives are drawn from the shield's own sub-cluster
             // (it does not know other sub-clusters' planned load).
             let (corr, coll) = algorithm1(
@@ -99,14 +110,18 @@ impl Shield for DecentralShield {
                 state,
                 dep,
                 alpha,
-                Some(&local_members),
+                Some(subs.sub_set(s)),
+                &mut self.scratch,
             );
             per_shield_secs[s] += visible.len() as f64 * CHECK_SECS_PER_ACTION
                 + corr.len() as f64 * FIX_SECS_PER_CORRECTION;
             self.total_checked += visible.len();
+            for &(idx, _) in &corr {
+                corrected.insert(idx);
+            }
             corrections.extend(corr);
             for n in coll {
-                if !collided_nodes.contains(&n) {
+                if self.collided.insert(n) {
                     collided_nodes.push(n);
                 }
             }
@@ -116,16 +131,17 @@ impl Shield for DecentralShield {
         // Both shields of the pair forward their agents' actions that
         // target the pair's boundary nodes.
         let mut delegate_secs = 0.0f64;
-        for ((a, b), nodes) in &self.subs.boundaries.clone() {
+        for bi in 0..self.subs.boundaries.len() {
+            let (a, b) = self.subs.boundaries[bi].0;
             let visible: Vec<usize> = proposals
                 .iter()
                 .enumerate()
                 .filter(|(_, p)| {
-                    if !is_member(p.agent) {
+                    if !self.subs.is_member(p.agent) {
                         return false;
                     }
                     let s = self.subs.sub_of(p.agent);
-                    (s == *a || s == *b) && nodes.contains(&p.target)
+                    (s == a || s == b) && self.subs.pair_boundary_set(bi).contains(p.target)
                 })
                 // Actions already corrected in phase 1 keep their original
                 // target in `proposals`; the delegate sees the *reported*
@@ -135,14 +151,18 @@ impl Shield for DecentralShield {
             if visible.is_empty() {
                 continue;
             }
-            let checkable = |n: NodeId| nodes.contains(&n);
-            let allowed: Vec<NodeId> = {
-                let mut v = self.subs.members_of(*a);
-                v.extend(self.subs.members_of(*b));
-                v
-            };
-            let (corr, coll) =
-                algorithm1(proposals, &visible, checkable, state, dep, alpha, Some(&allowed));
+            let subs = &self.subs;
+            let checkable = |n: NodeId| subs.pair_boundary_set(bi).contains(n);
+            let (corr, coll) = algorithm1(
+                proposals,
+                &visible,
+                checkable,
+                state,
+                dep,
+                alpha,
+                Some(subs.pair_allowed_set(bi)),
+                &mut self.scratch,
+            );
             // Each pair's delegate exchange runs concurrently with the
             // other pairs: the phase costs the slowest exchange.
             let pair_secs = 2.0 * DELEGATE_RTT_SECS
@@ -154,12 +174,12 @@ impl Shield for DecentralShield {
             // Drop duplicate corrections for the same proposal (a local
             // shield correction wins).
             for (idx, tgt) in corr {
-                if !corrections.iter().any(|(i, _)| *i == idx) {
+                if corrected.insert(idx) {
                     corrections.push((idx, tgt));
                 }
             }
             for n in coll {
-                if !collided_nodes.contains(&n) {
+                if self.collided.insert(n) {
                     collided_nodes.push(n);
                 }
             }
@@ -279,6 +299,109 @@ mod tests {
         }
         assert!(total_d <= total_c, "d={total_d} c={total_c}");
         assert!(total_c > 0, "test vacuous");
+    }
+
+    #[test]
+    fn multi_delegate_collision_counted_once() {
+        // Regression (collision accounting): one node that lies on the
+        // boundary of SEVERAL sub-cluster pairs is checked by every
+        // pair's delegate; when two delegates both observe it overloaded
+        // in the same round, the round must still count ONE collision.
+        // (A node can never collide at both a local shield and a
+        // delegate in the same round — local shields only check interior
+        // nodes — so the cross-phase NodeSet dedupe is exercised through
+        // the multi-pair case, plus the phase-1 + phase-2 union below.)
+        use crate::cluster::{ClusterSpec, EdgeNode, Resources};
+        use crate::net::{Pos, Topology};
+
+        // Hand-built geometry: three tight groups at triangle corners,
+        // plus one junction node within boundary range of all of them.
+        let mut positions = Vec::new();
+        let corners = [(0.0, 0.0), (30.0, 0.0), (15.0, 26.0)];
+        for &(cx, cy) in &corners {
+            for i in 0..3 {
+                positions.push(Pos { x: cx + i as f64 * 0.5, y: cy });
+            }
+        }
+        let center = positions.len();
+        positions.push(Pos { x: 15.0, y: 9.0 }); // within 60% of range 40 of all groups
+        let n = positions.len();
+        let topo = Topology {
+            positions,
+            range: 40.0,
+            bw: vec![vec![100.0; n]; n],
+            latency: vec![vec![0.001; n]; n],
+        };
+        let nodes: Vec<EdgeNode> = (0..n)
+            .map(|id| EdgeNode { id, caps: Resources::new(1.0, 2048.0, 100.0) })
+            .collect();
+        let members: Vec<NodeId> = (0..n).collect();
+        let clusters = vec![ClusterSpec { members: members.clone(), head: 0 }];
+        let dep = Deployment::new(nodes, topo, clusters);
+
+        let mut d = DecentralShield::new(&dep, &members, 3);
+        // The junction node must sit on at least two pair boundaries for
+        // the scenario to be meaningful.
+        let pairs_with_center = d
+            .subs
+            .boundaries
+            .iter()
+            .enumerate()
+            .filter(|(bi, _)| d.subs.pair_boundary_set(*bi).contains(center))
+            .map(|(_, ((a, b), _))| (*a, *b))
+            .collect::<Vec<_>>();
+        assert!(
+            pairs_with_center.len() >= 2,
+            "junction node on {} pairs; geometry broken: {:?}",
+            pairs_with_center.len(),
+            d.subs.boundaries
+        );
+        let center_sub = d.subs.sub_of(center);
+        // Two agents from two *different* non-center sub-clusters, each
+        // proposing a load that alone overloads the junction node.
+        let mut agents = Vec::new();
+        for s in 0..3 {
+            if s != center_sub {
+                agents.push(d.subs.members_of(s)[0]);
+            }
+        }
+        let state = ResourceState::new(&dep);
+        let cap = state.caps(center).cpu;
+        let props = vec![
+            proposal(0, agents[0], center, cap * 0.95, 40.0, 1.0),
+            proposal(1, agents[1], center, cap * 0.95, 40.0, 1.0),
+        ];
+        let out = d.check(&props, &state, &dep, 0.9);
+        assert_eq!(
+            out.collisions, 1,
+            "node colliding at two delegates must be counted exactly once"
+        );
+        assert_eq!(d.total_collisions, 1);
+        assert!(d.delegate_rounds >= 2, "both pair delegates must have run");
+
+        // Union accounting across phases: an *interior* collision in the
+        // same round adds exactly one more collision event.
+        let mut d2 = DecentralShield::new(&dep, &members, 3);
+        // The only interior nodes here are the junction's own sub-mates:
+        // every other-sub node sits within boundary range of the junction
+        // and is therefore itself a boundary node.
+        let interior = members
+            .iter()
+            .copied()
+            .find(|&m| !d2.subs.is_boundary(m) && m != center)
+            .expect("an interior node exists");
+        let isub = d2.subs.sub_of(interior);
+        let iagent = d2
+            .subs
+            .members_of(isub)
+            .into_iter()
+            .find(|&m| m != interior)
+            .expect("a same-sub agent exists");
+        let icap = state.caps(interior).cpu;
+        let mut props2 = props.clone();
+        props2.push(proposal(2, iagent, interior, icap * 0.95, 40.0, 1.0));
+        let out2 = d2.check(&props2, &state, &dep, 0.9);
+        assert_eq!(out2.collisions, 2, "one boundary + one interior event");
     }
 
     #[test]

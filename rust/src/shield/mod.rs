@@ -14,12 +14,14 @@
 
 pub mod central;
 pub mod decentral;
+pub mod reference;
 
 pub use central::CentralShield;
 pub use decentral::DecentralShield;
 
 use crate::cluster::{Deployment, NodeId, ResourceKind, Resources};
 use crate::sim::state::ResourceState;
+use crate::util::NodeSet;
 
 /// Per-action shield-check cost (seconds): one utilization evaluation
 /// against the reporting edge's state, on cluster-head-class hardware.
@@ -68,14 +70,53 @@ pub trait Shield {
     fn name(&self) -> &'static str;
 }
 
+/// Reusable per-shield buffers for [`algorithm1`]: dense per-node load
+/// accumulators and proposal lists, sized to the deployment once and
+/// cleaned incrementally (only the nodes actually touched last round),
+/// so a shield check costs O(proposals + corrections·candidates) rather
+/// than O(proposals × nodes).
+#[derive(Debug, Default)]
+pub struct ShieldScratch {
+    /// Virtual extra demand per node from the visible proposals (plus
+    /// any corrections applied so far this round).
+    extra: Vec<Resources>,
+    /// Visible-proposal indices currently landing on each node.
+    on_node: Vec<Vec<usize>>,
+    /// Nodes whose `extra`/`on_node` entries need resetting next round.
+    dirty: Vec<NodeId>,
+}
+
+impl ShieldScratch {
+    /// Prepare for a round over `n` nodes: grow the tables if needed and
+    /// reset only the entries the previous round touched.
+    fn begin(&mut self, n: usize) {
+        if self.extra.len() < n {
+            self.extra.resize(n, Resources::default());
+            self.on_node.resize_with(n, Vec::new);
+        }
+        for &d in &self.dirty {
+            self.extra[d] = Resources::default();
+            self.on_node[d].clear();
+        }
+        self.dirty.clear();
+    }
+}
+
 /// Shared core of Algorithm 1, scoped to a set of *checkable* nodes and
 /// the subset of proposals the invoking shield can see.
 ///
-/// Returns (corrections, collisions, corrections_cost_units).  The
-/// virtual state is `state` plus every proposal in `visible`; safe
-/// alternatives are searched among `dep` neighbors of the overloaded
-/// node restricted to `allowed_targets` (None = whole cluster of the
-/// node).
+/// Returns `(corrections, collided_nodes)`.  The virtual state is
+/// `state` plus every proposal in `visible`; safe alternatives are
+/// searched among `dep` cluster-neighbors of the overloaded node
+/// restricted to `allowed_targets` (None = whole cluster of the node).
+///
+/// This is the indexed rewrite of the seed's scan-based implementation
+/// (kept verbatim in [`reference::algorithm1_scan`]): membership tests
+/// are O(1) [`NodeSet`] lookups, the per-node accumulators live in
+/// `scratch` across rounds, and the layer queue walks by cursor instead
+/// of `Vec::remove(0)`.  Output is bit-identical to the reference —
+/// pinned by property tests in `rust/tests/integration.rs`.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn algorithm1(
     proposals: &[ProposedAction],
     visible: &[usize],
@@ -83,40 +124,39 @@ pub(crate) fn algorithm1(
     state: &ResourceState,
     dep: &Deployment,
     alpha: f64,
-    allowed_targets: Option<&[NodeId]>,
+    allowed_targets: Option<&NodeSet>,
+    scratch: &mut ShieldScratch,
 ) -> (Vec<(usize, NodeId)>, Vec<NodeId>) {
-    // Virtual placement: extra demand per node from the visible proposals.
-    let mut extra: Vec<Resources> = vec![Resources::default(); dep.n()];
-    // Which proposals currently land on each node (by visible index).
-    let mut on_node: Vec<Vec<usize>> = vec![Vec::new(); dep.n()];
-    // Current (possibly corrected) target per proposal idx.
-    let mut cur_target: std::collections::BTreeMap<usize, NodeId> = Default::default();
+    scratch.begin(dep.n());
+    // Virtual placement of the visible proposals.
+    let mut nodes: Vec<NodeId> = Vec::with_capacity(visible.len());
     for &vi in visible {
         let p = &proposals[vi];
-        extra[p.target] = extra[p.target].add(&p.demand);
-        on_node[p.target].push(vi);
-        cur_target.insert(p.idx, p.target);
+        if scratch.on_node[p.target].is_empty() {
+            nodes.push(p.target);
+            scratch.dirty.push(p.target);
+        }
+        scratch.extra[p.target] = scratch.extra[p.target].add(&p.demand);
+        scratch.on_node[p.target].push(vi);
     }
+    nodes.sort_unstable();
 
     let util_with = |node: NodeId, extra: &Resources, k: ResourceKind| -> f64 {
         state.caps(node).utilization(&state.demand(node).add(extra), k)
-    };
-    let node_overloaded = |node: NodeId, extra: &[Resources]| -> bool {
-        ResourceKind::ALL.iter().any(|&k| util_with(node, &extra[node], k) > alpha)
     };
 
     let mut corrections: Vec<(usize, NodeId)> = Vec::new();
     let mut collided: Vec<NodeId> = Vec::new();
 
     // Line 4: for each edge node that received proposals and is checkable.
-    let mut nodes: Vec<NodeId> =
-        on_node.iter().enumerate().filter(|(_, v)| !v.is_empty()).map(|(n, _)| n).collect();
-    nodes.sort_unstable();
     for node in nodes {
         if !checkable(node) {
             continue;
         }
-        if !node_overloaded(node, &extra) {
+        let overloaded = |extra: &[Resources]| {
+            ResourceKind::ALL.iter().any(|&k| util_with(node, &extra[node], k) > alpha)
+        };
+        if !overloaded(&scratch.extra) {
             continue;
         }
         // Pre-correction overload from the joint action = one collision
@@ -127,7 +167,7 @@ pub(crate) fn algorithm1(
         // Line 6: rank assigned layers by resource-demand weight ω
         // (Eq. 3) in descending order.
         let caps = *state.caps(node);
-        on_node[node].sort_by(|&a, &b| {
+        scratch.on_node[node].sort_by(|&a, &b| {
             let wa = weight(&proposals[a].demand, &caps);
             let wb = weight(&proposals[b].demand, &caps);
             wb.partial_cmp(&wa).unwrap()
@@ -135,36 +175,46 @@ pub(crate) fn algorithm1(
 
         // Candidate alternatives: nearby edges of the overloaded node,
         // ordered once by combined virtual utilization ascending (the
-        // paper ranks per overloaded node, not per moved layer) — also
-        // keeps the hot path allocation-light.
-        let mut cands: Vec<NodeId> = dep
-            .cluster_neighbors(node)
-            .into_iter()
+        // paper ranks per overloaded node, not per moved layer).  The
+        // sort key is precomputed — the virtual state does not change
+        // while sorting.
+        let mut cands: Vec<(f64, NodeId)> = dep
+            .cluster_neighbors_ref(node)
+            .iter()
+            .copied()
             .filter(|&c| c != node)
-            .filter(|&c| allowed_targets.map(|a| a.contains(&c)).unwrap_or(true))
+            .filter(|&c| allowed_targets.map(|a| a.contains(c)).unwrap_or(true))
+            .map(|c| {
+                let u = state
+                    .caps(c)
+                    .combined_utilization(&state.demand(c).add(&scratch.extra[c]));
+                (u, c)
+            })
             .collect();
-        cands.sort_by(|&a, &b| {
-            let ua = state.caps(a).combined_utilization(&state.demand(a).add(&extra[a]));
-            let ub = state.caps(b).combined_utilization(&state.demand(b).add(&extra[b]));
-            ua.partial_cmp(&ub).unwrap()
-        });
+        cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
 
-        // Line 8: while overloaded, move the top layer elsewhere.
-        let mut queue: Vec<usize> = on_node[node].clone();
-        while node_overloaded(node, &extra) && !queue.is_empty() {
-            let vi = queue.remove(0);
+        // Line 8: while overloaded, move the top layer elsewhere
+        // (cursor walk; the ranked list is not mutated).
+        let mut qi = 0usize;
+        while overloaded(&scratch.extra) && qi < scratch.on_node[node].len() {
+            let vi = scratch.on_node[node][qi];
+            qi += 1;
             let p = &proposals[vi];
-            let safe = cands.iter().copied().find(|&c| {
+            let safe = cands.iter().map(|&(_, c)| c).find(|&c| {
                 ResourceKind::ALL
                     .iter()
-                    .all(|&k| util_with(c, &extra[c].add(&p.demand), k) <= alpha)
+                    .all(|&k| util_with(c, &scratch.extra[c].add(&p.demand), k) <= alpha)
             });
             if let Some(new_target) = safe {
                 // Move the layer in the virtual state.
-                extra[node] = extra[node].sub(&p.demand);
-                extra[new_target] = extra[new_target].add(&p.demand);
+                scratch.extra[node] = scratch.extra[node].sub(&p.demand);
+                if scratch.on_node[new_target].is_empty() {
+                    // First write to a pure correction target: mark it
+                    // for cleanup (duplicates are harmless).
+                    scratch.dirty.push(new_target);
+                }
+                scratch.extra[new_target] = scratch.extra[new_target].add(&p.demand);
                 corrections.push((p.idx, new_target));
-                cur_target.insert(p.idx, new_target);
             }
             // If no safe host exists the layer stays (the overload will be
             // visible at execution) — matches the paper's residual unsafe
@@ -220,8 +270,9 @@ mod tests {
         let dep = small_dep();
         let state = ResourceState::new(&dep);
         let props = vec![proposal(0, 0, 1, 0.05, 50.0, 1.0)];
+        let mut scratch = ShieldScratch::default();
         let (corr, coll) =
-            algorithm1(&props, &[0], |_| true, &state, &dep, 0.9, None);
+            algorithm1(&props, &[0], |_| true, &state, &dep, 0.9, None, &mut scratch);
         assert!(corr.is_empty());
         assert!(coll.is_empty());
     }
@@ -237,8 +288,10 @@ mod tests {
             proposal(0, 1, target, cap * 0.6, 50.0, 1.0),
             proposal(1, 2, target, cap * 0.6, 50.0, 1.0),
         ];
-        let (corr, coll) =
-            algorithm1(&props, &[0, 1], |_| true, &state, &dep, 0.9, None);
+        let (corr, coll) = algorithm1(
+            &props, &[0, 1], |_| true, &state, &dep, 0.9, None,
+            &mut ShieldScratch::default(),
+        );
         assert_eq!(coll.len(), 1);
         assert_eq!(corr.len(), 1, "one layer moved suffices");
         let (_, new_target) = corr[0];
@@ -261,6 +314,7 @@ mod tests {
             &dep,
             0.9,
             None,
+            &mut ShieldScratch::default(),
         );
         // Moving the heavy one (idx 0) fixes the overload with minimal
         // interference (criterion 2).
@@ -279,8 +333,10 @@ mod tests {
         }
         let cap = state.caps(0).cpu;
         let props = vec![proposal(0, 1, 0, cap * 0.3, 10.0, 1.0)];
-        let (corr, coll) =
-            algorithm1(&props, &[0], |_| true, &state, &dep, 0.9, None);
+        let (corr, coll) = algorithm1(
+            &props, &[0], |_| true, &state, &dep, 0.9, None,
+            &mut ShieldScratch::default(),
+        );
         assert_eq!(coll.len(), 1);
         assert!(corr.is_empty(), "no safe host anywhere");
     }
@@ -295,8 +351,10 @@ mod tests {
             proposal(1, 2, 0, cap * 0.8, 50.0, 1.0),
         ];
         // Node 0 not checkable: the collision goes unseen.
-        let (corr, coll) =
-            algorithm1(&props, &[0, 1], |n| n != 0, &state, &dep, 0.9, None);
+        let (corr, coll) = algorithm1(
+            &props, &[0, 1], |n| n != 0, &state, &dep, 0.9, None,
+            &mut ShieldScratch::default(),
+        );
         assert!(coll.is_empty());
         assert!(corr.is_empty());
     }
@@ -317,6 +375,7 @@ mod tests {
             &dep,
             0.9,
             None,
+            &mut ShieldScratch::default(),
         );
         for &(idx, new_target) in &corr {
             let d = &props[idx].demand;

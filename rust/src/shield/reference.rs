@@ -1,0 +1,307 @@
+//! Scan-based reference shields — the seed's pre-index implementation,
+//! kept verbatim.
+//!
+//! Two consumers rely on this module staying put:
+//!
+//! * the equivalence property tests in `rust/tests/integration.rs`, which
+//!   pin the indexed hot path ([`super::algorithm1`],
+//!   [`CentralShield`](super::CentralShield),
+//!   [`DecentralShield`](super::DecentralShield)) to report *identical*
+//!   corrections and collisions;
+//! * `benches/hotpath.rs`, which measures the indexed shields against
+//!   these baselines on large clusters.
+//!
+//! Everything here does membership via `Vec::contains` / linear
+//! `position` scans, exactly as the seed did — do not "optimize" it.
+
+use crate::cluster::{Deployment, NodeId, ResourceKind, Resources, SubClusters};
+use crate::sim::state::ResourceState;
+
+use super::{
+    weight, ProposedAction, Shield, ShieldOutcome, CHECK_SECS_PER_ACTION,
+    FIX_SECS_PER_CORRECTION,
+};
+use super::decentral::DELEGATE_RTT_SECS;
+
+/// Pre-refactor Algorithm 1: O(proposals × nodes) membership scans,
+/// `BTreeMap` bookkeeping, `Vec::remove(0)` queue.
+pub fn algorithm1_scan(
+    proposals: &[ProposedAction],
+    visible: &[usize],
+    checkable: impl Fn(NodeId) -> bool,
+    state: &ResourceState,
+    dep: &Deployment,
+    alpha: f64,
+    allowed_targets: Option<&[NodeId]>,
+) -> (Vec<(usize, NodeId)>, Vec<NodeId>) {
+    // Virtual placement: extra demand per node from the visible proposals.
+    let mut extra: Vec<Resources> = vec![Resources::default(); dep.n()];
+    // Which proposals currently land on each node (by visible index).
+    let mut on_node: Vec<Vec<usize>> = vec![Vec::new(); dep.n()];
+    // Current (possibly corrected) target per proposal idx.
+    let mut cur_target: std::collections::BTreeMap<usize, NodeId> = Default::default();
+    for &vi in visible {
+        let p = &proposals[vi];
+        extra[p.target] = extra[p.target].add(&p.demand);
+        on_node[p.target].push(vi);
+        cur_target.insert(p.idx, p.target);
+    }
+
+    let util_with = |node: NodeId, extra: &Resources, k: ResourceKind| -> f64 {
+        state.caps(node).utilization(&state.demand(node).add(extra), k)
+    };
+    let node_overloaded = |node: NodeId, extra: &[Resources]| -> bool {
+        ResourceKind::ALL.iter().any(|&k| util_with(node, &extra[node], k) > alpha)
+    };
+
+    let mut corrections: Vec<(usize, NodeId)> = Vec::new();
+    let mut collided: Vec<NodeId> = Vec::new();
+
+    let mut nodes: Vec<NodeId> =
+        on_node.iter().enumerate().filter(|(_, v)| !v.is_empty()).map(|(n, _)| n).collect();
+    nodes.sort_unstable();
+    for node in nodes {
+        if !checkable(node) {
+            continue;
+        }
+        if !node_overloaded(node, &extra) {
+            continue;
+        }
+        collided.push(node);
+
+        let caps = *state.caps(node);
+        on_node[node].sort_by(|&a, &b| {
+            let wa = weight(&proposals[a].demand, &caps);
+            let wb = weight(&proposals[b].demand, &caps);
+            wb.partial_cmp(&wa).unwrap()
+        });
+
+        let mut cands: Vec<NodeId> = dep
+            .cluster_neighbors(node)
+            .into_iter()
+            .filter(|&c| c != node)
+            .filter(|&c| allowed_targets.map(|a| a.contains(&c)).unwrap_or(true))
+            .collect();
+        cands.sort_by(|&a, &b| {
+            let ua = state.caps(a).combined_utilization(&state.demand(a).add(&extra[a]));
+            let ub = state.caps(b).combined_utilization(&state.demand(b).add(&extra[b]));
+            ua.partial_cmp(&ub).unwrap()
+        });
+
+        let mut queue: Vec<usize> = on_node[node].clone();
+        while node_overloaded(node, &extra) && !queue.is_empty() {
+            let vi = queue.remove(0);
+            let p = &proposals[vi];
+            let safe = cands.iter().copied().find(|&c| {
+                ResourceKind::ALL
+                    .iter()
+                    .all(|&k| util_with(c, &extra[c].add(&p.demand), k) <= alpha)
+            });
+            if let Some(new_target) = safe {
+                extra[node] = extra[node].sub(&p.demand);
+                extra[new_target] = extra[new_target].add(&p.demand);
+                corrections.push((p.idx, new_target));
+                cur_target.insert(p.idx, new_target);
+            }
+        }
+    }
+    (corrections, collided)
+}
+
+/// Scan-based SROLE-C shield (seed implementation).
+#[derive(Debug, Default)]
+pub struct CentralShieldScan {
+    pub total_checked: usize,
+    pub total_corrections: usize,
+    pub total_collisions: usize,
+}
+
+impl CentralShieldScan {
+    pub fn new() -> CentralShieldScan {
+        CentralShieldScan::default()
+    }
+}
+
+impl Shield for CentralShieldScan {
+    fn check(
+        &mut self,
+        proposals: &[ProposedAction],
+        state: &ResourceState,
+        dep: &Deployment,
+        alpha: f64,
+    ) -> ShieldOutcome {
+        let visible: Vec<usize> = (0..proposals.len()).collect();
+        let (corrections, collided) =
+            algorithm1_scan(proposals, &visible, |_| true, state, dep, alpha, None);
+        let collisions = collided.len();
+        let shield_secs = proposals.len() as f64 * CHECK_SECS_PER_ACTION
+            + corrections.len() as f64 * FIX_SECS_PER_CORRECTION;
+        self.total_checked += proposals.len();
+        self.total_corrections += corrections.len();
+        self.total_collisions += collisions;
+        ShieldOutcome { corrections, collisions, shield_secs, checked: proposals.len() }
+    }
+
+    fn name(&self) -> &'static str {
+        "srole_c_scan"
+    }
+}
+
+// Seed-style scan lookups over the SubClusters raw partition.
+fn scan_sub_of(subs: &SubClusters, node: NodeId) -> usize {
+    let idx = subs.members.iter().position(|&m| m == node).expect("node not a member");
+    subs.assignment[idx]
+}
+
+fn scan_members_of(subs: &SubClusters, sub: usize) -> Vec<NodeId> {
+    subs.members
+        .iter()
+        .zip(&subs.assignment)
+        .filter(|(_, &a)| a == sub)
+        .map(|(&m, _)| m)
+        .collect()
+}
+
+fn scan_boundary_nodes(subs: &SubClusters) -> Vec<NodeId> {
+    let mut out: Vec<NodeId> = Vec::new();
+    for (_, nodes) in &subs.boundaries {
+        for &n in nodes {
+            if !out.contains(&n) {
+                out.push(n);
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Scan-based SROLE-D shield (seed implementation): every membership,
+/// boundary and allowed-target query is a `Vec` scan.
+pub struct DecentralShieldScan {
+    pub subs: SubClusters,
+    pub total_checked: usize,
+    pub total_corrections: usize,
+    pub total_collisions: usize,
+    pub delegate_rounds: usize,
+}
+
+impl DecentralShieldScan {
+    pub fn new(dep: &Deployment, cluster_members: &[NodeId], k: usize) -> DecentralShieldScan {
+        let subs = SubClusters::build(cluster_members, &dep.topo, k);
+        DecentralShieldScan {
+            subs,
+            total_checked: 0,
+            total_corrections: 0,
+            total_collisions: 0,
+            delegate_rounds: 0,
+        }
+    }
+}
+
+impl Shield for DecentralShieldScan {
+    fn check(
+        &mut self,
+        proposals: &[ProposedAction],
+        state: &ResourceState,
+        dep: &Deployment,
+        alpha: f64,
+    ) -> ShieldOutcome {
+        let boundary = scan_boundary_nodes(&self.subs);
+        let is_member = |n: NodeId| self.subs.members.contains(&n);
+
+        let mut corrections: Vec<(usize, NodeId)> = Vec::new();
+        let mut collided_nodes: Vec<NodeId> = Vec::new();
+        let mut per_shield_secs = vec![0.0f64; self.subs.k];
+
+        // Phase 1: per-sub-cluster shields over interior targets.
+        for s in 0..self.subs.k {
+            let visible: Vec<usize> = proposals
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| {
+                    is_member(p.agent)
+                        && scan_sub_of(&self.subs, p.agent) == s
+                        && !boundary.contains(&p.target)
+                })
+                .map(|(i, _)| i)
+                .collect();
+            let local_members = scan_members_of(&self.subs, s);
+            let checkable =
+                |n: NodeId| local_members.contains(&n) && !boundary.contains(&n);
+            let (corr, coll) = algorithm1_scan(
+                proposals,
+                &visible,
+                checkable,
+                state,
+                dep,
+                alpha,
+                Some(&local_members),
+            );
+            per_shield_secs[s] += visible.len() as f64 * CHECK_SECS_PER_ACTION
+                + corr.len() as f64 * FIX_SECS_PER_CORRECTION;
+            self.total_checked += visible.len();
+            corrections.extend(corr);
+            for n in coll {
+                if !collided_nodes.contains(&n) {
+                    collided_nodes.push(n);
+                }
+            }
+        }
+
+        // Phase 2: delegates per neighboring pair.
+        let mut delegate_secs = 0.0f64;
+        for ((a, b), nodes) in &self.subs.boundaries.clone() {
+            let visible: Vec<usize> = proposals
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| {
+                    if !is_member(p.agent) {
+                        return false;
+                    }
+                    let s = scan_sub_of(&self.subs, p.agent);
+                    (s == *a || s == *b) && nodes.contains(&p.target)
+                })
+                .map(|(i, _)| i)
+                .collect();
+            if visible.is_empty() {
+                continue;
+            }
+            let checkable = |n: NodeId| nodes.contains(&n);
+            let allowed: Vec<NodeId> = {
+                let mut v = scan_members_of(&self.subs, *a);
+                v.extend(scan_members_of(&self.subs, *b));
+                v
+            };
+            let (corr, coll) = algorithm1_scan(
+                proposals, &visible, checkable, state, dep, alpha, Some(&allowed),
+            );
+            let pair_secs = 2.0 * DELEGATE_RTT_SECS
+                + visible.len() as f64 * CHECK_SECS_PER_ACTION
+                + corr.len() as f64 * FIX_SECS_PER_CORRECTION;
+            delegate_secs = delegate_secs.max(pair_secs);
+            self.delegate_rounds += 1;
+            self.total_checked += visible.len();
+            for (idx, tgt) in corr {
+                if !corrections.iter().any(|(i, _)| *i == idx) {
+                    corrections.push((idx, tgt));
+                }
+            }
+            for n in coll {
+                if !collided_nodes.contains(&n) {
+                    collided_nodes.push(n);
+                }
+            }
+        }
+
+        let shield_secs =
+            per_shield_secs.iter().cloned().fold(0.0, f64::max) + delegate_secs;
+        let collisions = collided_nodes.len();
+        self.total_corrections += corrections.len();
+        self.total_collisions += collisions;
+        ShieldOutcome { corrections, collisions, shield_secs, checked: proposals.len() }
+    }
+
+    fn name(&self) -> &'static str {
+        "srole_d_scan"
+    }
+}

@@ -26,6 +26,19 @@ impl Default for BenchConfig {
     }
 }
 
+impl BenchConfig {
+    /// Configuration for the whole-sweep figure benches: a full
+    /// experiment grid per sample is expensive, so no warmup and few
+    /// samples.  `SROLE_BENCH_FAST=1` drops to a single sample.
+    pub fn sweep() -> BenchConfig {
+        if std::env::var("SROLE_BENCH_FAST").is_ok() {
+            BenchConfig { warmup_iters: 0, samples: 1, max_time: Duration::from_secs(60) }
+        } else {
+            BenchConfig { warmup_iters: 0, samples: 3, max_time: Duration::from_secs(300) }
+        }
+    }
+}
+
 /// Result of one registered benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {

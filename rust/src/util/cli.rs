@@ -34,17 +34,26 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     Unknown(String),
-    #[error("flag --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     Invalid(String, String),
-    #[error("help requested")]
     Help,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(n) => write!(f, "unknown flag --{n}"),
+            CliError::MissingValue(n) => write!(f, "flag --{n} requires a value"),
+            CliError::Invalid(n, v) => write!(f, "invalid value for --{n}: {v}"),
+            CliError::Help => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Cli {
     pub fn new(program: &str, about: &str) -> Cli {

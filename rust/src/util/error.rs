@@ -1,0 +1,146 @@
+//! Minimal error type (offline substitute for `anyhow`).
+//!
+//! [`Error`] carries a human-readable context chain; [`Context`] mirrors
+//! `anyhow::Context` for both `Result` and `Option`; the crate-root
+//! [`bail!`](crate::bail) and [`format_err!`](crate::format_err) macros
+//! replace `anyhow::bail!` / `anyhow::anyhow!`.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and thus `?` on any std error)
+//! coherent.
+
+use std::fmt;
+
+/// An error with a context chain (outermost context first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `Result` defaulting to [`Error`], as `anyhow::Result` does.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    fn wrap(mut self, ctx: impl fmt::Display) -> Error {
+        self.chain.insert(0, ctx.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the source chain as context entries.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to errors (and missing `Option` values).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`](crate::util::error::Error) from a format string.
+#[macro_export]
+macro_rules! format_err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`](crate::util::error::Error).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::format_err!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn failing_io() -> Result<String> {
+        let text = std::fs::read_to_string("/definitely/not/a/path")
+            .with_context(|| "reading config".to_string())?;
+        Ok(text)
+    }
+
+    #[test]
+    fn io_error_converts_and_carries_context() {
+        let err = failing_io().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.starts_with("reading config: "), "{msg}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<usize> = None;
+        let err = v.context("missing key").unwrap_err();
+        assert_eq!(err.to_string(), "missing key");
+        assert_eq!(Some(3).context("x").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_format_err() {
+        fn f(flag: bool) -> Result<usize> {
+            if flag {
+                bail!("bad flag {}", 42);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(true).unwrap_err().to_string(), "bad flag 42");
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(format_err!("x={}", 1).to_string(), "x=1");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = Error::msg("root").wrap("mid").wrap("outer");
+        assert_eq!(e.to_string(), "outer: mid: root");
+        assert_eq!(format!("{e:?}"), "outer: mid: root");
+    }
+}

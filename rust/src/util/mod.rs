@@ -1,8 +1,8 @@
 //! Self-contained utility substrates.
 //!
-//! The build environment is fully offline with only the `xla` crate
-//! closure vendored, so the roles usually played by `rand`, `serde_json`,
-//! `clap` and `criterion` are implemented here from scratch:
+//! The build environment is fully offline (no external crates at all),
+//! so the roles usually played by `rand`, `serde_json`, `clap`,
+//! `criterion` and `anyhow` are implemented here from scratch:
 //!
 //! * [`rng`] — PCG-XSH-RR 64/32 deterministic PRNG;
 //! * [`stats`] — medians, percentiles, summary statistics;
@@ -10,13 +10,19 @@
 //!   `artifacts/manifest.json` and metric dumps);
 //! * [`table`] — aligned console tables for the figure harness;
 //! * [`cli`] — a minimal declarative flag parser for the binaries;
-//! * [`benchkit`] — a criterion-style measurement harness for `benches/`.
+//! * [`benchkit`] — a criterion-style measurement harness for `benches/`;
+//! * [`error`] — an `anyhow`-style error type with context chains;
+//! * [`nodeset`] — a dense bitset keyed by `NodeId` (the shield-hot-path
+//!   membership index).
 
 pub mod benchkit;
 pub mod cli;
+pub mod error;
 pub mod json;
+pub mod nodeset;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use nodeset::NodeSet;
 pub use rng::Rng;

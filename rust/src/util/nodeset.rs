@@ -1,0 +1,183 @@
+//! Dense bitset keyed by `NodeId` — the O(1) membership index behind the
+//! shield hot path.
+//!
+//! The seed implementation answered "is this node a member / on a
+//! boundary / an allowed target?" with `Vec::contains` scans, making each
+//! shield round O(proposals × nodes).  A [`NodeSet`] answers the same
+//! question with one word load, and the sub-cluster / shield structures
+//! precompute one per membership relation.
+
+/// A fixed-universe bitset over node ids (`0..n`).  Queries outside the
+/// universe return `false` rather than panicking, matching the semantics
+/// of a `Vec::contains` scan.
+#[derive(Debug, Clone, Default)]
+pub struct NodeSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+/// Equality is by membership, not allocation: sets with the same members
+/// but different universe sizes compare equal.
+impl PartialEq for NodeSet {
+    fn eq(&self, other: &NodeSet) -> bool {
+        if self.len != other.len {
+            return false;
+        }
+        let common = self.words.len().min(other.words.len());
+        self.words[..common] == other.words[..common]
+            && self.words[common..].iter().all(|&w| w == 0)
+            && other.words[common..].iter().all(|&w| w == 0)
+    }
+}
+
+impl Eq for NodeSet {}
+
+impl NodeSet {
+    /// Empty set over the universe `0..n`.
+    pub fn with_universe(n: usize) -> NodeSet {
+        NodeSet { words: vec![0; n.div_ceil(64)], len: 0 }
+    }
+
+    /// Build from a slice of members (universe `0..n`).
+    pub fn from_slice(n: usize, members: &[usize]) -> NodeSet {
+        let mut s = NodeSet::with_universe(n);
+        for &m in members {
+            s.insert(m);
+        }
+        s
+    }
+
+    /// Insert; grows the universe if needed.  Returns true when newly
+    /// inserted.
+    pub fn insert(&mut self, node: usize) -> bool {
+        let w = node / 64;
+        if w >= self.words.len() {
+            self.words.resize(w + 1, 0);
+        }
+        let mask = 1u64 << (node % 64);
+        if self.words[w] & mask == 0 {
+            self.words[w] |= mask;
+            self.len += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, node: usize) -> bool {
+        self.words
+            .get(node / 64)
+            .map(|w| w & (1u64 << (node % 64)) != 0)
+            .unwrap_or(false)
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Remove every member, keeping the allocated universe.
+    pub fn clear(&mut self) {
+        self.words.fill(0);
+        self.len = 0;
+    }
+
+    /// Members in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    /// Union in place.
+    pub fn union_with(&mut self, other: &NodeSet) {
+        if other.words.len() > self.words.len() {
+            self.words.resize(other.words.len(), 0);
+        }
+        for (a, &b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+        self.len = self.words.iter().map(|w| w.count_ones() as usize).sum();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_len() {
+        let mut s = NodeSet::with_universe(10);
+        assert!(!s.contains(3));
+        assert!(s.insert(3));
+        assert!(!s.insert(3), "double insert reports false");
+        assert!(s.insert(9));
+        assert!(s.contains(3) && s.contains(9));
+        assert_eq!(s.len(), 2);
+        assert!(!s.contains(99), "out-of-universe query is false, not a panic");
+    }
+
+    #[test]
+    fn from_slice_and_iter_ascending() {
+        let s = NodeSet::from_slice(200, &[150, 3, 64, 63, 3]);
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![3, 63, 64, 150]);
+    }
+
+    #[test]
+    fn matches_vec_contains_semantics() {
+        let members = vec![1usize, 5, 17, 64, 65, 127];
+        let s = NodeSet::from_slice(128, &members);
+        for node in 0..140 {
+            assert_eq!(s.contains(node), members.contains(&node), "node {node}");
+        }
+    }
+
+    #[test]
+    fn clear_keeps_universe() {
+        let mut s = NodeSet::from_slice(100, &[10, 70]);
+        s.clear();
+        assert_eq!(s.len(), 0);
+        assert!(!s.contains(10));
+        s.insert(70);
+        assert!(s.contains(70));
+    }
+
+    #[test]
+    fn insert_grows_universe() {
+        let mut s = NodeSet::with_universe(1);
+        assert!(s.insert(500));
+        assert!(s.contains(500));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn equality_ignores_universe_size() {
+        assert_eq!(NodeSet::from_slice(64, &[1, 2]), NodeSet::from_slice(256, &[1, 2]));
+        assert_ne!(NodeSet::from_slice(64, &[1]), NodeSet::from_slice(256, &[1, 2]));
+        assert_ne!(NodeSet::from_slice(256, &[1, 200]), NodeSet::from_slice(256, &[1, 2]));
+        assert_eq!(NodeSet::with_universe(0), NodeSet::with_universe(512));
+    }
+
+    #[test]
+    fn union() {
+        let mut a = NodeSet::from_slice(64, &[1, 2]);
+        let b = NodeSet::from_slice(256, &[2, 200]);
+        a.union_with(&b);
+        assert_eq!(a.iter().collect::<Vec<_>>(), vec![1, 2, 200]);
+        assert_eq!(a.len(), 3);
+    }
+}

@@ -257,6 +257,157 @@ fn prop_wave_places_all_layers_within_candidates() {
 }
 
 // ---------------------------------------------------------------------------
+// Indexed-vs-scan shield equivalence (the de-quadratization contract)
+// ---------------------------------------------------------------------------
+
+fn random_round(
+    rng: &mut Rng,
+    members: &[srole::cluster::NodeId],
+    state: &ResourceState,
+    max_props: usize,
+) -> Vec<ProposedAction> {
+    (0..1 + rng.below(max_props))
+        .map(|i| {
+            let target = members[rng.below(members.len())];
+            let caps = *state.caps(target);
+            ProposedAction {
+                idx: i,
+                agent: members[rng.below(members.len())],
+                job: i,
+                layer_id: i,
+                demand: srole::cluster::Resources {
+                    cpu: caps.cpu * rng.range_f64(0.1, 0.7),
+                    mem: caps.mem * rng.range_f64(0.05, 0.4),
+                    bw: caps.bw * rng.range_f64(0.0, 0.2),
+                },
+                target,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_indexed_shields_match_scan_reference() {
+    // For random rounds over random deployments, the indexed SROLE-C and
+    // SROLE-D shields must report *identical* corrections, collisions and
+    // modeled cost to the seed's scan-based reference implementation.
+    use srole::shield::reference::{CentralShieldScan, DecentralShieldScan};
+    let mut rng = Rng::new(4242);
+    for case in 0..120 {
+        let n = 6 + rng.below(20);
+        let dep = Deployment::generate(&mut rng, n, n, &CONTAINER_PROFILE);
+        let members = dep.clusters[0].members.clone();
+        let mut state = ResourceState::new(&dep);
+        // Random pre-existing load.
+        for &m in &members {
+            if rng.chance(0.4) {
+                let caps = *state.caps(m);
+                let frac = rng.range_f64(0.0, 0.8);
+                state.place(m, caps.scale(frac), caps.scale(frac), false);
+            }
+        }
+        let props = random_round(&mut rng, &members, &state, 8);
+        let alpha = 0.9;
+
+        let mut c = CentralShield::new();
+        let mut c_ref = CentralShieldScan::new();
+        let oc = c.check(&props, &state, &dep, alpha);
+        let or = c_ref.check(&props, &state, &dep, alpha);
+        assert_eq!(oc.corrections, or.corrections, "case {case}: central corrections");
+        assert_eq!(oc.collisions, or.collisions, "case {case}: central collisions");
+        assert_eq!(oc.checked, or.checked);
+        assert!((oc.shield_secs - or.shield_secs).abs() < 1e-12);
+
+        let k = 2 + rng.below(3);
+        let mut d = DecentralShield::new(&dep, &members, k);
+        let mut d_ref = DecentralShieldScan::new(&dep, &members, k);
+        let od = d.check(&props, &state, &dep, alpha);
+        let odr = d_ref.check(&props, &state, &dep, alpha);
+        assert_eq!(od.corrections, odr.corrections, "case {case}: decentral corrections");
+        assert_eq!(od.collisions, odr.collisions, "case {case}: decentral collisions");
+        assert!((od.shield_secs - odr.shield_secs).abs() < 1e-12);
+        assert_eq!(d.delegate_rounds, d_ref.delegate_rounds, "case {case}");
+        assert_eq!(d.total_checked, d_ref.total_checked, "case {case}");
+    }
+}
+
+#[test]
+fn prop_shield_scratch_reuse_stays_clean_across_rounds() {
+    // One long-lived indexed shield (its scratch buffers reused every
+    // round) must keep matching FRESH scan-based shields round by round —
+    // i.e. no state may leak between rounds through the accumulators.
+    use srole::shield::reference::{CentralShieldScan, DecentralShieldScan};
+    let mut rng = Rng::new(9009);
+    let dep = Deployment::generate(&mut rng, 20, 20, &CONTAINER_PROFILE);
+    let members = dep.clusters[0].members.clone();
+    let mut state = ResourceState::new(&dep);
+    let mut c = CentralShield::new();
+    let mut d = DecentralShield::new(&dep, &members, 3);
+    for round in 0..60 {
+        // Mutate the shared state a little so rounds differ.
+        if rng.chance(0.3) {
+            let node = members[rng.below(members.len())];
+            let caps = *state.caps(node);
+            let frac = rng.range_f64(0.05, 0.3);
+            state.place(node, caps.scale(frac), caps.scale(frac), false);
+        }
+        let props = random_round(&mut rng, &members, &state, 7);
+        let mut c_ref = CentralShieldScan::new();
+        let mut d_ref = DecentralShieldScan::new(&dep, &members, 3);
+        let oc = c.check(&props, &state, &dep, 0.9);
+        let or = c_ref.check(&props, &state, &dep, 0.9);
+        assert_eq!(oc.corrections, or.corrections, "round {round}: central");
+        assert_eq!(oc.collisions, or.collisions, "round {round}: central");
+        let od = d.check(&props, &state, &dep, 0.9);
+        let odr = d_ref.check(&props, &state, &dep, 0.9);
+        assert_eq!(od.corrections, odr.corrections, "round {round}: decentral");
+        assert_eq!(od.collisions, odr.collisions, "round {round}: decentral");
+    }
+}
+
+#[test]
+fn prop_decentral_total_bounded_by_central_across_seeds() {
+    // §IV-D: the decentralized shields see strictly less than the
+    // central one.  Pooled per seed: total_d <= total_c, over ≥5 seeds.
+    let mut grand_c = 0usize;
+    for seed in [101u64, 202, 303, 404, 505, 606] {
+        let mut rng = Rng::new(seed);
+        let dep = Deployment::generate(&mut rng, 10, 10, &CONTAINER_PROFILE);
+        let members = dep.clusters[0].members.clone();
+        let state = ResourceState::new(&dep);
+        let mut total_c = 0usize;
+        let mut total_d = 0usize;
+        for _ in 0..40 {
+            let mut props = Vec::new();
+            for i in 0..3 {
+                let agent = members[rng.below(members.len())];
+                let target = members[rng.below(members.len())];
+                let cap = state.caps(target).cpu;
+                props.push(ProposedAction {
+                    idx: i,
+                    agent,
+                    job: i,
+                    layer_id: i,
+                    demand: srole::cluster::Resources {
+                        cpu: cap * rng.range_f64(0.3, 0.8),
+                        mem: 60.0,
+                        bw: 1.5,
+                    },
+                    target,
+                });
+            }
+            let mut c = CentralShield::new();
+            let mut d = DecentralShield::new(&dep, &members, 3);
+            total_c += c.check(&props, &state, &dep, 0.9).collisions;
+            total_d += d.check(&props, &state, &dep, 0.9).collisions;
+        }
+        assert!(total_d <= total_c, "seed {seed}: d={total_d} c={total_c}");
+        grand_c += total_c;
+    }
+    assert!(grand_c > 0, "test vacuous: no collisions at all");
+}
+
+// ---------------------------------------------------------------------------
 // Failure injection
 // ---------------------------------------------------------------------------
 
