@@ -9,7 +9,7 @@
 //! * PJRT `qnet_fwd` action-scoring latency (the DQN request path),
 //!   skipped when artifacts are absent.
 
-use srole::cluster::{Deployment, Resources, CONTAINER_PROFILE};
+use srole::cluster::{Deployment, Membership, Resources, SubClusters, CONTAINER_PROFILE};
 use srole::config::ExperimentConfig;
 use srole::coordinator::{pretrain, Method};
 use srole::dnn::ModelKind;
@@ -106,6 +106,34 @@ fn main() {
         proposals.len() as f64 / t_c.max(1e-12)
     );
 
+    // --- incremental membership maintenance vs full rebuild -------------
+    // One churn event (fail + rejoin) through the incremental indexes vs
+    // rebuilding the same structures from scratch, on the 100-node
+    // deployment — the event core pays the left column per NodeFail.
+    {
+        let mut membership = Membership::full(&dep);
+        bench.measure("membership_incremental_fail_join_100n", || {
+            membership.fail(&dep, 37);
+            membership.join(&dep, 37);
+        });
+        let alive = membership.alive_set().clone();
+        bench.measure("membership_rebuild_100n", || Membership::rebuild(&dep, &alive));
+
+        let mut subs = SubClusters::build(&members, &dep.topo, 4);
+        bench.measure("subclusters_incremental_remove_add_100n", || {
+            subs.remove_member(50, &dep.topo);
+            subs.add_member(50, &dep.topo);
+        });
+        let (m2, a2, k2) = (subs.members.clone(), subs.assignment.clone(), subs.k);
+        bench.measure("subclusters_reference_rebuild_100n", || {
+            SubClusters::from_assignment(m2.clone(), a2.clone(), k2, &dep.topo)
+        });
+        // Sanity: incremental equals the reference rebuild.
+        let reference =
+            SubClusters::from_assignment(subs.members.clone(), subs.assignment.clone(), subs.k, &dep.topo);
+        assert_eq!(subs, reference, "incremental sub-cluster maintenance diverged");
+    }
+
     // --- parallel harness: 4-scenario sweep, serial vs parallel ---------
     let sweep_base = ExperimentConfig {
         n_edges: 10,
@@ -180,4 +208,8 @@ fn main() {
     }
 
     bench.print_report();
+    match bench.write_json(std::path::Path::new(".")) {
+        Ok(path) => println!("bench report: {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }

@@ -4,20 +4,22 @@
 //! `(method × configuration)` cell is an independent, deterministic
 //! scenario, executed across OS threads.
 //!
-//! Usage: `figures <fig4|fig5|...|fig13|scale|all>`
+//! Usage: `figures <fig4|fig5|...|fig13|scale|churn|all>`
 //!        `[--reps N] [--seed S] [--iterations N] [--threads T]`
 //!        `[--models vgg16,googlenet,rnn] [--edges 5,10,15,20,25]`
 //!
 //! `figures scale` sweeps 10→100-node clusters concurrently (the
-//! ROADMAP scale target); `--edges` reshapes the Fig 4 sweep the same
-//! way.  Absolute numbers live on this simulated testbed, not the
-//! authors' EC2 cluster; the *shape* (who wins, by what factor, trends
-//! along the sweeps) is the reproduction target.
+//! ROADMAP scale target); `figures churn` sweeps node-failure rates on a
+//! 100-node cluster through the dynamic event-driven driver; `--edges`
+//! reshapes the Fig 4 sweep the same way.  Absolute numbers live on this
+//! simulated testbed, not the authors' EC2 cluster; the *shape* (who
+//! wins, by what factor, trends along the sweeps) is the reproduction
+//! target.
 
 use srole::config::ExperimentConfig;
 use srole::coordinator::Method;
 use srole::dnn::ModelKind;
-use srole::harness::{run_parallel, ScenarioReport, Sweep};
+use srole::harness::{run_parallel, write_bench_json, ScenarioReport, Sweep};
 use srole::util::cli::{Cli, CliError};
 use srole::util::table::{f, Table};
 
@@ -107,8 +109,12 @@ fn main() {
         matched = true;
         scale_sweep(&ctx);
     }
+    if which == "churn" {
+        matched = true;
+        churn_figure(&ctx);
+    }
     if !matched {
-        eprintln!("unknown figure {which}; use fig4..fig13, scale, or all");
+        eprintln!("unknown figure {which}; use fig4..fig13, scale, churn, or all");
         std::process::exit(2);
     }
 }
@@ -374,4 +380,57 @@ fn scale_sweep(ctx: &Ctx) {
         busy,
         busy / wall.max(1e-9)
     );
+    write_bench("scale", &reports);
+}
+
+/// `figures churn`: JCT / collisions vs node-failure rate on a 100-node
+/// cluster, MARL vs SROLE-C vs SROLE-D, through the dynamic event-driven
+/// driver (failed nodes rejoin after two minutes).
+fn churn_figure(ctx: &Ctx) {
+    const CHURN_METHODS: [Method; 3] = [Method::Marl, Method::SroleC, Method::SroleD];
+    let rates = [0.0, 1.0, 2.0, 4.0];
+    let model = ctx.models.first().copied().unwrap_or(ModelKind::Vgg16);
+    let mut base = ctx.base(model);
+    base.n_edges = 100;
+    base.cluster_size = 100;
+    base.subclusters = 10;
+    base.rejoin_secs = 120.0;
+    // The 0-failure baseline must run the same driver as the churn cells,
+    // so the figure's trend isolates the failure rate.
+    base.event_driven = true;
+    let sweep = Sweep::new(base).methods(&CHURN_METHODS).failure_rates(&rates);
+    let t0 = std::time::Instant::now();
+    let reports = run_parallel(&sweep.scenarios(), ctx.threads);
+    let wall = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(
+        &format!(
+            "churn sweep ({}): JCT median [s] / collisions / failures vs failure rate",
+            model.name()
+        ),
+        &["fail_per_1000s", "MARL", "SROLE-C", "SROLE-D"],
+    );
+    for (ri, row) in reports.chunks(CHURN_METHODS.len()).enumerate() {
+        let mut cells = vec![format!("{:.1}", rates[ri])];
+        for r in row {
+            cells.push(format!(
+                "{} / {} / {}",
+                f(r.metrics.jct_summary().median),
+                r.metrics.collisions,
+                r.metrics.node_failures
+            ));
+        }
+        t.row(cells);
+    }
+    t.print();
+    println!("{} scenarios in {wall:.1}s wall", reports.len());
+    write_bench("churn", &reports);
+}
+
+/// Persist a sweep's wall-clock profile as `BENCH_<name>.json` (perf
+/// trajectory across PRs).
+fn write_bench(name: &str, reports: &[ScenarioReport]) {
+    match write_bench_json(name, reports, std::path::Path::new(".")) {
+        Ok(path) => println!("bench report: {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_{name}.json: {e}"),
+    }
 }

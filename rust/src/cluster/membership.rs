@@ -1,0 +1,251 @@
+//! Mutable cluster membership with incremental index maintenance.
+//!
+//! The deployment's topology and cluster assignment are fixed for the
+//! lifetime of an experiment, but *which nodes are alive* is not: the
+//! event core delivers node failure/leave and (re)join events.  A
+//! [`Membership`] overlays the static [`super::Deployment`] with the
+//! alive set and keeps the derived per-round lookup structures — alive
+//! members per cluster, alive cluster-neighbors per node — maintained
+//! *incrementally*: a churn event costs O(cluster size + node degree),
+//! not a full O(n · degree) rebuild.
+//!
+//! The incremental path is pinned to [`Membership::rebuild`] — a
+//! from-scratch reference construction — by randomized equivalence tests
+//! (the same pattern that pins the indexed shields to
+//! `shield::reference`).
+
+use super::{Deployment, NodeId};
+use crate::util::NodeSet;
+
+/// The alive-node overlay of one deployment.
+///
+/// All derived views preserve the deployment's member ordering: alive
+/// member lists keep `ClusterSpec::members` order, alive neighbor lists
+/// keep the ascending order of `Deployment::cluster_neighbors_ref`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Membership {
+    alive: NodeSet,
+    /// Alive members per cluster, in `ClusterSpec::members` order.
+    cluster_alive: Vec<Vec<NodeId>>,
+    /// Alive-member set per cluster.
+    cluster_alive_set: Vec<NodeSet>,
+    /// Alive cluster-neighbors per node (ascending); empty for dead nodes.
+    alive_neighbors: Vec<Vec<NodeId>>,
+}
+
+impl Membership {
+    /// Everyone alive (the static-deployment special case).
+    pub fn full(dep: &Deployment) -> Membership {
+        let mut alive = NodeSet::with_universe(dep.n());
+        for id in 0..dep.n() {
+            alive.insert(id);
+        }
+        Membership::rebuild(dep, &alive)
+    }
+
+    /// Reference from-scratch construction for a given alive set.  The
+    /// incremental [`Membership::fail`] / [`Membership::join`] path must
+    /// produce exactly this structure — pinned by equivalence tests.
+    pub fn rebuild(dep: &Deployment, alive: &NodeSet) -> Membership {
+        let n = dep.n();
+        let cluster_alive: Vec<Vec<NodeId>> = dep
+            .clusters
+            .iter()
+            .map(|c| c.members.iter().copied().filter(|&m| alive.contains(m)).collect())
+            .collect();
+        let cluster_alive_set =
+            cluster_alive.iter().map(|m| NodeSet::from_slice(n, m)).collect();
+        let alive_neighbors = (0..n)
+            .map(|node| {
+                if !alive.contains(node) {
+                    return Vec::new();
+                }
+                dep.cluster_neighbors_ref(node)
+                    .iter()
+                    .copied()
+                    .filter(|&m| alive.contains(m))
+                    .collect()
+            })
+            .collect();
+        Membership { alive: alive.clone(), cluster_alive, cluster_alive_set, alive_neighbors }
+    }
+
+    #[inline]
+    pub fn is_alive(&self, node: NodeId) -> bool {
+        self.alive.contains(node)
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// The alive set itself (for reference rebuilds and reporting).
+    pub fn alive_set(&self) -> &NodeSet {
+        &self.alive
+    }
+
+    /// Alive members of `cluster`, in deployment member order.
+    #[inline]
+    pub fn alive_members(&self, cluster: usize) -> &[NodeId] {
+        &self.cluster_alive[cluster]
+    }
+
+    /// Alive-member set of `cluster` (O(1) membership checks).
+    #[inline]
+    pub fn alive_cluster_set(&self, cluster: usize) -> &NodeSet {
+        &self.cluster_alive_set[cluster]
+    }
+
+    /// Alive cluster-neighbors of `node`, ascending.  Empty for dead
+    /// nodes.
+    #[inline]
+    pub fn alive_neighbors(&self, node: NodeId) -> &[NodeId] {
+        &self.alive_neighbors[node]
+    }
+
+    /// Node failure / departure: drop `node` from every index.  Returns
+    /// false when the node is already dead (no-op).  O(cluster size +
+    /// degree).
+    pub fn fail(&mut self, dep: &Deployment, node: NodeId) -> bool {
+        if !self.alive.remove(node) {
+            return false;
+        }
+        let c = dep.cluster_of(node);
+        if let Some(pos) = self.cluster_alive[c].iter().position(|&m| m == node) {
+            self.cluster_alive[c].remove(pos);
+        }
+        self.cluster_alive_set[c].remove(node);
+        for &m in dep.cluster_neighbors_ref(node) {
+            if let Ok(pos) = self.alive_neighbors[m].binary_search(&node) {
+                self.alive_neighbors[m].remove(pos);
+            }
+        }
+        self.alive_neighbors[node].clear();
+        true
+    }
+
+    /// Node (re)join: restore `node` into every index.  Returns false
+    /// when the node is already alive (no-op).  O(cluster size + degree).
+    pub fn join(&mut self, dep: &Deployment, node: NodeId) -> bool {
+        if !self.alive.insert(node) {
+            return false;
+        }
+        let c = dep.cluster_of(node);
+        // Re-insert at the node's position in deployment member order.
+        let mut pos = 0usize;
+        for &m in &dep.clusters[c].members {
+            if m == node {
+                break;
+            }
+            if self.alive.contains(m) {
+                pos += 1;
+            }
+        }
+        self.cluster_alive[c].insert(pos, node);
+        self.cluster_alive_set[c].insert(node);
+        self.alive_neighbors[node] = dep
+            .cluster_neighbors_ref(node)
+            .iter()
+            .copied()
+            .filter(|&m| self.alive.contains(m))
+            .collect();
+        for &m in dep.cluster_neighbors_ref(node) {
+            if self.alive.contains(m) {
+                if let Err(ins) = self.alive_neighbors[m].binary_search(&node) {
+                    self.alive_neighbors[m].insert(ins, node);
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CONTAINER_PROFILE;
+    use crate::util::Rng;
+
+    fn dep(n: usize, cluster_size: usize, seed: u64) -> Deployment {
+        let mut rng = Rng::new(seed);
+        Deployment::generate(&mut rng, n, cluster_size, &CONTAINER_PROFILE)
+    }
+
+    #[test]
+    fn full_membership_mirrors_deployment() {
+        let d = dep(25, 5, 3);
+        let m = Membership::full(&d);
+        assert_eq!(m.n_alive(), 25);
+        for (ci, c) in d.clusters.iter().enumerate() {
+            assert_eq!(m.alive_members(ci), &c.members[..]);
+        }
+        for node in 0..25 {
+            assert!(m.is_alive(node));
+            assert_eq!(m.alive_neighbors(node), d.cluster_neighbors_ref(node));
+        }
+    }
+
+    #[test]
+    fn fail_and_join_roundtrip() {
+        let d = dep(25, 5, 3);
+        let full = Membership::full(&d);
+        let mut m = full.clone();
+        assert!(m.fail(&d, 7));
+        assert!(!m.fail(&d, 7), "double fail is a no-op");
+        assert!(!m.is_alive(7));
+        assert_eq!(m.n_alive(), 24);
+        let c = d.cluster_of(7);
+        assert!(!m.alive_members(c).contains(&7));
+        assert!(!m.alive_cluster_set(c).contains(7));
+        assert!(m.alive_neighbors(7).is_empty());
+        for node in 0..25 {
+            assert!(!m.alive_neighbors(node).contains(&7));
+        }
+        assert!(m.join(&d, 7));
+        assert!(!m.join(&d, 7), "double join is a no-op");
+        assert_eq!(m, full, "fail + join restores the full membership");
+    }
+
+    #[test]
+    fn prop_incremental_matches_rebuild() {
+        // Randomized churn sequences: after every event the incremental
+        // structure must equal the from-scratch reference for the same
+        // alive set.
+        let mut rng = Rng::new(0xC0FFEE);
+        for case in 0..30 {
+            let n = 6 + rng.below(30);
+            let cs = 1 + rng.below(8);
+            let d = dep(n, cs.min(n), 1000 + case);
+            let mut m = Membership::full(&d);
+            for step in 0..60 {
+                let node = rng.below(n);
+                if rng.chance(0.5) {
+                    m.fail(&d, node);
+                } else {
+                    m.join(&d, node);
+                }
+                let reference = Membership::rebuild(&d, m.alive_set());
+                assert_eq!(m, reference, "case {case} step {step} node {node}");
+            }
+        }
+    }
+
+    #[test]
+    fn alive_neighbor_lists_stay_sorted_under_churn() {
+        let d = dep(20, 10, 11);
+        let mut rng = Rng::new(5);
+        let mut m = Membership::full(&d);
+        for _ in 0..100 {
+            let node = rng.below(20);
+            if rng.chance(0.5) {
+                m.fail(&d, node);
+            } else {
+                m.join(&d, node);
+            }
+            for v in 0..20 {
+                let nb = m.alive_neighbors(v);
+                assert!(nb.windows(2).all(|w| w[0] < w[1]), "unsorted neighbors of {v}");
+            }
+        }
+    }
+}

@@ -6,9 +6,11 @@
 //! SROLE-D splits a cluster into geographic *sub-clusters*, one shield
 //! each, with boundary nodes handled by neighboring-shield delegates.
 
+pub mod membership;
 pub mod profiles;
 pub mod subcluster;
 
+pub use membership::Membership;
 pub use profiles::{ResourceProfile, CONTAINER_PROFILE, REAL_EDGE_PROFILE};
 pub use subcluster::SubClusters;
 

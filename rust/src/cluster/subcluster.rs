@@ -18,7 +18,14 @@ use crate::util::NodeSet;
 /// id per node, boundary membership, per-pair boundary sets and per-pair
 /// allowed-target sets — so the SROLE-D shield's per-round checks are
 /// O(1) per query instead of `Vec::contains` scans.
-#[derive(Debug, Clone)]
+///
+/// Membership is *mutable*: [`SubClusters::remove_member`] and
+/// [`SubClusters::add_member`] maintain every table incrementally when
+/// the event core delivers node churn, re-deriving only the boundary
+/// pairs of the affected sub-cluster.  The incremental path is pinned to
+/// the [`SubClusters::from_assignment`] reference rebuild by randomized
+/// equivalence tests.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SubClusters {
     /// `assignment[i]` = sub-cluster index of `members[i]`.
     pub members: Vec<NodeId>,
@@ -55,9 +62,23 @@ impl SubClusters {
     pub fn build(members: &[NodeId], topo: &Topology, k: usize) -> SubClusters {
         let k = k.clamp(1, members.len().max(1));
         let assignment = kmeans(members, topo, k);
+        SubClusters::from_assignment(members.to_vec(), assignment, k, topo)
+    }
+
+    /// Build from a fixed `(members, assignment)` pair — the from-scratch
+    /// reference construction the incremental membership ops
+    /// ([`SubClusters::remove_member`] / [`SubClusters::add_member`]) are
+    /// pinned against by randomized equivalence tests.
+    pub fn from_assignment(
+        members: Vec<NodeId>,
+        assignment: Vec<usize>,
+        k: usize,
+        topo: &Topology,
+    ) -> SubClusters {
+        assert_eq!(members.len(), assignment.len());
         let n = topo.n();
         let mut sc = SubClusters {
-            members: members.to_vec(),
+            members,
             assignment,
             k,
             boundaries: Vec::new(),
@@ -83,6 +104,13 @@ impl SubClusters {
             self.per_sub[a].push(m);
             self.sub_sets[a].insert(m);
         }
+        self.rebuild_pair_tables(n);
+    }
+
+    /// Rebuild the boundary-derived tables (`boundary_set`,
+    /// `pair_boundary`, `pair_allowed`) from `boundaries` + `sub_sets`.
+    /// O(pairs · boundary nodes) — cheap next to a boundary rescan.
+    fn rebuild_pair_tables(&mut self, n: usize) {
         self.boundary_set = NodeSet::with_universe(n);
         self.pair_boundary = Vec::with_capacity(self.boundaries.len());
         self.pair_allowed = Vec::with_capacity(self.boundaries.len());
@@ -95,6 +123,107 @@ impl SubClusters {
             allowed.union_with(&self.sub_sets[*b]);
             self.pair_allowed.push(allowed);
         }
+    }
+
+    /// Incremental membership removal (node failed / left the cluster):
+    /// drop `node` from its sub-cluster and re-derive *only* the boundary
+    /// pairs involving that sub-cluster — no k-means re-run, no all-pairs
+    /// rescan.  Returns false when `node` is not a member (no-op).
+    ///
+    /// Equivalent to `from_assignment` over the shrunk member list —
+    /// pinned by randomized equivalence tests.
+    pub fn remove_member(&mut self, node: NodeId, topo: &Topology) -> bool {
+        let Some(idx) = self.members.iter().position(|&m| m == node) else {
+            return false;
+        };
+        let sub = self.assignment[idx];
+        self.members.remove(idx);
+        self.assignment.remove(idx);
+        if let Some(pos) = self.per_sub[sub].iter().position(|&m| m == node) {
+            self.per_sub[sub].remove(pos);
+        }
+        self.sub_sets[sub].remove(node);
+        self.sub_index[node] = usize::MAX;
+        self.refresh_pairs_of(sub, topo);
+        true
+    }
+
+    /// Incremental membership addition (node joined the cluster): assign
+    /// `node` to the sub-cluster with the nearest member centroid
+    /// (deterministic; ties resolve to the lowest sub-cluster index) and
+    /// re-derive only the boundary pairs involving that sub-cluster.
+    /// Returns false when `node` is already a member (no-op).
+    pub fn add_member(&mut self, node: NodeId, topo: &Topology) -> bool {
+        if self.is_member(node) {
+            return false;
+        }
+        let sub = self.nearest_sub(node, topo);
+        self.members.push(node);
+        self.assignment.push(sub);
+        self.per_sub[sub].push(node);
+        self.sub_sets[sub].insert(node);
+        if node >= self.sub_index.len() {
+            self.sub_index.resize(node + 1, usize::MAX);
+        }
+        self.sub_index[node] = sub;
+        self.refresh_pairs_of(sub, topo);
+        true
+    }
+
+    /// Sub-cluster whose member centroid is closest to `node`; empty
+    /// sub-clusters are skipped (everything empty falls back to 0).
+    fn nearest_sub(&self, node: NodeId, topo: &Topology) -> usize {
+        let p = (topo.positions[node].x, topo.positions[node].y);
+        let mut best: Option<(f64, usize)> = None;
+        for (s, members) in self.per_sub.iter().enumerate() {
+            if members.is_empty() {
+                continue;
+            }
+            let (mut cx, mut cy) = (0.0, 0.0);
+            for &m in members {
+                cx += topo.positions[m].x;
+                cy += topo.positions[m].y;
+            }
+            let c = (cx / members.len() as f64, cy / members.len() as f64);
+            let dist = d2(p, c);
+            if best.map(|(bd, _)| dist < bd).unwrap_or(true) {
+                best = Some((dist, s));
+            }
+        }
+        best.map(|(_, s)| s).unwrap_or(0)
+    }
+
+    /// Recompute the boundary pairs involving `sub` from the current
+    /// partition, keeping every other pair untouched, then re-derive the
+    /// (small, O(k²)-sized) pair tables.  The member scan visits only the
+    /// (i, j) index pairs that cross `sub` — O(|sub| · members) instead
+    /// of the full O(members²) boundary rescan — in the full scan's
+    /// lexicographic order, so per-pair node vectors come out identical
+    /// to a [`SubClusters::from_assignment`] reference rebuild.
+    fn refresh_pairs_of(&mut self, sub: usize, topo: &Topology) {
+        let m_len = self.members.len();
+        // Member indices of `sub`, ascending.
+        let sub_idx: Vec<usize> = (0..m_len).filter(|&i| self.assignment[i] == sub).collect();
+        let mut fresh: Vec<((usize, usize), Vec<NodeId>)> = Vec::new();
+        for i in 0..m_len {
+            if self.assignment[i] == sub {
+                // Every later member can pair with a `sub` node at i.
+                for j in (i + 1)..m_len {
+                    self.accumulate_boundary_pair(&mut fresh, topo, i, j);
+                }
+            } else {
+                // Only later `sub` members pair with a non-`sub` node.
+                let start = sub_idx.partition_point(|&j| j <= i);
+                for &j in &sub_idx[start..] {
+                    self.accumulate_boundary_pair(&mut fresh, topo, i, j);
+                }
+            }
+        }
+        self.boundaries.retain(|((a, b), _)| *a != sub && *b != sub);
+        self.boundaries.extend(fresh);
+        self.boundaries.sort_by_key(|(k2, _)| *k2);
+        let n = self.sub_index.len();
+        self.rebuild_pair_tables(n);
     }
 
     /// Sub-cluster of `node` (O(1); panics for non-members, matching the
@@ -161,34 +290,51 @@ impl SubClusters {
 
     fn find_boundaries(&self, topo: &Topology) -> Vec<((usize, usize), Vec<NodeId>)> {
         let mut out: Vec<((usize, usize), Vec<NodeId>)> = Vec::new();
-        for (i, &m) in self.members.iter().enumerate() {
-            for (j, &n) in self.members.iter().enumerate() {
-                if i >= j || self.assignment[i] == self.assignment[j] {
-                    continue;
-                }
-                if topo.positions[m].dist(&topo.positions[n]) <= topo.range * BOUNDARY_RANGE_FRAC {
-                    let key = if self.assignment[i] < self.assignment[j] {
-                        (self.assignment[i], self.assignment[j])
-                    } else {
-                        (self.assignment[j], self.assignment[i])
-                    };
-                    let entry = match out.iter_mut().find(|(k2, _)| *k2 == key) {
-                        Some(e) => e,
-                        None => {
-                            out.push((key, Vec::new()));
-                            out.last_mut().unwrap()
-                        }
-                    };
-                    for node in [m, n] {
-                        if !entry.1.contains(&node) {
-                            entry.1.push(node);
-                        }
-                    }
-                }
+        for i in 0..self.members.len() {
+            for j in (i + 1)..self.members.len() {
+                self.accumulate_boundary_pair(&mut out, topo, i, j);
             }
         }
         out.sort_by_key(|(k2, _)| *k2);
         out
+    }
+
+    /// Accumulate the member-index pair `(i, j)` (i < j) into the per-pair
+    /// boundary lists when it crosses sub-clusters within boundary range.
+    /// The single implementation behind both the full scan
+    /// ([`SubClusters::from_assignment`]) and the incremental refresh, so
+    /// their outputs stay bit-identical: callers must visit pairs in
+    /// ascending lexicographic (i, j) order.
+    fn accumulate_boundary_pair(
+        &self,
+        out: &mut Vec<((usize, usize), Vec<NodeId>)>,
+        topo: &Topology,
+        i: usize,
+        j: usize,
+    ) {
+        if self.assignment[i] == self.assignment[j] {
+            return;
+        }
+        let (m, n) = (self.members[i], self.members[j]);
+        if topo.positions[m].dist(&topo.positions[n]) <= topo.range * BOUNDARY_RANGE_FRAC {
+            let key = if self.assignment[i] < self.assignment[j] {
+                (self.assignment[i], self.assignment[j])
+            } else {
+                (self.assignment[j], self.assignment[i])
+            };
+            let entry = match out.iter_mut().find(|(k2, _)| *k2 == key) {
+                Some(e) => e,
+                None => {
+                    out.push((key, Vec::new()));
+                    out.last_mut().unwrap()
+                }
+            };
+            for node in [m, n] {
+                if !entry.1.contains(&node) {
+                    entry.1.push(node);
+                }
+            }
+        }
     }
 
     /// All boundary nodes (union over pairs), ascending.
@@ -389,6 +535,85 @@ mod tests {
                 assert!(sc.sub_set(s).contains(m));
             }
             assert_eq!(sc.sub_set(s).len(), sc.sub_members(s).len());
+        }
+    }
+
+    #[test]
+    fn prop_incremental_membership_matches_reference_rebuild() {
+        // Randomized churn sequences: after every remove/add the
+        // incremental tables must equal a from-scratch rebuild over the
+        // same (members, assignment) pair.
+        let mut rng = Rng::new(0xBEEF);
+        for case in 0..20 {
+            let n = 8 + rng.below(20);
+            let t = {
+                let mut trng = Rng::new(100 + case);
+                Topology::generate(&mut trng, n, 60.0, 30.0, &[100.0], 0.001)
+            };
+            let members: Vec<NodeId> = (0..n).collect();
+            let k = 2 + rng.below(3);
+            let mut sc = SubClusters::build(&members, &t, k);
+            for step in 0..40 {
+                let node = rng.below(n);
+                if rng.chance(0.5) {
+                    sc.remove_member(node, &t);
+                } else {
+                    sc.add_member(node, &t);
+                }
+                let reference = SubClusters::from_assignment(
+                    sc.members.clone(),
+                    sc.assignment.clone(),
+                    sc.k,
+                    &t,
+                );
+                assert_eq!(sc, reference, "case {case} step {step} node {node}");
+            }
+        }
+    }
+
+    #[test]
+    fn remove_then_add_keeps_queries_consistent() {
+        let t = topo(24);
+        let members: Vec<NodeId> = (0..24).collect();
+        let mut sc = SubClusters::build(&members, &t, 3);
+        assert!(sc.remove_member(5, &t));
+        assert!(!sc.remove_member(5, &t), "double remove is a no-op");
+        assert!(!sc.is_member(5));
+        assert!(!sc.is_boundary(5), "removed nodes leave every boundary");
+        assert_eq!(sc.members.len(), 23);
+        for (_, nodes) in &sc.boundaries {
+            assert!(!nodes.contains(&5));
+        }
+        assert!(sc.add_member(5, &t));
+        assert!(!sc.add_member(5, &t), "double add is a no-op");
+        assert!(sc.is_member(5));
+        let s = sc.sub_of(5);
+        assert!(s < 3);
+        assert!(sc.sub_set(s).contains(5));
+        assert!(sc.sub_members(s).contains(&5));
+    }
+
+    #[test]
+    fn add_member_picks_nearest_subcluster() {
+        // A node re-added right on top of an existing member must land in
+        // that member's sub-cluster.
+        let t = topo(20);
+        let members: Vec<NodeId> = (0..20).collect();
+        let mut sc = SubClusters::build(&members, &t, 3);
+        let probe = 7;
+        let home = sc.sub_of(probe);
+        sc.remove_member(probe, &t);
+        // Unless the removal emptied the home sub-cluster, the centroid
+        // nearest to the probe's position is its old sub's.
+        if !sc.members_of(home).is_empty() {
+            sc.add_member(probe, &t);
+            // The probe must land in SOME valid sub-cluster and the
+            // structure must match the reference rebuild.
+            let s = sc.sub_of(probe);
+            assert!(s < 3);
+            let reference =
+                SubClusters::from_assignment(sc.members.clone(), sc.assignment.clone(), 3, &t);
+            assert_eq!(sc, reference);
         }
     }
 

@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 use crate::cluster::profiles::{ResourceProfile, CONTAINER_PROFILE, REAL_EDGE_PROFILE};
 use crate::dnn::ModelKind;
 use crate::rl::RewardParams;
+use crate::workload::ArrivalProcess;
 
 /// Which testbed profile (Table I row group) to emulate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,6 +72,19 @@ pub struct ExperimentConfig {
     /// Tabular policy learning rate / exploration.
     pub lr: f64,
     pub epsilon: f64,
+    /// Mean node-failure events per 1000 simulated seconds across the
+    /// deployment (0 = static membership, the paper's setup).
+    pub failure_rate: f64,
+    /// Seconds a failed node stays down before rejoining (0 = failed
+    /// nodes never come back).
+    pub rejoin_secs: f64,
+    /// DL-job arrival process (batched waves, Poisson stream, or trace).
+    pub arrival: ArrivalProcess,
+    /// Force the event-driven driver even for static configurations —
+    /// used by sweeps that compare churn rates against a 0-failure
+    /// baseline, so every cell runs the same driver and only the churn
+    /// axis varies.
+    pub event_driven: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -91,6 +105,10 @@ impl Default for ExperimentConfig {
             repetitions: 5,
             lr: 0.15,
             epsilon: 0.1,
+            failure_rate: 0.0,
+            rejoin_secs: 0.0,
+            arrival: ArrivalProcess::default(),
+            event_driven: false,
         }
     }
 }
@@ -143,6 +161,16 @@ impl ExperimentConfig {
             "repetitions" => self.repetitions = parse_usize(val)?,
             "lr" => self.lr = parse_f64(val)?,
             "epsilon" => self.epsilon = parse_f64(val)?,
+            "failure_rate" => self.failure_rate = parse_f64(val)?,
+            "rejoin_secs" => self.rejoin_secs = parse_f64(val)?,
+            "arrival" => {
+                self.arrival = match val {
+                    "batched" => ArrivalProcess::default(),
+                    "poisson" => ArrivalProcess::Poisson { rate: 0.05 },
+                    other => return Err(format!("unknown arrival process {other}")),
+                }
+            }
+            "arrival_rate" => self.arrival = ArrivalProcess::Poisson { rate: parse_f64(val)? },
             other => return Err(format!("unknown config key {other}")),
         }
         Ok(())
@@ -164,7 +192,28 @@ impl ExperimentConfig {
         if self.subclusters == 0 {
             return Err("subclusters must be positive".into());
         }
+        if self.failure_rate < 0.0 || self.rejoin_secs < 0.0 {
+            return Err("failure_rate and rejoin_secs must be non-negative".into());
+        }
+        match &self.arrival {
+            ArrivalProcess::Poisson { rate } if *rate <= 0.0 => {
+                return Err("poisson arrival rate must be positive".into());
+            }
+            ArrivalProcess::Batched { window } if *window < 0.0 => {
+                return Err("batched arrival window must be non-negative".into());
+            }
+            _ => {}
+        }
         Ok(())
+    }
+
+    /// Whether this configuration runs on the dynamic event-driven driver
+    /// (node churn, an online arrival process, or an explicit opt-in)
+    /// instead of the static pre-batched wave path.
+    pub fn dynamic(&self) -> bool {
+        self.event_driven
+            || self.failure_rate > 0.0
+            || !matches!(self.arrival, ArrivalProcess::Batched { .. })
     }
 }
 
@@ -261,6 +310,32 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.subclusters = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn churn_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            failure_rate = 1.5
+            rejoin_secs = 120
+            arrival_rate = 0.02
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.failure_rate, 1.5);
+        assert_eq!(cfg.rejoin_secs, 120.0);
+        assert_eq!(cfg.arrival, ArrivalProcess::Poisson { rate: 0.02 });
+        assert!(cfg.dynamic());
+        cfg.validate().unwrap();
+
+        assert!(!ExperimentConfig::default().dynamic());
+        let mut bad = ExperimentConfig::default();
+        bad.failure_rate = -1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.arrival = ArrivalProcess::Poisson { rate: 0.0 };
+        assert!(bad.validate().is_err());
+        assert!(ExperimentConfig::from_toml("arrival = \"lognormal\"").is_err());
     }
 
     #[test]

@@ -1,0 +1,540 @@
+//! Event-driven experiment driver for *dynamic* edge scenarios.
+//!
+//! The paper's evaluation freezes the deployment: jobs arrive in
+//! pre-batched waves and membership never changes.  This driver runs the
+//! same methods on the unified event core (`sim::event`) with the full
+//! event vocabulary live:
+//!
+//! * `JobArrival` — arrival batches (Poisson / trace / batched, from
+//!   `workload::ArrivalProcess`) trigger a membership-aware scheduling
+//!   wave at arrival time;
+//! * `IterEnd` — iterations re-price against current contention, exactly
+//!   as in the static executor;
+//! * `BgStart` / `BgEnd` — background churn (segments on dead nodes are
+//!   lost);
+//! * `Sample` / `ViewRefresh` — periodic utilization sampling and the
+//!   stale state-view refresh the failure handler observes;
+//! * `NodeFail` / `NodeJoin` — membership churn: the incremental
+//!   [`Membership`] indexes update in O(cluster + degree), shields
+//!   re-partition region responsibility incrementally, and layers
+//!   stranded on the failed host are rescheduled by the owning agents
+//!   (`sched::reschedule_stranded`) with full decision-latency
+//!   accounting, so the overhead figures stay regenerable under churn.
+//!
+//! Determinism: one RNG stream drives generation and the single-threaded
+//! event loop, so a `(config, method, seed)` triple replays bit-identically
+//! regardless of harness thread count.
+//!
+//! The `IterEnd`/`BgStart`/`BgEnd`/`Sample` handlers deliberately mirror
+//! `sim::engine` rather than share its code: the static executor is the
+//! bit-stable baseline for the paper's figures (pinned by its own
+//! determinism tests), while these handlers additionally consult live
+//! membership (alive-head re-election, dead-node background loss).  When
+//! changing completion/sampling semantics, change both drivers.
+
+use crate::cluster::{Deployment, Membership, NodeId, Resources};
+use crate::config::ExperimentConfig;
+use crate::metrics::RunMetrics;
+use crate::rl::{Policy, TabularQ};
+use crate::sched::{
+    central_wave_dynamic, marl_wave_dynamic, noisy_demand, reschedule_stranded, JobSchedule,
+    Stranded, WaveOutcome,
+};
+use crate::shield::{CentralShield, DecentralShield, Shield};
+use crate::sim::engine::SAMPLE_PERIOD_SECS;
+use crate::sim::event::{EventKind, EventQueue};
+use crate::sim::{timing, ResourceState};
+use crate::util::Rng;
+use crate::workload::{DlJob, Workload, WorkloadSpec};
+
+use super::{pretrain, Method};
+
+/// Seconds between refreshes of the (stale) state view the failure
+/// handler observes — the paper's periodic resource reports (§III).
+pub const VIEW_REFRESH_SECS: f64 = 60.0;
+
+/// Jobs arriving within this window of a batch's first arrival are
+/// scheduled in one concurrent wave (simultaneous decisions are what
+/// makes action collisions possible).
+pub const WAVE_BATCH_SECS: f64 = 5.0;
+
+/// Per-cluster shield instance (lives across waves and churn events, so
+/// its incremental region state persists).
+enum ClusterShield {
+    None,
+    Central(CentralShield),
+    Decentral(DecentralShield),
+}
+
+impl ClusterShield {
+    fn as_dyn(&mut self) -> Option<&mut dyn Shield> {
+        match self {
+            ClusterShield::None => None,
+            ClusterShield::Central(s) => Some(s),
+            ClusterShield::Decentral(s) => Some(s),
+        }
+    }
+}
+
+/// One arrival batch: the cluster's jobs that decide concurrently.
+struct Wave {
+    cluster: usize,
+    jobs: Vec<DlJob>,
+    /// Fire time: the latest arrival in the batch.
+    t: f64,
+}
+
+/// Execution bookkeeping for one scheduled job.
+struct Run {
+    sched: JobSchedule,
+    start: f64,
+    iters_done: usize,
+    done: bool,
+}
+
+/// Group a cluster's jobs into concurrent-decision waves: jobs arriving
+/// within [`WAVE_BATCH_SECS`] of a batch's first arrival share its wave.
+fn build_waves(dep: &Deployment, workload: &Workload) -> Vec<Wave> {
+    let mut waves = Vec::new();
+    for ci in 0..dep.clusters.len() {
+        let mut jobs: Vec<DlJob> =
+            workload.dl_jobs.iter().filter(|j| j.cluster == ci).cloned().collect();
+        jobs.sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.id.cmp(&b.id)));
+        let mut i = 0usize;
+        while i < jobs.len() {
+            let batch_start = jobs[i].arrival;
+            let mut batch = Vec::new();
+            while i < jobs.len() && jobs[i].arrival <= batch_start + WAVE_BATCH_SECS {
+                batch.push(jobs[i].clone());
+                i += 1;
+            }
+            let t = batch.last().map(|j| j.arrival).unwrap_or(batch_start);
+            waves.push(Wave { cluster: ci, jobs: batch, t });
+        }
+    }
+    waves
+}
+
+/// Highest-capacity *alive* member of a cluster — the acting head after
+/// the original head fails (deterministic re-election).
+fn alive_head(dep: &Deployment, membership: &Membership, cluster: usize) -> NodeId {
+    let members = membership.alive_members(cluster);
+    members
+        .iter()
+        .copied()
+        .max_by(|&a, &b| {
+            let ka = dep.nodes[a].caps.cpu * dep.nodes[a].caps.mem;
+            let kb = dep.nodes[b].caps.cpu * dep.nodes[b].caps.mem;
+            ka.partial_cmp(&kb).unwrap()
+        })
+        .unwrap_or(dep.clusters[cluster].head)
+}
+
+/// One measured dynamic run: the event-driven counterpart of
+/// `Experiment::run_once` for configurations with churn or online
+/// arrivals.
+pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetrics {
+    let mut rng = Rng::new(seed);
+    let profile = cfg.profile.resource_profile();
+    let dep = Deployment::generate(&mut rng, cfg.n_edges, cfg.cluster_size, profile);
+    let graph = cfg.model.build();
+    let spec = WorkloadSpec {
+        model: cfg.model,
+        jobs_per_cluster: cfg.jobs_per_cluster,
+        iterations: cfg.iterations,
+        workload: cfg.workload,
+        arrival: cfg.arrival.clone(),
+    };
+    let workload = Workload::generate(&mut rng, &dep, &spec, 500_000.0);
+
+    let mut policy = TabularQ::new(cfg.lr, cfg.epsilon);
+    pretrain(&mut policy, cfg, &mut rng.fork(0xbeef));
+    let policy: &mut dyn Policy = &mut policy;
+
+    let mut membership = Membership::full(&dep);
+    let mut shields: Vec<ClusterShield> = dep
+        .clusters
+        .iter()
+        .map(|c| match method {
+            Method::SroleC => ClusterShield::Central(CentralShield::new()),
+            Method::SroleD => {
+                ClusterShield::Decentral(DecentralShield::new(&dep, &c.members, cfg.subclusters))
+            }
+            Method::Rl | Method::Marl => ClusterShield::None,
+        })
+        .collect();
+
+    let mut state = ResourceState::new(&dep);
+    let pre_placed = crate::sim::engine::place_initial_background(&mut state, &workload);
+    let mut metrics = RunMetrics::default();
+    let mut queue = EventQueue::new();
+
+    // Background churn events (pre-placed segments only need their end).
+    let mut bg_handles = vec![None; workload.background.len()];
+    for (i, h) in pre_placed {
+        bg_handles[i] = Some(h);
+        queue.push(workload.background[i].end, EventKind::BgEnd { bg: i });
+    }
+    for (i, bg) in workload.background.iter().enumerate() {
+        if bg_handles[i].is_none() {
+            queue.push(bg.start, EventKind::BgStart { bg: i });
+        }
+    }
+
+    // Arrival waves.
+    let waves = build_waves(&dep, &workload);
+    for (wi, w) in waves.iter().enumerate() {
+        queue.push(w.t, EventKind::JobArrival { wave: wi });
+    }
+
+    // Sampling horizon shared with the static path: the nominal
+    // experiment duration at the target iteration rate (plus slack).
+    let horizon = cfg.iterations as f64 * crate::dnn::profile::TARGET_ITER_SECS * 2.5;
+    queue.push(SAMPLE_PERIOD_SECS, EventKind::Sample);
+    queue.push(VIEW_REFRESH_SECS, EventKind::ViewRefresh);
+
+    // Node churn schedule, drawn up-front from the run's RNG stream so
+    // replays are exact.  Rejoins follow failures after `rejoin_secs`.
+    if cfg.failure_rate > 0.0 {
+        let rate = cfg.failure_rate / 1000.0;
+        let mut t = rng.exp(rate);
+        while t < horizon {
+            let node = rng.below(dep.n());
+            queue.push(t, EventKind::NodeFail { node });
+            if cfg.rejoin_secs > 0.0 {
+                queue.push(t + cfg.rejoin_secs, EventKind::NodeJoin { node });
+            }
+            t += rng.exp(rate);
+        }
+    }
+
+    let mut runs: Vec<Option<Run>> = (0..workload.dl_jobs.len()).map(|_| None).collect();
+    let mut remaining = workload.dl_jobs.len();
+    let n_clusters = dep.clusters.len();
+    // Stale state view for the failure handler (paper §III: agents and
+    // shields act on periodic reports, not live state).
+    let mut view_demand: Vec<Resources> = (0..state.n()).map(|n| *state.demand(n)).collect();
+
+    let mut was_overloaded: Vec<bool> =
+        (0..dep.n()).map(|n| state.actual_overloaded(n, cfg.reward.alpha)).collect();
+    let alpha = cfg.reward.alpha;
+    let check_overloads =
+        |state: &ResourceState, metrics: &mut RunMetrics, was: &mut Vec<bool>| {
+            for n in 0..was.len() {
+                let now = state.actual_overloaded(n, alpha);
+                if now && !was[n] {
+                    metrics.runtime_overloads += 1;
+                }
+                was[n] = now;
+            }
+        };
+
+    while let Some(ev) = queue.pop() {
+        match ev.kind {
+            EventKind::JobArrival { wave } => {
+                let w = &waves[wave];
+                let shield = shields[w.cluster].as_dyn();
+                let out: WaveOutcome = match method {
+                    Method::Rl => central_wave_dynamic(
+                        &dep, &membership, &mut state, &graph, &w.jobs, policy, &cfg.reward,
+                        &mut rng,
+                    ),
+                    Method::Marl | Method::SroleC | Method::SroleD => marl_wave_dynamic(
+                        &dep, &membership, &mut state, &graph, &w.jobs, policy, shield,
+                        &cfg.reward, cfg.refresh_rounds, &mut rng,
+                    ),
+                };
+                metrics.collisions += out.collisions;
+                metrics.shield_corrections += out.shield_corrections;
+                for s in out.schedules {
+                    let ji = s.job.id;
+                    let start = ev.t + s.decision_secs;
+                    queue.push(start, EventKind::IterEnd { job: ji });
+                    runs[ji] = Some(Run { sched: s, start, iters_done: 0, done: false });
+                }
+                check_overloads(&state, &mut metrics, &mut was_overloaded);
+            }
+            EventKind::IterEnd { job } => {
+                let run = runs[job].as_mut().expect("IterEnd for an unscheduled job");
+                if run.done {
+                    continue;
+                }
+                if ev.t > run.start {
+                    run.iters_done += 1;
+                }
+                if run.iters_done >= run.sched.job.iterations {
+                    run.done = true;
+                    remaining -= 1;
+                    for &h in &run.sched.handles {
+                        state.release(h);
+                    }
+                    run.sched.handles.clear();
+                    let train_secs = ev.t - run.start;
+                    policy.learn(&run.sched.episode, train_secs.max(1.0), &cfg.reward);
+                    metrics.jct.push(train_secs);
+                    metrics.decision_secs.push(run.sched.decision_secs);
+                    metrics.sched_secs.push(run.sched.sched_secs);
+                    metrics.shield_secs.push(run.sched.shield_secs);
+                    metrics.memory_violations += run.sched.memory_violations;
+                    metrics.makespan = metrics.makespan.max(ev.t);
+                    check_overloads(&state, &mut metrics, &mut was_overloaded);
+                    if remaining == 0 && ev.t >= horizon {
+                        break;
+                    }
+                } else {
+                    let head = alive_head(&dep, &membership, run.sched.job.cluster);
+                    let mut dt = timing::iteration_secs(
+                        &dep,
+                        &state,
+                        &graph,
+                        &run.sched.placement,
+                        run.sched.job.owner,
+                        head,
+                        n_clusters,
+                    );
+                    if run.iters_done == 0 {
+                        dt += timing::pipeline_fill_secs(&dep, &state, &graph, &run.sched.placement);
+                    }
+                    queue.push(ev.t + dt.max(1e-6), EventKind::IterEnd { job });
+                }
+            }
+            EventKind::BgStart { bg } => {
+                let b = &workload.background[bg];
+                // A segment destined for a dead node is lost, not queued.
+                if membership.is_alive(b.node) {
+                    let h = state.place(b.node, b.demand, b.demand, false);
+                    bg_handles[bg] = Some(h);
+                    queue.push(b.end.max(ev.t), EventKind::BgEnd { bg });
+                    check_overloads(&state, &mut metrics, &mut was_overloaded);
+                }
+            }
+            EventKind::BgEnd { bg } => {
+                if let Some(h) = bg_handles[bg].take() {
+                    state.release(h);
+                }
+                check_overloads(&state, &mut metrics, &mut was_overloaded);
+            }
+            EventKind::Sample => {
+                if remaining > 0 || ev.t < horizon {
+                    for n in 0..dep.n() {
+                        metrics.tasks_per_device.push(state.task_count(n) as f64);
+                        metrics.util_cpu.push(
+                            state.actual_util(n, crate::cluster::ResourceKind::Cpu).clamp(0.0, 2.0),
+                        );
+                        metrics.util_mem.push(
+                            state.actual_util(n, crate::cluster::ResourceKind::Mem).clamp(0.0, 2.0),
+                        );
+                        metrics.util_bw.push(
+                            state.actual_util(n, crate::cluster::ResourceKind::Bw).clamp(0.0, 2.0),
+                        );
+                    }
+                    queue.push(ev.t + SAMPLE_PERIOD_SECS, EventKind::Sample);
+                }
+            }
+            EventKind::ViewRefresh => {
+                for (n, v) in view_demand.iter_mut().enumerate() {
+                    *v = *state.demand(n);
+                }
+                if remaining > 0 {
+                    queue.push(ev.t + VIEW_REFRESH_SECS, EventKind::ViewRefresh);
+                }
+            }
+            EventKind::NodeFail { node } => {
+                // Churn after the last completion cannot affect any job;
+                // skip it so the failure count reflects failures the
+                // scheduler actually experienced.
+                if remaining == 0 {
+                    continue;
+                }
+                let cluster = dep.cluster_of(node);
+                // Never empty a cluster: the last alive member survives.
+                if !membership.is_alive(node) || membership.alive_members(cluster).len() <= 1 {
+                    continue;
+                }
+                membership.fail(&dep, node);
+                metrics.node_failures += 1;
+                match &mut shields[cluster] {
+                    ClusterShield::Central(s) => {
+                        s.set_alive(Some(membership.alive_cluster_set(cluster).clone()));
+                    }
+                    ClusterShield::Decentral(s) => {
+                        s.node_failed(&dep, node);
+                    }
+                    ClusterShield::None => {}
+                }
+                // Background segments resident on the node are lost.
+                for (i, slot) in bg_handles.iter_mut().enumerate() {
+                    if workload.background[i].node == node {
+                        if let Some(h) = slot.take() {
+                            state.release(h);
+                        }
+                    }
+                }
+                // Strand and reschedule the DL layers the node hosted.
+                let mut stranded: Vec<Stranded> = Vec::new();
+                for (ji, run) in runs.iter_mut().enumerate() {
+                    let Some(run) = run else { continue };
+                    if run.done {
+                        continue;
+                    }
+                    for (layer_id, &host) in run.sched.placement.iter().enumerate() {
+                        if host == node {
+                            state.release(run.sched.handles[layer_id]);
+                            stranded.push(Stranded {
+                                job: ji,
+                                owner: run.sched.job.owner,
+                                layer_id,
+                            });
+                        }
+                    }
+                }
+                if !stranded.is_empty() {
+                    let shield = shields[cluster].as_dyn();
+                    let outcome = reschedule_stranded(
+                        &dep, &membership, &state, &graph, &view_demand, &stranded, node,
+                        policy, shield, &cfg.reward, &mut rng,
+                    );
+                    metrics.collisions += outcome.collisions;
+                    metrics.shield_corrections += outcome.corrections;
+                    metrics.rescheduled_layers += stranded.len();
+                    for (s, &target) in stranded.iter().zip(&outcome.targets) {
+                        // The cluster always keeps ≥1 alive member, so the
+                        // handler's fallback guarantees a real target.
+                        let target = if target == usize::MAX {
+                            membership.alive_members(cluster)[0]
+                        } else {
+                            target
+                        };
+                        let est = graph.layers[s.layer_id].demand();
+                        let actual = noisy_demand(&est, &mut rng);
+                        let h = state.place(target, est, actual, true);
+                        let run = runs[s.job].as_mut().unwrap();
+                        run.sched.placement[s.layer_id] = target;
+                        run.sched.handles[s.layer_id] = h;
+                    }
+                    // Decision-latency accounting: every affected job pays
+                    // the recovery round (Fig 7/12 under churn).
+                    let mut charged: Vec<usize> = stranded.iter().map(|s| s.job).collect();
+                    charged.sort_unstable();
+                    charged.dedup();
+                    for ji in charged {
+                        let run = runs[ji].as_mut().unwrap();
+                        run.sched.decision_secs += outcome.sched_secs + outcome.shield_secs;
+                        run.sched.sched_secs += outcome.sched_secs;
+                        run.sched.shield_secs += outcome.shield_secs;
+                    }
+                }
+                check_overloads(&state, &mut metrics, &mut was_overloaded);
+            }
+            EventKind::NodeJoin { node } => {
+                if remaining == 0 || !membership.join(&dep, node) {
+                    continue;
+                }
+                let cluster = dep.cluster_of(node);
+                match &mut shields[cluster] {
+                    ClusterShield::Central(s) => {
+                        s.set_alive(Some(membership.alive_cluster_set(cluster).clone()));
+                    }
+                    ClusterShield::Decentral(s) => {
+                        s.node_joined(&dep, node);
+                    }
+                    ClusterShield::None => {}
+                }
+            }
+        }
+    }
+    metrics
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Experiment;
+    use crate::dnn::ModelKind;
+    use crate::workload::ArrivalProcess;
+
+    fn churn_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            n_edges: 10,
+            cluster_size: 5,
+            model: ModelKind::Rnn,
+            iterations: 5,
+            pretrain_episodes: 20,
+            repetitions: 1,
+            failure_rate: 3.0,
+            rejoin_secs: 120.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn dynamic_run_completes_all_jobs_under_failures() {
+        let cfg = churn_cfg();
+        assert!(cfg.dynamic());
+        for m in Method::ALL {
+            let r = run_dynamic(&cfg, m, 5);
+            assert_eq!(r.jct.len(), 2 * 3, "{}: wrong job count", m.name());
+            assert!(r.jct.iter().all(|&t| t.is_finite() && t > 0.0));
+            assert!(!r.decision_secs.is_empty());
+        }
+    }
+
+    #[test]
+    fn dynamic_run_is_deterministic() {
+        let cfg = churn_cfg();
+        for m in [Method::Marl, Method::SroleD] {
+            let a = run_dynamic(&cfg, m, 11);
+            let b = run_dynamic(&cfg, m, 11);
+            assert_eq!(a.jct, b.jct, "{}", m.name());
+            assert_eq!(a.collisions, b.collisions);
+            assert_eq!(a.decision_secs, b.decision_secs);
+            assert_eq!(a.node_failures, b.node_failures);
+            assert_eq!(a.rescheduled_layers, b.rescheduled_layers);
+        }
+    }
+
+    #[test]
+    fn failures_actually_fire_and_reschedule() {
+        // Over a few seeds the churn schedule must deliver failures, and
+        // failures on busy nodes must strand + reschedule layers.
+        let mut failures = 0;
+        let mut rescheduled = 0;
+        for seed in [1u64, 2, 3] {
+            let r = run_dynamic(&churn_cfg(), Method::SroleC, seed);
+            failures += r.node_failures;
+            rescheduled += r.rescheduled_layers;
+        }
+        assert!(failures > 0, "no failure event fired across 3 seeds");
+        assert!(rescheduled > 0, "failures never stranded a layer");
+    }
+
+    #[test]
+    fn experiment_routes_dynamic_configs_through_event_driver() {
+        let cfg = churn_cfg();
+        let exp = Experiment::new(cfg);
+        let r = exp.run_once(Method::Marl, 7);
+        let direct = run_dynamic(&exp.cfg, Method::Marl, 7);
+        assert_eq!(r.jct, direct.jct);
+        assert_eq!(r.node_failures, direct.node_failures);
+    }
+
+    #[test]
+    fn poisson_arrivals_run_event_driven() {
+        let mut cfg = churn_cfg();
+        cfg.failure_rate = 0.0;
+        cfg.arrival = ArrivalProcess::Poisson { rate: 0.05 };
+        assert!(cfg.dynamic());
+        let r = run_dynamic(&cfg, Method::SroleD, 3);
+        assert_eq!(r.jct.len(), 6);
+        assert_eq!(r.node_failures, 0);
+    }
+
+    #[test]
+    fn static_configs_keep_the_wave_path() {
+        // A default (non-churn) config must not route through the dynamic
+        // driver — its metrics match the legacy wave path exactly.
+        let mut cfg = churn_cfg();
+        cfg.failure_rate = 0.0;
+        assert!(!cfg.dynamic());
+    }
+}

@@ -1,6 +1,13 @@
 //! Experiment coordinator: wires deployment + workload + policy + shields
 //! + DES into one measured run per (method, configuration, repetition),
 //! exactly the grid the paper's Figures 4–13 sweep.
+//!
+//! Static configurations replay the paper's pre-batched waves
+//! ([`Experiment::run_once`]); configurations with node churn or an
+//! online arrival process route through the event-driven [`dynamic`]
+//! driver instead.
+
+pub mod dynamic;
 
 use crate::cluster::Deployment;
 use crate::config::ExperimentConfig;
@@ -83,8 +90,14 @@ impl Experiment {
         ExperimentResult { method, metrics: pooled }
     }
 
-    /// One measured run.
+    /// One measured run.  Configurations with churn or online arrivals
+    /// run on the event-driven dynamic driver; the paper's static setup
+    /// keeps the pre-batched wave path (bit-identical to previous
+    /// releases).
     pub fn run_once(&self, method: Method, seed: u64) -> RunMetrics {
+        if self.cfg.dynamic() {
+            return dynamic::run_dynamic(&self.cfg, method, seed);
+        }
         let cfg = &self.cfg;
         let mut rng = Rng::new(seed);
         let dep = Deployment::generate(&mut rng, cfg.n_edges, cfg.cluster_size, cfg.profile.resource_profile());
@@ -94,7 +107,7 @@ impl Experiment {
             jobs_per_cluster: cfg.jobs_per_cluster,
             iterations: cfg.iterations,
             workload: cfg.workload,
-            arrival_window: 5.0,
+            arrival: cfg.arrival.clone(),
         };
         let workload = Workload::generate(&mut rng, &dep, &spec, 500_000.0);
 
@@ -226,7 +239,7 @@ pub fn pretrain(policy: &mut dyn Policy, cfg: &ExperimentConfig, rng: &mut Rng) 
             jobs_per_cluster: 0,
             iterations: 3,
             workload: rng.range_f64(0.6, 1.0),
-            arrival_window: 1.0,
+            arrival: crate::workload::ArrivalProcess::Batched { window: 1.0 },
         };
         let wl = Workload::generate(rng, &dep, &spec, 10_000.0);
         let mut schedules = out.schedules;

@@ -17,6 +17,7 @@
 //! This is the substrate the figure regeneration (`bin/figures.rs`), the
 //! CLI (`srole run`) and the `benches/` drivers run on.
 
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -25,12 +26,16 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{Experiment, Method};
 use crate::dnn::ModelKind;
 use crate::metrics::RunMetrics;
+use crate::util::json::{obj, Json};
+use crate::util::stats::Summary;
 use crate::util::table::{f, Table};
+use crate::workload::ArrivalProcess;
 
 /// One independent evaluation cell.
 #[derive(Debug, Clone)]
 pub struct Scenario {
-    /// Human-readable cell label (method/edges/workload/model/seed).
+    /// Human-readable cell label (method/edges/workload/model/seed, plus
+    /// churn/arrival tags when those axes are active).
     pub label: String,
     pub method: Method,
     pub cfg: ExperimentConfig,
@@ -38,7 +43,7 @@ pub struct Scenario {
 
 impl Scenario {
     pub fn new(method: Method, cfg: ExperimentConfig) -> Scenario {
-        let label = format!(
+        let mut label = format!(
             "{}/e{}/w{:.0}%/{}/k{:.0}/s{}",
             method.name(),
             cfg.n_edges,
@@ -47,6 +52,12 @@ impl Scenario {
             cfg.reward.kappa,
             cfg.seed
         );
+        if cfg.failure_rate > 0.0 {
+            label.push_str(&format!("/f{}", cfg.failure_rate));
+        }
+        if !matches!(cfg.arrival, ArrivalProcess::Batched { .. }) {
+            label.push_str(&format!("/a{}", cfg.arrival.label()));
+        }
         Scenario { label, method, cfg }
     }
 }
@@ -72,6 +83,10 @@ pub struct Sweep {
     pub models: Vec<ModelKind>,
     pub kappas: Vec<f64>,
     pub seeds: Vec<u64>,
+    /// Churn axis: node failures per 1000 simulated seconds (0 = static).
+    pub failure_rates: Vec<f64>,
+    /// Arrival-process axis (batched waves / Poisson / trace).
+    pub arrivals: Vec<ArrivalProcess>,
 }
 
 impl Sweep {
@@ -84,6 +99,8 @@ impl Sweep {
             models: Vec::new(),
             kappas: Vec::new(),
             seeds: Vec::new(),
+            failure_rates: Vec::new(),
+            arrivals: Vec::new(),
         }
     }
 
@@ -117,6 +134,18 @@ impl Sweep {
         self
     }
 
+    /// Churn axis: node failures per 1000 simulated seconds.
+    pub fn failure_rates(mut self, r: &[f64]) -> Sweep {
+        self.failure_rates = r.to_vec();
+        self
+    }
+
+    /// Arrival-process axis.
+    pub fn arrivals(mut self, a: &[ArrivalProcess]) -> Sweep {
+        self.arrivals = a.to_vec();
+        self
+    }
+
     /// Expand the cartesian product, methods varying fastest (so a
     /// figure row's four method cells are adjacent in the list).
     pub fn scenarios(&self) -> Vec<Scenario> {
@@ -133,25 +162,33 @@ impl Sweep {
         let models = dim(&self.models, self.base.model);
         let kappas = dim(&self.kappas, self.base.reward.kappa);
         let seeds = dim(&self.seeds, self.base.seed);
+        let failure_rates = dim(&self.failure_rates, self.base.failure_rate);
+        let arrivals = dim(&self.arrivals, self.base.arrival.clone());
 
         let mut out = Vec::new();
         for &seed in &seeds {
-            for &model in &models {
-                for &e in &edges {
-                    for &w in &workloads {
-                        for &kappa in &kappas {
-                            for &method in &methods {
-                                let mut cfg = self.base.clone();
-                                cfg.seed = seed;
-                                cfg.model = model;
-                                cfg.n_edges = e;
-                                cfg.workload = w;
-                                cfg.reward.kappa = kappa;
-                                // Keep cluster size valid on small sweeps.
-                                if cfg.cluster_size > e {
-                                    cfg.cluster_size = e.max(1);
+            for arrival in &arrivals {
+                for &failure_rate in &failure_rates {
+                    for &model in &models {
+                        for &e in &edges {
+                            for &w in &workloads {
+                                for &kappa in &kappas {
+                                    for &method in &methods {
+                                        let mut cfg = self.base.clone();
+                                        cfg.seed = seed;
+                                        cfg.model = model;
+                                        cfg.n_edges = e;
+                                        cfg.workload = w;
+                                        cfg.reward.kappa = kappa;
+                                        cfg.failure_rate = failure_rate;
+                                        cfg.arrival = arrival.clone();
+                                        // Keep cluster size valid on small sweeps.
+                                        if cfg.cluster_size > e {
+                                            cfg.cluster_size = e.max(1);
+                                        }
+                                        out.push(Scenario::new(method, cfg));
+                                    }
                                 }
-                                out.push(Scenario::new(method, cfg));
                             }
                         }
                     }
@@ -222,6 +259,47 @@ pub fn report_table(title: &str, reports: &[ScenarioReport]) -> Table {
         ]);
     }
     t
+}
+
+/// Write a machine-readable benchmark report `BENCH_<name>.json` into
+/// `dir`: per-scenario wall-clock milliseconds plus mean/p50/p95
+/// aggregates, so the perf trajectory is tracked across PRs.
+pub fn write_bench_json(
+    name: &str,
+    reports: &[ScenarioReport],
+    dir: &Path,
+) -> std::io::Result<PathBuf> {
+    let walls_ms: Vec<f64> = reports.iter().map(|r| r.wall_secs * 1e3).collect();
+    let scenarios = Json::Arr(
+        reports
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("label", Json::Str(r.scenario.label.clone())),
+                    ("wall_ms", Json::Num(r.wall_secs * 1e3)),
+                ])
+            })
+            .collect(),
+    );
+    let aggregate = if walls_ms.is_empty() {
+        Json::Null
+    } else {
+        let s = Summary::of(&walls_ms);
+        obj(vec![
+            ("mean_ms", Json::Num(s.mean)),
+            ("p50_ms", Json::Num(s.median)),
+            ("p95_ms", Json::Num(s.p95)),
+            ("n", Json::Num(s.n as f64)),
+        ])
+    };
+    let doc = obj(vec![
+        ("bench", Json::Str(name.to_string())),
+        ("scenarios", scenarios),
+        ("wall_ms", aggregate),
+    ]);
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, doc.to_string())?;
+    Ok(path)
 }
 
 #[cfg(test)]
@@ -297,6 +375,73 @@ mod tests {
             assert_eq!(s.metrics.decision_secs, p.metrics.decision_secs);
             assert_eq!(s.metrics.runtime_overloads, p.metrics.runtime_overloads);
         }
+    }
+
+    #[test]
+    fn churn_and_arrival_axes_expand_and_tag_labels() {
+        let sw = Sweep::new(tiny_base())
+            .methods(&[Method::Marl, Method::SroleD])
+            // Sub-0.1 rates pin the un-rounded label formatting.
+            .failure_rates(&[0.0, 0.01, 0.02, 2.0])
+            .arrivals(&[ArrivalProcess::default(), ArrivalProcess::Poisson { rate: 0.05 }]);
+        let scenarios = sw.scenarios();
+        assert_eq!(scenarios.len(), 2 * 4 * 2);
+        let mut labels: Vec<&str> = scenarios.iter().map(|s| s.label.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), scenarios.len(), "churn axes must keep labels unique");
+        assert!(scenarios.iter().any(|s| s.label.contains("/f2")));
+        assert!(scenarios.iter().any(|s| s.label.contains("/f0.01")));
+        assert!(scenarios.iter().any(|s| s.label.contains("/ap0.05")));
+        // The static cell keeps its legacy label untouched.
+        assert!(scenarios
+            .iter()
+            .any(|s| !s.label.contains("/f") && !s.label.contains("/a")));
+    }
+
+    #[test]
+    fn churn_runs_are_byte_identical_across_thread_counts() {
+        // The determinism contract extended to dynamic scenarios: same
+        // seed + failure events enabled must produce byte-identical
+        // reports whether the sweep runs on 1 thread or several.
+        let mut base = tiny_base();
+        base.failure_rate = 3.0;
+        base.rejoin_secs = 120.0;
+        let sw = Sweep::new(base)
+            .methods(&[Method::Marl, Method::SroleC, Method::SroleD, Method::Rl]);
+        let scenarios = sw.scenarios();
+        assert!(scenarios.iter().all(|s| s.cfg.dynamic()), "churn must be active");
+        let serial = run_parallel(&scenarios, 1);
+        let parallel = run_parallel(&scenarios, 4);
+        assert_eq!(serial.len(), parallel.len());
+        let mut failures = 0usize;
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.scenario.label, p.scenario.label);
+            assert_eq!(
+                s.metrics.to_json().to_string(),
+                p.metrics.to_json().to_string(),
+                "{}: report not byte-identical across thread counts",
+                s.scenario.label
+            );
+            failures += s.metrics.node_failures;
+        }
+        assert!(failures > 0, "vacuous: no failure event fired in any scenario");
+    }
+
+    #[test]
+    fn bench_json_written_with_aggregates() {
+        let sw = Sweep::new(tiny_base()).methods(&[Method::Marl]);
+        let reports = run_parallel(&sw.scenarios(), 1);
+        let dir = std::env::temp_dir();
+        let path = write_bench_json("harness_test", &reports, &dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.get("bench").and_then(|b| b.as_str()), Some("harness_test"));
+        let cells = parsed.get("scenarios").and_then(|s| s.as_arr()).unwrap();
+        assert_eq!(cells.len(), 1);
+        assert!(cells[0].get("wall_ms").and_then(|w| w.as_f64()).unwrap() >= 0.0);
+        assert!(parsed.at(&["wall_ms", "p95_ms"]).is_some());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

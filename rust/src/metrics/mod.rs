@@ -25,6 +25,11 @@ pub struct RunMetrics {
     pub runtime_overloads: usize,
     pub shield_corrections: usize,
     pub memory_violations: usize,
+    /// Node failure events delivered by the event core (dynamic runs).
+    pub node_failures: usize,
+    /// Layers stranded by failures and re-placed by the reschedule
+    /// handler.
+    pub rescheduled_layers: usize,
     /// Per-(node, sample) task counts.
     pub tasks_per_device: Vec<f64>,
     /// Per-(node, sample) utilization per resource.
@@ -108,6 +113,8 @@ impl RunMetrics {
             ("runtime_overloads", Json::Num(self.runtime_overloads as f64)),
             ("shield_corrections", Json::Num(self.shield_corrections as f64)),
             ("memory_violations", Json::Num(self.memory_violations as f64)),
+            ("node_failures", Json::Num(self.node_failures as f64)),
+            ("rescheduled_layers", Json::Num(self.rescheduled_layers as f64)),
             ("tasks_per_device", arr(&self.tasks_per_device)),
             ("util_cpu", arr(&self.util_cpu)),
             ("util_mem", arr(&self.util_mem)),
@@ -126,6 +133,8 @@ impl RunMetrics {
         self.runtime_overloads += other.runtime_overloads;
         self.shield_corrections += other.shield_corrections;
         self.memory_violations += other.memory_violations;
+        self.node_failures += other.node_failures;
+        self.rescheduled_layers += other.rescheduled_layers;
         self.tasks_per_device.extend_from_slice(&other.tasks_per_device);
         self.util_cpu.extend_from_slice(&other.util_cpu);
         self.util_mem.extend_from_slice(&other.util_mem);
@@ -148,6 +157,8 @@ mod tests {
             runtime_overloads: 0,
             shield_corrections: 2,
             memory_violations: 1,
+            node_failures: 1,
+            rescheduled_layers: 2,
             tasks_per_device: vec![2.0, 3.0, 5.0],
             util_cpu: vec![0.5, 0.6],
             util_mem: vec![0.4, 0.5],

@@ -13,7 +13,7 @@ use crate::util::error::Result;
 use super::qnet::clone_literals;
 use super::{lit_i32, scalar_f32, scalar_i32, to_scalar_f32, Engine};
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(pjrt_vendored))]
 use super::pjrt_stub as xla;
 
 /// Hyper-parameters mirrored from `manifest.meta.lm`.

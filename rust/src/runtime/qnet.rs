@@ -11,7 +11,7 @@ use crate::util::error::Result;
 
 use super::{lit_f32, lit_i32, scalar_f32, scalar_i32, to_scalar_f32, Engine};
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(pjrt_vendored))]
 use super::pjrt_stub as xla;
 
 /// Owned Q-network parameters + target-network copy.

@@ -19,7 +19,7 @@
 //! Fig 7/12 can be regenerated; the constants are calibrated to
 //! edge-class hardware and documented inline.
 
-use crate::cluster::{Deployment, NodeId, ResourceKind, Resources};
+use crate::cluster::{Deployment, Membership, NodeId, ResourceKind, Resources};
 use crate::dnn::ModelGraph;
 use crate::rl::{features::MAX_NEIGHBORS, table_key, layer_class, state_vector, CandidateView, Episode, EpisodeStep, Policy, RewardParams, StepPenalty};
 use crate::shield::{ProposedAction, Shield};
@@ -146,8 +146,36 @@ pub fn marl_candidates(dep: &Deployment, owner: NodeId) -> Vec<NodeId> {
     cands
 }
 
+/// Candidate set under dynamic membership: the owner (when alive) plus
+/// its *alive* cluster neighbors (the incremental [`Membership`] index),
+/// capped to the DQN action space.  A dead owner is excluded — its job
+/// keeps running, but layers must land on live hosts; when its alive
+/// neighborhood is empty the set falls back to any alive cluster member
+/// (the event driver never empties a cluster), and a fully dead cluster
+/// degenerates to the owner itself so the set is never empty.
+pub fn marl_candidates_alive(
+    dep: &Deployment,
+    membership: &Membership,
+    owner: NodeId,
+) -> Vec<NodeId> {
+    let neighbors = membership.alive_neighbors(owner);
+    let mut cands = Vec::with_capacity(neighbors.len() + 1);
+    if membership.is_alive(owner) {
+        cands.push(owner);
+    }
+    cands.extend_from_slice(neighbors);
+    if cands.is_empty() {
+        match membership.alive_members(dep.cluster_of(owner)).first() {
+            Some(&fallback) => cands.push(fallback),
+            None => cands.push(owner),
+        }
+    }
+    cands.truncate(MAX_NEIGHBORS + 1);
+    cands
+}
+
 /// Sample the actual (noisy) demand realized at execution time.
-fn noisy_demand(est: &Resources, rng: &mut Rng) -> Resources {
+pub(crate) fn noisy_demand(est: &Resources, rng: &mut Rng) -> Resources {
     let f = |v: f64, rng: &mut Rng| (v * (1.0 + DEMAND_NOISE_SD * rng.normal())).max(0.5 * v);
     Resources { cpu: f(est.cpu, rng), mem: f(est.mem, rng), bw: f(est.bw, rng) }
 }
@@ -250,6 +278,45 @@ pub fn marl_wave(
     graph: &ModelGraph,
     jobs: &[DlJob],
     policy: &mut dyn Policy,
+    shield: Option<&mut dyn Shield>,
+    params: &RewardParams,
+    refresh_rounds: usize,
+    rng: &mut Rng,
+) -> WaveOutcome {
+    marl_wave_impl(dep, None, state, graph, jobs, policy, shield, params, refresh_rounds, rng)
+}
+
+/// Multi-agent wave under dynamic membership: agents draw candidates from
+/// the alive-filtered adjacency, so a [`EventKind::JobArrival`]-triggered
+/// wave never places layers on failed nodes.
+///
+/// [`EventKind::JobArrival`]: crate::sim::EventKind::JobArrival
+#[allow(clippy::too_many_arguments)]
+pub fn marl_wave_dynamic(
+    dep: &Deployment,
+    membership: &Membership,
+    state: &mut ResourceState,
+    graph: &ModelGraph,
+    jobs: &[DlJob],
+    policy: &mut dyn Policy,
+    shield: Option<&mut dyn Shield>,
+    params: &RewardParams,
+    refresh_rounds: usize,
+    rng: &mut Rng,
+) -> WaveOutcome {
+    marl_wave_impl(
+        dep, Some(membership), state, graph, jobs, policy, shield, params, refresh_rounds, rng,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn marl_wave_impl(
+    dep: &Deployment,
+    membership: Option<&Membership>,
+    state: &mut ResourceState,
+    graph: &ModelGraph,
+    jobs: &[DlJob],
+    policy: &mut dyn Policy,
     mut shield: Option<&mut dyn Shield>,
     params: &RewardParams,
     refresh_rounds: usize,
@@ -283,7 +350,10 @@ pub fn marl_wave(
         for (pi, &ji) in active.iter().enumerate() {
             let owner = pendings[ji].job.owner;
             let layer = &graph.layers[pendings[ji].next_layer];
-            let cands = marl_candidates(dep, owner);
+            let cands = match membership {
+                Some(m) => marl_candidates_alive(dep, m, owner),
+                None => marl_candidates(dep, owner),
+            };
             let cviews = candidate_views(dep, state, &views[ji], owner, &cands);
             let choice = policy.choose(layer, &cviews, rng, true);
             let target = cands[choice];
@@ -378,6 +448,36 @@ pub fn central_wave(
     params: &RewardParams,
     rng: &mut Rng,
 ) -> WaveOutcome {
+    central_wave_impl(dep, None, state, graph, jobs, policy, params, rng)
+}
+
+/// Centralized-RL wave under dynamic membership: the head's candidate
+/// set is the cluster's *alive* members.
+#[allow(clippy::too_many_arguments)]
+pub fn central_wave_dynamic(
+    dep: &Deployment,
+    membership: &Membership,
+    state: &mut ResourceState,
+    graph: &ModelGraph,
+    jobs: &[DlJob],
+    policy: &mut dyn Policy,
+    params: &RewardParams,
+    rng: &mut Rng,
+) -> WaveOutcome {
+    central_wave_impl(dep, Some(membership), state, graph, jobs, policy, params, rng)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn central_wave_impl(
+    dep: &Deployment,
+    membership: Option<&Membership>,
+    state: &mut ResourceState,
+    graph: &ModelGraph,
+    jobs: &[DlJob],
+    policy: &mut dyn Policy,
+    params: &RewardParams,
+    rng: &mut Rng,
+) -> WaveOutcome {
     let n_layers = graph.n_layers();
     let mut collisions = 0usize;
     let mut schedules = Vec::with_capacity(jobs.len());
@@ -390,7 +490,10 @@ pub fn central_wave(
     let mut view = View::snapshot(state);
     for job in jobs {
         let mut pending = Pending::new(job.clone(), n_layers);
-        let members = &dep.clusters[job.cluster].members;
+        let members: &[NodeId] = match membership {
+            Some(m) => m.alive_members(job.cluster),
+            None => &dep.clusters[job.cluster].members,
+        };
         for layer_id in 0..n_layers {
             let layer = &graph.layers[layer_id];
             let cviews = candidate_views(dep, state, &view, job.owner, members);
@@ -439,6 +542,118 @@ pub fn central_wave(
     }
 
     WaveOutcome { schedules, collisions, shield_corrections: 0 }
+}
+
+/// One stranded pipeline stage: a `(job, layer)` whose host node failed
+/// mid-training.
+#[derive(Debug, Clone, Copy)]
+pub struct Stranded {
+    /// Caller-side job index (opaque to the handler; outcomes are
+    /// returned parallel to the input slice).
+    pub job: usize,
+    /// The MARL agent that owns the job and re-decides the placement.
+    pub owner: NodeId,
+    pub layer_id: usize,
+}
+
+/// Outcome of one failure-rescheduling round.
+#[derive(Debug)]
+pub struct ReschedOutcome {
+    /// New host per stranded layer (parallel to the input slice);
+    /// `usize::MAX` when no alive host exists anywhere in the cluster.
+    pub targets: Vec<NodeId>,
+    /// Pre-correction collisions among the re-proposed placements.
+    pub collisions: usize,
+    /// Shield corrections applied to the re-proposals.
+    pub corrections: usize,
+    /// Scheduling latency of the round: owners re-decide in parallel, so
+    /// the round costs the slowest owner (same accounting constants as
+    /// the arrival waves — Fig 7/12 stay regenerable under churn).
+    pub sched_secs: f64,
+    pub shield_secs: f64,
+}
+
+/// Failure event handler: re-place every layer stranded on `failed`.
+///
+/// Each owning agent re-decides its stranded layers against the *stale*
+/// periodic state view (`view_demand`, refreshed by `ViewRefresh`
+/// events), drawing candidates from the alive membership; the round's
+/// joint re-proposal then passes through the same shield/collision path
+/// as an arrival wave.  The caller must release the stranded layers'
+/// resource handles *before* calling, and commits the returned targets
+/// afterwards.
+///
+/// Rescheduling does not extend the RL episode — the paper's reward
+/// closes over the original decision sequence; recovery placements are
+/// an infrastructure action, not an agent action.
+#[allow(clippy::too_many_arguments)]
+pub fn reschedule_stranded(
+    dep: &Deployment,
+    membership: &Membership,
+    state: &ResourceState,
+    graph: &ModelGraph,
+    view_demand: &[Resources],
+    stranded: &[Stranded],
+    failed: NodeId,
+    policy: &mut dyn Policy,
+    mut shield: Option<&mut dyn Shield>,
+    params: &RewardParams,
+    rng: &mut Rng,
+) -> ReschedOutcome {
+    debug_assert!(
+        !membership.is_alive(failed),
+        "caller must mark the failed node dead before rescheduling"
+    );
+    let view = View { demand: view_demand.to_vec() };
+    let mut targets: Vec<NodeId> = Vec::with_capacity(stranded.len());
+    let mut proposals: Vec<ProposedAction> = Vec::with_capacity(stranded.len());
+    // Per-owner decision cost: an owner with several stranded layers
+    // re-decides them sequentially; distinct owners run in parallel.
+    let mut owner_secs: Vec<(NodeId, f64)> = Vec::new();
+    for (i, s) in stranded.iter().enumerate() {
+        let layer = &graph.layers[s.layer_id];
+        // Dead owners are excluded and a live fallback substituted by
+        // `marl_candidates_alive`, so the set is never empty; a fully
+        // dead cluster degenerates to the owner, which the caller's
+        // cluster invariant rules out.
+        let cands = marl_candidates_alive(dep, membership, s.owner);
+        if cands.len() == 1 && !membership.is_alive(cands[0]) {
+            // Degenerate fallback (whole cluster dead): no alive host.
+            targets.push(usize::MAX);
+            continue;
+        }
+        let cviews = candidate_views(dep, state, &view, s.owner, &cands);
+        let choice = policy.choose(layer, &cviews, rng, true);
+        let target = cands[choice];
+        let secs = cands.len() as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
+        match owner_secs.iter_mut().find(|(o, _)| *o == s.owner) {
+            Some((_, acc)) => *acc += secs,
+            None => owner_secs.push((s.owner, secs)),
+        }
+        proposals.push(ProposedAction {
+            idx: i,
+            agent: s.owner,
+            job: s.job,
+            layer_id: s.layer_id,
+            demand: layer.demand(),
+            target,
+        });
+        targets.push(target);
+    }
+    let sched_secs = owner_secs.iter().map(|&(_, s)| s).fold(0.0, f64::max);
+
+    let (collisions, corrections, shield_secs) = match shield.as_deref_mut() {
+        Some(sh) => {
+            let out = sh.check(&proposals, state, dep, params.alpha);
+            let n_corrections = out.corrections.len();
+            for (idx, new_target) in out.corrections {
+                targets[idx] = new_target;
+            }
+            (out.collisions, n_corrections, out.shield_secs)
+        }
+        None => (detect_collisions(&proposals, state, params.alpha), 0, 0.0),
+    };
+    ReschedOutcome { targets, collisions, corrections, sched_secs, shield_secs }
 }
 
 #[cfg(test)]
@@ -569,6 +784,90 @@ mod tests {
         // Pre-load the node: a single proposal now also collides.
         state.place(0, Resources::new(cap * 0.8, 0.0, 0.0), Resources::new(cap * 0.8, 0.0, 0.0), false);
         assert_eq!(detect_collisions(&props[..1], &state, 0.9), 1);
+    }
+
+    #[test]
+    fn dynamic_wave_avoids_dead_nodes() {
+        let (dep, mut state, graph, jobs, mut rng) = setup(5);
+        let mut membership = Membership::full(&dep);
+        // Kill every node except the job owners and one spare, so live
+        // placements are forced onto the survivors.
+        let owners: Vec<NodeId> = jobs.iter().map(|j| j.owner).collect();
+        let spare = (0..dep.n()).find(|n| !owners.contains(n)).unwrap();
+        let mut dead = Vec::new();
+        for n in 0..dep.n() {
+            if !owners.contains(&n) && n != spare {
+                membership.fail(&dep, n);
+                dead.push(n);
+            }
+        }
+        let mut policy = TabularQ::new(0.2, 0.3);
+        let params = RewardParams::default();
+        let out = marl_wave_dynamic(
+            &dep, &membership, &mut state, &graph, &jobs, &mut policy, None, &params, 3,
+            &mut rng,
+        );
+        for s in &out.schedules {
+            for &n in &s.placement {
+                assert!(!dead.contains(&n), "placed a layer on dead node {n}");
+            }
+        }
+        // The centralized head must also restrict itself to survivors.
+        let mut state2 = ResourceState::new(&dep);
+        let out2 = central_wave_dynamic(
+            &dep, &membership, &mut state2, &graph, &jobs, &mut policy, &params, &mut rng,
+        );
+        for s in &out2.schedules {
+            for &n in &s.placement {
+                assert!(!dead.contains(&n), "head placed a layer on dead node {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn reschedule_moves_stranded_layers_to_alive_hosts() {
+        let (dep, mut state, graph, jobs, mut rng) = setup(5);
+        let mut policy = TabularQ::new(0.2, 0.1);
+        let params = RewardParams::default();
+        let out = marl_wave(
+            &dep, &mut state, &graph, &jobs, &mut policy, None, &params, 3, &mut rng,
+        );
+        // Fail the busiest placed node and strand its layers.
+        let schedules = out.schedules;
+        let mut counts = vec![0usize; dep.n()];
+        for s in &schedules {
+            for &n in &s.placement {
+                counts[n] += 1;
+            }
+        }
+        let failed = (0..dep.n()).max_by_key(|&n| counts[n]).unwrap();
+        assert!(counts[failed] > 0, "vacuous: nothing placed on the failed node");
+        let mut membership = Membership::full(&dep);
+        membership.fail(&dep, failed);
+        let mut stranded = Vec::new();
+        for (ji, s) in schedules.iter().enumerate() {
+            for (layer_id, &n) in s.placement.iter().enumerate() {
+                if n == failed {
+                    stranded.push(Stranded { job: ji, owner: s.job.owner, layer_id });
+                }
+            }
+        }
+        let view: Vec<Resources> = (0..state.n()).map(|n| *state.demand(n)).collect();
+        let outcome = reschedule_stranded(
+            &dep, &membership, &state, &graph, &view, &stranded, failed, &mut policy, None,
+            &params, &mut rng,
+        );
+        assert_eq!(outcome.targets.len(), stranded.len());
+        for &t in &outcome.targets {
+            assert_ne!(t, failed, "rescheduled back onto the failed node");
+            assert!(t == usize::MAX || membership.is_alive(t));
+        }
+        assert!(
+            outcome.targets.iter().any(|&t| t != usize::MAX),
+            "no stranded layer found an alive host in a 4-survivor cluster"
+        );
+        assert!(outcome.sched_secs > 0.0, "reschedule rounds must account latency");
+        assert_eq!(outcome.shield_secs, 0.0, "no shield attached");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 use crate::cluster::Deployment;
 use crate::sim::state::ResourceState;
+use crate::util::NodeSet;
 
 use super::{algorithm1, ProposedAction, Shield, ShieldOutcome, ShieldScratch, CHECK_SECS_PER_ACTION, FIX_SECS_PER_CORRECTION};
 
@@ -18,11 +19,22 @@ pub struct CentralShield {
     pub total_corrections: usize,
     pub total_collisions: usize,
     scratch: ShieldScratch,
+    /// Dynamic-membership restriction: when set, safe alternatives are
+    /// drawn only from this (alive) node set.  `None` (the default, and
+    /// the static-deployment case) allows the whole cluster — matching
+    /// the scan reference the equivalence tests pin against.
+    alive: Option<NodeSet>,
 }
 
 impl CentralShield {
     pub fn new() -> CentralShield {
         CentralShield::default()
+    }
+
+    /// Restrict correction targets to `alive` nodes (the event core calls
+    /// this when membership changes); `None` lifts the restriction.
+    pub fn set_alive(&mut self, alive: Option<NodeSet>) {
+        self.alive = alive;
     }
 }
 
@@ -36,7 +48,8 @@ impl Shield for CentralShield {
     ) -> ShieldOutcome {
         let visible: Vec<usize> = (0..proposals.len()).collect();
         let (corrections, collided) = algorithm1(
-            proposals, &visible, |_| true, state, dep, alpha, None, &mut self.scratch,
+            proposals, &visible, |_| true, state, dep, alpha, self.alive.as_ref(),
+            &mut self.scratch,
         );
         let collisions = collided.len();
         // The single head checks every action serially.
@@ -89,6 +102,34 @@ mod tests {
         assert!(out.corrections.is_empty(), "criterion 1: only correct on violation");
         assert_eq!(out.collisions, 0);
         assert_eq!(out.checked, 3);
+    }
+
+    #[test]
+    fn alive_restriction_excludes_dead_correction_targets() {
+        let dep = small_dep();
+        let state = ResourceState::new(&dep);
+        let cap = state.caps(0).cpu;
+        let props = vec![
+            proposal(0, 1, 0, cap * 0.55, 60.0, 1.0),
+            proposal(1, 2, 0, cap * 0.55, 60.0, 1.0),
+        ];
+        // Unrestricted: a correction lands somewhere in the cluster.
+        let mut free = CentralShield::new();
+        let unrestricted = free.check(&props, &state, &dep, 0.9);
+        assert_eq!(unrestricted.corrections.len(), 1);
+        let chosen = unrestricted.corrections[0].1;
+        // Kill every node except the overloaded target: no safe
+        // alternative remains alive, so the collision must go uncorrected.
+        let mut shield = CentralShield::new();
+        shield.set_alive(Some(crate::util::NodeSet::from_slice(dep.n(), &[0])));
+        let out = shield.check(&props, &state, &dep, 0.9);
+        assert_eq!(out.collisions, 1);
+        assert!(out.corrections.is_empty(), "corrected onto a dead node");
+        // Reviving the previously chosen host restores the correction.
+        shield.set_alive(Some(crate::util::NodeSet::from_slice(dep.n(), &[0, chosen])));
+        let out = shield.check(&props, &state, &dep, 0.9);
+        assert_eq!(out.corrections.len(), 1);
+        assert_eq!(out.corrections[0].1, chosen);
     }
 
     #[test]

@@ -61,6 +61,22 @@ impl DecentralShield {
             collided: NodeSet::with_universe(dep.n()),
         }
     }
+
+    /// Membership-change handler (node failed or left): drop the node
+    /// from the shield's region structures and re-partition boundary
+    /// responsibility for the affected sub-cluster pairs — incrementally,
+    /// via [`SubClusters::remove_member`].  Returns false when the node
+    /// was not part of this shield's cluster.
+    pub fn node_failed(&mut self, dep: &Deployment, node: NodeId) -> bool {
+        self.subs.remove_member(node, &dep.topo)
+    }
+
+    /// Membership-change handler (node joined or rejoined): attach the
+    /// node to the nearest sub-cluster and re-derive that sub-cluster's
+    /// boundary pairs.  Returns false when the node is already covered.
+    pub fn node_joined(&mut self, dep: &Deployment, node: NodeId) -> bool {
+        self.subs.add_member(node, &dep.topo)
+    }
 }
 
 impl Shield for DecentralShield {
@@ -402,6 +418,51 @@ mod tests {
         props2.push(proposal(2, iagent, interior, icap * 0.95, 40.0, 1.0));
         let out2 = d2.check(&props2, &state, &dep, 0.9);
         assert_eq!(out2.collisions, 2, "one boundary + one interior event");
+    }
+
+    #[test]
+    fn repartition_on_failure_stops_targeting_dead_nodes() {
+        // After a node fails, the shield's re-partitioned region tables
+        // must neither check it as a boundary node nor offer it as a
+        // correction target, and must match a from-scratch rebuild.
+        use crate::cluster::SubClusters;
+        let dep = dep10();
+        let members = dep.clusters[0].members.clone();
+        let mut d = DecentralShield::new(&dep, &members, 3);
+        let dead = members[3];
+        assert!(d.node_failed(&dep, dead));
+        assert!(!d.node_failed(&dep, dead), "double failure is a no-op");
+        assert!(!d.subs.is_member(dead));
+        assert!(!d.subs.is_boundary(dead));
+        for bi in 0..d.subs.boundaries.len() {
+            assert!(!d.subs.pair_boundary_set(bi).contains(dead));
+            assert!(!d.subs.pair_allowed_set(bi).contains(dead));
+        }
+        let reference = SubClusters::from_assignment(
+            d.subs.members.clone(),
+            d.subs.assignment.clone(),
+            d.subs.k,
+            &dep.topo,
+        );
+        assert_eq!(d.subs, reference, "incremental re-partition != rebuild");
+
+        // Overload an alive node: any corrections must avoid the dead one.
+        let state = ResourceState::new(&dep);
+        let alive: Vec<NodeId> = members.iter().copied().filter(|&m| m != dead).collect();
+        let target = alive[0];
+        let cap = state.caps(target).cpu;
+        let props = vec![
+            proposal(0, alive[1], target, cap * 0.6, 40.0, 1.0),
+            proposal(1, alive[2], target, cap * 0.6, 40.0, 1.0),
+        ];
+        let out = d.check(&props, &state, &dep, 0.9);
+        for &(_, tgt) in &out.corrections {
+            assert_ne!(tgt, dead, "corrected onto a failed node");
+        }
+
+        // Rejoin restores coverage.
+        assert!(d.node_joined(&dep, dead));
+        assert!(d.subs.is_member(dead));
     }
 
     #[test]

@@ -1,21 +1,23 @@
-//! Discrete-event execution engine.
+//! Static discrete-event executor.
 //!
 //! Takes the schedules a wave produced, plus the background workload, and
-//! advances simulated time: iteration completions re-price the next
-//! iteration from the *current* contention (background churn, other DL
-//! jobs co-resident on the same nodes), utilization is sampled at a fixed
-//! period (the paper samples every 10 minutes), and per-job completions
-//! release resources and report the training time used both for metrics
-//! and as the RL reward `O`.
-
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+//! advances simulated time on the unified event core ([`super::event`]):
+//! iteration completions re-price the next iteration from the *current*
+//! contention (background churn, other DL jobs co-resident on the same
+//! nodes), utilization is sampled at a fixed period (the paper samples
+//! every 10 minutes), and per-job completions release resources and report
+//! the training time used both for metrics and as the RL reward `O`.
+//!
+//! This executor runs with *frozen membership* — the dynamic driver in
+//! `coordinator::dynamic` handles arrival streams and node churn on the
+//! same [`EventQueue`].
 
 use crate::cluster::Deployment;
 use crate::dnn::ModelGraph;
 use crate::sched::JobSchedule;
 use crate::workload::Workload;
 
+use super::event::{EventKind, EventQueue};
 use super::state::{ResourceState, TaskHandle};
 use super::timing;
 
@@ -23,39 +25,6 @@ use super::timing;
 /// ("we measured the resource utilization of the devices every 10
 /// minutes").
 pub const SAMPLE_PERIOD_SECS: f64 = 600.0;
-
-#[derive(Debug, Clone, Copy, PartialEq)]
-enum EvKind {
-    IterEnd { job: usize },
-    BgStart { bg: usize },
-    BgEnd { bg: usize },
-    Sample,
-}
-
-struct Ev {
-    t: f64,
-    seq: usize,
-    kind: EvKind,
-}
-
-impl PartialEq for Ev {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Ev {}
-impl PartialOrd for Ev {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Ev {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap: reverse the comparison; break ties by sequence for
-        // determinism.
-        other.t.total_cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
-    }
-}
 
 /// Per-job execution result.
 #[derive(Debug, Clone)]
@@ -151,23 +120,18 @@ impl<'a> Executor<'a> {
     ) -> ExecutionReport {
         let n_clusters = self.dep.clusters.len();
         let mut report = ExecutionReport::default();
-        let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
-        let mut seq = 0usize;
-        let mut push = |heap: &mut BinaryHeap<Ev>, t: f64, kind: EvKind| {
-            heap.push(Ev { t, seq, kind });
-            seq += 1;
-        };
+        let mut queue = EventQueue::new();
 
         // Background workload events.  Pre-placed segments only need
         // their end events.
         let mut bg_handles: Vec<Option<TaskHandle>> = vec![None; self.workload.background.len()];
         for (i, h) in pre_placed {
             bg_handles[i] = Some(h);
-            push(&mut heap, self.workload.background[i].end, EvKind::BgEnd { bg: i });
+            queue.push(self.workload.background[i].end, EventKind::BgEnd { bg: i });
         }
         for (i, bg) in self.workload.background.iter().enumerate() {
             if bg_handles[i].is_none() {
-                push(&mut heap, bg.start, EvKind::BgStart { bg: i });
+                queue.push(bg.start, EventKind::BgStart { bg: i });
             }
         }
 
@@ -184,10 +148,10 @@ impl<'a> Executor<'a> {
             });
             // First iteration completion is priced lazily at start time:
             // use a zero-length bootstrap event.
-            push(&mut heap, start, EvKind::IterEnd { job: ji });
+            queue.push(start, EventKind::IterEnd { job: ji });
         }
 
-        push(&mut heap, self.sample_period, EvKind::Sample);
+        queue.push(self.sample_period, EventKind::Sample);
 
         let mut was_overloaded: Vec<bool> =
             (0..self.dep.n()).map(|n| state.actual_overloaded(n, self.alpha)).collect();
@@ -203,22 +167,22 @@ impl<'a> Executor<'a> {
         };
 
         let mut remaining = runs.len();
-        while let Some(ev) = heap.pop() {
+        while let Some(ev) = queue.pop() {
             match ev.kind {
-                EvKind::BgStart { bg } => {
+                EventKind::BgStart { bg } => {
                     let b = &self.workload.background[bg];
                     let h = state.place(b.node, b.demand, b.demand, false);
                     bg_handles[bg] = Some(h);
-                    push(&mut heap, b.end.max(ev.t), EvKind::BgEnd { bg });
+                    queue.push(b.end.max(ev.t), EventKind::BgEnd { bg });
                     check_overloads(state, &mut report, &mut was_overloaded);
                 }
-                EvKind::BgEnd { bg } => {
+                EventKind::BgEnd { bg } => {
                     if let Some(h) = bg_handles[bg].take() {
                         state.release(h);
                     }
                     check_overloads(state, &mut report, &mut was_overloaded);
                 }
-                EvKind::Sample => {
+                EventKind::Sample => {
                     if remaining > 0 || ev.t < self.sample_horizon {
                         for n in 0..self.dep.n() {
                             report.tasks_per_device.push(state.task_count(n) as f64);
@@ -226,10 +190,10 @@ impl<'a> Executor<'a> {
                             report.util_mem.push(state.actual_util(n, crate::cluster::ResourceKind::Mem).clamp(0.0, 2.0));
                             report.util_bw.push(state.actual_util(n, crate::cluster::ResourceKind::Bw).clamp(0.0, 2.0));
                         }
-                        push(&mut heap, ev.t + self.sample_period, EvKind::Sample);
+                        queue.push(ev.t + self.sample_period, EventKind::Sample);
                     }
                 }
-                EvKind::IterEnd { job } => {
+                EventKind::IterEnd { job } => {
                     let sched = &schedules[job];
                     let run = &mut runs[job];
                     if run.done {
@@ -275,8 +239,14 @@ impl<'a> Executor<'a> {
                                 &sched.placement,
                             );
                         }
-                        push(&mut heap, ev.t + dt.max(1e-6), EvKind::IterEnd { job });
+                        queue.push(ev.t + dt.max(1e-6), EventKind::IterEnd { job });
                     }
+                }
+                EventKind::JobArrival { .. }
+                | EventKind::ViewRefresh
+                | EventKind::NodeFail { .. }
+                | EventKind::NodeJoin { .. } => {
+                    unreachable!("the static executor does not schedule churn events")
                 }
             }
         }

@@ -1,0 +1,179 @@
+//! The unified event core of the simulator.
+//!
+//! Every dynamic occurrence in an experiment — job arrivals, iteration
+//! completions, background-workload churn, periodic sampling and state-view
+//! refreshes, and node join/leave/failure — is one [`EventKind`] drawn from
+//! a single time-ordered [`EventQueue`].  The static executor
+//! (`sim::engine`) and the dynamic churn driver (`coordinator::dynamic`)
+//! both run on this queue; they differ only in which kinds they schedule
+//! and how they handle them.
+//!
+//! Ordering is deterministic: events pop by ascending time, ties broken by
+//! insertion sequence.  Because every scenario owns its queue and pushes
+//! events in a seed-determined order, replays are bit-identical regardless
+//! of host thread count.
+//!
+//! Adding a new event kind is a three-step change: add the variant here,
+//! schedule it (`EventQueue::push`) from whichever layer owns its timing,
+//! and handle it in the driver's `match` — the compiler's exhaustiveness
+//! check points at every driver that must decide what the kind means.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::cluster::NodeId;
+
+/// One kind of simulated occurrence.  The payload indexes into the
+/// scheduling driver's own tables (workload job lists, background-segment
+/// lists), keeping the queue itself free of references.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A batch of DL jobs arrives and requests scheduling.  `wave`
+    /// indexes the driver's precomputed arrival-batch table.
+    JobArrival { wave: usize },
+    /// One pipeline iteration of running job `job` completes (also used
+    /// as the zero-length bootstrap event at execution start).
+    IterEnd { job: usize },
+    /// Background segment `bg` starts occupying its node.
+    BgStart { bg: usize },
+    /// Background segment `bg` releases its node.
+    BgEnd { bg: usize },
+    /// Periodic utilization / task-count sampling tick.
+    Sample,
+    /// Periodic refresh of the schedulers' (stale) state views.
+    ViewRefresh,
+    /// Edge node `node` fails: membership shrinks, resident tasks are
+    /// lost, stranded DL layers must be rescheduled.
+    NodeFail { node: NodeId },
+    /// Edge node `node` (re)joins its cluster.
+    NodeJoin { node: NodeId },
+}
+
+/// A scheduled event: fire time plus insertion sequence (the tie-break).
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub t: f64,
+    pub seq: usize,
+    pub kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: reverse the comparison; break time ties by insertion
+        // sequence for determinism.
+        other.t.total_cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Deterministic time-ordered event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: usize,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    /// Schedule `kind` at simulated time `t`.
+    pub fn push(&mut self, t: f64, kind: EventKind) {
+        self.heap.push(Event { t, seq: self.seq, kind });
+        self.seq += 1;
+    }
+
+    /// Next event in (time, insertion) order.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, EventKind::Sample);
+        q.push(1.0, EventKind::IterEnd { job: 0 });
+        q.push(3.0, EventKind::BgStart { bg: 2 });
+        let order: Vec<f64> = std::iter::from_fn(|| q.pop()).map(|e| e.t).collect();
+        assert_eq!(order, vec![1.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_sequence() {
+        let mut q = EventQueue::new();
+        q.push(2.0, EventKind::NodeFail { node: 7 });
+        q.push(2.0, EventKind::NodeJoin { node: 7 });
+        q.push(2.0, EventKind::ViewRefresh);
+        let kinds: Vec<EventKind> = std::iter::from_fn(|| q.pop()).map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                EventKind::NodeFail { node: 7 },
+                EventKind::NodeJoin { node: 7 },
+                EventKind::ViewRefresh,
+            ]
+        );
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q = EventQueue::new();
+        q.push(10.0, EventKind::Sample);
+        q.push(1.0, EventKind::JobArrival { wave: 0 });
+        let first = q.pop().unwrap();
+        assert_eq!(first.kind, EventKind::JobArrival { wave: 0 });
+        // An event scheduled mid-run before the pending one still wins.
+        q.push(4.0, EventKind::IterEnd { job: 1 });
+        assert_eq!(q.pop().unwrap().t, 4.0);
+        assert_eq!(q.pop().unwrap().t, 10.0);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn len_tracks_pending_events() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.len(), 0);
+        q.push(1.0, EventKind::Sample);
+        q.push(2.0, EventKind::Sample);
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn identical_push_sequences_replay_identically() {
+        let build = || {
+            let mut q = EventQueue::new();
+            for i in 0..50 {
+                q.push((i % 7) as f64, EventKind::IterEnd { job: i });
+            }
+            std::iter::from_fn(move || q.pop()).map(|e| (e.t, e.kind)).collect::<Vec<_>>()
+        };
+        assert_eq!(build(), build());
+    }
+}

@@ -1,14 +1,19 @@
 //! Discrete-event simulation of the edge deployment.
 //!
-//! [`state`] tracks resident demands and utilization; [`timing`] prices a
-//! training iteration for a given placement (compute, inter-level
-//! transfers, parameter synchronization, contention); [`engine`] advances
-//! simulated time across scheduled DL jobs, churning background
+//! [`event`] is the unified event core: one time-ordered queue whose
+//! kinds cover job arrivals, iteration completions, background churn,
+//! sampling/state-view refreshes and node join/leave/failure.  [`state`]
+//! tracks resident demands and utilization; [`timing`] prices a training
+//! iteration for a given placement (compute, inter-level transfers,
+//! parameter synchronization, contention); [`engine`] advances simulated
+//! time across scheduled DL jobs on the event core, churning background
 //! workload, sampling utilization, and recording completions.
 
 pub mod engine;
+pub mod event;
 pub mod state;
 pub mod timing;
 
 pub use engine::{ExecutionReport, Executor};
+pub use event::{Event, EventKind, EventQueue};
 pub use state::{ResourceState, TaskHandle};

@@ -8,6 +8,7 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::{obj, Json};
 use super::stats::Summary;
 use super::table::{f, Table};
 
@@ -135,6 +136,30 @@ impl Bench {
         print!("{}", self.report());
     }
 
+    /// Write a machine-readable report `BENCH_<title>.json` into `dir`:
+    /// mean/p50/p95 wall-milliseconds per registered benchmark, so the
+    /// perf trajectory is tracked across PRs.
+    pub fn write_json(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        let entries = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("name", Json::Str(r.name.clone())),
+                        ("mean_ms", Json::Num(r.summary.mean * 1e3)),
+                        ("p50_ms", Json::Num(r.summary.median * 1e3)),
+                        ("p95_ms", Json::Num(r.summary.p95 * 1e3)),
+                        ("n", Json::Num(r.summary.n as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        let doc = obj(vec![("bench", Json::Str(self.title.clone())), ("entries", entries)]);
+        let path = dir.join(format!("BENCH_{}.json", self.title));
+        std::fs::write(&path, doc.to_string())?;
+        Ok(path)
+    }
+
     /// Print a paper-figure series (x, per-method values) alongside timings.
     pub fn report_series(title: &str, x_label: &str, methods: &[&str], rows: &[(String, Vec<f64>)]) {
         let mut headers = vec![x_label];
@@ -190,6 +215,24 @@ mod tests {
         );
         let thr = b.measure_throughput("noop", 1000, || 1 + 1);
         assert!(thr > 0.0);
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let mut b = Bench::with_config(
+            "jsontest",
+            BenchConfig { warmup_iters: 0, samples: 3, max_time: Duration::from_secs(5) },
+        );
+        b.measure("noop", || 1 + 1);
+        let dir = std::env::temp_dir();
+        let path = b.write_json(&dir).unwrap();
+        assert!(path.file_name().unwrap().to_str().unwrap() == "BENCH_jsontest.json");
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let entries = parsed.get("entries").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].get("name").and_then(|n| n.as_str()), Some("noop"));
+        assert!(entries[0].get("p95_ms").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -64,6 +64,23 @@ impl NodeSet {
         }
     }
 
+    /// Remove; returns true when the node was a member.  Out-of-universe
+    /// removals are no-ops (nothing to remove).
+    pub fn remove(&mut self, node: usize) -> bool {
+        let w = node / 64;
+        if w >= self.words.len() {
+            return false;
+        }
+        let mask = 1u64 << (node % 64);
+        if self.words[w] & mask != 0 {
+            self.words[w] &= !mask;
+            self.len -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
     #[inline]
     pub fn contains(&self, node: usize) -> bool {
         self.words
@@ -144,6 +161,19 @@ mod tests {
         for node in 0..140 {
             assert_eq!(s.contains(node), members.contains(&node), "node {node}");
         }
+    }
+
+    #[test]
+    fn remove_matches_membership() {
+        let mut s = NodeSet::from_slice(128, &[3, 64, 100]);
+        assert!(s.remove(64));
+        assert!(!s.remove(64), "double remove reports false");
+        assert!(!s.remove(5), "removing a non-member reports false");
+        assert!(!s.remove(500), "out-of-universe removal is a no-op");
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(3) && s.contains(100) && !s.contains(64));
+        assert!(s.insert(64), "removed nodes can be re-inserted");
+        assert_eq!(s.len(), 3);
     }
 
     #[test]

@@ -16,11 +16,55 @@ use crate::util::Rng;
 /// Workload level as a fraction (1.0 = 100% = 6 PageRank jobs/cluster).
 pub const PAGERANK_AT_FULL: usize = 6;
 
-/// Map the paper's workload percentage to PageRank jobs per cluster
-/// (100%→6, 90%→5, 80%→4, ... §V-A).
+/// Map the paper's workload percentage to PageRank jobs per cluster.
+///
+/// §V-A runs x = 2..6 jobs for the 60 %..100 % levels — one job per
+/// 10 % step, i.e. `x = (w − 40 %) / 10 %`.  Off-level workloads map to
+/// the *nearest* level; exact midpoints (e.g. 75 %) resolve **down**
+/// (a half-level cannot spawn half a PageRank job, and under-provisioning
+/// keeps the sweep monotone without ever overshooting a paper level).
+/// Clamped to `[0, 6]`; levels at or below 45 % spawn no background jobs.
 pub fn pagerank_jobs_for_workload(workload: f64) -> usize {
-    let jobs = PAGERANK_AT_FULL as f64 - (1.0 - workload) * 10.0;
-    jobs.round().clamp(0.0, PAGERANK_AT_FULL as f64) as usize
+    // Nearest integer level with ties-down: ceil(x − 1/2).
+    let level = 10.0 * workload - 4.0;
+    (level - 0.5).ceil().clamp(0.0, PAGERANK_AT_FULL as f64) as usize
+}
+
+/// How DL jobs arrive over simulated time.
+///
+/// The paper's evaluation releases each cluster's jobs near-simultaneously
+/// ([`ArrivalProcess::Batched`]); the dynamic event core also supports an
+/// online Poisson stream and trace replay, turning the pre-generated wave
+/// setup into an arrival *process* the scheduler reacts to event by event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// All of a cluster's jobs arrive independently within `window`
+    /// seconds of t = 0 (the paper's concurrent-wave setup).
+    Batched { window: f64 },
+    /// Poisson stream: inter-arrival gaps drawn from Exp(`rate`), per
+    /// cluster, `rate` in arrivals per second.
+    Poisson { rate: f64 },
+    /// Trace replay: the i-th job of every cluster arrives at the i-th
+    /// offset (seconds).  Jobs beyond the trace reuse its last entry.
+    Trace(Vec<f64>),
+}
+
+impl Default for ArrivalProcess {
+    fn default() -> Self {
+        ArrivalProcess::Batched { window: 5.0 }
+    }
+}
+
+impl ArrivalProcess {
+    /// Short tag for scenario labels (`b`, `p0.05`, `t4`).  Rates print
+    /// un-rounded so distinct sweep cells never share a label.
+    pub fn label(&self) -> String {
+        match self {
+            ArrivalProcess::Batched { .. } => "b".to_string(),
+            ArrivalProcess::Poisson { rate } => format!("p{rate}"),
+            ArrivalProcess::Trace(offsets) => format!("t{}", offsets.len()),
+        }
+    }
 }
 
 /// A background (non-ML) job occupying resources on one node.  Modeled on
@@ -71,9 +115,10 @@ pub struct WorkloadSpec {
     pub iterations: usize,
     /// Workload fraction (1.0 = 6 PageRank jobs per cluster).
     pub workload: f64,
-    /// Jobs of one cluster arrive within this window (s): concurrent
-    /// decision-making is what makes action collisions possible.
-    pub arrival_window: f64,
+    /// How the cluster's jobs arrive: batched (the paper's concurrent
+    /// waves — concurrent decision-making is what makes action collisions
+    /// possible), Poisson, or trace replay.
+    pub arrival: ArrivalProcess,
 }
 
 impl Default for WorkloadSpec {
@@ -83,7 +128,7 @@ impl Default for WorkloadSpec {
             jobs_per_cluster: 3,
             iterations: 50,
             workload: 1.0,
-            arrival_window: 5.0,
+            arrival: ArrivalProcess::default(),
         }
     }
 }
@@ -95,15 +140,27 @@ impl Workload {
         let mut job_id = 0;
         let mut bg_id = 0;
         for (ci, cluster) in dep.clusters.iter().enumerate() {
-            // DL jobs: random owners, near-simultaneous arrivals.
-            for _ in 0..spec.jobs_per_cluster {
+            // DL jobs: random owners, arrivals drawn from the process.
+            let mut poisson_t = 0.0f64;
+            for j in 0..spec.jobs_per_cluster {
                 let owner = *rng.choose(&cluster.members);
+                let arrival = match &spec.arrival {
+                    ArrivalProcess::Batched { window } => rng.range_f64(0.0, *window),
+                    ArrivalProcess::Poisson { rate } => {
+                        poisson_t += rng.exp(rate.max(1e-9));
+                        poisson_t
+                    }
+                    ArrivalProcess::Trace(offsets) => {
+                        let last = offsets.last().copied().unwrap_or(0.0);
+                        offsets.get(j).copied().unwrap_or(last)
+                    }
+                };
                 dl_jobs.push(DlJob {
                     id: job_id,
                     cluster: ci,
                     owner,
                     model: spec.model,
-                    arrival: rng.range_f64(0.0, spec.arrival_window),
+                    arrival,
                     iterations: spec.iterations,
                 });
                 job_id += 1;
@@ -174,6 +231,34 @@ mod tests {
     }
 
     #[test]
+    fn workload_mapping_full_range() {
+        // Every 5 % step over 0–100 % (index i = workload / 5 %): nearest
+        // §V-A level, exact midpoints (45 %, 55 %, ..., 75 %) resolving
+        // down, clamped to [0, 6].  The 70 %/75 % boundary in particular
+        // must not round a midpoint up past its level.
+        let expected = [0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6];
+        for (i, &jobs) in expected.iter().enumerate() {
+            let w = i as f64 / 20.0;
+            assert_eq!(pagerank_jobs_for_workload(w), jobs, "workload {w}");
+        }
+    }
+
+    #[test]
+    fn workload_mapping_is_monotone_and_clamped() {
+        let mut prev = 0usize;
+        for i in 0..=1000 {
+            let w = i as f64 / 1000.0;
+            let jobs = pagerank_jobs_for_workload(w);
+            assert!(jobs >= prev, "mapping not monotone at {w}");
+            assert!(jobs <= PAGERANK_AT_FULL);
+            prev = jobs;
+        }
+        // Out-of-range inputs stay clamped rather than panicking.
+        assert_eq!(pagerank_jobs_for_workload(-1.0), 0);
+        assert_eq!(pagerank_jobs_for_workload(2.0), PAGERANK_AT_FULL);
+    }
+
+    #[test]
     fn three_jobs_per_cluster() {
         let mut rng = Rng::new(1);
         let d = dep();
@@ -234,6 +319,48 @@ mod tests {
         let w = Workload::generate(&mut rng, &d, &spec, 1000.0);
         assert_eq!(pagerank_jobs_for_workload(0.4), 0);
         assert!(w.background.is_empty());
+    }
+
+    #[test]
+    fn poisson_arrivals_are_increasing_per_cluster() {
+        let mut rng = Rng::new(8);
+        let d = dep();
+        let spec = WorkloadSpec {
+            arrival: ArrivalProcess::Poisson { rate: 0.05 },
+            ..Default::default()
+        };
+        let w = Workload::generate(&mut rng, &d, &spec, 1000.0);
+        for ci in 0..d.clusters.len() {
+            let arrivals: Vec<f64> =
+                w.dl_jobs.iter().filter(|j| j.cluster == ci).map(|j| j.arrival).collect();
+            assert_eq!(arrivals.len(), 3);
+            assert!(arrivals.windows(2).all(|p| p[1] > p[0]), "{arrivals:?}");
+            assert!(arrivals[0] > 0.0);
+        }
+    }
+
+    #[test]
+    fn trace_arrivals_replay_offsets() {
+        let mut rng = Rng::new(8);
+        let d = dep();
+        let spec = WorkloadSpec {
+            jobs_per_cluster: 4,
+            arrival: ArrivalProcess::Trace(vec![0.0, 30.0, 90.0]),
+            ..Default::default()
+        };
+        let w = Workload::generate(&mut rng, &d, &spec, 1000.0);
+        let arrivals: Vec<f64> =
+            w.dl_jobs.iter().filter(|j| j.cluster == 0).map(|j| j.arrival).collect();
+        // Jobs beyond the trace reuse its last offset.
+        assert_eq!(arrivals, vec![0.0, 30.0, 90.0, 90.0]);
+    }
+
+    #[test]
+    fn arrival_process_labels() {
+        assert_eq!(ArrivalProcess::default().label(), "b");
+        assert_eq!(ArrivalProcess::Poisson { rate: 0.1 }.label(), "p0.1");
+        assert_eq!(ArrivalProcess::Poisson { rate: 0.004 }.label(), "p0.004");
+        assert_eq!(ArrivalProcess::Trace(vec![1.0, 2.0]).label(), "t2");
     }
 
     #[test]

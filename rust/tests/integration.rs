@@ -408,6 +408,69 @@ fn prop_decentral_total_bounded_by_central_across_seeds() {
 }
 
 // ---------------------------------------------------------------------------
+// Incremental-membership vs rebuild-from-scratch (the dynamic-cluster
+// contract: no structure may drift from its reference under churn)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_incremental_membership_structures_match_rebuilds_under_churn() {
+    use srole::cluster::{Membership, SubClusters};
+    let mut rng = Rng::new(20260728);
+    for case in 0..10u64 {
+        let n = 10 + rng.below(30);
+        let dep = Deployment::generate(&mut rng, n, n, &CONTAINER_PROFILE);
+        let members = dep.clusters[0].members.clone();
+        let mut membership = Membership::full(&dep);
+        let mut shield = DecentralShield::new(&dep, &members, 3);
+        for step in 0..50 {
+            let node = rng.below(n);
+            if rng.chance(0.5) {
+                if membership.fail(&dep, node) {
+                    shield.node_failed(&dep, node);
+                }
+            } else if membership.join(&dep, node) {
+                shield.node_joined(&dep, node);
+            }
+            let membership_ref = Membership::rebuild(&dep, membership.alive_set());
+            assert_eq!(membership, membership_ref, "case {case} step {step}: membership");
+            let subs_ref = SubClusters::from_assignment(
+                shield.subs.members.clone(),
+                shield.subs.assignment.clone(),
+                shield.subs.k,
+                &dep.topo,
+            );
+            assert_eq!(shield.subs, subs_ref, "case {case} step {step}: sub-clusters");
+        }
+    }
+}
+
+#[test]
+fn churn_experiment_completes_and_replays() {
+    // The event-driven driver under node failures: every job still
+    // completes for every method, and a (config, method, seed) triple
+    // replays bit-identically.
+    let mut cfg = quick_cfg(ModelKind::Rnn);
+    cfg.repetitions = 1;
+    cfg.iterations = 5;
+    cfg.pretrain_episodes = 30;
+    cfg.failure_rate = 2.0;
+    cfg.rejoin_secs = 180.0;
+    assert!(cfg.dynamic());
+    let exp = Experiment::new(cfg);
+    for m in Method::ALL {
+        let a = exp.run_once(m, 17);
+        let b = exp.run_once(m, 17);
+        assert_eq!(a.jct.len(), 15, "{}: wrong job count under churn", m.name());
+        assert!(a.jct.iter().all(|&t| t.is_finite() && t > 0.0));
+        assert_eq!(a.jct, b.jct, "{}", m.name());
+        assert_eq!(a.collisions, b.collisions);
+        assert_eq!(a.decision_secs, b.decision_secs);
+        assert_eq!(a.node_failures, b.node_failures);
+        assert_eq!(a.rescheduled_layers, b.rescheduled_layers);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Failure injection
 // ---------------------------------------------------------------------------
 
