@@ -14,6 +14,7 @@ use srole::config::ExperimentConfig;
 use srole::coordinator::{pretrain, Method};
 use srole::dnn::ModelKind;
 use srole::harness::{run_parallel, Sweep};
+use srole::net::{DynamicTopology, MobilityModel};
 use srole::rl::{RewardParams, TabularQ};
 use srole::sched::marl_wave;
 use srole::shield::reference::{CentralShieldScan, DecentralShieldScan};
@@ -132,6 +133,66 @@ fn main() {
         let reference =
             SubClusters::from_assignment(subs.members.clone(), subs.assignment.clone(), subs.k, &dep.topo);
         assert_eq!(subs, reference, "incremental sub-cluster maintenance diverged");
+    }
+
+    // --- cached adjacency vs position scan, 100 nodes --------------------
+    // `Topology::neighbors` used to be an O(n) scan + Vec alloc per call;
+    // the cache serves `neighbors_ref` borrow-only.  Sum degrees over all
+    // nodes so each sample covers a full candidate-set rebuild.
+    {
+        let topo = &dep.topo;
+        let cached = bench
+            .measure("topology_neighbors_cached_100n", || {
+                (0..topo.n()).map(|i| topo.neighbors_ref(i).len()).sum::<usize>()
+            })
+            .median_secs();
+        let scanned = bench
+            .measure("topology_neighbors_scan_100n", || {
+                (0..topo.n()).map(|i| topo.neighbors_scan(i).len()).sum::<usize>()
+            })
+            .median_secs();
+        // Equivalence before trusting the numbers.
+        for i in 0..topo.n() {
+            assert_eq!(topo.neighbors_ref(i), &topo.neighbors_scan(i)[..], "adjacency cache stale");
+        }
+        println!(
+            "adjacency speedup (scan/cached): {:.1}x over {} nodes",
+            scanned / cached.max(1e-12),
+            topo.n()
+        );
+    }
+
+    // --- mobility: tick advance + incremental region handoff, 100 nodes --
+    {
+        let mut topo = dep.topo.clone();
+        let groups: Vec<Vec<usize>> = dep.clusters.iter().map(|c| c.members.clone()).collect();
+        let model = MobilityModel::RandomWaypoint { speed_mps: 2.0, pause_secs: 0.0 };
+        let mut dyn_topo = DynamicTopology::new(&mut topo, model, &groups, Rng::new(9));
+        let mut now = 0.0;
+        bench.measure("mobility_tick_advance_100n", || {
+            now += 10.0;
+            dyn_topo.advance(now, 10.0, &mut topo)
+        });
+        let mut subs = SubClusters::build(&members, &topo, 4);
+        // Teleport node 50 between its home position and another
+        // region's anchor each sample, so every call exercises a real
+        // cross-region handoff rather than a same-region refresh.
+        let p_home = topo.positions[50];
+        let far_sub = (0..subs.k).find(|&s| s != subs.sub_of(50)).expect("k > 1");
+        let p_away = topo.positions[subs.members_of(far_sub)[0]];
+        let mut flip = false;
+        bench.measure("subclusters_handoff_100n", || {
+            flip = !flip;
+            topo.positions[50] = if flip { p_away } else { p_home };
+            subs.handoff_member(50, &topo)
+        });
+        let reference = SubClusters::from_assignment(
+            subs.members.clone(),
+            subs.assignment.clone(),
+            subs.k,
+            &topo,
+        );
+        assert_eq!(subs, reference, "incremental handoff diverged from rebuild");
     }
 
     // --- parallel harness: 4-scenario sweep, serial vs parallel ---------

@@ -4,17 +4,21 @@
 //! `(method × configuration)` cell is an independent, deterministic
 //! scenario, executed across OS threads.
 //!
-//! Usage: `figures <fig4|fig5|...|fig13|scale|churn|all>`
+//! Usage: `figures <fig4|fig5|...|fig13|scale|churn|mobility|all>`
 //!        `[--reps N] [--seed S] [--iterations N] [--threads T]`
 //!        `[--models vgg16,googlenet,rnn] [--edges 5,10,15,20,25]`
+//!        `[--pretrain N]`
 //!
 //! `figures scale` sweeps 10→100-node clusters concurrently (the
 //! ROADMAP scale target); `figures churn` sweeps node-failure rates on a
-//! 100-node cluster through the dynamic event-driven driver; `--edges`
-//! reshapes the Fig 4 sweep the same way.  Absolute numbers live on this
-//! simulated testbed, not the authors' EC2 cluster; the *shape* (who
-//! wins, by what factor, trends along the sweeps) is the reproduction
-//! target.
+//! 100-node cluster through the dynamic event-driven driver; `figures
+//! mobility` sweeps a random-waypoint speed × pause grid (plus a
+//! stationary-trace baseline and a square trace patrol) on a 50-node
+//! cluster, reporting shield-region handoffs and layer migrations;
+//! `--edges` reshapes the
+//! Fig 4 sweep the same way.  Absolute numbers live on this simulated
+//! testbed, not the authors' EC2 cluster; the *shape* (who wins, by what
+//! factor, trends along the sweeps) is the reproduction target.
 
 use srole::config::ExperimentConfig;
 use srole::coordinator::Method;
@@ -31,7 +35,8 @@ fn main() {
         .opt("iterations", Some("50"), "training iterations per job")
         .opt("threads", Some("0"), "worker threads (0 = all cores)")
         .opt("models", Some("vgg16,googlenet,rnn"), "comma-separated models")
-        .opt("edges", Some("5,10,15,20,25"), "comma-separated cluster sizes for fig4");
+        .opt("edges", Some("5,10,15,20,25"), "comma-separated cluster sizes for fig4")
+        .opt("pretrain", Some("300"), "offline pre-training episodes per scenario");
     let args = match cli.parse(&argv) {
         Ok(a) => a,
         Err(CliError::Help) => {
@@ -49,6 +54,7 @@ fn main() {
         seed: args.u64("seed").unwrap_or(1),
         iterations: args.usize("iterations").unwrap_or(50),
         threads: args.usize("threads").unwrap_or(0),
+        pretrain: args.usize("pretrain").unwrap_or(300),
         models: args
             .get("models")
             .unwrap()
@@ -113,8 +119,12 @@ fn main() {
         matched = true;
         churn_figure(&ctx);
     }
+    if which == "mobility" {
+        matched = true;
+        mobility_figure(&ctx);
+    }
     if !matched {
-        eprintln!("unknown figure {which}; use fig4..fig13, scale, churn, or all");
+        eprintln!("unknown figure {which}; use fig4..fig13, scale, churn, mobility, or all");
         std::process::exit(2);
     }
 }
@@ -124,6 +134,7 @@ struct Ctx {
     seed: u64,
     iterations: usize,
     threads: usize,
+    pretrain: usize,
     models: Vec<ModelKind>,
     edges: Vec<usize>,
 }
@@ -135,6 +146,7 @@ impl Ctx {
             seed: self.seed,
             repetitions: self.reps,
             iterations: self.iterations,
+            pretrain_episodes: self.pretrain,
             ..Default::default()
         }
     }
@@ -145,6 +157,7 @@ impl Ctx {
             seed: self.seed,
             repetitions: self.reps,
             iterations: self.iterations,
+            pretrain_episodes: self.pretrain,
             ..ExperimentConfig::real_device()
         }
     }
@@ -424,6 +437,62 @@ fn churn_figure(ctx: &Ctx) {
     t.print();
     println!("{} scenarios in {wall:.1}s wall", reports.len());
     write_bench("churn", &reports);
+}
+
+/// `figures mobility`: the node-mobility sweep — a random-waypoint
+/// speed × pause grid (plus a stationary-trace baseline and a square
+/// trace patrol) on a 50-node cluster, MARL vs SROLE-C vs SROLE-D,
+/// through the dynamic event-driven driver.  Reports JCT alongside the
+/// mobility-specific counters: shield-region handoffs (nodes crossing
+/// sub-cluster boundaries while alive) and layer migrations (hosts
+/// drifting out of their owner's transmission range).
+fn mobility_figure(ctx: &Ctx) {
+    use srole::net::MobilityModel;
+    const MOB_METHODS: [Method; 3] = [Method::Marl, Method::SroleC, Method::SroleD];
+    // Motion-free baseline: a *stationary* trace (one zero offset), not
+    // `Static` — it runs the full mobility wrapper (same RNG fork, same
+    // initial link attenuation) while never moving anyone, so the rows
+    // differ only in actual motion.
+    let mut grid: Vec<MobilityModel> =
+        vec![MobilityModel::Trace { offsets: vec![(0.0, 0.0)], speed_mps: 1.0 }];
+    for &speed in &[0.5, 1.0, 2.0] {
+        for &pause in &[0.0, 30.0] {
+            grid.push(MobilityModel::RandomWaypoint { speed_mps: speed, pause_secs: pause });
+        }
+    }
+    grid.push(MobilityModel::default_trace());
+
+    let model = ctx.models.first().copied().unwrap_or(ModelKind::Vgg16);
+    let mut base = ctx.base(model);
+    base.n_edges = 50;
+    base.cluster_size = 25;
+    base.subclusters = 4;
+    let sweep = Sweep::new(base).methods(&MOB_METHODS).mobility(&grid);
+    let t0 = std::time::Instant::now();
+    let reports = run_parallel(&sweep.scenarios(), ctx.threads);
+    let wall = t0.elapsed().as_secs_f64();
+    let mut t = Table::new(
+        &format!(
+            "mobility sweep ({}): JCT median [s] / region handoffs / migrated layers",
+            model.name()
+        ),
+        &["mobility", "MARL", "SROLE-C", "SROLE-D"],
+    );
+    for (mi, row) in reports.chunks(MOB_METHODS.len()).enumerate() {
+        let mut cells = vec![grid[mi].label()];
+        for r in row {
+            cells.push(format!(
+                "{} / {} / {}",
+                f(r.metrics.jct_summary().median),
+                r.metrics.region_handoffs,
+                r.metrics.migrated_layers
+            ));
+        }
+        t.row(cells);
+    }
+    t.print();
+    println!("{} scenarios in {wall:.1}s wall", reports.len());
+    write_bench("mobility", &reports);
 }
 
 /// Persist a sweep's wall-clock profile as `BENCH_<name>.json` (perf

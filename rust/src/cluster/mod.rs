@@ -217,6 +217,27 @@ impl Deployment {
     pub fn cluster_neighbors_ref(&self, node: NodeId) -> &[NodeId] {
         &self.cluster_neighbors[node]
     }
+
+    /// Re-derive the cluster-restricted adjacency from the topology's
+    /// *current* positions — the mobility hook.  The caller must have
+    /// refreshed the topology's own cache first
+    /// ([`crate::net::Topology::rebuild_adjacency`], which
+    /// [`crate::net::DynamicTopology::advance`] does); derived overlays
+    /// ([`Membership`]) must be rebuilt afterwards.
+    pub fn refresh_adjacency(&mut self) {
+        let idx = &self.cluster_index;
+        let topo = &self.topo;
+        let fresh: Vec<Vec<NodeId>> = (0..self.nodes.len())
+            .map(|node| {
+                topo.neighbors_ref(node)
+                    .iter()
+                    .copied()
+                    .filter(|&m| idx[m] == idx[node])
+                    .collect()
+            })
+            .collect();
+        self.cluster_neighbors = fresh;
+    }
 }
 
 #[cfg(test)]
@@ -294,6 +315,32 @@ mod tests {
         for id in 0..25 {
             assert!(!d.cluster_neighbors(id).is_empty(), "node {id} isolated");
         }
+    }
+
+    #[test]
+    fn refresh_adjacency_tracks_moved_positions() {
+        let mut d = deployment(25);
+        // Teleport node 3 far outside everyone's range.
+        d.topo.positions[3] = crate::net::Pos { x: 1e6, y: 1e6 };
+        d.topo.rebuild_adjacency();
+        d.refresh_adjacency();
+        assert!(d.cluster_neighbors_ref(3).is_empty());
+        for id in 0..25 {
+            assert!(!d.cluster_neighbors_ref(id).contains(&3));
+            // Still cluster-restricted and in range.
+            let c = d.cluster_of(id);
+            for &nb in d.cluster_neighbors_ref(id) {
+                assert_eq!(d.cluster_of(nb), c);
+                assert!(d.topo.positions[id].dist(&d.topo.positions[nb]) <= d.topo.range);
+            }
+        }
+        // Teleport it back onto a cluster-mate: adjacency returns.
+        let mate = d.clusters[d.cluster_of(3)].members.iter().copied().find(|&m| m != 3).unwrap();
+        d.topo.positions[3] = d.topo.positions[mate];
+        d.topo.rebuild_adjacency();
+        d.refresh_adjacency();
+        assert!(d.cluster_neighbors_ref(3).contains(&mate));
+        assert!(d.cluster_neighbors_ref(mate).contains(&3));
     }
 
     #[test]

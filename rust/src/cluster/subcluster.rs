@@ -173,24 +173,85 @@ impl SubClusters {
     /// Sub-cluster whose member centroid is closest to `node`; empty
     /// sub-clusters are skipped (everything empty falls back to 0).
     fn nearest_sub(&self, node: NodeId, topo: &Topology) -> usize {
+        self.nearest_sub_excluding(node, topo, usize::MAX)
+    }
+
+    /// Like [`SubClusters::nearest_sub`], but `exclude` is left out of
+    /// every centroid — the handoff decision must not let a moving node
+    /// drag its own sub-cluster's centroid along.  Deterministic; ties
+    /// resolve to the lowest sub-cluster index.
+    fn nearest_sub_excluding(&self, node: NodeId, topo: &Topology, exclude: NodeId) -> usize {
         let p = (topo.positions[node].x, topo.positions[node].y);
         let mut best: Option<(f64, usize)> = None;
         for (s, members) in self.per_sub.iter().enumerate() {
-            if members.is_empty() {
-                continue;
-            }
             let (mut cx, mut cy) = (0.0, 0.0);
+            let mut count = 0usize;
             for &m in members {
+                if m == exclude {
+                    continue;
+                }
                 cx += topo.positions[m].x;
                 cy += topo.positions[m].y;
+                count += 1;
             }
-            let c = (cx / members.len() as f64, cy / members.len() as f64);
+            if count == 0 {
+                continue;
+            }
+            let c = (cx / count as f64, cy / count as f64);
             let dist = d2(p, c);
             if best.map(|(bd, _)| dist < bd).unwrap_or(true) {
                 best = Some((dist, s));
             }
         }
         best.map(|(_, s)| s).unwrap_or(0)
+    }
+
+    /// Mobility handler: `node`'s position changed.  Re-evaluates which
+    /// sub-cluster the node belongs to (nearest member centroid, its own
+    /// position excluded) and re-derives the boundary pairs of every
+    /// affected sub-cluster — the old region, plus the new one when the
+    /// node migrates — leaving all other pairs untouched.  Returns true
+    /// when the node was handed off between sub-clusters; false for a
+    /// same-region move (boundaries still refresh: the node's distances
+    /// to other regions changed) and for non-members (no-op).
+    ///
+    /// Equivalent to [`SubClusters::from_assignment`] over the updated
+    /// `(members, assignment)` pair and the current positions — pinned by
+    /// randomized equivalence tests.
+    ///
+    /// A node that is its sub-cluster's last member migrates like any
+    /// other (its own position never votes): the emptied region simply
+    /// stops owning nodes until churn or another handoff repopulates it.
+    pub fn handoff_member(&mut self, node: NodeId, topo: &Topology) -> bool {
+        if !self.is_member(node) {
+            return false;
+        }
+        let old = self.sub_index[node];
+        let new = self.nearest_sub_excluding(node, topo, node);
+        if new == old {
+            // The node moved within its region: pairs involving that
+            // region still see new distances.
+            self.refresh_pairs_of(old, topo);
+            return false;
+        }
+        let idx = self.members.iter().position(|&m| m == node).expect("member index");
+        self.assignment[idx] = new;
+        let pos = self.per_sub[old].iter().position(|&m| m == node).expect("per-sub slot");
+        self.per_sub[old].remove(pos);
+        self.sub_sets[old].remove(node);
+        // Insert preserving `members`-list order (what `from_assignment`
+        // produces), not push order.
+        let insert_at = self.members[..idx]
+            .iter()
+            .zip(&self.assignment[..idx])
+            .filter(|&(_, &a)| a == new)
+            .count();
+        self.per_sub[new].insert(insert_at, node);
+        self.sub_sets[new].insert(node);
+        self.sub_index[node] = new;
+        self.refresh_pairs_of(old, topo);
+        self.refresh_pairs_of(new, topo);
+        true
     }
 
     /// Recompute the boundary pairs involving `sub` from the current
@@ -569,6 +630,115 @@ mod tests {
                 assert_eq!(sc, reference, "case {case} step {step} node {node}");
             }
         }
+    }
+
+    #[test]
+    fn prop_handoff_matches_reference_rebuild_over_mobility_steps() {
+        // The acceptance criterion for shield-region handoff: across
+        // ≥100 random mobility steps (random node teleports within the
+        // arena), the incremental handoff must produce *identical*
+        // region assignments and boundary pairs to a from-scratch
+        // re-partition over the same (members, assignment) pair.
+        let mut rng = Rng::new(0xD1CE);
+        for case in 0..5u64 {
+            let n = 12 + rng.below(16);
+            let mut t = {
+                let mut trng = Rng::new(500 + case);
+                Topology::generate(&mut trng, n, 60.0, 30.0, &[100.0], 0.001)
+            };
+            let members: Vec<NodeId> = (0..n).collect();
+            let k = 2 + rng.below(3);
+            let mut sc = SubClusters::build(&members, &t, k);
+            let mut handoffs = 0usize;
+            for step in 0..120 {
+                let node = rng.below(n);
+                // Teleport the node somewhere in (or slightly outside)
+                // the arena and refresh the position-derived caches.
+                t.positions[node] = crate::net::Pos {
+                    x: rng.range_f64(-10.0, 70.0),
+                    y: rng.range_f64(-10.0, 70.0),
+                };
+                t.rebuild_adjacency();
+                if sc.handoff_member(node, &t) {
+                    handoffs += 1;
+                }
+                let reference = SubClusters::from_assignment(
+                    sc.members.clone(),
+                    sc.assignment.clone(),
+                    sc.k,
+                    &t,
+                );
+                assert_eq!(sc, reference, "case {case} step {step} node {node}");
+            }
+            assert!(handoffs > 0, "case {case}: 120 teleports never crossed a region");
+        }
+    }
+
+    #[test]
+    fn prop_handoff_interleaved_with_churn_matches_reference() {
+        // Mobility and membership churn hit the same incremental tables;
+        // interleaving them must stay pinned to the reference rebuild.
+        let mut rng = Rng::new(0xFADE);
+        let n = 20usize;
+        let mut t = {
+            let mut trng = Rng::new(77);
+            Topology::generate(&mut trng, n, 60.0, 30.0, &[100.0], 0.001)
+        };
+        let members: Vec<NodeId> = (0..n).collect();
+        let mut sc = SubClusters::build(&members, &t, 3);
+        for step in 0..150 {
+            let node = rng.below(n);
+            match rng.below(4) {
+                0 => {
+                    sc.remove_member(node, &t);
+                }
+                1 => {
+                    sc.add_member(node, &t);
+                }
+                _ => {
+                    t.positions[node] = crate::net::Pos {
+                        x: rng.range_f64(0.0, 60.0),
+                        y: rng.range_f64(0.0, 60.0),
+                    };
+                    t.rebuild_adjacency();
+                    sc.handoff_member(node, &t);
+                }
+            }
+            let reference =
+                SubClusters::from_assignment(sc.members.clone(), sc.assignment.clone(), sc.k, &t);
+            assert_eq!(sc, reference, "step {step} node {node}");
+        }
+    }
+
+    #[test]
+    fn handoff_moves_node_to_nearest_region() {
+        // Drop a node directly onto another sub-cluster's centroid: the
+        // handoff must migrate it there, and a non-member is a no-op.
+        let t0 = topo(24);
+        let members: Vec<NodeId> = (0..24).collect();
+        let mut t = t0.clone();
+        let mut sc = SubClusters::build(&members, &t, 3);
+        let node = 0usize;
+        let home = sc.sub_of(node);
+        let other = (0..3).find(|&s| s != home && !sc.members_of(s).is_empty()).unwrap();
+        // Centroid of the target region (excluding the probe).
+        let om = sc.members_of(other);
+        let (cx, cy) = om.iter().fold((0.0, 0.0), |(x, y), &m| {
+            (x + t.positions[m].x, y + t.positions[m].y)
+        });
+        t.positions[node] =
+            crate::net::Pos { x: cx / om.len() as f64, y: cy / om.len() as f64 };
+        t.rebuild_adjacency();
+        assert!(sc.handoff_member(node, &t), "probe must be handed off");
+        assert_eq!(sc.sub_of(node), other);
+        assert!(sc.sub_set(other).contains(node));
+        assert!(!sc.sub_set(home).contains(node));
+        // A second handoff without further movement is a same-region
+        // refresh, not a migration.
+        assert!(!sc.handoff_member(node, &t));
+        // Non-members are untouched.
+        let mut sc2 = SubClusters::build(&members[..10], &t, 2);
+        assert!(!sc2.handoff_member(15, &t));
     }
 
     #[test]

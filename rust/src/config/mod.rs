@@ -10,6 +10,7 @@ use std::collections::BTreeMap;
 
 use crate::cluster::profiles::{ResourceProfile, CONTAINER_PROFILE, REAL_EDGE_PROFILE};
 use crate::dnn::ModelKind;
+use crate::net::mobility::{self, MobilityModel};
 use crate::rl::RewardParams;
 use crate::workload::ArrivalProcess;
 
@@ -80,6 +81,16 @@ pub struct ExperimentConfig {
     pub rejoin_secs: f64,
     /// DL-job arrival process (batched waves, Poisson stream, or trace).
     pub arrival: ArrivalProcess,
+    /// Node motion model (static geography, random waypoint, or a
+    /// deterministic trace patrol).
+    pub mobility: MobilityModel,
+    /// Seconds between mobility ticks (position advances and topology /
+    /// shield-region refreshes happen at this granularity).
+    pub mobility_tick_secs: f64,
+    /// Correlated-failure blast radius in meters: a scheduled node
+    /// failure also takes down every alive node within this distance of
+    /// the seed's current position (0 = independent failures).
+    pub blast_radius_m: f64,
     /// Force the event-driven driver even for static configurations —
     /// used by sweeps that compare churn rates against a 0-failure
     /// baseline, so every cell runs the same driver and only the churn
@@ -108,6 +119,9 @@ impl Default for ExperimentConfig {
             failure_rate: 0.0,
             rejoin_secs: 0.0,
             arrival: ArrivalProcess::default(),
+            mobility: MobilityModel::Static,
+            mobility_tick_secs: mobility::DEFAULT_TICK_SECS,
+            blast_radius_m: 0.0,
             event_driven: false,
         }
     }
@@ -171,6 +185,53 @@ impl ExperimentConfig {
                 }
             }
             "arrival_rate" => self.arrival = ArrivalProcess::Poisson { rate: parse_f64(val)? },
+            "mobility" => {
+                self.mobility = match val {
+                    "static" | "none" => MobilityModel::Static,
+                    "rwp" | "random_waypoint" | "waypoint" => MobilityModel::RandomWaypoint {
+                        speed_mps: mobility::DEFAULT_SPEED_MPS,
+                        pause_secs: mobility::DEFAULT_PAUSE_SECS,
+                    },
+                    "trace" => MobilityModel::default_trace(),
+                    other => return Err(format!("unknown mobility model {other}")),
+                }
+            }
+            // Speed / pause refine the model; setting them on a static
+            // config upgrades it to random waypoint (BTreeMap ordering
+            // guarantees "mobility" applies before "mobility_*" keys
+            // when both appear in one file).
+            "mobility_speed" => {
+                let v = parse_f64(val)?;
+                self.mobility = match self.mobility.clone() {
+                    MobilityModel::RandomWaypoint { pause_secs, .. } => {
+                        MobilityModel::RandomWaypoint { speed_mps: v, pause_secs }
+                    }
+                    MobilityModel::Trace { offsets, .. } => {
+                        MobilityModel::Trace { offsets, speed_mps: v }
+                    }
+                    MobilityModel::Static => MobilityModel::RandomWaypoint {
+                        speed_mps: v,
+                        pause_secs: mobility::DEFAULT_PAUSE_SECS,
+                    },
+                };
+            }
+            "mobility_pause" => {
+                let v = parse_f64(val)?;
+                self.mobility = match self.mobility.clone() {
+                    MobilityModel::RandomWaypoint { speed_mps, .. } => {
+                        MobilityModel::RandomWaypoint { speed_mps, pause_secs: v }
+                    }
+                    MobilityModel::Trace { .. } => {
+                        return Err("trace mobility has no pause".into())
+                    }
+                    MobilityModel::Static => MobilityModel::RandomWaypoint {
+                        speed_mps: mobility::DEFAULT_SPEED_MPS,
+                        pause_secs: v,
+                    },
+                };
+            }
+            "mobility_tick_secs" => self.mobility_tick_secs = parse_f64(val)?,
+            "blast_radius_m" | "blast_radius" => self.blast_radius_m = parse_f64(val)?,
             other => return Err(format!("unknown config key {other}")),
         }
         Ok(())
@@ -195,6 +256,25 @@ impl ExperimentConfig {
         if self.failure_rate < 0.0 || self.rejoin_secs < 0.0 {
             return Err("failure_rate and rejoin_secs must be non-negative".into());
         }
+        if self.blast_radius_m < 0.0 {
+            return Err("blast_radius_m must be non-negative".into());
+        }
+        if self.mobility_tick_secs.is_nan() || self.mobility_tick_secs <= 0.0 {
+            return Err("mobility_tick_secs must be positive".into());
+        }
+        match &self.mobility {
+            MobilityModel::Static => {}
+            MobilityModel::RandomWaypoint { speed_mps, pause_secs } => {
+                if *speed_mps < 0.0 || *pause_secs < 0.0 {
+                    return Err("mobility speed and pause must be non-negative".into());
+                }
+            }
+            MobilityModel::Trace { speed_mps, .. } => {
+                if *speed_mps < 0.0 {
+                    return Err("mobility speed must be non-negative".into());
+                }
+            }
+        }
         match &self.arrival {
             ArrivalProcess::Poisson { rate } if *rate <= 0.0 => {
                 return Err("poisson arrival rate must be positive".into());
@@ -208,11 +288,12 @@ impl ExperimentConfig {
     }
 
     /// Whether this configuration runs on the dynamic event-driven driver
-    /// (node churn, an online arrival process, or an explicit opt-in)
-    /// instead of the static pre-batched wave path.
+    /// (node churn, node mobility, an online arrival process, or an
+    /// explicit opt-in) instead of the static pre-batched wave path.
     pub fn dynamic(&self) -> bool {
         self.event_driven
             || self.failure_rate > 0.0
+            || self.mobility.enabled()
             || !matches!(self.arrival, ArrivalProcess::Batched { .. })
     }
 }
@@ -336,6 +417,53 @@ mod tests {
         bad.arrival = ArrivalProcess::Poisson { rate: 0.0 };
         assert!(bad.validate().is_err());
         assert!(ExperimentConfig::from_toml("arrival = \"lognormal\"").is_err());
+    }
+
+    #[test]
+    fn mobility_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            mobility = "rwp"
+            mobility_speed = 2.5
+            mobility_pause = 15
+            mobility_tick_secs = 5
+            blast_radius_m = 12
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.mobility,
+            MobilityModel::RandomWaypoint { speed_mps: 2.5, pause_secs: 15.0 }
+        );
+        assert_eq!(cfg.mobility_tick_secs, 5.0);
+        assert_eq!(cfg.blast_radius_m, 12.0);
+        assert!(cfg.dynamic(), "mobility routes through the event driver");
+        cfg.validate().unwrap();
+
+        // Speed alone upgrades a static config to random waypoint.
+        let cfg = ExperimentConfig::from_toml("mobility_speed = 1.5").unwrap();
+        assert!(matches!(
+            cfg.mobility,
+            MobilityModel::RandomWaypoint { speed_mps, .. } if speed_mps == 1.5
+        ));
+        // Trace parses; pause on a trace is rejected.
+        let cfg = ExperimentConfig::from_toml("mobility = \"trace\"").unwrap();
+        assert!(matches!(cfg.mobility, MobilityModel::Trace { .. }));
+        assert!(cfg.dynamic());
+        assert!(ExperimentConfig::from_toml("mobility = \"trace\"\nmobility_pause = 5").is_err());
+        assert!(ExperimentConfig::from_toml("mobility = \"teleport\"").is_err());
+
+        // Static stays on the wave path; bad values are rejected.
+        assert!(!ExperimentConfig::default().dynamic());
+        let mut bad = ExperimentConfig::default();
+        bad.mobility = MobilityModel::RandomWaypoint { speed_mps: -1.0, pause_secs: 0.0 };
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.mobility_tick_secs = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.blast_radius_m = -3.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -35,10 +35,11 @@
 use crate::cluster::{Deployment, Membership, NodeId, Resources};
 use crate::config::ExperimentConfig;
 use crate::metrics::RunMetrics;
+use crate::net::mobility::DynamicTopology;
 use crate::rl::{Policy, TabularQ};
 use crate::sched::{
-    central_wave_dynamic, marl_wave_dynamic, noisy_demand, reschedule_stranded, JobSchedule,
-    Stranded, WaveOutcome,
+    central_wave_dynamic, marl_wave_dynamic, noisy_demand, reschedule_migrated,
+    reschedule_stranded, JobSchedule, Stranded, WaveOutcome,
 };
 use crate::shield::{CentralShield, DecentralShield, Shield};
 use crate::sim::engine::SAMPLE_PERIOD_SECS;
@@ -136,7 +137,7 @@ fn alive_head(dep: &Deployment, membership: &Membership, cluster: usize) -> Node
 pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetrics {
     let mut rng = Rng::new(seed);
     let profile = cfg.profile.resource_profile();
-    let dep = Deployment::generate(&mut rng, cfg.n_edges, cfg.cluster_size, profile);
+    let mut dep = Deployment::generate(&mut rng, cfg.n_edges, cfg.cluster_size, profile);
     let graph = cfg.model.build();
     let spec = WorkloadSpec {
         model: cfg.model,
@@ -146,6 +147,22 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
         arrival: cfg.arrival.clone(),
     };
     let workload = Workload::generate(&mut rng, &dep, &spec, 500_000.0);
+
+    // Mobility: wrap the topology in its motion process (own forked RNG
+    // stream, separate from scheduling draws) and price the initial
+    // distance attenuation into the link matrices.  The fork fires only
+    // for mobility-enabled configs, so churn-only / Poisson scenarios
+    // replay their pre-mobility RNG streams — and results — exactly.
+    // Sweeps that want a motion-free baseline comparable to mobile
+    // cells (same fork, same attenuation) use a stationary trace model
+    // rather than `Static` — see `figures mobility`.
+    let mut mobility: Option<DynamicTopology> = if cfg.mobility.enabled() {
+        let groups: Vec<Vec<NodeId>> = dep.clusters.iter().map(|c| c.members.clone()).collect();
+        let m_rng = rng.fork(0x0b17e);
+        Some(DynamicTopology::new(&mut dep.topo, cfg.mobility.clone(), &groups, m_rng))
+    } else {
+        None
+    };
 
     let mut policy = TabularQ::new(cfg.lr, cfg.epsilon);
     pretrain(&mut policy, cfg, &mut rng.fork(0xbeef));
@@ -192,6 +209,9 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     let horizon = cfg.iterations as f64 * crate::dnn::profile::TARGET_ITER_SECS * 2.5;
     queue.push(SAMPLE_PERIOD_SECS, EventKind::Sample);
     queue.push(VIEW_REFRESH_SECS, EventKind::ViewRefresh);
+    if mobility.is_some() {
+        queue.push(cfg.mobility_tick_secs, EventKind::MobilityTick);
+    }
 
     // Node churn schedule, drawn up-front from the run's RNG stream so
     // replays are exact.  Rejoins follow failures after `rejoin_secs`.
@@ -346,85 +366,123 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 if remaining == 0 {
                     continue;
                 }
-                let cluster = dep.cluster_of(node);
-                // Never empty a cluster: the last alive member survives.
-                if !membership.is_alive(node) || membership.alive_members(cluster).len() <= 1 {
+                // A spurious seed (already dead, or its cluster's last
+                // alive member) never fails, so its blast fizzles too.
+                if !membership.is_alive(node)
+                    || membership.alive_members(dep.cluster_of(node)).len() <= 1
+                {
                     continue;
                 }
-                membership.fail(&dep, node);
-                metrics.node_failures += 1;
-                match &mut shields[cluster] {
-                    ClusterShield::Central(s) => {
-                        s.set_alive(Some(membership.alive_cluster_set(cluster).clone()));
-                    }
-                    ClusterShield::Decentral(s) => {
-                        s.node_failed(&dep, node);
-                    }
-                    ClusterShield::None => {}
-                }
-                // Background segments resident on the node are lost.
-                for (i, slot) in bg_handles.iter_mut().enumerate() {
-                    if workload.background[i].node == node {
-                        if let Some(h) = slot.take() {
-                            state.release(h);
+                // Correlated churn: a geographic blast radius takes down
+                // every alive node within `r` meters of the seed —
+                // measured at event time, so under mobility the blast
+                // hits whoever is *currently* nearby.
+                let mut victims = vec![node];
+                if cfg.blast_radius_m > 0.0 {
+                    let center = dep.topo.positions[node];
+                    for v in 0..dep.n() {
+                        if v != node
+                            && membership.is_alive(v)
+                            && dep.topo.positions[v].dist(&center) <= cfg.blast_radius_m
+                        {
+                            victims.push(v);
                         }
                     }
                 }
-                // Strand and reschedule the DL layers the node hosted.
-                let mut stranded: Vec<Stranded> = Vec::new();
-                for (ji, run) in runs.iter_mut().enumerate() {
-                    let Some(run) = run else { continue };
-                    if run.done {
+                for (vi, &victim) in victims.iter().enumerate() {
+                    let cluster = dep.cluster_of(victim);
+                    // Never empty a cluster: the last alive member
+                    // survives (re-checked per victim as the blast
+                    // shrinks memberships).
+                    if !membership.is_alive(victim)
+                        || membership.alive_members(cluster).len() <= 1
+                    {
                         continue;
                     }
-                    for (layer_id, &host) in run.sched.placement.iter().enumerate() {
-                        if host == node {
-                            state.release(run.sched.handles[layer_id]);
-                            stranded.push(Stranded {
-                                job: ji,
-                                owner: run.sched.job.owner,
-                                layer_id,
-                            });
+                    membership.fail(&dep, victim);
+                    metrics.node_failures += 1;
+                    if vi > 0 {
+                        metrics.correlated_failures += 1;
+                        // Secondary victims rejoin on the same schedule
+                        // as their seed (seeds queue theirs up-front).
+                        if cfg.rejoin_secs > 0.0 {
+                            let back = ev.t + cfg.rejoin_secs;
+                            queue.push(back, EventKind::NodeJoin { node: victim });
                         }
                     }
-                }
-                if !stranded.is_empty() {
-                    let shield = shields[cluster].as_dyn();
-                    let outcome = reschedule_stranded(
-                        &dep, &membership, &state, &graph, &view_demand, &stranded, node,
-                        policy, shield, &cfg.reward, &mut rng,
-                    );
-                    metrics.collisions += outcome.collisions;
-                    metrics.shield_corrections += outcome.corrections;
-                    metrics.rescheduled_layers += stranded.len();
-                    for (s, &target) in stranded.iter().zip(&outcome.targets) {
-                        // The cluster always keeps ≥1 alive member, so the
-                        // handler's fallback guarantees a real target.
-                        let target = if target == usize::MAX {
-                            membership.alive_members(cluster)[0]
-                        } else {
-                            target
-                        };
-                        let est = graph.layers[s.layer_id].demand();
-                        let actual = noisy_demand(&est, &mut rng);
-                        let h = state.place(target, est, actual, true);
-                        let run = runs[s.job].as_mut().unwrap();
-                        run.sched.placement[s.layer_id] = target;
-                        run.sched.handles[s.layer_id] = h;
+                    match &mut shields[cluster] {
+                        ClusterShield::Central(s) => {
+                            s.set_alive(Some(membership.alive_cluster_set(cluster).clone()));
+                        }
+                        ClusterShield::Decentral(s) => {
+                            s.node_failed(&dep, victim);
+                        }
+                        ClusterShield::None => {}
                     }
-                    // Decision-latency accounting: every affected job pays
-                    // the recovery round (Fig 7/12 under churn).
-                    let mut charged: Vec<usize> = stranded.iter().map(|s| s.job).collect();
-                    charged.sort_unstable();
-                    charged.dedup();
-                    for ji in charged {
-                        let run = runs[ji].as_mut().unwrap();
-                        run.sched.decision_secs += outcome.sched_secs + outcome.shield_secs;
-                        run.sched.sched_secs += outcome.sched_secs;
-                        run.sched.shield_secs += outcome.shield_secs;
+                    // Background segments resident on the node are lost.
+                    for (i, slot) in bg_handles.iter_mut().enumerate() {
+                        if workload.background[i].node == victim {
+                            if let Some(h) = slot.take() {
+                                state.release(h);
+                            }
+                        }
                     }
+                    // Strand and reschedule the DL layers the node hosted.
+                    let mut stranded: Vec<Stranded> = Vec::new();
+                    for (ji, run) in runs.iter_mut().enumerate() {
+                        let Some(run) = run else { continue };
+                        if run.done {
+                            continue;
+                        }
+                        for (layer_id, &host) in run.sched.placement.iter().enumerate() {
+                            if host == victim {
+                                state.release(run.sched.handles[layer_id]);
+                                stranded.push(Stranded {
+                                    job: ji,
+                                    owner: run.sched.job.owner,
+                                    layer_id,
+                                });
+                            }
+                        }
+                    }
+                    if !stranded.is_empty() {
+                        let shield = shields[cluster].as_dyn();
+                        let outcome = reschedule_stranded(
+                            &dep, &membership, &state, &graph, &view_demand, &stranded, victim,
+                            policy, shield, &cfg.reward, &mut rng,
+                        );
+                        metrics.collisions += outcome.collisions;
+                        metrics.shield_corrections += outcome.corrections;
+                        metrics.rescheduled_layers += stranded.len();
+                        for (s, &target) in stranded.iter().zip(&outcome.targets) {
+                            // The cluster always keeps ≥1 alive member, so the
+                            // handler's fallback guarantees a real target.
+                            let target = if target == usize::MAX {
+                                membership.alive_members(cluster)[0]
+                            } else {
+                                target
+                            };
+                            let est = graph.layers[s.layer_id].demand();
+                            let actual = noisy_demand(&est, &mut rng);
+                            let h = state.place(target, est, actual, true);
+                            let run = runs[s.job].as_mut().unwrap();
+                            run.sched.placement[s.layer_id] = target;
+                            run.sched.handles[s.layer_id] = h;
+                        }
+                        // Decision-latency accounting: every affected job pays
+                        // the recovery round (Fig 7/12 under churn).
+                        let mut charged: Vec<usize> = stranded.iter().map(|s| s.job).collect();
+                        charged.sort_unstable();
+                        charged.dedup();
+                        for ji in charged {
+                            let run = runs[ji].as_mut().unwrap();
+                            run.sched.decision_secs += outcome.sched_secs + outcome.shield_secs;
+                            run.sched.sched_secs += outcome.sched_secs;
+                            run.sched.shield_secs += outcome.shield_secs;
+                        }
+                    }
+                    check_overloads(&state, &mut metrics, &mut was_overloaded);
                 }
-                check_overloads(&state, &mut metrics, &mut was_overloaded);
             }
             EventKind::NodeJoin { node } => {
                 if remaining == 0 || !membership.join(&dep, node) {
@@ -440,6 +498,116 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                     }
                     ClusterShield::None => {}
                 }
+            }
+            EventKind::MobilityTick => {
+                // Ticks stop with the last completion, like churn.
+                if remaining == 0 {
+                    continue;
+                }
+                let Some(dyn_topo) = mobility.as_mut() else { continue };
+                queue.push(ev.t + cfg.mobility_tick_secs, EventKind::MobilityTick);
+                let moved = dyn_topo.advance(ev.t, cfg.mobility_tick_secs, &mut dep.topo);
+                if moved.is_empty() {
+                    continue;
+                }
+                metrics.mobility_moves += moved.len();
+                // Every position-derived structure refreshes: the
+                // cluster-restricted adjacency, the alive overlay the
+                // candidate sets read, and (per moved node) the SROLE-D
+                // region partition — incremental handoff, pinned to the
+                // from-scratch re-partition by equivalence tests.
+                // Adjacency/membership use full rebuilds deliberately:
+                // at tick granularity and n ≤ ~100 that is ~10⁴ distance
+                // checks, dwarfed by one shield round — revisit only if
+                // deployments grow well past the ROADMAP scale target.
+                dep.refresh_adjacency();
+                let alive = membership.alive_set().clone();
+                membership = Membership::rebuild(&dep, &alive);
+                for &node in &moved {
+                    let cluster = dep.cluster_of(node);
+                    if let ClusterShield::Decentral(s) = &mut shields[cluster] {
+                        if s.node_moved(&dep, node) {
+                            metrics.region_handoffs += 1;
+                        }
+                    }
+                }
+                // Mobility-aware scheduling: layers whose (alive) host
+                // drifted out of the owning agent's transmission range
+                // are migrated by the owners, through the same stale-view
+                // + shield path as failure recovery.  Dead owners wait
+                // for the failure handler instead.
+                let mut per_cluster: Vec<Vec<Stranded>> = vec![Vec::new(); n_clusters];
+                for (ji, run) in runs.iter().enumerate() {
+                    let Some(run) = run else { continue };
+                    let owner = run.sched.job.owner;
+                    if run.done || !membership.is_alive(owner) {
+                        continue;
+                    }
+                    // An owner with no in-range alternatives would only
+                    // stack every remote layer onto itself — keep the
+                    // old (alive, slow) placements instead.
+                    if membership.alive_neighbors(owner).is_empty() {
+                        continue;
+                    }
+                    for (layer_id, &host) in run.sched.placement.iter().enumerate() {
+                        let reachable = host == owner
+                            || membership.alive_neighbors(owner).binary_search(&host).is_ok();
+                        if !reachable && membership.is_alive(host) {
+                            per_cluster[run.sched.job.cluster].push(Stranded {
+                                job: ji,
+                                owner,
+                                layer_id,
+                            });
+                        }
+                    }
+                }
+                for (cluster, stranded) in per_cluster.iter().enumerate() {
+                    if stranded.is_empty() {
+                        continue;
+                    }
+                    // Remember the old hosts (the keep-in-place fallback:
+                    // unlike failures, an out-of-range host still works —
+                    // slowly) and release before the owners re-decide.
+                    let mut old_hosts: Vec<NodeId> = Vec::with_capacity(stranded.len());
+                    for s in stranded {
+                        let run = runs[s.job].as_mut().unwrap();
+                        old_hosts.push(run.sched.placement[s.layer_id]);
+                        state.release(run.sched.handles[s.layer_id]);
+                    }
+                    let shield = shields[cluster].as_dyn();
+                    let outcome = reschedule_migrated(
+                        &dep, &membership, &state, &graph, &view_demand, stranded, policy,
+                        shield, &cfg.reward, &mut rng,
+                    );
+                    metrics.collisions += outcome.collisions;
+                    metrics.shield_corrections += outcome.corrections;
+                    for ((s, &target), &old) in
+                        stranded.iter().zip(&outcome.targets).zip(&old_hosts)
+                    {
+                        let target = if target == usize::MAX { old } else { target };
+                        if target != old {
+                            metrics.migrated_layers += 1;
+                        }
+                        let est = graph.layers[s.layer_id].demand();
+                        let actual = noisy_demand(&est, &mut rng);
+                        let h = state.place(target, est, actual, true);
+                        let run = runs[s.job].as_mut().unwrap();
+                        run.sched.placement[s.layer_id] = target;
+                        run.sched.handles[s.layer_id] = h;
+                    }
+                    // Migration rounds pay decision latency exactly like
+                    // failure recovery (Fig 7/12 stay regenerable).
+                    let mut charged: Vec<usize> = stranded.iter().map(|s| s.job).collect();
+                    charged.sort_unstable();
+                    charged.dedup();
+                    for ji in charged {
+                        let run = runs[ji].as_mut().unwrap();
+                        run.sched.decision_secs += outcome.sched_secs + outcome.shield_secs;
+                        run.sched.sched_secs += outcome.sched_secs;
+                        run.sched.shield_secs += outcome.shield_secs;
+                    }
+                }
+                check_overloads(&state, &mut metrics, &mut was_overloaded);
             }
         }
     }
@@ -536,5 +704,114 @@ mod tests {
         let mut cfg = churn_cfg();
         cfg.failure_rate = 0.0;
         assert!(!cfg.dynamic());
+    }
+
+    fn mobility_cfg(speed: f64) -> ExperimentConfig {
+        ExperimentConfig {
+            n_edges: 10,
+            cluster_size: 5,
+            model: ModelKind::Rnn,
+            iterations: 5,
+            pretrain_episodes: 20,
+            repetitions: 1,
+            mobility: crate::net::MobilityModel::RandomWaypoint {
+                speed_mps: speed,
+                pause_secs: 0.0,
+            },
+            mobility_tick_secs: 10.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mobile_runs_complete_all_jobs() {
+        let cfg = mobility_cfg(2.0);
+        assert!(cfg.dynamic(), "mobility must route through the event driver");
+        for m in Method::ALL {
+            let r = run_dynamic(&cfg, m, 5);
+            assert_eq!(r.jct.len(), 2 * 3, "{}: wrong job count", m.name());
+            assert!(r.jct.iter().all(|&t| t.is_finite() && t > 0.0), "{}", m.name());
+            assert_eq!(r.node_failures, 0);
+        }
+    }
+
+    #[test]
+    fn mobile_runs_are_deterministic() {
+        let cfg = mobility_cfg(2.0);
+        for m in [Method::Marl, Method::SroleD] {
+            let a = run_dynamic(&cfg, m, 11);
+            let b = run_dynamic(&cfg, m, 11);
+            assert_eq!(a.jct, b.jct, "{}", m.name());
+            assert_eq!(a.collisions, b.collisions);
+            assert_eq!(a.mobility_moves, b.mobility_moves);
+            assert_eq!(a.region_handoffs, b.region_handoffs);
+            assert_eq!(a.migrated_layers, b.migrated_layers);
+        }
+    }
+
+    #[test]
+    fn mobility_actually_moves_and_hands_off_regions() {
+        // Across a few seeds, motion must be delivered and SROLE-D must
+        // observe shield-region handoffs (nodes crossing sub-cluster
+        // boundaries while alive — the ROADMAP follow-up this subsystem
+        // exists for).
+        let mut moves = 0;
+        let mut handoffs = 0;
+        for seed in [1u64, 2, 3] {
+            let r = run_dynamic(&mobility_cfg(3.0), Method::SroleD, seed);
+            moves += r.mobility_moves;
+            handoffs += r.region_handoffs;
+        }
+        assert!(moves > 0, "no node ever moved across 3 seeds");
+        assert!(handoffs > 0, "no shield-region handoff across 3 seeds");
+    }
+
+    #[test]
+    fn zero_speed_mobility_is_static() {
+        let cfg = mobility_cfg(0.0);
+        assert!(!cfg.mobility.enabled());
+        assert!(!cfg.dynamic(), "zero speed must not force the dynamic driver");
+    }
+
+    #[test]
+    fn mobility_composes_with_churn() {
+        let mut cfg = mobility_cfg(2.0);
+        cfg.failure_rate = 3.0;
+        cfg.rejoin_secs = 120.0;
+        let a = run_dynamic(&cfg, Method::SroleD, 9);
+        let b = run_dynamic(&cfg, Method::SroleD, 9);
+        assert_eq!(a.jct.len(), 6);
+        assert_eq!(a.jct, b.jct, "churn + mobility must stay deterministic");
+        assert_eq!(a.node_failures, b.node_failures);
+        assert_eq!(a.region_handoffs, b.region_handoffs);
+    }
+
+    #[test]
+    fn blast_radius_correlates_failures() {
+        // A huge blast radius turns every seed failure into a correlated
+        // group (bounded by the never-empty-a-cluster invariant); zero
+        // radius keeps failures independent.
+        let mut cfg = churn_cfg();
+        cfg.blast_radius_m = 1e9;
+        let mut correlated = 0;
+        for seed in [1u64, 2, 3] {
+            let r = run_dynamic(&cfg, Method::SroleC, seed);
+            assert_eq!(r.jct.len(), 6, "jobs must still complete under blasts");
+            correlated += r.correlated_failures;
+        }
+        assert!(correlated > 0, "a 1e9 m blast radius never took a second node down");
+
+        let mut cfg0 = churn_cfg();
+        cfg0.blast_radius_m = 0.0;
+        for seed in [1u64, 2, 3] {
+            let r = run_dynamic(&cfg0, Method::SroleC, seed);
+            assert_eq!(r.correlated_failures, 0, "independent failures must not correlate");
+        }
+
+        // Determinism under correlated churn.
+        let a = run_dynamic(&cfg, Method::SroleD, 4);
+        let b = run_dynamic(&cfg, Method::SroleD, 4);
+        assert_eq!(a.jct, b.jct);
+        assert_eq!(a.correlated_failures, b.correlated_failures);
     }
 }

@@ -26,6 +26,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::{Experiment, Method};
 use crate::dnn::ModelKind;
 use crate::metrics::RunMetrics;
+use crate::net::MobilityModel;
 use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
 use crate::util::table::{f, Table};
@@ -55,8 +56,14 @@ impl Scenario {
         if cfg.failure_rate > 0.0 {
             label.push_str(&format!("/f{}", cfg.failure_rate));
         }
+        if cfg.blast_radius_m > 0.0 {
+            label.push_str(&format!("/r{}", cfg.blast_radius_m));
+        }
         if !matches!(cfg.arrival, ArrivalProcess::Batched { .. }) {
             label.push_str(&format!("/a{}", cfg.arrival.label()));
+        }
+        if cfg.mobility.enabled() {
+            label.push_str(&format!("/m{}", cfg.mobility.label()));
         }
         Scenario { label, method, cfg }
     }
@@ -85,8 +92,13 @@ pub struct Sweep {
     pub seeds: Vec<u64>,
     /// Churn axis: node failures per 1000 simulated seconds (0 = static).
     pub failure_rates: Vec<f64>,
+    /// Correlated-failure axis: geographic blast radius in meters
+    /// (0 = independent failures).
+    pub blast_radii: Vec<f64>,
     /// Arrival-process axis (batched waves / Poisson / trace).
     pub arrivals: Vec<ArrivalProcess>,
+    /// Mobility axis (speed × pause grid, trace patrols, or static).
+    pub mobility: Vec<MobilityModel>,
 }
 
 impl Sweep {
@@ -100,7 +112,9 @@ impl Sweep {
             kappas: Vec::new(),
             seeds: Vec::new(),
             failure_rates: Vec::new(),
+            blast_radii: Vec::new(),
             arrivals: Vec::new(),
+            mobility: Vec::new(),
         }
     }
 
@@ -140,9 +154,22 @@ impl Sweep {
         self
     }
 
+    /// Correlated-failure axis: blast radius in meters.
+    pub fn blast_radii(mut self, r: &[f64]) -> Sweep {
+        self.blast_radii = r.to_vec();
+        self
+    }
+
     /// Arrival-process axis.
     pub fn arrivals(mut self, a: &[ArrivalProcess]) -> Sweep {
         self.arrivals = a.to_vec();
+        self
+    }
+
+    /// Mobility axis: one scenario per motion model (e.g. a
+    /// speed × pause random-waypoint grid plus the static baseline).
+    pub fn mobility(mut self, m: &[MobilityModel]) -> Sweep {
+        self.mobility = m.to_vec();
         self
     }
 
@@ -163,30 +190,38 @@ impl Sweep {
         let kappas = dim(&self.kappas, self.base.reward.kappa);
         let seeds = dim(&self.seeds, self.base.seed);
         let failure_rates = dim(&self.failure_rates, self.base.failure_rate);
+        let blast_radii = dim(&self.blast_radii, self.base.blast_radius_m);
         let arrivals = dim(&self.arrivals, self.base.arrival.clone());
+        let mobility = dim(&self.mobility, self.base.mobility.clone());
 
         let mut out = Vec::new();
         for &seed in &seeds {
-            for arrival in &arrivals {
-                for &failure_rate in &failure_rates {
-                    for &model in &models {
-                        for &e in &edges {
-                            for &w in &workloads {
-                                for &kappa in &kappas {
-                                    for &method in &methods {
-                                        let mut cfg = self.base.clone();
-                                        cfg.seed = seed;
-                                        cfg.model = model;
-                                        cfg.n_edges = e;
-                                        cfg.workload = w;
-                                        cfg.reward.kappa = kappa;
-                                        cfg.failure_rate = failure_rate;
-                                        cfg.arrival = arrival.clone();
-                                        // Keep cluster size valid on small sweeps.
-                                        if cfg.cluster_size > e {
-                                            cfg.cluster_size = e.max(1);
+            for mob in &mobility {
+                for arrival in &arrivals {
+                    for &failure_rate in &failure_rates {
+                        for &blast in &blast_radii {
+                            for &model in &models {
+                                for &e in &edges {
+                                    for &w in &workloads {
+                                        for &kappa in &kappas {
+                                            for &method in &methods {
+                                                let mut cfg = self.base.clone();
+                                                cfg.seed = seed;
+                                                cfg.model = model;
+                                                cfg.n_edges = e;
+                                                cfg.workload = w;
+                                                cfg.reward.kappa = kappa;
+                                                cfg.failure_rate = failure_rate;
+                                                cfg.blast_radius_m = blast;
+                                                cfg.arrival = arrival.clone();
+                                                cfg.mobility = mob.clone();
+                                                // Keep cluster size valid on small sweeps.
+                                                if cfg.cluster_size > e {
+                                                    cfg.cluster_size = e.max(1);
+                                                }
+                                                out.push(Scenario::new(method, cfg));
+                                            }
                                         }
-                                        out.push(Scenario::new(method, cfg));
                                     }
                                 }
                             }
@@ -426,6 +461,68 @@ mod tests {
             failures += s.metrics.node_failures;
         }
         assert!(failures > 0, "vacuous: no failure event fired in any scenario");
+    }
+
+    #[test]
+    fn mobility_and_blast_axes_expand_and_tag_labels() {
+        let rwp = |s: f64, p: f64| MobilityModel::RandomWaypoint { speed_mps: s, pause_secs: p };
+        let sw = Sweep::new(tiny_base())
+            .methods(&[Method::Marl, Method::SroleD])
+            .mobility(&[MobilityModel::Static, rwp(0.5, 0.0), rwp(2.0, 30.0)])
+            .failure_rates(&[0.0, 2.0])
+            .blast_radii(&[0.0, 15.0]);
+        let scenarios = sw.scenarios();
+        assert_eq!(scenarios.len(), 2 * 3 * 2 * 2);
+        let mut labels: Vec<&str> = scenarios.iter().map(|s| s.label.as_str()).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), scenarios.len(), "mobility axes must keep labels unique");
+        assert!(scenarios.iter().any(|s| s.label.contains("/mw0.5p0")));
+        assert!(scenarios.iter().any(|s| s.label.contains("/mw2p30")));
+        assert!(scenarios.iter().any(|s| s.label.contains("/r15")));
+        // The static baseline cell keeps its legacy label untouched
+        // (six bare segments, no churn/blast/mobility tags appended).
+        let plain = scenarios
+            .iter()
+            .find(|s| {
+                s.cfg.failure_rate == 0.0
+                    && s.cfg.blast_radius_m == 0.0
+                    && !s.cfg.mobility.enabled()
+            })
+            .expect("a static baseline cell exists");
+        assert_eq!(plain.label.split('/').count(), 6, "baseline tagged: {}", plain.label);
+        for s in &scenarios {
+            s.cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn mobility_runs_are_byte_identical_across_thread_counts() {
+        // The acceptance criterion: mobility sweeps must replay
+        // byte-identically regardless of harness thread count.
+        let mut base = tiny_base();
+        base.mobility =
+            MobilityModel::RandomWaypoint { speed_mps: 3.0, pause_secs: 0.0 };
+        base.mobility_tick_secs = 10.0;
+        let sw = Sweep::new(base)
+            .methods(&[Method::Marl, Method::SroleC, Method::SroleD, Method::Rl]);
+        let scenarios = sw.scenarios();
+        assert!(scenarios.iter().all(|s| s.cfg.dynamic()), "mobility must be active");
+        let serial = run_parallel(&scenarios, 1);
+        let parallel = run_parallel(&scenarios, 4);
+        assert_eq!(serial.len(), parallel.len());
+        let mut moves = 0usize;
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.scenario.label, p.scenario.label);
+            assert_eq!(
+                s.metrics.to_json().to_string(),
+                p.metrics.to_json().to_string(),
+                "{}: report not byte-identical across thread counts",
+                s.scenario.label
+            );
+            moves += s.metrics.mobility_moves;
+        }
+        assert!(moves > 0, "vacuous: nothing moved in any mobility scenario");
     }
 
     #[test]

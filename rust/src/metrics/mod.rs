@@ -27,9 +27,21 @@ pub struct RunMetrics {
     pub memory_violations: usize,
     /// Node failure events delivered by the event core (dynamic runs).
     pub node_failures: usize,
+    /// Secondary failures triggered by a seed failure's geographic blast
+    /// radius (correlated churn; counted on top of `node_failures`).
+    pub correlated_failures: usize,
     /// Layers stranded by failures and re-placed by the reschedule
     /// handler.
     pub rescheduled_layers: usize,
+    /// Node position updates delivered by mobility ticks (a node moving
+    /// during one tick counts once).
+    pub mobility_moves: usize,
+    /// Shield-region handoffs: a moving node crossed a sub-cluster
+    /// boundary and migrated between sub-shields (SROLE-D only).
+    pub region_handoffs: usize,
+    /// Layers migrated because mobility carried their host out of the
+    /// owning agent's transmission range.
+    pub migrated_layers: usize,
     /// Per-(node, sample) task counts.
     pub tasks_per_device: Vec<f64>,
     /// Per-(node, sample) utilization per resource.
@@ -114,7 +126,11 @@ impl RunMetrics {
             ("shield_corrections", Json::Num(self.shield_corrections as f64)),
             ("memory_violations", Json::Num(self.memory_violations as f64)),
             ("node_failures", Json::Num(self.node_failures as f64)),
+            ("correlated_failures", Json::Num(self.correlated_failures as f64)),
             ("rescheduled_layers", Json::Num(self.rescheduled_layers as f64)),
+            ("mobility_moves", Json::Num(self.mobility_moves as f64)),
+            ("region_handoffs", Json::Num(self.region_handoffs as f64)),
+            ("migrated_layers", Json::Num(self.migrated_layers as f64)),
             ("tasks_per_device", arr(&self.tasks_per_device)),
             ("util_cpu", arr(&self.util_cpu)),
             ("util_mem", arr(&self.util_mem)),
@@ -134,7 +150,11 @@ impl RunMetrics {
         self.shield_corrections += other.shield_corrections;
         self.memory_violations += other.memory_violations;
         self.node_failures += other.node_failures;
+        self.correlated_failures += other.correlated_failures;
         self.rescheduled_layers += other.rescheduled_layers;
+        self.mobility_moves += other.mobility_moves;
+        self.region_handoffs += other.region_handoffs;
+        self.migrated_layers += other.migrated_layers;
         self.tasks_per_device.extend_from_slice(&other.tasks_per_device);
         self.util_cpu.extend_from_slice(&other.util_cpu);
         self.util_mem.extend_from_slice(&other.util_mem);
@@ -158,7 +178,11 @@ mod tests {
             shield_corrections: 2,
             memory_violations: 1,
             node_failures: 1,
+            correlated_failures: 1,
             rescheduled_layers: 2,
+            mobility_moves: 4,
+            region_handoffs: 2,
+            migrated_layers: 1,
             tasks_per_device: vec![2.0, 3.0, 5.0],
             util_cpu: vec![0.5, 0.6],
             util_mem: vec![0.4, 0.5],
@@ -184,6 +208,10 @@ mod tests {
         a.absorb(&b);
         assert_eq!(a.jct.len(), 6);
         assert_eq!(a.collisions, 8);
+        assert_eq!(a.region_handoffs, 4);
+        assert_eq!(a.correlated_failures, 2);
+        assert_eq!(a.migrated_layers, 2);
+        assert_eq!(a.mobility_moves, 8);
         assert_eq!(a.makespan, 1234.0);
     }
 

@@ -1,0 +1,562 @@
+//! Node mobility: waypoint-style motion models evolving node positions
+//! over simulated time, and the time-varying topology derived from them.
+//!
+//! The paper freezes geography; the ROADMAP's named follow-up — node
+//! *mobility* (moving between shield regions while alive) — lives here:
+//!
+//! * [`MobilityModel`] — the motion law.  [`MobilityModel::RandomWaypoint`]
+//!   is the classic model (pick a waypoint, travel at constant speed,
+//!   pause, repeat), with waypoints drawn inside each node's *cluster
+//!   roam disc* so nodes wander across sub-cluster (shield-region)
+//!   boundaries without dissolving the cluster structure.
+//!   [`MobilityModel::Trace`] is a deterministic patrol: every mobile
+//!   node visits a fixed sequence of offsets relative to its home
+//!   position — reproducible without consuming randomness.
+//! * [`MobilityState`] — per-node motion bookkeeping advanced at event-
+//!   queue granularity (`EventKind::MobilityTick`).  It owns a forked RNG
+//!   stream, so enabling mobility never perturbs the scheduling RNG.
+//! * [`DynamicTopology`] — wraps a [`Topology`]: whenever positions
+//!   advance it re-derives the affected bandwidth / latency entries from
+//!   the base (t = 0) matrices via a distance [`attenuation`] law and
+//!   rebuilds the adjacency cache, so neighbor sets, transfer times and
+//!   the RL agents' candidate features all follow the motion.
+//!
+//! Adding a motion model is local: add the variant, give it a label, an
+//! `enabled` rule and a waypoint rule (`MobilityState::pick_waypoint`) —
+//! the advance loop, repricing and the event wiring are model-agnostic.
+
+use super::{Pos, Topology};
+use crate::util::Rng;
+
+/// Default mobility-tick period in simulated seconds.
+pub const DEFAULT_TICK_SECS: f64 = 10.0;
+/// Default random-waypoint speed (m/s) and pause (s).
+pub const DEFAULT_SPEED_MPS: f64 = 1.0;
+pub const DEFAULT_PAUSE_SECS: f64 = 30.0;
+/// Bandwidth multiplier at exactly the transmission range; beyond the
+/// range the link floors here (reachable but slow) instead of vanishing.
+pub const EDGE_ATTENUATION: f64 = 0.25;
+/// Roam disc: cluster radius is scaled by this factor (so waypoints
+/// cross sub-cluster boundaries) with a minimum in meters.
+const ROAM_FACTOR: f64 = 1.5;
+const MIN_ROAM_M: f64 = 5.0;
+
+/// Distance attenuation of link quality: full bandwidth up to half the
+/// transmission range, linear roll-off to [`EDGE_ATTENUATION`] at the
+/// range, floored beyond it.  Latency scales inversely.
+pub fn attenuation(dist: f64, range: f64) -> f64 {
+    if range <= 0.0 {
+        return 1.0;
+    }
+    let d = dist / range;
+    if d <= 0.5 {
+        1.0
+    } else if d >= 1.0 {
+        EDGE_ATTENUATION
+    } else {
+        1.0 - (1.0 - EDGE_ATTENUATION) * (d - 0.5) / 0.5
+    }
+}
+
+/// How (and whether) nodes move.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum MobilityModel {
+    /// Frozen geography (the paper's setup; the default).
+    #[default]
+    Static,
+    /// Random waypoint inside the node's cluster roam disc: travel at
+    /// `speed_mps`, pause `pause_secs` on arrival, repeat.
+    RandomWaypoint { speed_mps: f64, pause_secs: f64 },
+    /// Deterministic patrol: each node cycles through `offsets` (meters,
+    /// relative to its home position) at `speed_mps`, no pauses.
+    Trace { offsets: Vec<(f64, f64)>, speed_mps: f64 },
+}
+
+impl MobilityModel {
+    /// A default square patrol for `Trace` configs (`mobility = "trace"`).
+    pub fn default_trace() -> MobilityModel {
+        MobilityModel::Trace {
+            offsets: vec![(12.0, 0.0), (12.0, 12.0), (0.0, 12.0), (0.0, 0.0)],
+            speed_mps: DEFAULT_SPEED_MPS,
+        }
+    }
+
+    /// Whether this model actually moves anyone.
+    pub fn enabled(&self) -> bool {
+        match self {
+            MobilityModel::Static => false,
+            MobilityModel::RandomWaypoint { speed_mps, .. } => *speed_mps > 0.0,
+            MobilityModel::Trace { offsets, speed_mps } => {
+                *speed_mps > 0.0 && !offsets.is_empty()
+            }
+        }
+    }
+
+    /// Short tag for scenario labels (`static`, `w1p30`, `t4x1-9c2e`).
+    /// Speeds and pauses print un-rounded, and trace patrols carry a
+    /// fingerprint of their offset sequence, so distinct sweep cells
+    /// never share a label.
+    pub fn label(&self) -> String {
+        match self {
+            MobilityModel::Static => "static".to_string(),
+            MobilityModel::RandomWaypoint { speed_mps, pause_secs } => {
+                format!("w{speed_mps}p{pause_secs}")
+            }
+            MobilityModel::Trace { offsets, speed_mps } => {
+                // FNV-1a over the offset bits: length alone is ambiguous
+                // (two different patrols can share a waypoint count).
+                let mut h: u64 = 0xcbf29ce484222325;
+                for &(x, y) in offsets {
+                    for b in
+                        x.to_bits().to_le_bytes().into_iter().chain(y.to_bits().to_le_bytes())
+                    {
+                        h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+                    }
+                }
+                format!("t{}x{speed_mps}-{:04x}", offsets.len(), h & 0xffff)
+            }
+        }
+    }
+
+    fn speed_and_pause(&self) -> (f64, f64) {
+        match self {
+            MobilityModel::Static => (0.0, 0.0),
+            MobilityModel::RandomWaypoint { speed_mps, pause_secs } => (*speed_mps, *pause_secs),
+            MobilityModel::Trace { speed_mps, .. } => (*speed_mps, 0.0),
+        }
+    }
+}
+
+/// Per-node motion bookkeeping.
+#[derive(Debug, Clone)]
+struct NodeMotion {
+    target: Pos,
+    /// Simulated time until which the node rests at its position.
+    pause_until: f64,
+    /// Next trace-waypoint index (trace model only).
+    next_wp: usize,
+}
+
+/// The motion process over all nodes: advanced by the event core at
+/// [`DEFAULT_TICK_SECS`]-style granularity, deterministic in its own
+/// forked RNG stream.
+#[derive(Debug, Clone)]
+pub struct MobilityState {
+    model: MobilityModel,
+    rng: Rng,
+    /// t = 0 position per node (trace offsets are relative to these).
+    homes: Vec<Pos>,
+    /// Roam-disc center / radius per node (its cluster's centroid).
+    roam_center: Vec<Pos>,
+    roam_radius: Vec<f64>,
+    /// Empty when the model is disabled.
+    motion: Vec<NodeMotion>,
+}
+
+impl MobilityState {
+    /// Build the motion process.  `groups` are the geographic clusters
+    /// (each a member list): they define the per-node roam discs.  Nodes
+    /// in no group get a degenerate disc and never move.
+    pub fn new(
+        topo: &Topology,
+        model: MobilityModel,
+        groups: &[Vec<usize>],
+        rng: Rng,
+    ) -> MobilityState {
+        let n = topo.n();
+        let homes = topo.positions.clone();
+        let mut roam_center = homes.clone();
+        let mut roam_radius = vec![0.0; n];
+        for g in groups {
+            if g.is_empty() {
+                continue;
+            }
+            let (mut cx, mut cy) = (0.0, 0.0);
+            for &m in g {
+                cx += homes[m].x;
+                cy += homes[m].y;
+            }
+            let c = Pos { x: cx / g.len() as f64, y: cy / g.len() as f64 };
+            let mut r: f64 = 0.0;
+            for &m in g {
+                r = r.max(c.dist(&homes[m]));
+            }
+            let r = (r * ROAM_FACTOR).max(MIN_ROAM_M);
+            for &m in g {
+                roam_center[m] = c;
+                roam_radius[m] = r;
+            }
+        }
+        let mut st =
+            MobilityState { model, rng, homes, roam_center, roam_radius, motion: Vec::new() };
+        if st.enabled() {
+            st.motion = (0..n)
+                .map(|_| NodeMotion {
+                    target: Pos { x: 0.0, y: 0.0 },
+                    pause_until: 0.0,
+                    next_wp: 0,
+                })
+                .collect();
+            // Initial waypoints, in node-id order (determinism).
+            for i in 0..n {
+                let wp = st.pick_waypoint(i);
+                st.motion[i].target = wp;
+            }
+        }
+        st
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.model.enabled()
+    }
+
+    pub fn model(&self) -> &MobilityModel {
+        &self.model
+    }
+
+    /// Next waypoint of node `i` under the model.
+    fn pick_waypoint(&mut self, i: usize) -> Pos {
+        match &self.model {
+            MobilityModel::Static => self.homes[i],
+            MobilityModel::RandomWaypoint { .. } => {
+                let ang = self.rng.range_f64(0.0, std::f64::consts::TAU);
+                let r = self.roam_radius[i] * self.rng.f64().sqrt();
+                Pos {
+                    x: self.roam_center[i].x + r * ang.cos(),
+                    y: self.roam_center[i].y + r * ang.sin(),
+                }
+            }
+            MobilityModel::Trace { offsets, .. } => {
+                if offsets.is_empty() {
+                    return self.homes[i];
+                }
+                let k = self.motion[i].next_wp % offsets.len();
+                self.motion[i].next_wp = (k + 1) % offsets.len();
+                let (ox, oy) = offsets[k];
+                Pos { x: self.homes[i].x + ox, y: self.homes[i].y + oy }
+            }
+        }
+    }
+
+    /// Advance the motion over the interval `[now - dt, now]`, mutating
+    /// `positions` in place.  Returns the ids of nodes that moved,
+    /// ascending.  The caller owns cache invalidation (adjacency,
+    /// bandwidth repricing) — [`DynamicTopology::advance`] bundles it.
+    pub fn advance(&mut self, now: f64, dt: f64, positions: &mut [Pos]) -> Vec<usize> {
+        let (speed, pause) = self.model.speed_and_pause();
+        if speed <= 0.0 || self.motion.is_empty() || dt <= 0.0 {
+            return Vec::new();
+        }
+        let mut moved = Vec::new();
+        for i in 0..positions.len() {
+            let start = positions[i];
+            let mut t = now - dt;
+            while t < now - 1e-9 {
+                if t < self.motion[i].pause_until {
+                    t = self.motion[i].pause_until.min(now);
+                    continue;
+                }
+                let p = positions[i];
+                let target = self.motion[i].target;
+                let dx = target.x - p.x;
+                let dy = target.y - p.y;
+                let dist = (dx * dx + dy * dy).sqrt();
+                if dist <= 1e-9 {
+                    // Arrived: rest, then head for the next waypoint.
+                    self.motion[i].pause_until = t + pause;
+                    let wp = self.pick_waypoint(i);
+                    self.motion[i].target = wp;
+                    if pause <= 0.0 && wp.dist(&p) <= 1e-9 {
+                        // Degenerate zero-length leg (e.g. a one-point
+                        // trace): nothing left to do this tick.
+                        break;
+                    }
+                    continue;
+                }
+                let travel = speed * (now - t);
+                if travel >= dist {
+                    positions[i] = target;
+                    t += dist / speed;
+                } else {
+                    let f = travel / dist;
+                    positions[i] = Pos { x: p.x + dx * f, y: p.y + dy * f };
+                    t = now;
+                }
+            }
+            if start.dist(&positions[i]) > 1e-12 {
+                moved.push(i);
+            }
+        }
+        moved
+    }
+}
+
+/// Time-varying topology: the motion process plus the link model that
+/// keeps a wrapped [`Topology`]'s derived state (bandwidth, latency,
+/// adjacency cache) consistent with the current positions.
+#[derive(Debug, Clone)]
+pub struct DynamicTopology {
+    /// t = 0 pairwise link quality; the live matrices are these scaled
+    /// by the current distance [`attenuation`].
+    base_bw: Vec<Vec<f64>>,
+    base_latency: Vec<Vec<f64>>,
+    pub motion: MobilityState,
+}
+
+impl DynamicTopology {
+    /// Wrap `topo`: snapshot the base matrices, apply the initial
+    /// distance attenuation and rebuild the adjacency cache.
+    pub fn new(
+        topo: &mut Topology,
+        model: MobilityModel,
+        groups: &[Vec<usize>],
+        rng: Rng,
+    ) -> DynamicTopology {
+        let base_bw = topo.bw.clone();
+        let base_latency = topo.latency.clone();
+        let motion = MobilityState::new(topo, model, groups, rng);
+        let dyn_topo = DynamicTopology { base_bw, base_latency, motion };
+        let all: Vec<usize> = (0..topo.n()).collect();
+        dyn_topo.reprice(topo, &all);
+        topo.rebuild_adjacency();
+        dyn_topo
+    }
+
+    /// Re-derive the bandwidth / latency rows of `nodes` from the base
+    /// matrices and the current distances (symmetric writes).
+    fn reprice(&self, topo: &mut Topology, nodes: &[usize]) {
+        for &i in nodes {
+            for j in 0..topo.n() {
+                if i == j {
+                    continue;
+                }
+                let att = attenuation(topo.positions[i].dist(&topo.positions[j]), topo.range);
+                let bw = self.base_bw[i][j] * att;
+                topo.bw[i][j] = bw;
+                topo.bw[j][i] = bw;
+                let lat = self.base_latency[i][j] / att;
+                topo.latency[i][j] = lat;
+                topo.latency[j][i] = lat;
+            }
+        }
+    }
+
+    /// Advance the motion over `[now - dt, now]` and refresh every
+    /// position-derived structure of `topo` (link matrices of the moved
+    /// nodes, adjacency cache).  Returns the moved node ids, ascending.
+    pub fn advance(&mut self, now: f64, dt: f64, topo: &mut Topology) -> Vec<usize> {
+        let moved = self.motion.advance(now, dt, &mut topo.positions);
+        if !moved.is_empty() {
+            self.reprice(topo, &moved);
+            topo.rebuild_adjacency();
+        }
+        moved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid_topo(n: usize) -> Topology {
+        let mut rng = Rng::new(5);
+        Topology::generate_clustered(&mut rng, n, 5, 10.0, 30.0, &[100.0], 0.001)
+    }
+
+    fn groups(n: usize, cs: usize) -> Vec<Vec<usize>> {
+        (0..n.div_ceil(cs)).map(|c| ((c * cs)..n.min((c + 1) * cs)).collect()).collect()
+    }
+
+    fn rwp(speed: f64, pause: f64) -> MobilityModel {
+        MobilityModel::RandomWaypoint { speed_mps: speed, pause_secs: pause }
+    }
+
+    #[test]
+    fn attenuation_bounds_and_shape() {
+        assert_eq!(attenuation(0.0, 40.0), 1.0);
+        assert_eq!(attenuation(20.0, 40.0), 1.0);
+        assert_eq!(attenuation(40.0, 40.0), EDGE_ATTENUATION);
+        assert_eq!(attenuation(400.0, 40.0), EDGE_ATTENUATION);
+        let mid = attenuation(30.0, 40.0);
+        assert!(mid < 1.0 && mid > EDGE_ATTENUATION);
+        // Monotone non-increasing in distance.
+        let mut prev = 1.0;
+        for k in 0..50 {
+            let a = attenuation(k as f64, 40.0);
+            assert!(a <= prev + 1e-12);
+            prev = a;
+        }
+        // Degenerate range never divides by zero.
+        assert_eq!(attenuation(10.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn static_model_never_moves() {
+        let topo = grid_topo(10);
+        let mut st = MobilityState::new(&topo, MobilityModel::Static, &groups(10, 5), Rng::new(1));
+        let mut pos = topo.positions.clone();
+        for tick in 1..10 {
+            assert!(st.advance(tick as f64 * 10.0, 10.0, &mut pos).is_empty());
+        }
+        assert_eq!(pos, topo.positions);
+        assert!(!st.enabled());
+        // Zero speed is equally disabled.
+        assert!(!rwp(0.0, 10.0).enabled());
+    }
+
+    #[test]
+    fn random_waypoint_moves_and_is_deterministic() {
+        let topo = grid_topo(10);
+        let g = groups(10, 5);
+        let run = || {
+            let mut st = MobilityState::new(&topo, rwp(2.0, 0.0), &g, Rng::new(7));
+            let mut pos = topo.positions.clone();
+            let mut total_moved = 0usize;
+            for tick in 1..=20 {
+                let moved = st.advance(tick as f64 * 10.0, 10.0, &mut pos);
+                assert!(moved.windows(2).all(|w| w[0] < w[1]), "moved list not ascending");
+                total_moved += moved.len();
+            }
+            (pos, total_moved)
+        };
+        let (a, ma) = run();
+        let (b, mb) = run();
+        assert_eq!(a, b, "same seed must replay the same trajectory");
+        assert_eq!(ma, mb);
+        assert!(ma > 0, "nobody moved in 20 ticks at 2 m/s");
+        assert_ne!(a, topo.positions);
+    }
+
+    #[test]
+    fn waypoints_stay_in_cluster_roam_disc() {
+        let topo = grid_topo(15);
+        let g = groups(15, 5);
+        let mut st = MobilityState::new(&topo, rwp(3.0, 0.0), &g, Rng::new(11));
+        // Snapshot the discs before advancing (same-module test: private
+        // fields are visible).
+        let centers = st.roam_center.clone();
+        let radii = st.roam_radius.clone();
+        let mut pos = topo.positions.clone();
+        for tick in 1..=50 {
+            st.advance(tick as f64 * 10.0, 10.0, &mut pos);
+            for i in 0..15 {
+                assert!(
+                    centers[i].dist(&pos[i]) <= radii[i] + 1e-6,
+                    "node {i} escaped its roam disc at tick {tick}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn displacement_bounded_by_speed() {
+        let topo = grid_topo(10);
+        let mut st = MobilityState::new(&topo, rwp(1.5, 0.0), &groups(10, 5), Rng::new(3));
+        let mut pos = topo.positions.clone();
+        for tick in 1..=10 {
+            let before = pos.clone();
+            st.advance(tick as f64 * 10.0, 10.0, &mut pos);
+            for i in 0..10 {
+                assert!(
+                    before[i].dist(&pos[i]) <= 1.5 * 10.0 + 1e-6,
+                    "node {i} outran its speed"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pause_delays_departure() {
+        let topo = grid_topo(5);
+        // Huge pause: after reaching the first waypoint nodes freeze.
+        let mut st = MobilityState::new(&topo, rwp(100.0, 1e9), &groups(5, 5), Rng::new(9));
+        let mut pos = topo.positions.clone();
+        st.advance(10.0, 10.0, &mut pos); // everyone reaches waypoint 1
+        let settled = pos.clone();
+        for tick in 2..=10 {
+            st.advance(tick as f64 * 10.0, 10.0, &mut pos);
+        }
+        assert_eq!(pos, settled, "paused nodes must not move");
+    }
+
+    #[test]
+    fn trace_model_patrols_deterministically() {
+        // One node at home (0,0), square patrol, speed exactly one leg
+        // per tick: the trajectory is the waypoint cycle itself.
+        let topo = Topology::from_parts(
+            vec![Pos { x: 0.0, y: 0.0 }],
+            30.0,
+            vec![vec![f64::INFINITY]],
+            vec![vec![0.0]],
+        );
+        let model = MobilityModel::Trace {
+            offsets: vec![(10.0, 0.0), (10.0, 10.0), (0.0, 10.0), (0.0, 0.0)],
+            speed_mps: 1.0,
+        };
+        let mut st = MobilityState::new(&topo, model, &[vec![0]], Rng::new(1));
+        let mut pos = topo.positions.clone();
+        let expect = [
+            Pos { x: 10.0, y: 0.0 },
+            Pos { x: 10.0, y: 10.0 },
+            Pos { x: 0.0, y: 10.0 },
+            Pos { x: 0.0, y: 0.0 },
+            Pos { x: 10.0, y: 0.0 },
+        ];
+        for (k, want) in expect.iter().enumerate() {
+            let now = (k as f64 + 1.0) * 10.0;
+            let moved = st.advance(now, 10.0, &mut pos);
+            assert_eq!(moved, vec![0], "leg {k}");
+            assert!(pos[0].dist(want) < 1e-9, "leg {k}: at {:?}, want {:?}", pos[0], want);
+        }
+    }
+
+    #[test]
+    fn dynamic_topology_repricing_follows_distance() {
+        let mut topo = grid_topo(10);
+        let base = topo.bw.clone();
+        let g = groups(10, 5);
+        let mut dt = DynamicTopology::new(&mut topo, rwp(3.0, 0.0), &g, Rng::new(21));
+        for tick in 1..=30 {
+            dt.advance(tick as f64 * 10.0, 10.0, &mut topo);
+        }
+        for i in 0..10 {
+            for j in 0..10 {
+                if i == j {
+                    continue;
+                }
+                // Symmetric, bounded by the base, floored at the edge
+                // attenuation, and exactly the attenuation law.
+                assert_eq!(topo.bw[i][j], topo.bw[j][i]);
+                assert!(topo.bw[i][j] <= base[i][j] + 1e-9);
+                assert!(topo.bw[i][j] >= base[i][j] * EDGE_ATTENUATION - 1e-9);
+                let att = attenuation(topo.positions[i].dist(&topo.positions[j]), topo.range);
+                assert!((topo.bw[i][j] - base[i][j] * att).abs() < 1e-9, "({i},{j})");
+            }
+            // Adjacency cache is in sync with the moved positions.
+            assert_eq!(topo.neighbors(i), topo.neighbors_scan(i));
+        }
+    }
+
+    #[test]
+    fn model_labels_are_distinct() {
+        let cells = [
+            MobilityModel::Static,
+            rwp(0.5, 0.0),
+            rwp(0.5, 30.0),
+            rwp(2.0, 30.0),
+            MobilityModel::default_trace(),
+            // Same waypoint count and speed as default_trace, different
+            // offsets: the patrol fingerprint must keep them apart.
+            MobilityModel::Trace {
+                offsets: vec![(5.0, 0.0), (5.0, 5.0), (0.0, 5.0), (0.0, 0.0)],
+                speed_mps: DEFAULT_SPEED_MPS,
+            },
+            MobilityModel::Trace { offsets: vec![(5.0, 0.0)], speed_mps: 1.0 },
+            MobilityModel::Trace { offsets: vec![(25.0, 0.0)], speed_mps: 1.0 },
+        ];
+        let mut labels: Vec<String> = cells.iter().map(|m| m.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), cells.len(), "{labels:?}");
+    }
+}

@@ -7,6 +7,17 @@
 //! drives both cluster formation (§III) and the neighbor sets that bound
 //! every MARL agent's action space ("edge nodes in its transmission
 //! range", §I).
+//!
+//! Positions are *mutable*: the [`mobility`] subsystem evolves them over
+//! simulated time.  Neighbor sets are served from a cached adjacency
+//! index (built at construction, O(degree) per query, no allocation via
+//! [`Topology::neighbors_ref`]); whoever mutates `positions` must call
+//! [`Topology::rebuild_adjacency`] — the explicit invalidation hook the
+//! mobility tick uses.
+
+pub mod mobility;
+
+pub use mobility::{DynamicTopology, MobilityModel, MobilityState};
 
 use crate::util::Rng;
 
@@ -33,18 +44,57 @@ pub struct Topology {
     pub bw: Vec<Vec<f64>>,
     /// One-way latency in seconds for control messages.
     pub latency: Vec<Vec<f64>>,
+    /// Cached neighbor lists (ascending node id), derived from
+    /// `positions` + `range`.  Invalidated explicitly via
+    /// [`Topology::rebuild_adjacency`] when positions change.
+    adjacency: Vec<Vec<usize>>,
 }
 
 impl Topology {
+    /// Assemble a topology from its raw parts and build the adjacency
+    /// cache.
+    pub fn from_parts(
+        positions: Vec<Pos>,
+        range: f64,
+        bw: Vec<Vec<f64>>,
+        latency: Vec<Vec<f64>>,
+    ) -> Topology {
+        let mut topo = Topology { positions, range, bw, latency, adjacency: Vec::new() };
+        topo.rebuild_adjacency();
+        topo
+    }
+
     pub fn n(&self) -> usize {
         self.positions.len()
     }
 
-    /// All nodes within transmission range of `i` (excluding `i`).
+    /// All nodes within transmission range of `i` (excluding `i`),
+    /// served from the adjacency cache.  Allocates a clone — hot paths
+    /// use [`Topology::neighbors_ref`].
     pub fn neighbors(&self, i: usize) -> Vec<usize> {
+        self.adjacency[i].clone()
+    }
+
+    /// Borrowed view of `i`'s cached neighbor list (ascending).
+    #[inline]
+    pub fn neighbors_ref(&self, i: usize) -> &[usize] {
+        &self.adjacency[i]
+    }
+
+    /// Reference O(n) neighbor scan straight off `positions` — the
+    /// pre-cache implementation, kept as the equivalence baseline for
+    /// the cache (tests, `benches/hotpath.rs`).
+    pub fn neighbors_scan(&self, i: usize) -> Vec<usize> {
         (0..self.n())
             .filter(|&j| j != i && self.positions[i].dist(&self.positions[j]) <= self.range)
             .collect()
+    }
+
+    /// Recompute the adjacency cache from the current positions.  Must
+    /// be called after any mutation of `positions` (the mobility tick
+    /// does; so do the generators).
+    pub fn rebuild_adjacency(&mut self) {
+        self.adjacency = (0..self.n()).map(|i| self.neighbors_scan(i)).collect();
     }
 
     pub fn bandwidth(&self, a: usize, b: usize) -> f64 {
@@ -64,12 +114,21 @@ impl Topology {
     }
 
     /// Transfer time in seconds for `mb` megabytes between `a` and `b`,
-    /// with `flows` concurrent flows sharing the link.
+    /// with `flows` concurrent flows sharing the link.  Degenerate
+    /// inputs resolve conservatively: a zero-size (or negative) transfer
+    /// is free, a link with zero / negative / NaN bandwidth never
+    /// completes (`+inf`).
     pub fn transfer_secs(&self, a: usize, b: usize, mb: f64, flows: usize) -> f64 {
         if a == b || mb <= 0.0 {
             return 0.0;
         }
-        let bw = self.bandwidth(a, b) / flows.max(1) as f64; // Mbps
+        let link = self.bandwidth(a, b);
+        if link.is_nan() || link <= 0.0 {
+            // An unusable link reads as "never completes", not as a NaN
+            // silently propagating into the JCT sums.
+            return f64::INFINITY;
+        }
+        let bw = link / flows.max(1) as f64; // Mbps
         self.latency(a, b) + mb * 8.0 / bw
     }
 
@@ -98,7 +157,7 @@ impl Topology {
                 latency[j][i] = l;
             }
         }
-        Topology { positions, range, bw, latency }
+        Topology::from_parts(positions, range, bw, latency)
     }
 
     /// Generate positions pre-grouped into geographic clusters of
@@ -130,6 +189,7 @@ impl Topology {
         }
         let mut topo = Topology::generate(rng, n, 1.0, range, bw_choices, latency_s);
         topo.positions = positions;
+        topo.rebuild_adjacency();
         topo
     }
 }
@@ -166,6 +226,35 @@ mod tests {
     }
 
     #[test]
+    fn cached_adjacency_matches_scan() {
+        let t = topo(20);
+        for i in 0..20 {
+            assert_eq!(t.neighbors(i), t.neighbors_scan(i));
+            assert_eq!(t.neighbors_ref(i), &t.neighbors_scan(i)[..]);
+            assert!(t.neighbors_ref(i).windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn rebuild_adjacency_tracks_moved_positions() {
+        let mut t = topo(12);
+        // Teleport node 0 far away: after explicit invalidation it must
+        // drop out of everyone's neighbor list.
+        t.positions[0] = Pos { x: 1e6, y: 1e6 };
+        t.rebuild_adjacency();
+        assert!(t.neighbors_ref(0).is_empty());
+        for i in 1..12 {
+            assert!(!t.neighbors_ref(i).contains(&0));
+            assert_eq!(t.neighbors(i), t.neighbors_scan(i));
+        }
+        // Teleport it back onto node 1: they become neighbors again.
+        t.positions[0] = t.positions[1];
+        t.rebuild_adjacency();
+        assert!(t.neighbors_ref(0).contains(&1));
+        assert!(t.neighbors_ref(1).contains(&0));
+    }
+
+    #[test]
     fn transfer_time_scales_with_size_and_flows() {
         let t = topo(5);
         let t1 = t.transfer_secs(0, 1, 10.0, 1);
@@ -174,6 +263,30 @@ mod tests {
         assert!(t2 > t1);
         assert!(t4 > t1);
         assert_eq!(t.transfer_secs(3, 3, 10.0, 1), 0.0);
+    }
+
+    #[test]
+    fn transfer_degenerate_inputs() {
+        let mut t = topo(5);
+        // Zero-size (and negative-size) transfers are free.
+        assert_eq!(t.transfer_secs(0, 1, 0.0, 1), 0.0);
+        assert_eq!(t.transfer_secs(0, 1, -3.0, 1), 0.0);
+        // Self-transfers are free even with broken links.
+        t.bw[2][2] = 0.0;
+        assert_eq!(t.transfer_secs(2, 2, 10.0, 1), 0.0);
+        // Zero, negative and NaN bandwidth are unusable links, not NaN
+        // leaking into JCT sums.
+        t.bw[0][1] = 0.0;
+        assert_eq!(t.transfer_secs(0, 1, 10.0, 1), f64::INFINITY);
+        t.bw[0][1] = -5.0;
+        assert_eq!(t.transfer_secs(0, 1, 10.0, 1), f64::INFINITY);
+        t.bw[0][1] = f64::NAN;
+        assert_eq!(t.transfer_secs(0, 1, 10.0, 1), f64::INFINITY);
+        // Zero flows behaves like one flow.
+        let a = t.transfer_secs(0, 2, 10.0, 0);
+        let b = t.transfer_secs(0, 2, 10.0, 1);
+        assert_eq!(a, b);
+        assert!(a.is_finite());
     }
 
     #[test]
@@ -193,6 +306,42 @@ mod tests {
         }
         // Different clusters are farther apart than cluster members.
         assert!(t.positions[0].dist(&t.positions[24]) > 20.0);
+        // The adjacency cache was rebuilt for the regrouped positions.
+        for i in 0..25 {
+            assert_eq!(t.neighbors(i), t.neighbors_scan(i));
+        }
+    }
+
+    #[test]
+    fn clustered_generation_with_ragged_last_cluster() {
+        // n not divisible by cluster_size: the last cluster is smaller
+        // but every node still gets a position inside its cluster disc.
+        for (n, cs) in [(13usize, 5usize), (7, 3), (11, 4), (5, 5), (6, 5)] {
+            let mut rng = Rng::new(9);
+            let t = Topology::generate_clustered(&mut rng, n, cs, 10.0, 25.0, &[100.0], 0.001);
+            assert_eq!(t.n(), n, "n={n} cs={cs}");
+            assert_eq!(t.bw.len(), n);
+            assert_eq!(t.latency.len(), n);
+            let n_clusters = n.div_ceil(cs);
+            // Each cluster's members stay within the spread diameter of
+            // each other, including the ragged final cluster.
+            for c in 0..n_clusters {
+                let lo = c * cs;
+                let hi = n.min((c + 1) * cs);
+                assert!(hi > lo, "empty cluster {c} for n={n} cs={cs}");
+                for a in lo..hi {
+                    for b in lo..hi {
+                        assert!(
+                            t.positions[a].dist(&t.positions[b]) <= 20.0 + 1e-9,
+                            "n={n} cs={cs}: nodes {a},{b} too far apart"
+                        );
+                    }
+                }
+            }
+            for i in 0..n {
+                assert_eq!(t.neighbors(i), t.neighbors_scan(i));
+            }
+        }
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 use crate::cluster::NodeId;
 use crate::dnn::Layer;
+use crate::net::Topology;
 
 use super::BUCKETS;
 
@@ -28,6 +29,31 @@ pub struct CandidateView {
     pub avail_mem: f64,
     pub avail_bw: f64,
     pub bw_to_owner: f64,
+}
+
+/// Order candidate nodes nearest-first by *current* distance to
+/// `origin` (ties break by ascending node id, so the order is total and
+/// deterministic).  Squared-distance keys are computed once per
+/// candidate — O(k) distance evaluations, no sqrt in the comparator.
+///
+/// Mobility support: the agent's action space is capped at
+/// [`MAX_NEIGHBORS`], and under a time-varying topology the neighbor
+/// list is recomputed — not cached at deployment time — so the cap must
+/// keep the *closest* live neighbors, whose links the attenuation model
+/// prices best, rather than whichever ids happen to sort first.
+pub fn nearest_first(topo: &Topology, origin: NodeId, cands: &mut [NodeId]) {
+    let o = topo.positions[origin];
+    let mut keyed: Vec<(f64, NodeId)> = cands
+        .iter()
+        .map(|&n| {
+            let p = topo.positions[n];
+            ((p.x - o.x) * (p.x - o.x) + (p.y - o.y) * (p.y - o.y), n)
+        })
+        .collect();
+    keyed.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    for (slot, (_, n)) in cands.iter_mut().zip(keyed) {
+        *slot = n;
+    }
 }
 
 /// Equal-width low/medium/high bucket of a [0, 1] fraction (§IV-B).
@@ -125,6 +151,31 @@ mod tests {
         let v = state_vector(l, [0.0; 3], &[]);
         // All candidate slots zero.
         assert!(v[6..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn nearest_first_orders_by_live_distance() {
+        use crate::net::Pos;
+        use crate::util::Rng;
+        let mut rng = Rng::new(4);
+        let mut topo = crate::net::Topology::generate(&mut rng, 6, 50.0, 30.0, &[100.0], 0.001);
+        // Deterministic line layout: node k at x = 10k.
+        for k in 0..6 {
+            topo.positions[k] = Pos { x: 10.0 * k as f64, y: 0.0 };
+        }
+        topo.rebuild_adjacency();
+        let mut cands = vec![5, 3, 1, 4, 2];
+        nearest_first(&topo, 0, &mut cands);
+        assert_eq!(cands, vec![1, 2, 3, 4, 5]);
+        // Movement re-ranks: node 5 walks next to the origin.
+        topo.positions[5] = Pos { x: 1.0, y: 0.0 };
+        topo.rebuild_adjacency();
+        nearest_first(&topo, 0, &mut cands);
+        assert_eq!(cands, vec![5, 1, 2, 3, 4]);
+        // Equidistant candidates tie-break by id.
+        topo.positions[5] = topo.positions[1];
+        nearest_first(&topo, 0, &mut cands);
+        assert_eq!(cands, vec![1, 5, 2, 3, 4]);
     }
 
     #[test]

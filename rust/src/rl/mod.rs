@@ -18,7 +18,7 @@ pub mod dqn;
 pub mod features;
 pub mod replay;
 
-pub use features::{bucket, layer_class, state_vector, CandidateView};
+pub use features::{bucket, layer_class, nearest_first, state_vector, CandidateView};
 
 use crate::dnn::Layer;
 use crate::util::Rng;

@@ -21,7 +21,10 @@
 
 use crate::cluster::{Deployment, Membership, NodeId, ResourceKind, Resources};
 use crate::dnn::ModelGraph;
-use crate::rl::{features::MAX_NEIGHBORS, table_key, layer_class, state_vector, CandidateView, Episode, EpisodeStep, Policy, RewardParams, StepPenalty};
+use crate::rl::{
+    features::MAX_NEIGHBORS, layer_class, nearest_first, state_vector, table_key, CandidateView,
+    Episode, EpisodeStep, Policy, RewardParams, StepPenalty,
+};
 use crate::shield::{ProposedAction, Shield};
 use crate::sim::state::{ResourceState, TaskHandle};
 use crate::util::Rng;
@@ -153,6 +156,11 @@ pub fn marl_candidates(dep: &Deployment, owner: NodeId) -> Vec<NodeId> {
 /// neighborhood is empty the set falls back to any alive cluster member
 /// (the event driver never empties a cluster), and a fully dead cluster
 /// degenerates to the owner itself so the set is never empty.
+///
+/// Neighbors come back in the id-ascending order the pre-mobility
+/// releases used, so every pre-existing dynamic scenario (churn,
+/// Poisson arrivals) replays its historical results exactly.  The
+/// mobility-migration path uses [`marl_candidates_proximity`] instead.
 pub fn marl_candidates_alive(
     dep: &Deployment,
     membership: &Membership,
@@ -164,6 +172,38 @@ pub fn marl_candidates_alive(
         cands.push(owner);
     }
     cands.extend_from_slice(neighbors);
+    if cands.is_empty() {
+        match membership.alive_members(dep.cluster_of(owner)).first() {
+            Some(&fallback) => cands.push(fallback),
+            None => cands.push(owner),
+        }
+    }
+    cands.truncate(MAX_NEIGHBORS + 1);
+    cands
+}
+
+/// Mobility-aware variant of [`marl_candidates_alive`]: the alive
+/// neighbor tail is ordered nearest-first by *current* distance
+/// ([`nearest_first`]) before the action-space cap, so under a
+/// time-varying topology the capped set keeps the closest live
+/// neighbors — whose links the attenuation model prices best — not the
+/// lowest ids.  Used by the mobility-migration path; arrival waves keep
+/// [`marl_candidates_alive`] so non-mobility scenarios are unchanged.
+pub fn marl_candidates_proximity(
+    dep: &Deployment,
+    membership: &Membership,
+    owner: NodeId,
+) -> Vec<NodeId> {
+    let neighbors = membership.alive_neighbors(owner);
+    let mut cands = Vec::with_capacity(neighbors.len() + 1);
+    let tail = if membership.is_alive(owner) {
+        cands.push(owner);
+        1
+    } else {
+        0
+    };
+    cands.extend_from_slice(neighbors);
+    nearest_first(&dep.topo, owner, &mut cands[tail..]);
     if cands.is_empty() {
         match membership.alive_members(dep.cluster_of(owner)).first() {
             Some(&fallback) => cands.push(fallback),
@@ -544,8 +584,9 @@ fn central_wave_impl(
     WaveOutcome { schedules, collisions, shield_corrections: 0 }
 }
 
-/// One stranded pipeline stage: a `(job, layer)` whose host node failed
-/// mid-training.
+/// One stranded pipeline stage: a `(job, layer)` that must be re-placed
+/// by its owning agent — because its host failed, or because mobility
+/// carried the host out of the owner's transmission range.
 #[derive(Debug, Clone, Copy)]
 pub struct Stranded {
     /// Caller-side job index (opaque to the handler; outcomes are
@@ -596,7 +637,7 @@ pub fn reschedule_stranded(
     stranded: &[Stranded],
     failed: NodeId,
     policy: &mut dyn Policy,
-    mut shield: Option<&mut dyn Shield>,
+    shield: Option<&mut dyn Shield>,
     params: &RewardParams,
     rng: &mut Rng,
 ) -> ReschedOutcome {
@@ -604,6 +645,56 @@ pub fn reschedule_stranded(
         !membership.is_alive(failed),
         "caller must mark the failed node dead before rescheduling"
     );
+    reschedule_impl(
+        dep, membership, state, graph, view_demand, stranded, policy, shield, params, rng, false,
+    )
+}
+
+/// Mobility-migration handler: re-place layers whose (alive) host
+/// drifted out of the owning agent's transmission range.
+///
+/// Same decision process and accounting as [`reschedule_stranded`] — the
+/// owners re-decide against the stale periodic view, candidates come
+/// from the *current* alive adjacency (proximity-ordered:
+/// [`marl_candidates_proximity`]), and the joint re-proposal passes
+/// through the shield — but no node is dead.  A `usize::MAX` target
+/// means the owner found no alive candidate at all (degenerate dead
+/// cluster); callers should keep the old placement then.  Callers
+/// should also skip owners with no in-range alternatives entirely
+/// (empty alive neighborhood): re-deciding for them can only stack
+/// every remote layer onto the owner itself.
+#[allow(clippy::too_many_arguments)]
+pub fn reschedule_migrated(
+    dep: &Deployment,
+    membership: &Membership,
+    state: &ResourceState,
+    graph: &ModelGraph,
+    view_demand: &[Resources],
+    stranded: &[Stranded],
+    policy: &mut dyn Policy,
+    shield: Option<&mut dyn Shield>,
+    params: &RewardParams,
+    rng: &mut Rng,
+) -> ReschedOutcome {
+    reschedule_impl(
+        dep, membership, state, graph, view_demand, stranded, policy, shield, params, rng, true,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn reschedule_impl(
+    dep: &Deployment,
+    membership: &Membership,
+    state: &ResourceState,
+    graph: &ModelGraph,
+    view_demand: &[Resources],
+    stranded: &[Stranded],
+    policy: &mut dyn Policy,
+    mut shield: Option<&mut dyn Shield>,
+    params: &RewardParams,
+    rng: &mut Rng,
+    proximity: bool,
+) -> ReschedOutcome {
     let view = View { demand: view_demand.to_vec() };
     let mut targets: Vec<NodeId> = Vec::with_capacity(stranded.len());
     let mut proposals: Vec<ProposedAction> = Vec::with_capacity(stranded.len());
@@ -616,7 +707,11 @@ pub fn reschedule_stranded(
         // `marl_candidates_alive`, so the set is never empty; a fully
         // dead cluster degenerates to the owner, which the caller's
         // cluster invariant rules out.
-        let cands = marl_candidates_alive(dep, membership, s.owner);
+        let cands = if proximity {
+            marl_candidates_proximity(dep, membership, s.owner)
+        } else {
+            marl_candidates_alive(dep, membership, s.owner)
+        };
         if cands.len() == 1 && !membership.is_alive(cands[0]) {
             // Degenerate fallback (whole cluster dead): no alive host.
             targets.push(usize::MAX);
@@ -868,6 +963,89 @@ mod tests {
         );
         assert!(outcome.sched_secs > 0.0, "reschedule rounds must account latency");
         assert_eq!(outcome.shield_secs, 0.0, "no shield attached");
+    }
+
+    #[test]
+    fn proximity_candidates_are_nearest_first_and_alive_keeps_id_order() {
+        let (dep, _state, _graph, _jobs, _rng) = setup(10);
+        let membership = Membership::full(&dep);
+        for owner in 0..dep.n() {
+            let prox = marl_candidates_proximity(&dep, &membership, owner);
+            assert_eq!(prox[0], owner, "alive owner leads its own candidate set");
+            // The neighbor tail is sorted by current distance (ties by id).
+            for w in prox[1..].windows(2) {
+                let da = dep.topo.positions[owner].dist(&dep.topo.positions[w[0]]);
+                let db = dep.topo.positions[owner].dist(&dep.topo.positions[w[1]]);
+                assert!(
+                    da < db || (da == db && w[0] < w[1]),
+                    "owner {owner}: candidates {w:?} out of proximity order"
+                );
+            }
+            // Same membership, two orders: the legacy set keeps the
+            // id-ascending tail (historical churn results untouched).
+            let alive = marl_candidates_alive(&dep, &membership, owner);
+            assert!(alive[1..].windows(2).all(|w| w[0] < w[1]));
+            let mut sorted = alive.clone();
+            sorted.sort_unstable();
+            let mut prox_sorted = prox.clone();
+            prox_sorted.sort_unstable();
+            assert_eq!(sorted, prox_sorted, "both variants cover the same set");
+        }
+    }
+
+    #[test]
+    fn migration_reschedules_out_of_range_layers_onto_reachable_hosts() {
+        let (mut dep, mut state, graph, jobs, mut rng) = setup(5);
+        let mut policy = TabularQ::new(0.2, 0.1);
+        let params = RewardParams::default();
+        let out = marl_wave(
+            &dep, &mut state, &graph, &jobs, &mut policy, None, &params, 3, &mut rng,
+        );
+        let schedules = out.schedules;
+        // Walk the most-loaded non-owner host out of everyone's range
+        // (mobility, not failure: the node stays alive).
+        let owners: Vec<NodeId> = jobs.iter().map(|j| j.owner).collect();
+        let mut counts = vec![0usize; dep.n()];
+        for s in &schedules {
+            for &n in &s.placement {
+                if !owners.contains(&n) {
+                    counts[n] += 1;
+                }
+            }
+        }
+        let roamer = (0..dep.n()).max_by_key(|&n| counts[n]).unwrap();
+        if counts[roamer] == 0 {
+            return; // every layer sits on an owner; nothing to migrate
+        }
+        dep.topo.positions[roamer] = crate::net::Pos { x: 1e6, y: 1e6 };
+        dep.topo.rebuild_adjacency();
+        dep.refresh_adjacency();
+        let membership = Membership::full(&dep);
+        assert!(membership.is_alive(roamer), "mobility keeps the node alive");
+
+        let mut stranded = Vec::new();
+        for (ji, s) in schedules.iter().enumerate() {
+            for (layer_id, &n) in s.placement.iter().enumerate() {
+                if n == roamer && s.job.owner != roamer {
+                    stranded.push(Stranded { job: ji, owner: s.job.owner, layer_id });
+                }
+            }
+        }
+        assert!(!stranded.is_empty());
+        let view: Vec<Resources> = (0..state.n()).map(|n| *state.demand(n)).collect();
+        let outcome = reschedule_migrated(
+            &dep, &membership, &state, &graph, &view, &stranded, &mut policy, None, &params,
+            &mut rng,
+        );
+        assert_eq!(outcome.targets.len(), stranded.len());
+        for (s, &t) in stranded.iter().zip(&outcome.targets) {
+            assert_ne!(t, roamer, "migrated a layer back onto the unreachable host");
+            if t != usize::MAX {
+                let cands = marl_candidates_proximity(&dep, &membership, s.owner);
+                assert!(cands.contains(&t), "target {t} outside owner {}'s range", s.owner);
+            }
+        }
+        assert!(outcome.sched_secs > 0.0, "migration rounds must account latency");
     }
 
     #[test]

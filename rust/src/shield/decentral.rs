@@ -77,6 +77,17 @@ impl DecentralShield {
     pub fn node_joined(&mut self, dep: &Deployment, node: NodeId) -> bool {
         self.subs.add_member(node, &dep.topo)
     }
+
+    /// Mobility handler: `node`'s position changed.  Re-evaluates the
+    /// node's shield region and re-derives only the affected boundary
+    /// pairs ([`SubClusters::handoff_member`]) — no k-means re-run, no
+    /// full rescan.  Returns true when the node was handed off between
+    /// sub-shields (a region *handoff*); same-region moves still refresh
+    /// the region's boundary pairs.  Non-members (other clusters' nodes)
+    /// are a no-op.
+    pub fn node_moved(&mut self, dep: &Deployment, node: NodeId) -> bool {
+        self.subs.handoff_member(node, &dep.topo)
+    }
 }
 
 impl Shield for DecentralShield {
@@ -342,12 +353,12 @@ mod tests {
         let center = positions.len();
         positions.push(Pos { x: 15.0, y: 9.0 }); // within 60% of range 40 of all groups
         let n = positions.len();
-        let topo = Topology {
+        let topo = Topology::from_parts(
             positions,
-            range: 40.0,
-            bw: vec![vec![100.0; n]; n],
-            latency: vec![vec![0.001; n]; n],
-        };
+            40.0,
+            vec![vec![100.0; n]; n],
+            vec![vec![0.001; n]; n],
+        );
         let nodes: Vec<EdgeNode> = (0..n)
             .map(|id| EdgeNode { id, caps: Resources::new(1.0, 2048.0, 100.0) })
             .collect();
@@ -463,6 +474,73 @@ mod tests {
         // Rejoin restores coverage.
         assert!(d.node_joined(&dep, dead));
         assert!(d.subs.is_member(dead));
+    }
+
+    #[test]
+    fn region_handoff_on_movement_matches_rebuild_and_keeps_checking() {
+        // A node walking into another sub-cluster's area must be handed
+        // off between sub-shields, the region tables must match a
+        // from-scratch re-partition, and the shield must keep producing
+        // valid corrections afterwards.
+        use crate::cluster::SubClusters;
+        let mut dep = dep10();
+        let members = dep.clusters[0].members.clone();
+        let mut d = DecentralShield::new(&dep, &members, 3);
+        let probe = members[0];
+        let home = d.subs.sub_of(probe);
+        // Park the probe on top of the out-of-region member farthest
+        // from its home region's centroid — the clearest cross-region
+        // move this geometry offers.
+        let home_members = d.subs.members_of(home);
+        let (hx, hy) = home_members.iter().filter(|&&m| m != probe).fold((0.0, 0.0), |(x, y), &m| {
+            (x + dep.topo.positions[m].x, y + dep.topo.positions[m].y)
+        });
+        let hn = (home_members.len() - 1).max(1) as f64;
+        let hcent = crate::net::Pos { x: hx / hn, y: hy / hn };
+        let anchor = members
+            .iter()
+            .copied()
+            .filter(|&m| d.subs.sub_of(m) != home)
+            .max_by(|&a, &b| {
+                hcent
+                    .dist(&dep.topo.positions[a])
+                    .total_cmp(&hcent.dist(&dep.topo.positions[b]))
+            })
+            .expect("another region exists");
+        dep.topo.positions[probe] = dep.topo.positions[anchor];
+        dep.topo.rebuild_adjacency();
+        dep.refresh_adjacency();
+        assert!(d.node_moved(&dep, probe), "crossing regions must hand off");
+        let new_sub = d.subs.sub_of(probe);
+        assert_ne!(new_sub, home, "handoff must leave the home region");
+        let reference = SubClusters::from_assignment(
+            d.subs.members.clone(),
+            d.subs.assignment.clone(),
+            d.subs.k,
+            &dep.topo,
+        );
+        assert_eq!(d.subs, reference, "incremental handoff != rebuild");
+        // The shield still detects a collision on the probe in its new
+        // region (agents from that region, so the overload is visible to
+        // its local sub-shield or its delegates).  The new region kept
+        // its prior members — the handoff rule never migrates into an
+        // empty region — so same-region agents exist.
+        let state = ResourceState::new(&dep);
+        let cap = state.caps(probe).cpu;
+        let agents: Vec<NodeId> =
+            d.subs.members_of(new_sub).into_iter().filter(|&m| m != probe).collect();
+        assert!(!agents.is_empty(), "handoff target region kept its members");
+        let a0 = agents[0];
+        let a1 = agents.get(1).copied().unwrap_or(a0);
+        let props = vec![
+            proposal(0, a0, probe, cap * 0.55, 40.0, 1.0),
+            proposal(1, a1, probe, cap * 0.55, 40.0, 1.0),
+        ];
+        let out = d.check(&props, &state, &dep, 0.9);
+        assert_eq!(out.collisions, 1);
+        for &(_, tgt) in &out.corrections {
+            assert!(d.subs.is_member(tgt), "correction onto a non-member");
+        }
     }
 
     #[test]

@@ -245,8 +245,9 @@ impl<'a> Executor<'a> {
                 EventKind::JobArrival { .. }
                 | EventKind::ViewRefresh
                 | EventKind::NodeFail { .. }
-                | EventKind::NodeJoin { .. } => {
-                    unreachable!("the static executor does not schedule churn events")
+                | EventKind::NodeJoin { .. }
+                | EventKind::MobilityTick => {
+                    unreachable!("the static executor does not schedule churn/mobility events")
                 }
             }
         }

@@ -47,6 +47,10 @@ pub enum EventKind {
     NodeFail { node: NodeId },
     /// Edge node `node` (re)joins its cluster.
     NodeJoin { node: NodeId },
+    /// Periodic mobility tick: node positions advance and every
+    /// position-derived structure refreshes (adjacency, link matrices,
+    /// shield regions, candidate sets).
+    MobilityTick,
 }
 
 /// A scheduled event: fire time plus insertion sequence (the tie-break).
@@ -127,6 +131,7 @@ mod tests {
         let mut q = EventQueue::new();
         q.push(2.0, EventKind::NodeFail { node: 7 });
         q.push(2.0, EventKind::NodeJoin { node: 7 });
+        q.push(2.0, EventKind::MobilityTick);
         q.push(2.0, EventKind::ViewRefresh);
         let kinds: Vec<EventKind> = std::iter::from_fn(|| q.pop()).map(|e| e.kind).collect();
         assert_eq!(
@@ -134,6 +139,7 @@ mod tests {
             vec![
                 EventKind::NodeFail { node: 7 },
                 EventKind::NodeJoin { node: 7 },
+                EventKind::MobilityTick,
                 EventKind::ViewRefresh,
             ]
         );
