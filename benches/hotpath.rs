@@ -3,19 +3,30 @@
 //! * indexed vs scan-based shield check (SROLE-C and SROLE-D) on a
 //!   100-node cluster round — the de-quadratization target: the indexed
 //!   path must beat the seed's `Vec::contains` baseline by ≥2×;
+//! * decision loop with/without scratch reuse: the zero-allocation
+//!   featurizer vs the Vec-allocating reference, and the SoA replay
+//!   ring's batch fill against a freshly allocated batch;
+//! * spatial grid vs O(n²) scan: adjacency rebuilds and radius queries
+//!   at 100 / 300 / 1000 nodes (the grid must be strictly faster at
+//!   300 and 1000 — asserted in full runs; smoke mode only prints);
 //! * parallel scenario harness: a 4-scenario sweep, serial vs parallel,
 //!   with a bit-identical-reports determinism check;
 //! * MARL wave decision latency and DES execution throughput;
 //! * PJRT `qnet_fwd` action-scoring latency (the DQN request path),
 //!   skipped when artifacts are absent.
+//!
+//! Smoke mode: `SROLE_BENCH_FAST=1` (CI) shrinks warmup and samples.
 
 use srole::cluster::{Deployment, Membership, Resources, SubClusters, CONTAINER_PROFILE};
 use srole::config::ExperimentConfig;
 use srole::coordinator::{pretrain, Method};
 use srole::dnn::ModelKind;
 use srole::harness::{run_parallel, Sweep};
-use srole::net::{DynamicTopology, MobilityModel};
-use srole::rl::{RewardParams, TabularQ};
+use srole::net::{DynamicTopology, MobilityModel, Topology};
+use srole::rl::features::{state_vector_vec, CandidateView};
+use srole::rl::replay::Replay;
+use srole::rl::{state_vector_into, RewardParams, TabularQ, STATE_DIM};
+use srole::runtime::qnet::TdBatch;
 use srole::sched::marl_wave;
 use srole::shield::reference::{CentralShieldScan, DecentralShieldScan};
 use srole::shield::{CentralShield, DecentralShield, ProposedAction, Shield};
@@ -193,6 +204,162 @@ fn main() {
             &topo,
         );
         assert_eq!(subs, reference, "incremental handoff diverged from rebuild");
+    }
+
+    // --- decision loop: scratch featurizer vs allocating reference ------
+    {
+        let graph = ModelKind::Vgg16.build();
+        let layer = &graph.layers[1];
+        let cviews: Vec<CandidateView> = (0..10)
+            .map(|i| CandidateView {
+                node: i,
+                avail_cpu: 0.1 + 0.08 * i as f64,
+                avail_mem: 0.5,
+                avail_bw: 0.5,
+                bw_to_owner: 100.0 + 10.0 * i as f64,
+            })
+            .collect();
+        let util = [0.3, 0.6, 0.1];
+        let mut scratch = [0.0f32; STATE_DIM];
+        // Equivalence before timing.
+        state_vector_into(layer, util, &cviews, &mut scratch);
+        assert_eq!(&scratch[..], &state_vector_vec(layer, util, &cviews)[..]);
+        let t_scratch = bench
+            .measure("decision_featurize_scratch_10k", || {
+                let mut acc = 0.0f32;
+                for _ in 0..10_000 {
+                    state_vector_into(layer, util, &cviews, &mut scratch);
+                    acc += scratch[0] + scratch[STATE_DIM - 1];
+                }
+                acc
+            })
+            .median_secs();
+        let t_alloc = bench
+            .measure("decision_featurize_alloc_10k", || {
+                let mut acc = 0.0f32;
+                for _ in 0..10_000 {
+                    let v = state_vector_vec(layer, util, &cviews);
+                    acc += v[0] + v[STATE_DIM - 1];
+                }
+                acc
+            })
+            .median_secs();
+        println!(
+            "decision featurize speedup (alloc/scratch): {:.1}x",
+            t_alloc / t_scratch.max(1e-12)
+        );
+
+        // SoA replay: push throughput, then TD-batch fill with a reused
+        // scratch vs a freshly allocated batch per train step.
+        let mut replay = Replay::new(4096, STATE_DIM);
+        let s = [0.25f32; STATE_DIM];
+        bench.measure("replay_soa_push_4096", || {
+            for i in 0..4096 {
+                replay.push(&s, i % 11, 1.0, &s, i % 7 == 0);
+            }
+            replay.len()
+        });
+        let mut rng_r = Rng::new(5);
+        let b = 64usize;
+        let mut batch = TdBatch::with_capacity(b, STATE_DIM);
+        let fill = |batch: &mut TdBatch, rng: &mut Rng| {
+            for _ in 0..b {
+                let i = replay.sample_index(rng);
+                batch.states.extend_from_slice(replay.state(i));
+                batch.actions.push(replay.action(i) as i32);
+                batch.rewards.push(replay.reward(i));
+                batch.next_states.extend_from_slice(replay.next_state(i));
+                batch.dones.push(if replay.done(i) { 1.0 } else { 0.0 });
+            }
+        };
+        let t_scratch_fill = bench
+            .measure("replay_fill_batch_scratch_64", || {
+                batch.clear();
+                fill(&mut batch, &mut rng_r);
+                batch.states.len()
+            })
+            .median_secs();
+        let t_alloc_fill = bench
+            .measure("replay_fill_batch_alloc_64", || {
+                let mut fresh = TdBatch {
+                    states: Vec::with_capacity(b * STATE_DIM),
+                    actions: Vec::with_capacity(b),
+                    rewards: Vec::with_capacity(b),
+                    next_states: Vec::with_capacity(b * STATE_DIM),
+                    dones: Vec::with_capacity(b),
+                };
+                fill(&mut fresh, &mut rng_r);
+                fresh.states.len()
+            })
+            .median_secs();
+        println!(
+            "TD-batch fill speedup (alloc/scratch): {:.1}x",
+            t_alloc_fill / t_scratch_fill.max(1e-12)
+        );
+    }
+
+    // --- spatial grid vs O(n²) scan: rebuild + radius queries -----------
+    // The tentpole's tick-path cells: grid-backed adjacency rebuilds and
+    // blast-radius queries against the scan references, at the ROADMAP
+    // scale points.  The grid must be strictly faster at n = 300 and
+    // n = 1000 (the acceptance criterion — asserted on the medians).
+    for &n in &[100usize, 300, 1000] {
+        let mut rng_g = Rng::new(40 + n as u64);
+        let mut topo =
+            Topology::generate_clustered(&mut rng_g, n, 10, 10.0, 30.0, &[100.0], 0.001);
+        // Equivalence before timing.
+        let scan_adj = topo.adjacency_scan();
+        for i in 0..n {
+            assert_eq!(topo.neighbors_ref(i), &scan_adj[i][..], "grid adjacency diverged");
+        }
+        let t_grid = bench
+            .measure(&format!("adjacency_rebuild_grid_{n}n"), || topo.rebuild_adjacency())
+            .median_secs();
+        let t_scan = bench
+            .measure(&format!("adjacency_rebuild_scan_{n}n"), || topo.adjacency_scan())
+            .median_secs();
+        println!(
+            "adjacency rebuild speedup (scan/grid) at {n} nodes: {:.1}x",
+            t_scan / t_grid.max(1e-12)
+        );
+        let mut out = Vec::new();
+        let t_q = bench
+            .measure(&format!("radius_query_grid_{n}n"), || {
+                let mut total = 0usize;
+                for c in 0..n {
+                    topo.nodes_within_into(c, 25.0, &mut out);
+                    total += out.len();
+                }
+                total
+            })
+            .median_secs();
+        let t_qs = bench
+            .measure(&format!("radius_query_scan_{n}n"), || {
+                let mut total = 0usize;
+                for c in 0..n {
+                    total += topo.nodes_within_scan(c, 25.0).len();
+                }
+                total
+            })
+            .median_secs();
+        println!(
+            "radius query speedup (scan/grid) at {n} nodes: {:.1}x",
+            t_qs / t_q.max(1e-12)
+        );
+        // The acceptance criterion — strictly faster at 300 and 1000
+        // nodes — is asserted only in full runs: smoke mode (CI shared
+        // runners, SROLE_BENCH_FAST=1) takes too few samples for a
+        // wall-clock comparison to be a reliable merge gate there.
+        if n >= 300 && std::env::var("SROLE_BENCH_FAST").is_err() {
+            assert!(
+                t_grid < t_scan,
+                "grid rebuild must beat the O(n²) scan at {n} nodes: {t_grid} vs {t_scan}"
+            );
+            assert!(
+                t_q < t_qs,
+                "grid radius query must beat the O(n) scan at {n} nodes: {t_q} vs {t_qs}"
+            );
+        }
     }
 
     // --- parallel harness: 4-scenario sweep, serial vs parallel ---------

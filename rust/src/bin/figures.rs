@@ -9,9 +9,11 @@
 //!        `[--models vgg16,googlenet,rnn] [--edges 5,10,15,20,25]`
 //!        `[--pretrain N]`
 //!
-//! `figures scale` sweeps 10→100-node clusters concurrently (the
-//! ROADMAP scale target); `figures churn` sweeps node-failure rates on a
-//! 100-node cluster through the dynamic event-driven driver; `figures
+//! `figures scale` sweeps 10→1000-node clusters concurrently (the
+//! ROADMAP scale ceiling; `--edges` overrides the sweep points, so CI
+//! smokes just the 1000-node cell); `figures churn` sweeps node-failure
+//! rates on a 100-node cluster through the dynamic event-driven driver;
+//! `figures
 //! mobility` sweeps a random-waypoint speed × pause grid (plus a
 //! stationary-trace baseline and a square trace patrol) on a 50-node
 //! cluster, reporting shield-region handoffs and layer migrations;
@@ -35,7 +37,7 @@ fn main() {
         .opt("iterations", Some("50"), "training iterations per job")
         .opt("threads", Some("0"), "worker threads (0 = all cores)")
         .opt("models", Some("vgg16,googlenet,rnn"), "comma-separated models")
-        .opt("edges", Some("5,10,15,20,25"), "comma-separated cluster sizes for fig4")
+        .opt("edges", Some("5,10,15,20,25"), "comma-separated cluster sizes (fig4; overrides the scale sweep)")
         .opt("pretrain", Some("300"), "offline pre-training episodes per scenario");
     let args = match cli.parse(&argv) {
         Ok(a) => a,
@@ -49,7 +51,9 @@ fn main() {
         }
     };
     let which = args.positional.first().cloned().unwrap_or_else(|| "all".to_string());
+    let edges_explicit = argv.iter().any(|a| a == "--edges" || a.starts_with("--edges="));
     let ctx = Ctx {
+        edges_explicit,
         reps: args.usize("reps").unwrap_or(3),
         seed: args.u64("seed").unwrap_or(1),
         iterations: args.usize("iterations").unwrap_or(50),
@@ -137,6 +141,9 @@ struct Ctx {
     pretrain: usize,
     models: Vec<ModelKind>,
     edges: Vec<usize>,
+    /// Whether `--edges` was passed on the command line (the scale sweep
+    /// keeps its own 10→1000 default otherwise).
+    edges_explicit: bool,
 }
 
 impl Ctx {
@@ -352,10 +359,15 @@ fn fig10_tasks_real(ctx: &Ctx) {
     t.print();
 }
 
-/// `figures scale`: the ROADMAP scale sweep — 10→100-node clusters, all
-/// methods, one concurrent harness run.
+/// `figures scale`: the ROADMAP scale sweep — 10→1000-node clusters, all
+/// methods, one concurrent harness run.  `--edges` overrides the sweep
+/// points (CI smokes only the 1000-node cell).
 fn scale_sweep(ctx: &Ctx) {
-    let edges = [10usize, 25, 50, 100];
+    let edges: Vec<usize> = if ctx.edges_explicit {
+        ctx.edges.clone()
+    } else {
+        vec![10, 25, 50, 100, 300, 1000]
+    };
     let model = ctx.models.first().copied().unwrap_or(ModelKind::Vgg16);
     let sweep = Sweep::new(ctx.base(model)).methods(&Method::ALL).edges(&edges);
     let mut scenarios = sweep.scenarios();

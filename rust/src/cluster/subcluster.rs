@@ -234,6 +234,55 @@ impl SubClusters {
             self.refresh_pairs_of(old, topo);
             return false;
         }
+        self.migrate_member(node, old, new);
+        self.refresh_pairs_of(old, topo);
+        self.refresh_pairs_of(new, topo);
+        true
+    }
+
+    /// Batched mobility handler: re-evaluate every node of `nodes` (in
+    /// order, as the per-node path would) but defer the boundary-pair
+    /// refreshes, issuing `refresh_pairs_of` at most once per
+    /// *affected* sub-cluster at the end of the batch.  Handoff
+    /// decisions only read membership and positions — never the
+    /// boundary tables — so the final region assignment, the boundary
+    /// pairs and the returned handoff count are identical to calling
+    /// [`SubClusters::handoff_member`] once per node; only the ≤ k
+    /// refreshes are shared.  Pinned by randomized equivalence tests.
+    ///
+    /// Returns the number of nodes handed off between sub-clusters.
+    pub fn handoff_members(&mut self, nodes: &[NodeId], topo: &Topology) -> usize {
+        let mut affected: Vec<usize> = Vec::new();
+        let mut handoffs = 0usize;
+        for &node in nodes {
+            if !self.is_member(node) {
+                continue;
+            }
+            let old = self.sub_index[node];
+            let new = self.nearest_sub_excluding(node, topo, node);
+            // Same-region moves still dirty the region's pairs (the
+            // node's distances to other regions changed).
+            if !affected.contains(&old) {
+                affected.push(old);
+            }
+            if new != old {
+                self.migrate_member(node, old, new);
+                if !affected.contains(&new) {
+                    affected.push(new);
+                }
+                handoffs += 1;
+            }
+        }
+        affected.sort_unstable();
+        for &sub in &affected {
+            self.refresh_pairs_of(sub, topo);
+        }
+        handoffs
+    }
+
+    /// Move `node` from sub-cluster `old` to `new` in every membership
+    /// table, leaving the boundary-pair tables to the caller's refresh.
+    fn migrate_member(&mut self, node: NodeId, old: usize, new: usize) {
         let idx = self.members.iter().position(|&m| m == node).expect("member index");
         self.assignment[idx] = new;
         let pos = self.per_sub[old].iter().position(|&m| m == node).expect("per-sub slot");
@@ -249,9 +298,6 @@ impl SubClusters {
         self.per_sub[new].insert(insert_at, node);
         self.sub_sets[new].insert(node);
         self.sub_index[node] = new;
-        self.refresh_pairs_of(old, topo);
-        self.refresh_pairs_of(new, topo);
-        true
     }
 
     /// Recompute the boundary pairs involving `sub` from the current
@@ -672,6 +718,76 @@ mod tests {
             }
             assert!(handoffs > 0, "case {case}: 120 teleports never crossed a region");
         }
+    }
+
+    #[test]
+    fn prop_batched_handoff_matches_per_node_path() {
+        // The batched per-tick refresh (ROADMAP follow-up): moving a
+        // whole batch through `handoff_members` must produce the same
+        // structure, the same handoff count and the same reference-
+        // rebuild pin as calling `handoff_member` once per node in the
+        // same order.
+        let mut rng = Rng::new(0xBA7C);
+        let mut total_handoffs = 0usize;
+        for case in 0..8u64 {
+            let n = 12 + rng.below(16);
+            let mut t = {
+                let mut trng = Rng::new(900 + case);
+                Topology::generate(&mut trng, n, 60.0, 30.0, &[100.0], 0.001)
+            };
+            let members: Vec<NodeId> = (0..n).collect();
+            let k = 2 + rng.below(3);
+            let mut batched = SubClusters::build(&members, &t, k);
+            let mut sequential = batched.clone();
+            for tick in 0..25 {
+                // One tick's worth of motion: several nodes teleport
+                // (including, sometimes, a non-member id when the
+                // partition covers a subset — here all are members).
+                let mut moved: Vec<NodeId> = Vec::new();
+                for _ in 0..1 + rng.below(5) {
+                    let node = rng.below(n);
+                    if !moved.contains(&node) {
+                        moved.push(node);
+                    }
+                    t.positions[node] = crate::net::Pos {
+                        x: rng.range_f64(-10.0, 70.0),
+                        y: rng.range_f64(-10.0, 70.0),
+                    };
+                }
+                moved.sort_unstable();
+                t.rebuild_adjacency();
+                let batch_count = batched.handoff_members(&moved, &t);
+                let mut seq_count = 0usize;
+                for &node in &moved {
+                    if sequential.handoff_member(node, &t) {
+                        seq_count += 1;
+                    }
+                }
+                assert_eq!(batch_count, seq_count, "case {case} tick {tick}");
+                assert_eq!(batched, sequential, "case {case} tick {tick}");
+                let reference = SubClusters::from_assignment(
+                    batched.members.clone(),
+                    batched.assignment.clone(),
+                    batched.k,
+                    &t,
+                );
+                assert_eq!(batched, reference, "case {case} tick {tick} vs rebuild");
+                total_handoffs += batch_count;
+            }
+        }
+        assert!(total_handoffs > 0, "no batch ever crossed a region");
+    }
+
+    #[test]
+    fn batched_handoff_skips_non_members_and_empty_batches() {
+        let t = topo(20);
+        let members: Vec<NodeId> = (0..10).collect();
+        let mut sc = SubClusters::build(&members, &t, 2);
+        let before = sc.clone();
+        assert_eq!(sc.handoff_members(&[], &t), 0);
+        assert_eq!(sc, before, "empty batch must be a no-op");
+        assert_eq!(sc.handoff_members(&[15, 17], &t), 0);
+        assert_eq!(sc, before, "non-member batch must be a no-op");
     }
 
     #[test]

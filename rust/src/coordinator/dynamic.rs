@@ -167,6 +167,9 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     let mut policy = TabularQ::new(cfg.lr, cfg.epsilon);
     pretrain(&mut policy, cfg, &mut rng.fork(0xbeef));
     let policy: &mut dyn Policy = &mut policy;
+    // Baseline after pretraining: the run's metric must count only
+    // forward errors the measured run itself experienced.
+    let fwd_errors_baseline = policy.fwd_errors();
 
     let mut membership = Membership::full(&dep);
     let mut shields: Vec<ClusterShield> = dep
@@ -234,6 +237,11 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     // Stale state view for the failure handler (paper §III: agents and
     // shields act on periodic reports, not live state).
     let mut view_demand: Vec<Resources> = (0..state.n()).map(|n| *state.demand(n)).collect();
+
+    // Event-loop scratch buffers (reused across events; the per-event
+    // hot paths stay allocation-free once warm).
+    let mut blast_scratch: Vec<NodeId> = Vec::new();
+    let mut moved_by_cluster: Vec<Vec<NodeId>> = vec![Vec::new(); n_clusters];
 
     let mut was_overloaded: Vec<bool> =
         (0..dep.n()).map(|n| state.actual_overloaded(n, cfg.reward.alpha)).collect();
@@ -376,18 +384,16 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 // Correlated churn: a geographic blast radius takes down
                 // every alive node within `r` meters of the seed —
                 // measured at event time, so under mobility the blast
-                // hits whoever is *currently* nearby.
+                // hits whoever is *currently* nearby.  The victim query
+                // runs on the topology's spatial grid (O(k), ascending —
+                // the same order the old O(n) scan produced, so replays
+                // are unchanged); `nodes_within_scan` stays as the
+                // reference pinned by the `net` equivalence tests.
                 let mut victims = vec![node];
                 if cfg.blast_radius_m > 0.0 {
-                    let center = dep.topo.positions[node];
-                    for v in 0..dep.n() {
-                        if v != node
-                            && membership.is_alive(v)
-                            && dep.topo.positions[v].dist(&center) <= cfg.blast_radius_m
-                        {
-                            victims.push(v);
-                        }
-                    }
+                    dep.topo.nodes_within_into(node, cfg.blast_radius_m, &mut blast_scratch);
+                    victims
+                        .extend(blast_scratch.iter().copied().filter(|&v| membership.is_alive(v)));
                 }
                 for (vi, &victim) in victims.iter().enumerate() {
                     let cluster = dep.cluster_of(victim);
@@ -513,23 +519,34 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 metrics.mobility_moves += moved.len();
                 // Every position-derived structure refreshes: the
                 // cluster-restricted adjacency, the alive overlay the
-                // candidate sets read, and (per moved node) the SROLE-D
-                // region partition — incremental handoff, pinned to the
-                // from-scratch re-partition by equivalence tests.
-                // Adjacency/membership use full rebuilds deliberately:
-                // at tick granularity and n ≤ ~100 that is ~10⁴ distance
-                // checks, dwarfed by one shield round — revisit only if
-                // deployments grow well past the ROADMAP scale target.
+                // candidate sets read, and the SROLE-D region partition
+                // (batched incremental handoff, pinned to the
+                // from-scratch re-partition by equivalence tests).
+                // Adjacency rebuilds run on the spatial grid (O(n·k));
+                // the membership overlay rebuild stays a full pass —
+                // cheap next to one shield round at tick granularity.
                 dep.refresh_adjacency();
                 let alive = membership.alive_set().clone();
                 membership = Membership::rebuild(&dep, &alive);
+                // Batched per-tick region refreshes (the ROADMAP
+                // follow-up): group the tick's moved nodes per cluster
+                // and hand each cluster's batch to its shield at once —
+                // every affected sub-cluster's boundary pairs are
+                // re-derived at most once per tick instead of once per
+                // moved node.  Handoff decisions and counts are pinned
+                // to the per-node path by equivalence tests
+                // (`cluster::subcluster`, `shield::decentral`).
                 for &node in &moved {
-                    let cluster = dep.cluster_of(node);
-                    if let ClusterShield::Decentral(s) = &mut shields[cluster] {
-                        if s.node_moved(&dep, node) {
-                            metrics.region_handoffs += 1;
-                        }
+                    moved_by_cluster[dep.cluster_of(node)].push(node);
+                }
+                for (cluster, nodes) in moved_by_cluster.iter_mut().enumerate() {
+                    if nodes.is_empty() {
+                        continue;
                     }
+                    if let ClusterShield::Decentral(s) = &mut shields[cluster] {
+                        metrics.region_handoffs += s.nodes_moved(&dep, nodes);
+                    }
+                    nodes.clear();
                 }
                 // Mobility-aware scheduling: layers whose (alive) host
                 // drifted out of the owning agent's transmission range
@@ -611,6 +628,7 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
             }
         }
     }
+    metrics.qnet_fwd_errors = policy.fwd_errors().saturating_sub(fwd_errors_baseline);
     metrics
 }
 

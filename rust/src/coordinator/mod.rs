@@ -119,6 +119,9 @@ impl Experiment {
         // counts down as |κ| grows.
         let mut policy = TabularQ::new(cfg.lr, cfg.epsilon);
         pretrain(&mut policy, cfg, &mut rng.fork(0xbeef));
+        // Baseline after pretraining: the run's metric must count only
+        // forward errors the measured run itself experienced.
+        let fwd_errors_baseline = policy.fwd_errors();
 
         let mut state = ResourceState::new(&dep);
         // The PageRank background load is already running when the DL
@@ -161,6 +164,7 @@ impl Experiment {
                 metrics.jct.push(j.train_secs);
             }
         }
+        metrics.qnet_fwd_errors = policy.fwd_errors().saturating_sub(fwd_errors_baseline);
         metrics.runtime_overloads = report.runtime_overloads;
         metrics.tasks_per_device = report.tasks_per_device;
         metrics.util_cpu = report.util_cpu;

@@ -42,6 +42,11 @@ pub struct RunMetrics {
     /// Layers migrated because mobility carried their host out of the
     /// owning agent's transmission range.
     pub migrated_layers: usize,
+    /// Q-net forward errors absorbed by the DQN policy's
+    /// greedy-by-utilization fallback (0 for tabular policies).  A
+    /// non-zero count flags a degraded decision path that previously
+    /// hid behind silent all-zero Q values.
+    pub qnet_fwd_errors: usize,
     /// Per-(node, sample) task counts.
     pub tasks_per_device: Vec<f64>,
     /// Per-(node, sample) utilization per resource.
@@ -131,6 +136,7 @@ impl RunMetrics {
             ("mobility_moves", Json::Num(self.mobility_moves as f64)),
             ("region_handoffs", Json::Num(self.region_handoffs as f64)),
             ("migrated_layers", Json::Num(self.migrated_layers as f64)),
+            ("qnet_fwd_errors", Json::Num(self.qnet_fwd_errors as f64)),
             ("tasks_per_device", arr(&self.tasks_per_device)),
             ("util_cpu", arr(&self.util_cpu)),
             ("util_mem", arr(&self.util_mem)),
@@ -155,6 +161,7 @@ impl RunMetrics {
         self.mobility_moves += other.mobility_moves;
         self.region_handoffs += other.region_handoffs;
         self.migrated_layers += other.migrated_layers;
+        self.qnet_fwd_errors += other.qnet_fwd_errors;
         self.tasks_per_device.extend_from_slice(&other.tasks_per_device);
         self.util_cpu.extend_from_slice(&other.util_cpu);
         self.util_mem.extend_from_slice(&other.util_mem);
@@ -183,6 +190,7 @@ mod tests {
             mobility_moves: 4,
             region_handoffs: 2,
             migrated_layers: 1,
+            qnet_fwd_errors: 3,
             tasks_per_device: vec![2.0, 3.0, 5.0],
             util_cpu: vec![0.5, 0.6],
             util_mem: vec![0.4, 0.5],
@@ -212,6 +220,7 @@ mod tests {
         assert_eq!(a.correlated_failures, 2);
         assert_eq!(a.migrated_layers, 2);
         assert_eq!(a.mobility_moves, 8);
+        assert_eq!(a.qnet_fwd_errors, 6);
         assert_eq!(a.makespan, 1234.0);
     }
 
@@ -221,6 +230,7 @@ mod tests {
         let j = m.to_json();
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("collisions").unwrap().as_usize(), Some(4));
+        assert_eq!(parsed.get("qnet_fwd_errors").unwrap().as_usize(), Some(3));
         assert_eq!(parsed.get("jct").unwrap().as_arr().unwrap().len(), 3);
     }
 

@@ -1,0 +1,322 @@
+//! Uniform spatial-hash grid over node positions — the sub-quadratic
+//! backend for every "who is near this point" query on the per-tick hot
+//! path.
+//!
+//! [`Topology::rebuild_adjacency`](super::Topology::rebuild_adjacency)
+//! used to be an O(n²) all-pairs distance scan per tick; binning the
+//! positions into range-sized square cells makes each node's neighbor
+//! query an O(k) walk over the 3×3 cells around it, so a full rebuild is
+//! O(n·k).  The same structure answers the blast-radius victim queries
+//! of `coordinator::dynamic` for arbitrary radii.  The scan
+//! implementations stay in `net::mod` as references, pinned by
+//! randomized equivalence tests (mirroring the `shield::reference`
+//! pattern).
+//!
+//! Correctness does not depend on the cell size: a query for radius `r`
+//! visits every cell whose index range covers `[center − r, center + r]`
+//! (cell indexing is monotone in the coordinate and clamped at the grid
+//! edge, so any point within `r` lands inside the visited range) and
+//! re-checks the exact [`Pos::dist`] predicate the scan baseline uses.
+//! The cell table is bounded at O(n) cells, so a single far-flung
+//! outlier (a teleported test node) cannot blow up the allocation — it
+//! just coarsens the effective cells.
+
+use super::Pos;
+
+/// Square-cell spatial hash in CSR layout.
+#[derive(Debug, Clone)]
+pub struct SpatialGrid {
+    min_x: f64,
+    min_y: f64,
+    /// Cell side length in meters.
+    cell: f64,
+    nx: usize,
+    ny: usize,
+    /// CSR cell contents: the node ids of cell `c` are
+    /// `items[starts[c]..starts[c + 1]]` (ascending: nodes are binned in
+    /// id order).
+    starts: Vec<usize>,
+    items: Vec<usize>,
+}
+
+impl SpatialGrid {
+    /// Bin `positions` into square cells of side `cell`.  Degenerate
+    /// cell sizes (zero, negative, NaN, infinite) fall back to 1 m so
+    /// construction never divides by zero.
+    pub fn build(positions: &[Pos], cell: f64) -> SpatialGrid {
+        let mut grid = SpatialGrid {
+            min_x: 0.0,
+            min_y: 0.0,
+            cell: 1.0,
+            nx: 1,
+            ny: 1,
+            starts: vec![0, 0],
+            items: Vec::new(),
+        };
+        grid.rebuild(positions, cell);
+        grid
+    }
+
+    /// Re-bin `positions` in place, reusing the CSR buffers — the
+    /// steady-state mobility tick rebuilds the grid without allocating
+    /// once the buffers have warmed up.  Semantics identical to
+    /// [`SpatialGrid::build`].
+    pub fn rebuild(&mut self, positions: &[Pos], cell: f64) {
+        let cell = if cell.is_finite() && cell > 0.0 { cell } else { 1.0 };
+        let n = positions.len();
+        if n == 0 {
+            self.min_x = 0.0;
+            self.min_y = 0.0;
+            self.cell = cell;
+            self.nx = 1;
+            self.ny = 1;
+            self.starts.clear();
+            self.starts.resize(2, 0);
+            self.items.clear();
+            return;
+        }
+        let mut min_x = f64::INFINITY;
+        let mut min_y = f64::INFINITY;
+        let mut max_x = f64::NEG_INFINITY;
+        let mut max_y = f64::NEG_INFINITY;
+        for p in positions {
+            min_x = min_x.min(p.x);
+            min_y = min_y.min(p.y);
+            max_x = max_x.max(p.x);
+            max_y = max_y.max(p.y);
+        }
+        // Bound the dense cell table at ≤ 4n + 64 cells (floor of the
+        // square root per axis): outliers clamp into the edge cells
+        // instead of inflating the table.
+        let cap = (((4 * n + 64) as f64).sqrt() as usize).max(1);
+        let span_cells = |span: f64| -> usize {
+            let c = (span / cell).floor();
+            if c.is_finite() && c >= 0.0 {
+                // Clamp before the +1: a pathological span must not
+                // overflow the cell count (`as usize` saturates).
+                (c as usize).min(cap - 1) + 1
+            } else {
+                1
+            }
+        };
+        self.min_x = min_x;
+        self.min_y = min_y;
+        self.cell = cell;
+        self.nx = span_cells(max_x - min_x);
+        self.ny = span_cells(max_y - min_y);
+        let ncells = self.nx * self.ny;
+
+        // Counting sort into CSR, with `starts` doubling as the fill
+        // cursor (no temporary count/cursor vectors): count into
+        // starts[c + 1], prefix-sum, fill advancing starts[c], then
+        // shift starts back one slot.  Filling in node-id order keeps
+        // each cell's id list ascending.
+        self.starts.clear();
+        self.starts.resize(ncells + 1, 0);
+        self.items.clear();
+        self.items.resize(n, 0);
+        for p in positions {
+            let c = self.cell_of(*p);
+            self.starts[c + 1] += 1;
+        }
+        for c in 0..ncells {
+            self.starts[c + 1] += self.starts[c];
+        }
+        for (id, p) in positions.iter().enumerate() {
+            let c = self.cell_of(*p);
+            let slot = self.starts[c];
+            self.items[slot] = id;
+            self.starts[c] += 1;
+        }
+        // Each starts[c] now holds cell c's END offset; shift right so
+        // starts[c] is the start again (starts[ncells] already == n).
+        for c in (1..ncells).rev() {
+            self.starts[c] = self.starts[c - 1];
+        }
+        self.starts[0] = 0;
+    }
+
+    /// Total cells in the table (for tests / diagnostics).
+    pub fn n_cells(&self) -> usize {
+        self.nx * self.ny
+    }
+
+    /// Clamped cell index along one axis (monotone non-decreasing in
+    /// the coordinate — the property the query range relies on).
+    #[inline]
+    fn axis_cell(&self, coord: f64, min: f64, ncells: usize) -> usize {
+        let i = (coord - min) / self.cell;
+        if i.is_nan() || i <= 0.0 {
+            // NaN and ≤ 0 both land in the first cell.
+            return 0;
+        }
+        (i as usize).min(ncells - 1)
+    }
+
+    #[inline]
+    fn cell_of(&self, p: Pos) -> usize {
+        let cx = self.axis_cell(p.x, self.min_x, self.nx);
+        self.axis_cell(p.y, self.min_y, self.ny) * self.nx + cx
+    }
+
+    /// Fill `out` with every node within `r` meters of `center` — the
+    /// same `dist ≤ r` predicate as the scan baselines — excluding
+    /// `exclude` (pass `usize::MAX` for none), ascending by id.
+    /// Clears `out` first; no allocation once the buffer has warmed up.
+    pub fn within_into(
+        &self,
+        positions: &[Pos],
+        center: Pos,
+        r: f64,
+        exclude: usize,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        if r < 0.0 || self.items.is_empty() {
+            return;
+        }
+        let cx0 = self.axis_cell(center.x - r, self.min_x, self.nx);
+        let cx1 = self.axis_cell(center.x + r, self.min_x, self.nx);
+        let cy0 = self.axis_cell(center.y - r, self.min_y, self.ny);
+        let cy1 = self.axis_cell(center.y + r, self.min_y, self.ny);
+        for cy in cy0..=cy1 {
+            for cx in cx0..=cx1 {
+                let c = cy * self.nx + cx;
+                for &j in &self.items[self.starts[c]..self.starts[c + 1]] {
+                    if j != exclude && positions[j].dist(&center) <= r {
+                        out.push(j);
+                    }
+                }
+            }
+        }
+        // Cells are visited in geometric order; callers expect the
+        // scan baselines' ascending-id order.
+        out.sort_unstable();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Brute-force baseline: the exact predicate the grid must replay.
+    fn scan(positions: &[Pos], center: Pos, r: f64, exclude: usize) -> Vec<usize> {
+        (0..positions.len())
+            .filter(|&j| j != exclude && positions[j].dist(&center) <= r)
+            .collect()
+    }
+
+    fn random_positions(rng: &mut Rng, n: usize, side: f64) -> Vec<Pos> {
+        (0..n)
+            .map(|_| Pos { x: rng.range_f64(0.0, side), y: rng.range_f64(0.0, side) })
+            .collect()
+    }
+
+    #[test]
+    fn prop_grid_queries_match_scan() {
+        // Random layouts × random query radii (including r = 0, r larger
+        // than the arena, and centers off any node): the grid must
+        // return exactly the scan's id list.
+        let mut rng = Rng::new(0x6121D);
+        let mut out = Vec::new();
+        for case in 0..30usize {
+            let n = 1 + rng.below(120);
+            let side = [10.0, 100.0, 1000.0][case % 3];
+            let positions = random_positions(&mut rng, n, side);
+            let cell = [0.5, 7.0, 40.0, side * 2.0][case % 4];
+            let grid = SpatialGrid::build(&positions, cell);
+            for _ in 0..20 {
+                let center = if rng.chance(0.5) {
+                    positions[rng.below(n)]
+                } else {
+                    Pos { x: rng.range_f64(-side, 2.0 * side), y: rng.range_f64(-side, 2.0 * side) }
+                };
+                let r = [0.0, 3.0, 25.0, side, 3.0 * side][rng.below(5)];
+                let exclude = if rng.chance(0.3) { rng.below(n) } else { usize::MAX };
+                grid.within_into(&positions, center, r, exclude, &mut out);
+                assert_eq!(out, scan(&positions, center, r, exclude), "case {case}");
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let mut out = vec![99];
+        // Empty position set.
+        let g = SpatialGrid::build(&[], 10.0);
+        g.within_into(&[], Pos { x: 0.0, y: 0.0 }, 5.0, usize::MAX, &mut out);
+        assert!(out.is_empty(), "within_into must clear stale contents");
+
+        // All nodes coincident; zero and negative radii.
+        let positions = vec![Pos { x: 3.0, y: 4.0 }; 5];
+        let g = SpatialGrid::build(&positions, 10.0);
+        g.within_into(&positions, positions[0], 0.0, usize::MAX, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3, 4], "coincident nodes are within r = 0");
+        g.within_into(&positions, positions[0], 0.0, 2, &mut out);
+        assert_eq!(out, vec![0, 1, 3, 4]);
+        g.within_into(&positions, positions[0], -1.0, usize::MAX, &mut out);
+        assert!(out.is_empty(), "negative radius matches nothing");
+
+        // Degenerate cell sizes never divide by zero.
+        for bad in [0.0, -5.0, f64::NAN, f64::INFINITY] {
+            let g = SpatialGrid::build(&positions, bad);
+            g.within_into(&positions, positions[0], 1.0, usize::MAX, &mut out);
+            assert_eq!(out.len(), 5, "cell={bad}");
+        }
+    }
+
+    #[test]
+    fn outlier_does_not_inflate_the_table() {
+        // One node teleported 1e6 m away (the mobility tests do this):
+        // the cell table must stay O(n), and queries must stay exact.
+        let mut rng = Rng::new(7);
+        let mut positions = random_positions(&mut rng, 50, 100.0);
+        positions[0] = Pos { x: 1e6, y: 1e6 };
+        let grid = SpatialGrid::build(&positions, 30.0);
+        assert!(grid.n_cells() <= 4 * 50 + 64, "cells = {}", grid.n_cells());
+        let mut out = Vec::new();
+        for i in 0..positions.len() {
+            grid.within_into(&positions, positions[i], 30.0, i, &mut out);
+            assert_eq!(out, scan(&positions, positions[i], 30.0, i), "node {i}");
+        }
+    }
+
+    #[test]
+    fn in_place_rebuild_matches_fresh_build() {
+        // Rebuilding over warm buffers (shrinking, growing, degenerate)
+        // must leave exactly the state a fresh build produces.
+        let mut rng = Rng::new(0x2eb);
+        let mut grid = SpatialGrid::build(&[], 10.0);
+        let mut out_a = Vec::new();
+        let mut out_b = Vec::new();
+        for (n, cell) in [(60usize, 12.0), (9, 30.0), (0, 5.0), (120, 3.0), (1, 7.0)] {
+            let positions = random_positions(&mut rng, n, 200.0);
+            grid.rebuild(&positions, cell);
+            let fresh = SpatialGrid::build(&positions, cell);
+            assert_eq!(grid.starts, fresh.starts, "n={n}");
+            assert_eq!(grid.items, fresh.items, "n={n}");
+            assert_eq!(grid.n_cells(), fresh.n_cells(), "n={n}");
+            for i in 0..n {
+                grid.within_into(&positions, positions[i], cell, i, &mut out_a);
+                fresh.within_into(&positions, positions[i], cell, i, &mut out_b);
+                assert_eq!(out_a, out_b, "n={n} node={i}");
+                assert_eq!(out_a, scan(&positions, positions[i], cell, i));
+            }
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let mut rng = Rng::new(11);
+        let positions = random_positions(&mut rng, 40, 60.0);
+        let a = SpatialGrid::build(&positions, 15.0);
+        let b = SpatialGrid::build(&positions, 15.0);
+        assert_eq!(a.starts, b.starts);
+        assert_eq!(a.items, b.items);
+        // Every node is binned exactly once.
+        let mut ids = a.items.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..40).collect::<Vec<_>>());
+    }
+}

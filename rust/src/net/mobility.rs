@@ -538,6 +538,37 @@ mod tests {
     }
 
     #[test]
+    fn grid_neighbor_queries_match_scan_under_random_waypoint_motion() {
+        // The spatial grid backs adjacency rebuilds and radius queries on
+        // the mobility tick path: across a random-waypoint trajectory,
+        // both must stay pinned to the O(n²) scan references after every
+        // advance.
+        let mut topo = grid_topo(30);
+        let g = groups(30, 5);
+        let mut dyn_topo = DynamicTopology::new(&mut topo, rwp(3.0, 0.0), &g, Rng::new(0x6e1d));
+        let mut qrng = Rng::new(0x717);
+        let mut within = Vec::new();
+        let mut moved_total = 0usize;
+        for tick in 1..=40 {
+            moved_total += dyn_topo.advance(tick as f64 * 10.0, 10.0, &mut topo).len();
+            assert_eq!(topo.adjacency_scan(), {
+                let mut lists = Vec::with_capacity(topo.n());
+                for i in 0..topo.n() {
+                    lists.push(topo.neighbors(i));
+                }
+                lists
+            });
+            for _ in 0..5 {
+                let center = qrng.below(30);
+                let r = [0.0, 8.0, 25.0, 200.0][qrng.below(4)];
+                topo.nodes_within_into(center, r, &mut within);
+                assert_eq!(within, topo.nodes_within_scan(center, r), "tick {tick} r {r}");
+            }
+        }
+        assert!(moved_total > 0, "vacuous: nothing moved");
+    }
+
+    #[test]
     fn model_labels_are_distinct() {
         let cells = [
             MobilityModel::Static,

@@ -13,10 +13,14 @@
 //! index (built at construction, O(degree) per query, no allocation via
 //! [`Topology::neighbors_ref`]); whoever mutates `positions` must call
 //! [`Topology::rebuild_adjacency`] — the explicit invalidation hook the
-//! mobility tick uses.
+//! mobility tick uses — which also refreshes the [`grid`] spatial hash
+//! that makes the rebuild itself (and radius queries such as the
+//! blast-radius victim search) sub-quadratic.
 
+pub mod grid;
 pub mod mobility;
 
+pub use grid::SpatialGrid;
 pub use mobility::{DynamicTopology, MobilityModel, MobilityState};
 
 use crate::util::Rng;
@@ -48,6 +52,10 @@ pub struct Topology {
     /// `positions` + `range`.  Invalidated explicitly via
     /// [`Topology::rebuild_adjacency`] when positions change.
     adjacency: Vec<Vec<usize>>,
+    /// Spatial hash over `positions` (cells sized to `range`), rebuilt
+    /// together with the adjacency cache.  Backs the O(n·k) adjacency
+    /// rebuild and the radius queries ([`Topology::nodes_within_into`]).
+    grid: SpatialGrid,
 }
 
 impl Topology {
@@ -59,7 +67,8 @@ impl Topology {
         bw: Vec<Vec<f64>>,
         latency: Vec<Vec<f64>>,
     ) -> Topology {
-        let mut topo = Topology { positions, range, bw, latency, adjacency: Vec::new() };
+        let grid = SpatialGrid::build(&[], 1.0);
+        let mut topo = Topology { positions, range, bw, latency, adjacency: Vec::new(), grid };
         topo.rebuild_adjacency();
         topo
     }
@@ -83,18 +92,57 @@ impl Topology {
 
     /// Reference O(n) neighbor scan straight off `positions` — the
     /// pre-cache implementation, kept as the equivalence baseline for
-    /// the cache (tests, `benches/hotpath.rs`).
+    /// the cache and the spatial grid (tests, `benches/hotpath.rs`).
     pub fn neighbors_scan(&self, i: usize) -> Vec<usize> {
         (0..self.n())
             .filter(|&j| j != i && self.positions[i].dist(&self.positions[j]) <= self.range)
             .collect()
     }
 
-    /// Recompute the adjacency cache from the current positions.  Must
-    /// be called after any mutation of `positions` (the mobility tick
-    /// does; so do the generators).
+    /// Reference O(n²) adjacency rebuild (the pre-grid implementation):
+    /// one full scan per node.  Kept as the equivalence baseline the
+    /// grid-backed [`Topology::rebuild_adjacency`] is pinned against
+    /// (tests, `benches/hotpath.rs` grid-vs-scan cells).
+    pub fn adjacency_scan(&self) -> Vec<Vec<usize>> {
+        (0..self.n()).map(|i| self.neighbors_scan(i)).collect()
+    }
+
+    /// Recompute the adjacency cache (and the spatial grid behind it)
+    /// from the current positions.  Must be called after any mutation of
+    /// `positions` (the mobility tick does; so do the generators).
+    ///
+    /// O(n·k): the positions are binned into a range-sized [`SpatialGrid`]
+    /// once, then each node queries its surrounding cells — instead of
+    /// the seed's O(n²) all-pairs scan.  The grid's CSR buffers and the
+    /// per-node list buffers are all reused across rebuilds, so a
+    /// steady-state mobility tick does not allocate here.
     pub fn rebuild_adjacency(&mut self) {
-        self.adjacency = (0..self.n()).map(|i| self.neighbors_scan(i)).collect();
+        self.grid.rebuild(&self.positions, self.range);
+        let n = self.n();
+        self.adjacency.resize_with(n, Vec::new);
+        for i in 0..n {
+            let mut list = std::mem::take(&mut self.adjacency[i]);
+            self.grid.within_into(&self.positions, self.positions[i], self.range, i, &mut list);
+            self.adjacency[i] = list;
+        }
+    }
+
+    /// Reference O(n) radius scan: all nodes within `r` meters of node
+    /// `center` (excluding it), ascending — the baseline the grid query
+    /// is pinned against.
+    pub fn nodes_within_scan(&self, center: usize, r: f64) -> Vec<usize> {
+        let c = self.positions[center];
+        (0..self.n()).filter(|&j| j != center && self.positions[j].dist(&c) <= r).collect()
+    }
+
+    /// All nodes within `r` meters of node `center` (excluding it),
+    /// ascending, via the spatial grid — the blast-radius victim query
+    /// of the dynamic driver.  `out` is cleared and refilled (reuse the
+    /// buffer on hot paths).  The grid reflects the positions as of the
+    /// last [`Topology::rebuild_adjacency`]; callers that move nodes
+    /// must rebuild first (the mobility tick already does).
+    pub fn nodes_within_into(&self, center: usize, r: f64, out: &mut Vec<usize>) {
+        self.grid.within_into(&self.positions, self.positions[center], r, center, out);
     }
 
     pub fn bandwidth(&self, a: usize, b: usize) -> f64 {
@@ -252,6 +300,46 @@ mod tests {
         t.rebuild_adjacency();
         assert!(t.neighbors_ref(0).contains(&1));
         assert!(t.neighbors_ref(1).contains(&0));
+    }
+
+    #[test]
+    fn grid_rebuild_matches_scan_reference() {
+        // The grid-backed rebuild must reproduce the O(n²) reference
+        // exactly, across sizes and after arbitrary position churn.
+        let mut rng = Rng::new(0x9a1d);
+        for n in [1usize, 2, 17, 60, 150] {
+            let mut t = Topology::generate(&mut rng, n, 120.0, 35.0, &[100.0], 0.001);
+            assert_eq!(t.adjacency, t.adjacency_scan(), "n={n} after generate");
+            for round in 0..5 {
+                for _ in 0..n.div_ceil(3) {
+                    let i = rng.below(n);
+                    t.positions[i] =
+                        Pos { x: rng.range_f64(-50.0, 200.0), y: rng.range_f64(-50.0, 200.0) };
+                }
+                t.rebuild_adjacency();
+                assert_eq!(t.adjacency, t.adjacency_scan(), "n={n} round={round}");
+            }
+        }
+    }
+
+    #[test]
+    fn radius_query_matches_scan_reference() {
+        let mut rng = Rng::new(0xb1a57);
+        let t = topo(40);
+        let mut out = vec![123];
+        for _ in 0..50 {
+            let center = rng.below(40);
+            let r = [0.0, 10.0, 35.0, 80.0, 1e9][rng.below(5)];
+            t.nodes_within_into(center, r, &mut out);
+            assert_eq!(out, t.nodes_within_scan(center, r), "center={center} r={r}");
+        }
+        // Radius queries see position changes once the caches rebuild.
+        let mut t = t;
+        t.positions[5] = t.positions[9];
+        t.rebuild_adjacency();
+        t.nodes_within_into(9, 0.0, &mut out);
+        assert!(out.contains(&5));
+        assert_eq!(out, t.nodes_within_scan(9, 0.0));
     }
 
     #[test]

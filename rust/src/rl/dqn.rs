@@ -3,18 +3,23 @@
 //! model itself runs on the Rust request path and "keeps training".
 //!
 //! Action selection masks candidate slots beyond the current candidate
-//! count; learning converts each finished episode into replay transitions
-//! and runs TD mini-batches through `qnet_train` with an in-session
-//! target network.
+//! count and scores the *scheduler-recorded* state (owner-utilization
+//! slots included) through a reused per-session forward buffer; learning
+//! converts each finished episode into replay slots of the SoA ring and
+//! runs TD mini-batches through `qnet_train` with an in-session target
+//! network, filling one reusable [`TdBatch`] scratch per step.  In the
+//! host-stub build the steady-state decision path allocates nothing;
+//! the vendored-PJRT build still rebuilds one device state literal per
+//! forward (see `runtime::qnet::refill_state`).
 
 use crate::dnn::Layer;
-use crate::util::error::Result;
 use crate::runtime::qnet::{QNetSession, TdBatch};
 use crate::runtime::Engine;
+use crate::util::error::Result;
 use crate::util::Rng;
 
-use super::features::{state_vector, CandidateView, NUM_ACTIONS, STATE_DIM};
-use super::replay::{Replay, Transition};
+use super::features::{CandidateView, NUM_ACTIONS, STATE_DIM};
+use super::replay::Replay;
 use super::{Episode, Policy, RewardParams};
 
 /// DQN policy owning an engine-bound Q-network session.
@@ -26,6 +31,13 @@ pub struct DqnPolicy<'e> {
     pub discount: f32,
     pub train_every: usize,
     episodes_seen: usize,
+    /// Q-net forward failures absorbed by the greedy-by-utilization
+    /// fallback (surfaced through [`Policy::fwd_errors`]).
+    qnet_fwd_errors: usize,
+    /// Reused per-decision Q-value buffer (allocated once).
+    q_buf: Vec<f32>,
+    /// Reused TD mini-batch scratch (allocated once, cleared per step).
+    batch: TdBatch,
     rng: Rng,
 }
 
@@ -34,91 +46,127 @@ impl<'e> DqnPolicy<'e> {
         let session = QNetSession::new(engine, seed)?;
         assert_eq!(session.state_dim, STATE_DIM, "artifact/feature dim mismatch");
         assert_eq!(session.num_actions, NUM_ACTIONS);
+        let train_batch = session.train_batch;
         Ok(DqnPolicy {
             session,
-            replay: Replay::new(4096),
+            replay: Replay::new(4096, STATE_DIM),
             epsilon: 0.1,
             lr: 0.01,
             discount: 0.95,
             train_every: 1,
             episodes_seen: 0,
+            qnet_fwd_errors: 0,
+            q_buf: vec![0.0; NUM_ACTIONS],
+            batch: TdBatch::with_capacity(train_batch, STATE_DIM),
             rng: Rng::new(seed as u64 ^ 0x9e3779b97f4a7c15),
         })
     }
 
     /// Dense state for a decision (exposed so the scheduler can record it).
-    pub fn featurize(layer: &Layer, owner_util: [f64; 3], cands: &[CandidateView]) -> Vec<f32> {
-        state_vector(layer, owner_util, cands)
+    pub fn featurize(
+        layer: &Layer,
+        owner_util: [f64; 3],
+        cands: &[CandidateView],
+    ) -> [f32; STATE_DIM] {
+        super::features::state_vector(layer, owner_util, cands)
+    }
+
+    /// Replay occupancy (for tests / diagnostics).
+    pub fn replay_len(&self) -> usize {
+        self.replay.len()
     }
 
     fn train_from_replay(&mut self) -> Result<f32> {
         let b = self.session.train_batch;
-        let sampled = self.replay.sample(b, &mut self.rng);
-        let mut batch = TdBatch {
-            states: Vec::with_capacity(b * STATE_DIM),
-            actions: Vec::with_capacity(b),
-            rewards: Vec::with_capacity(b),
-            next_states: Vec::with_capacity(b * STATE_DIM),
-            dones: Vec::with_capacity(b),
-        };
-        for t in sampled {
-            batch.states.extend_from_slice(&t.state);
-            batch.actions.push(t.action as i32);
-            batch.rewards.push(t.reward);
-            batch.next_states.extend_from_slice(&t.next_state);
-            batch.dones.push(if t.done { 1.0 } else { 0.0 });
+        self.batch.clear();
+        for _ in 0..b {
+            let i = self.replay.sample_index(&mut self.rng);
+            self.batch.states.extend_from_slice(self.replay.state(i));
+            self.batch.actions.push(self.replay.action(i) as i32);
+            self.batch.rewards.push(self.replay.reward(i));
+            self.batch.next_states.extend_from_slice(self.replay.next_state(i));
+            self.batch.dones.push(if self.replay.done(i) { 1.0 } else { 0.0 });
         }
-        self.session.train(&batch, self.lr, self.discount)
+        self.session.train(&self.batch, self.lr, self.discount)
     }
 }
 
 impl Policy for DqnPolicy<'_> {
-    fn choose(&mut self, layer: &Layer, cands: &[CandidateView], rng: &mut Rng, explore: bool) -> usize {
+    fn choose(
+        &mut self,
+        _layer: &Layer,
+        state: &[f32; STATE_DIM],
+        cands: &[CandidateView],
+        rng: &mut Rng,
+        explore: bool,
+    ) -> usize {
         assert!(!cands.is_empty());
         let n = cands.len().min(NUM_ACTIONS);
         if explore && rng.chance(self.epsilon) {
             return rng.below(n);
         }
-        // Owner utilization features are embedded by the scheduler through
-        // featurize(); choose() recomputes with zeros for the owner slot —
-        // the candidate features carry the signal that matters for ranking.
-        let state = state_vector(layer, [0.0; 3], cands);
-        let q = self.session.fwd(&state).unwrap_or_else(|_| vec![0.0; NUM_ACTIONS]);
-        let mut best = 0usize;
-        let mut best_q = f32::NEG_INFINITY;
-        for (i, &qi) in q.iter().enumerate().take(n) {
-            if qi > best_q {
-                best_q = qi;
-                best = i;
+        match self.session.fwd_into(state, &mut self.q_buf) {
+            Ok(()) => {
+                let mut best = 0usize;
+                let mut best_q = f32::NEG_INFINITY;
+                for (i, &qi) in self.q_buf.iter().enumerate().take(n) {
+                    if qi > best_q {
+                        best_q = qi;
+                        best = i;
+                    }
+                }
+                best
+            }
+            Err(_) => {
+                // A failing Q-net must not silently collapse onto action
+                // 0 (the old all-zero-Q behavior): count the failure and
+                // fall back to greedy-by-utilization — the candidate with
+                // the most combined free capacity (ties to the lowest
+                // index, deterministic).
+                self.qnet_fwd_errors += 1;
+                let mut best = 0usize;
+                let mut best_avail = f64::NEG_INFINITY;
+                for (i, c) in cands.iter().enumerate().take(n) {
+                    let avail = c.avail_cpu + c.avail_mem + c.avail_bw;
+                    if avail > best_avail {
+                        best_avail = avail;
+                        best = i;
+                    }
+                }
+                best
             }
         }
-        best
     }
 
     fn learn(&mut self, episode: &Episode, training_time: f64, params: &RewardParams) {
         let terminal = params.completion_reward(training_time) as f32;
         let n = episode.steps.len();
+        let zeros = [0.0f32; STATE_DIM];
         for (i, step) in episode.steps.iter().enumerate() {
             let mut reward = step.penalty.value(params) as f32;
             let done = i + 1 == n;
             if done {
                 reward += terminal;
             }
-            let next_state =
-                if done { vec![0.0; STATE_DIM] } else { episode.steps[i + 1].state.clone() };
-            self.replay.push(Transition {
-                state: step.state.clone(),
-                action: step.action.min(NUM_ACTIONS - 1),
+            let next_state: &[f32] =
+                if done { &zeros } else { &episode.steps[i + 1].state };
+            self.replay.push(
+                &step.state,
+                step.action.min(NUM_ACTIONS - 1),
                 reward,
                 next_state,
                 done,
-            });
+            );
         }
         self.episodes_seen += 1;
         if self.episodes_seen % self.train_every == 0 && self.replay.len() >= self.session.train_batch
         {
             let _ = self.train_from_replay();
         }
+    }
+
+    fn fwd_errors(&self) -> usize {
+        self.qnet_fwd_errors
     }
 
     fn name(&self) -> &'static str {
@@ -153,11 +201,13 @@ mod tests {
         let mut rng = Rng::new(5);
         for n in [1usize, 2, 5, 11] {
             let cs = cands(n);
+            let state = DqnPolicy::featurize(&layer, [0.1, 0.2, 0.3], &cs);
             for _ in 0..5 {
-                let a = p.choose(&layer, &cs, &mut rng, true);
+                let a = p.choose(&layer, &state, &cs, &mut rng, true);
                 assert!(a < n, "action {a} out of {n}");
             }
         }
+        assert_eq!(p.fwd_errors(), 0, "healthy artifacts must not trip the fallback");
     }
 
     #[test]
@@ -173,7 +223,7 @@ mod tests {
             let ep = Episode {
                 steps: vec![EpisodeStep {
                     key: 0,
-                    state: state.clone(),
+                    state,
                     action: e % 4,
                     n_candidates: 4,
                     penalty: StepPenalty::default(),
@@ -181,6 +231,6 @@ mod tests {
             };
             p.learn(&ep, 100.0, &params);
         }
-        assert!(p.replay.len() >= 40);
+        assert!(p.replay_len() >= 40);
     }
 }

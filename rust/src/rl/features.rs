@@ -33,8 +33,10 @@ pub struct CandidateView {
 
 /// Order candidate nodes nearest-first by *current* distance to
 /// `origin` (ties break by ascending node id, so the order is total and
-/// deterministic).  Squared-distance keys are computed once per
-/// candidate — O(k) distance evaluations, no sqrt in the comparator.
+/// deterministic).  Sorts in place with squared-distance keys evaluated
+/// in the comparator — no sqrt, no heap allocation on the decision path
+/// (candidate lists are at most a cluster degree long, so the extra key
+/// evaluations are cheaper than a keyed scratch vector).
 ///
 /// Mobility support: the agent's action space is capped at
 /// [`MAX_NEIGHBORS`], and under a time-varying topology the neighbor
@@ -43,17 +45,13 @@ pub struct CandidateView {
 /// prices best, rather than whichever ids happen to sort first.
 pub fn nearest_first(topo: &Topology, origin: NodeId, cands: &mut [NodeId]) {
     let o = topo.positions[origin];
-    let mut keyed: Vec<(f64, NodeId)> = cands
-        .iter()
-        .map(|&n| {
-            let p = topo.positions[n];
-            ((p.x - o.x) * (p.x - o.x) + (p.y - o.y) * (p.y - o.y), n)
-        })
-        .collect();
-    keyed.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
-    for (slot, (_, n)) in cands.iter_mut().zip(keyed) {
-        *slot = n;
-    }
+    let key = |n: NodeId| {
+        let p = topo.positions[n];
+        (p.x - o.x) * (p.x - o.x) + (p.y - o.y) * (p.y - o.y)
+    };
+    // The (key, id) order is total (ids are unique), so the unstable
+    // sort is deterministic and matches the old keyed stable sort.
+    cands.sort_unstable_by(|&a, &b| key(a).total_cmp(&key(b)).then(a.cmp(&b)));
 }
 
 /// Equal-width low/medium/high bucket of a [0, 1] fraction (§IV-B).
@@ -77,8 +75,55 @@ pub fn layer_class(layer: &Layer) -> usize {
     }
 }
 
-/// Dense DQN state vector for one decision step.
-pub fn state_vector(layer: &Layer, owner_util: [f64; 3], cands: &[CandidateView]) -> Vec<f32> {
+/// Dense DQN state for one decision step, written into a caller-owned
+/// scratch array — the per-decision hot path (scheduler rounds, DQN
+/// forward) featurizes without touching the heap.
+pub fn state_vector_into(
+    layer: &Layer,
+    owner_util: [f64; 3],
+    cands: &[CandidateView],
+    out: &mut [f32; STATE_DIM],
+) {
+    let d = layer.demand();
+    out[0] = d.cpu as f32;
+    out[1] = (d.mem / 4096.0) as f32;
+    out[2] = (d.bw / 100.0) as f32;
+    for (k, u) in owner_util.iter().enumerate() {
+        out[3 + k] = u.clamp(0.0, 2.0) as f32;
+    }
+    for i in 0..MAX_NEIGHBORS {
+        let base = 6 + 3 * i;
+        match cands.get(i) {
+            Some(c) => {
+                out[base] = c.avail_cpu as f32;
+                out[base + 1] = c.avail_mem as f32;
+                out[base + 2] = (c.bw_to_owner / 1000.0) as f32;
+            }
+            None => {
+                out[base] = 0.0;
+                out[base + 1] = 0.0;
+                out[base + 2] = 0.0;
+            }
+        }
+    }
+}
+
+/// Dense DQN state vector for one decision step (stack-allocated
+/// convenience wrapper over [`state_vector_into`]).
+pub fn state_vector(
+    layer: &Layer,
+    owner_util: [f64; 3],
+    cands: &[CandidateView],
+) -> [f32; STATE_DIM] {
+    let mut out = [0.0; STATE_DIM];
+    state_vector_into(layer, owner_util, cands, &mut out);
+    out
+}
+
+/// Heap-allocating reference featurizer — the pre-optimization
+/// implementation, kept for the hotpath bench's with/without-scratch
+/// cells and pinned to [`state_vector_into`] by an equivalence test.
+pub fn state_vector_vec(layer: &Layer, owner_util: [f64; 3], cands: &[CandidateView]) -> Vec<f32> {
     let d = layer.demand();
     let mut v = Vec::with_capacity(STATE_DIM);
     v.push(d.cpu as f32);
@@ -176,6 +221,33 @@ mod tests {
         topo.positions[5] = topo.positions[1];
         nearest_first(&topo, 0, &mut cands);
         assert_eq!(cands, vec![1, 5, 2, 3, 4]);
+    }
+
+    #[test]
+    fn scratch_featurizer_matches_allocating_reference() {
+        // The zero-allocation writer must produce byte-identical features
+        // to the Vec-based reference, across padding and truncation.
+        let graph = ModelKind::Vgg16.build();
+        for n_cands in [0usize, 1, 4, MAX_NEIGHBORS, MAX_NEIGHBORS + 5] {
+            let cands: Vec<CandidateView> = (0..n_cands)
+                .map(|i| CandidateView {
+                    node: i,
+                    avail_cpu: 0.1 + 0.07 * i as f64,
+                    avail_mem: 0.9 - 0.05 * i as f64,
+                    avail_bw: 0.33,
+                    bw_to_owner: 100.0 + 10.0 * i as f64,
+                })
+                .collect();
+            for layer in &graph.layers {
+                let util = [0.2, 1.7, 2.5];
+                let reference = state_vector_vec(layer, util, &cands);
+                let fast = state_vector(layer, util, &cands);
+                assert_eq!(&fast[..], &reference[..], "{} cands", n_cands);
+                let mut scratch = [7.0f32; STATE_DIM]; // dirty scratch
+                state_vector_into(layer, util, &cands, &mut scratch);
+                assert_eq!(&scratch[..], &reference[..]);
+            }
+        }
     }
 
     #[test]

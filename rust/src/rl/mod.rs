@@ -18,7 +18,10 @@ pub mod dqn;
 pub mod features;
 pub mod replay;
 
-pub use features::{bucket, layer_class, nearest_first, state_vector, CandidateView};
+pub use features::{
+    bucket, layer_class, nearest_first, state_vector, state_vector_into, CandidateView,
+    NUM_ACTIONS, STATE_DIM,
+};
 
 use crate::dnn::Layer;
 use crate::util::Rng;
@@ -88,8 +91,9 @@ impl StepPenalty {
 pub struct EpisodeStep {
     /// Tabular state-action key.
     pub key: usize,
-    /// Dense features (for the DQN path).
-    pub state: Vec<f32>,
+    /// Dense features (for the DQN path) — a fixed inline array, so
+    /// recording a step never heap-allocates.
+    pub state: [f32; STATE_DIM],
     pub action: usize,
     pub n_candidates: usize,
     pub penalty: StepPenalty,
@@ -107,7 +111,17 @@ pub struct Episode {
 /// single-threaded by design for determinism.)
 pub trait Policy {
     /// Choose among `cands` for `layer`; `explore` enables ε-greedy.
-    fn choose(&mut self, layer: &Layer, cands: &[CandidateView], rng: &mut Rng, explore: bool) -> usize;
+    /// `state` is the dense featurization the scheduler already recorded
+    /// for this decision (owner-utilization slots included) — policies
+    /// that score states must use it rather than re-featurizing.
+    fn choose(
+        &mut self,
+        layer: &Layer,
+        state: &[f32; STATE_DIM],
+        cands: &[CandidateView],
+        rng: &mut Rng,
+        explore: bool,
+    ) -> usize;
 
     /// Episodic update once the job's training time is known.
     fn learn(&mut self, episode: &Episode, training_time: f64, params: &RewardParams);
@@ -117,6 +131,14 @@ pub trait Policy {
     /// safe action and assigns a constant negative reward (κ)", §IV-C).
     /// Default: no-op (the DQN path gets κ through the episodic replay).
     fn notify_shielded(&mut self, _step: &EpisodeStep, _params: &RewardParams) {}
+
+    /// Q-net forward failures absorbed by the fallback action path so
+    /// far (DQN only; tabular policies never fail).  Drivers copy this
+    /// into [`RunMetrics::qnet_fwd_errors`](crate::metrics::RunMetrics)
+    /// at the end of a run.
+    fn fwd_errors(&self) -> usize {
+        0
+    }
 
     /// Policy name for reports.
     fn name(&self) -> &'static str;
@@ -197,7 +219,14 @@ impl TabularQ {
 }
 
 impl Policy for TabularQ {
-    fn choose(&mut self, layer: &Layer, cands: &[CandidateView], rng: &mut Rng, explore: bool) -> usize {
+    fn choose(
+        &mut self,
+        layer: &Layer,
+        _state: &[f32; STATE_DIM],
+        cands: &[CandidateView],
+        rng: &mut Rng,
+        explore: bool,
+    ) -> usize {
         assert!(!cands.is_empty(), "no candidates");
         if explore && rng.chance(self.epsilon) {
             return rng.below(cands.len());
@@ -306,7 +335,7 @@ mod tests {
         q.table[table_key(cls, &good)] = 1.0;
         q.table[table_key(cls, &bad)] = -1.0;
         let mut rng = Rng::new(1);
-        let pick = q.choose(&l, &[bad.clone(), good.clone()], &mut rng, false);
+        let pick = q.choose(&l, &[0.0; STATE_DIM], &[bad.clone(), good.clone()], &mut rng, false);
         assert_eq!(pick, 1);
     }
 
@@ -319,7 +348,7 @@ mod tests {
         let ep = Episode {
             steps: vec![EpisodeStep {
                 key,
-                state: vec![],
+                state: [0.0; STATE_DIM],
                 action: 0,
                 n_candidates: 1,
                 penalty: StepPenalty::default(),
@@ -342,7 +371,7 @@ mod tests {
         let ep = Episode {
             steps: vec![EpisodeStep {
                 key,
-                state: vec![],
+                state: [0.0; STATE_DIM],
                 action: 0,
                 n_candidates: 1,
                 penalty: StepPenalty { memory_violated: false, shielded: true },
@@ -368,7 +397,8 @@ mod tests {
         let l = some_layer();
         let cands = vec![cand(0.1, 0.1, 0.1), cand(0.9, 0.9, 0.9), cand(0.5, 0.5, 0.5)];
         let mut rng = Rng::new(2);
-        let picks: Vec<usize> = (0..60).map(|_| q.choose(&l, &cands, &mut rng, true)).collect();
+        let picks: Vec<usize> =
+            (0..60).map(|_| q.choose(&l, &[0.0; STATE_DIM], &cands, &mut rng, true)).collect();
         for i in 0..3 {
             assert!(picks.contains(&i));
         }
@@ -398,9 +428,9 @@ mod tests {
         let cands = vec![cand(0.2, 0.2, 0.2), cand(0.9, 0.9, 0.9)];
         let mut rng = Rng::new(3);
         // epsilon=1 but explore=false must be deterministic greedy.
-        let first = q.choose(&l, &cands, &mut rng, false);
+        let first = q.choose(&l, &[0.0; STATE_DIM], &cands, &mut rng, false);
         for _ in 0..20 {
-            assert_eq!(q.choose(&l, &cands, &mut rng, false), first);
+            assert_eq!(q.choose(&l, &[0.0; STATE_DIM], &cands, &mut rng, false), first);
         }
     }
 }

@@ -1,56 +1,134 @@
-//! Experience replay buffer for the DQN policy.
+//! Experience replay buffer for the DQN policy — a structure-of-arrays
+//! ring.
 //!
-//! Fixed-capacity ring buffer of transitions; uniform sampling without
-//! replacement per mini-batch.  The layout mirrors the `qnet_train`
-//! artifact batch: `(s, a, r, s2, done)`.
+//! The previous implementation stored one `Transition` struct per slot,
+//! each owning two heap `Vec<f32>` states; every `push` cloned both and
+//! every `sample` chased per-transition pointers.  This layout keeps one
+//! contiguous `Vec<f32>` per column (states / next-states indexed by
+//! slot, scalars alongside), pre-allocated to capacity at construction:
+//! pushing copies two fixed-size slices into place and sampling reads
+//! slices back out — zero steady-state allocations.  The column layout
+//! mirrors the `qnet_train` artifact batch `(s, a, r, s2, done)`, so
+//! filling a [`TdBatch`](crate::runtime::qnet::TdBatch) is straight
+//! `extend_from_slice` calls.
+//!
+//! Semantics (uniform sampling, overwrite-oldest ring) are pinned to a
+//! `Vec<Transition>`-based reference model by a randomized ≥1000-step
+//! property test below.
 
 use crate::util::Rng;
 
-/// One transition.
-#[derive(Debug, Clone)]
-pub struct Transition {
-    pub state: Vec<f32>,
-    pub action: usize,
-    pub reward: f32,
-    pub next_state: Vec<f32>,
-    pub done: bool,
-}
-
-/// Ring-buffer replay memory.
+/// Ring-buffer replay memory over fixed-dimension transitions.
 #[derive(Debug)]
 pub struct Replay {
-    buf: Vec<Transition>,
+    /// Feature dimension of `state` / `next_state`.
+    dim: usize,
     capacity: usize,
+    len: usize,
+    /// Next slot to write (wraps at `capacity`).
     next: usize,
+    /// `capacity * dim` floats, slot-major.
+    states: Vec<f32>,
+    next_states: Vec<f32>,
+    actions: Vec<usize>,
+    rewards: Vec<f32>,
+    dones: Vec<bool>,
 }
 
 impl Replay {
-    pub fn new(capacity: usize) -> Replay {
+    /// Pre-allocate the full ring: `capacity` slots of `dim`-dimensional
+    /// transitions.  All memory is committed here — no growth later.
+    pub fn new(capacity: usize, dim: usize) -> Replay {
         assert!(capacity > 0);
-        Replay { buf: Vec::with_capacity(capacity), capacity, next: 0 }
+        assert!(dim > 0);
+        Replay {
+            dim,
+            capacity,
+            len: 0,
+            next: 0,
+            states: vec![0.0; capacity * dim],
+            next_states: vec![0.0; capacity * dim],
+            actions: vec![0; capacity],
+            rewards: vec![0.0; capacity],
+            dones: vec![false; capacity],
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.buf.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.buf.is_empty()
+        self.len == 0
     }
 
-    pub fn push(&mut self, t: Transition) {
-        if self.buf.len() < self.capacity {
-            self.buf.push(t);
-        } else {
-            self.buf[self.next] = t;
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Record one transition, overwriting the oldest slot when full.
+    /// Copies the two state slices into the ring — no allocation.
+    pub fn push(
+        &mut self,
+        state: &[f32],
+        action: usize,
+        reward: f32,
+        next_state: &[f32],
+        done: bool,
+    ) {
+        assert_eq!(state.len(), self.dim, "state dim mismatch");
+        assert_eq!(next_state.len(), self.dim, "next-state dim mismatch");
+        let slot = self.next;
+        let lo = slot * self.dim;
+        self.states[lo..lo + self.dim].copy_from_slice(state);
+        self.next_states[lo..lo + self.dim].copy_from_slice(next_state);
+        self.actions[slot] = action;
+        self.rewards[slot] = reward;
+        self.dones[slot] = done;
+        if self.len < self.capacity {
+            self.len += 1;
         }
         self.next = (self.next + 1) % self.capacity;
     }
 
-    /// Sample `n` transitions uniformly (with replacement if n > len).
-    pub fn sample<'a>(&'a self, n: usize, rng: &mut Rng) -> Vec<&'a Transition> {
-        assert!(!self.buf.is_empty(), "sample from empty replay");
-        (0..n).map(|_| &self.buf[rng.below(self.buf.len())]).collect()
+    /// Draw one uniform slot index (the sampling primitive: `n` batch
+    /// rows are `n` calls, matching the old `sample()`'s RNG stream).
+    pub fn sample_index(&self, rng: &mut Rng) -> usize {
+        assert!(self.len > 0, "sample from empty replay");
+        rng.below(self.len)
+    }
+
+    /// State slice of slot `i` (`i < len`).
+    #[inline]
+    pub fn state(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.len);
+        &self.states[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Next-state slice of slot `i`.
+    #[inline]
+    pub fn next_state(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.len);
+        &self.next_states[i * self.dim..(i + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn action(&self, i: usize) -> usize {
+        self.actions[i]
+    }
+
+    #[inline]
+    pub fn reward(&self, i: usize) -> f32 {
+        self.rewards[i]
+    }
+
+    #[inline]
+    pub fn done(&self, i: usize) -> bool {
+        self.dones[i]
     }
 }
 
@@ -58,49 +136,140 @@ impl Replay {
 mod tests {
     use super::*;
 
-    fn t(v: f32) -> Transition {
-        Transition { state: vec![v], action: 0, reward: v, next_state: vec![v], done: false }
-    }
-
     #[test]
     fn push_grows_to_capacity() {
-        let mut r = Replay::new(3);
+        let mut r = Replay::new(3, 1);
         assert!(r.is_empty());
         for i in 0..3 {
-            r.push(t(i as f32));
+            r.push(&[i as f32], 0, i as f32, &[i as f32], false);
         }
         assert_eq!(r.len(), 3);
+        assert_eq!(r.capacity(), 3);
+        assert_eq!(r.dim(), 1);
     }
 
     #[test]
     fn overwrites_oldest_when_full() {
-        let mut r = Replay::new(3);
+        let mut r = Replay::new(3, 1);
         for i in 0..5 {
-            r.push(t(i as f32));
+            r.push(&[i as f32], 0, i as f32, &[i as f32], false);
         }
         assert_eq!(r.len(), 3);
-        let rewards: Vec<f32> = r.buf.iter().map(|x| x.reward).collect();
+        let rewards: Vec<f32> = (0..3).map(|i| r.reward(i)).collect();
         // 0 and 1 were overwritten by 3 and 4.
         assert!(rewards.contains(&3.0) && rewards.contains(&4.0) && rewards.contains(&2.0));
         assert!(!rewards.contains(&0.0));
     }
 
     #[test]
-    fn sample_returns_requested_count() {
-        let mut r = Replay::new(10);
+    fn sampled_indices_stay_in_range() {
+        let mut r = Replay::new(10, 2);
         for i in 0..4 {
-            r.push(t(i as f32));
+            r.push(&[i as f32, 0.0], i, i as f32, &[0.0, i as f32], i % 2 == 0);
         }
         let mut rng = Rng::new(1);
-        assert_eq!(r.sample(8, &mut rng).len(), 8);
-        assert_eq!(r.sample(2, &mut rng).len(), 2);
+        for _ in 0..100 {
+            let i = r.sample_index(&mut rng);
+            assert!(i < r.len());
+            assert_eq!(r.state(i).len(), 2);
+            assert_eq!(r.next_state(i).len(), 2);
+        }
     }
 
     #[test]
     #[should_panic]
     fn sample_empty_panics() {
-        let r = Replay::new(4);
+        let r = Replay::new(4, 1);
         let mut rng = Rng::new(1);
-        r.sample(1, &mut rng);
+        r.sample_index(&mut rng);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_dim_rejected() {
+        let mut r = Replay::new(4, 3);
+        r.push(&[1.0], 0, 0.0, &[1.0], false);
+    }
+
+    /// Vec-of-structs reference model: the pre-SoA implementation's exact
+    /// semantics (grow to capacity, then overwrite at the ring cursor).
+    struct RefTransition {
+        state: Vec<f32>,
+        action: usize,
+        reward: f32,
+        next_state: Vec<f32>,
+        done: bool,
+    }
+
+    struct RefReplay {
+        buf: Vec<RefTransition>,
+        capacity: usize,
+        next: usize,
+    }
+
+    impl RefReplay {
+        fn new(capacity: usize) -> RefReplay {
+            RefReplay { buf: Vec::with_capacity(capacity), capacity, next: 0 }
+        }
+
+        fn push(&mut self, t: RefTransition) {
+            if self.buf.len() < self.capacity {
+                self.buf.push(t);
+            } else {
+                self.buf[self.next] = t;
+            }
+            self.next = (self.next + 1) % self.capacity;
+        }
+    }
+
+    #[test]
+    fn prop_soa_ring_matches_vec_reference_over_1000_steps() {
+        // ≥1000 random pushes with interleaved sampling: every slot of
+        // the SoA ring must equal the Vec-based reference model, through
+        // growth, wraparound and repeated overwrites, and identical RNG
+        // streams must sample identical transitions.
+        let mut rng = Rng::new(0x50A);
+        for (capacity, dim) in [(7usize, 3usize), (32, 5), (64, 1)] {
+            let mut soa = Replay::new(capacity, dim);
+            let mut reference = RefReplay::new(capacity);
+            for step in 0..1200u64 {
+                let state: Vec<f32> = (0..dim).map(|_| rng.f64() as f32).collect();
+                let next_state: Vec<f32> = (0..dim).map(|_| rng.f64() as f32).collect();
+                let action = rng.below(11);
+                let reward = (rng.f64() * 10.0 - 5.0) as f32;
+                let done = rng.chance(0.1);
+                soa.push(&state, action, reward, &next_state, done);
+                reference.push(RefTransition {
+                    state: state.clone(),
+                    action,
+                    reward,
+                    next_state: next_state.clone(),
+                    done,
+                });
+
+                assert_eq!(soa.len(), reference.buf.len(), "step {step}");
+                for i in 0..soa.len() {
+                    let t = &reference.buf[i];
+                    assert_eq!(soa.state(i), &t.state[..], "step {step} slot {i}");
+                    assert_eq!(soa.next_state(i), &t.next_state[..], "step {step} slot {i}");
+                    assert_eq!(soa.action(i), t.action, "step {step} slot {i}");
+                    assert_eq!(soa.reward(i), t.reward, "step {step} slot {i}");
+                    assert_eq!(soa.done(i), t.done, "step {step} slot {i}");
+                }
+
+                // Identical RNG streams must sample identically.
+                if step % 50 == 0 {
+                    let mut ra = rng.fork(step);
+                    let mut rb = ra.clone();
+                    for _ in 0..8 {
+                        let i = soa.sample_index(&mut ra);
+                        let j = rb.below(reference.buf.len());
+                        assert_eq!(i, j);
+                        assert_eq!(soa.state(i), &reference.buf[j].state[..]);
+                    }
+                }
+            }
+            assert_eq!(soa.len(), capacity, "ring must have filled");
+        }
     }
 }

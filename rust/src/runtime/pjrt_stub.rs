@@ -133,6 +133,41 @@ impl Literal {
     pub fn to_tuple(self) -> Result<Vec<Literal>> {
         Err(unavailable("tuple literals"))
     }
+
+    /// Overwrite an F32 literal's payload in place (shape unchanged) —
+    /// the buffer-reuse hook for per-decision hot paths (stub-only; the
+    /// vendored crate rebuilds the literal instead).
+    pub fn copy_from_f32(&mut self, data: &[f32]) -> Result<()> {
+        match &mut self.data {
+            Data::F32(v) if v.len() == data.len() => {
+                v.copy_from_slice(data);
+                Ok(())
+            }
+            Data::F32(v) => Err(Error::msg(format!(
+                "copy_from_f32: literal has {} elems, source has {}",
+                v.len(),
+                data.len()
+            ))),
+            Data::S32(_) => Err(Error::msg("copy_from_f32: element type mismatch")),
+        }
+    }
+
+    /// Read an F32 literal's payload into a caller buffer without
+    /// allocating (the output half of the buffer-reuse hook).
+    pub fn copy_to_f32(&self, out: &mut [f32]) -> Result<()> {
+        match &self.data {
+            Data::F32(v) if v.len() == out.len() => {
+                out.copy_from_slice(v);
+                Ok(())
+            }
+            Data::F32(v) => Err(Error::msg(format!(
+                "copy_to_f32: literal has {} elems, sink has {}",
+                v.len(),
+                out.len()
+            ))),
+            Data::S32(_) => Err(Error::msg("copy_to_f32: element type mismatch")),
+        }
+    }
 }
 
 /// Array shape metadata.
@@ -238,6 +273,26 @@ mod tests {
         let s = Literal::scalar(7i32);
         assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
         assert!(Literal::vec1(&[1.0f32]).reshape(&[2]).is_err());
+    }
+
+    #[test]
+    fn in_place_copy_roundtrip_and_mismatches() {
+        let mut l = Literal::vec1(&[0.0f32; 4]).reshape(&[2, 2]).unwrap();
+        l.copy_from_f32(&[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let mut out = [0.0f32; 4];
+        l.copy_to_f32(&mut out).unwrap();
+        assert_eq!(out, [1.0, 2.0, 3.0, 4.0]);
+        // Shape stays intact after the in-place overwrite.
+        match l.shape().unwrap() {
+            Shape::Array(a) => assert_eq!(a.dims(), &[2, 2]),
+            _ => panic!("expected array shape"),
+        }
+        // Length and type mismatches are rejected.
+        assert!(l.copy_from_f32(&[1.0; 3]).is_err());
+        assert!(l.copy_to_f32(&mut [0.0; 5]).is_err());
+        let mut i = Literal::vec1(&[1i32, 2]);
+        assert!(i.copy_from_f32(&[1.0, 2.0]).is_err());
+        assert!(i.copy_to_f32(&mut [0.0; 2]).is_err());
     }
 
     #[test]

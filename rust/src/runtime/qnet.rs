@@ -25,6 +25,11 @@ pub struct QNetSession<'e> {
     train_steps: usize,
     /// Sync the target network every this many train steps.
     pub target_sync_every: usize,
+    /// Cached `qnet_fwd` input vector: the cloned parameter literals
+    /// plus one reusable state slot at the end.  Rebuilt lazily after
+    /// every parameter update; on the steady-state decision path each
+    /// forward only overwrites the state slot in place.
+    fwd_inputs: Option<Vec<xla::Literal>>,
 }
 
 /// One TD training batch (row-major, `len == batch`).
@@ -34,6 +39,58 @@ pub struct TdBatch {
     pub rewards: Vec<f32>,
     pub next_states: Vec<f32>,
     pub dones: Vec<f32>,
+}
+
+impl TdBatch {
+    /// Pre-sized scratch for `batch` rows of `state_dim` features —
+    /// reused across train steps via [`TdBatch::clear`].
+    pub fn with_capacity(batch: usize, state_dim: usize) -> TdBatch {
+        TdBatch {
+            states: Vec::with_capacity(batch * state_dim),
+            actions: Vec::with_capacity(batch),
+            rewards: Vec::with_capacity(batch),
+            next_states: Vec::with_capacity(batch * state_dim),
+            dones: Vec::with_capacity(batch),
+        }
+    }
+
+    /// Empty every column, keeping the allocations.
+    pub fn clear(&mut self) {
+        self.states.clear();
+        self.actions.clear();
+        self.rewards.clear();
+        self.next_states.clear();
+        self.dones.clear();
+    }
+}
+
+/// Overwrite the cached state slot with a fresh state (host stub: an
+/// in-place copy; vendored PJRT: rebuild the device literal).
+#[cfg(not(pjrt_vendored))]
+fn refill_state(slot: &mut xla::Literal, _dims: &[usize], state: &[f32]) -> Result<()> {
+    slot.copy_from_f32(state)
+}
+
+#[cfg(pjrt_vendored)]
+fn refill_state(slot: &mut xla::Literal, dims: &[usize], state: &[f32]) -> Result<()> {
+    *slot = lit_f32(dims, state)?;
+    Ok(())
+}
+
+/// Read the Q-value row into a caller buffer (host stub: no allocation).
+#[cfg(not(pjrt_vendored))]
+fn read_q_row(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
+    lit.copy_to_f32(out)
+}
+
+#[cfg(pjrt_vendored)]
+fn read_q_row(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
+    let v = lit.to_vec::<f32>()?;
+    if v.len() != out.len() {
+        crate::bail!("q row has {} elems, sink has {}", v.len(), out.len());
+    }
+    out.copy_from_slice(&v);
+    Ok(())
 }
 
 impl<'e> QNetSession<'e> {
@@ -53,18 +110,43 @@ impl<'e> QNetSession<'e> {
             train_batch,
             train_steps: 0,
             target_sync_every: 16,
+            fwd_inputs: None,
         })
     }
 
-    /// Q-values for one state (the per-decision request path).
-    pub fn fwd(&mut self, state: &[f32]) -> Result<Vec<f32>> {
+    /// Q-values for one state, written into `out` (`len == num_actions`)
+    /// — the per-decision request path.  The parameter literals are
+    /// cloned once per parameter *update*, not per call: steady-state
+    /// forwards reuse the cached input vector and overwrite its state
+    /// slot — in place under the host stub (zero allocations per
+    /// decision), as one rebuilt device literal per call under vendored
+    /// PJRT.
+    pub fn fwd_into(&mut self, state: &[f32], out: &mut [f32]) -> Result<()> {
         if state.len() != self.state_dim {
             bail!("state dim {} != {}", state.len(), self.state_dim);
         }
-        let mut inputs = clone_literals(&self.params)?;
-        inputs.push(lit_f32(&[1, self.state_dim], state)?);
-        let out = self.engine.run("qnet_fwd", &inputs)?;
-        Ok(out[0].to_vec::<f32>()?)
+        if out.len() != self.num_actions {
+            bail!("q-out dim {} != {}", out.len(), self.num_actions);
+        }
+        if self.fwd_inputs.is_none() {
+            let mut inputs = clone_literals(&self.params)?;
+            inputs.push(lit_f32(&[1, self.state_dim], state)?);
+            self.fwd_inputs = Some(inputs);
+        } else {
+            let inputs = self.fwd_inputs.as_mut().expect("cached fwd inputs");
+            let slot = inputs.last_mut().expect("state slot");
+            refill_state(slot, &[1, self.state_dim], state)?;
+        }
+        let inputs = self.fwd_inputs.as_ref().expect("cached fwd inputs");
+        let result = self.engine.run("qnet_fwd", inputs)?;
+        read_q_row(&result[0], out)
+    }
+
+    /// Allocating convenience wrapper over [`QNetSession::fwd_into`].
+    pub fn fwd(&mut self, state: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0.0; self.num_actions];
+        self.fwd_into(state, &mut out)?;
+        Ok(out)
     }
 
     /// One TD step; returns the loss.  Syncs the target network
@@ -86,6 +168,8 @@ impl<'e> QNetSession<'e> {
         let mut out = self.engine.run("qnet_train", &inputs)?;
         let loss = to_scalar_f32(&out.pop().expect("loss"))?;
         self.params = out;
+        // The cached forward inputs embed the old parameters.
+        self.fwd_inputs = None;
         self.train_steps += 1;
         if self.train_steps % self.target_sync_every == 0 {
             self.target = clone_literals(&self.params)?;

@@ -22,8 +22,8 @@
 use crate::cluster::{Deployment, Membership, NodeId, ResourceKind, Resources};
 use crate::dnn::ModelGraph;
 use crate::rl::{
-    features::MAX_NEIGHBORS, layer_class, nearest_first, state_vector, table_key, CandidateView,
-    Episode, EpisodeStep, Policy, RewardParams, StepPenalty,
+    features::MAX_NEIGHBORS, layer_class, nearest_first, state_vector_into, table_key,
+    CandidateView, Episode, EpisodeStep, Policy, RewardParams, StepPenalty, STATE_DIM,
 };
 use crate::shield::{ProposedAction, Shield};
 use crate::sim::state::{ResourceState, TaskHandle};
@@ -118,34 +118,42 @@ impl View {
     }
 }
 
-fn candidate_views(
+/// Fill `out` with the agent's view of `candidates` — the hot paths
+/// reuse one buffer across rounds, so steady-state decisions never
+/// allocate here.
+fn candidate_views_into(
     dep: &Deployment,
     state: &ResourceState,
     view: &View,
     owner: NodeId,
     candidates: &[NodeId],
-) -> Vec<CandidateView> {
-    candidates
-        .iter()
-        .map(|&n| CandidateView {
-            node: n,
-            avail_cpu: quantize(view.avail(state, n, ResourceKind::Cpu)),
-            avail_mem: quantize(view.avail(state, n, ResourceKind::Mem)),
-            avail_bw: quantize(view.avail(state, n, ResourceKind::Bw)),
-            bw_to_owner: dep.topo.bandwidth(owner, n).min(1000.0),
-        })
-        .collect()
+    out: &mut Vec<CandidateView>,
+) {
+    out.clear();
+    out.extend(candidates.iter().map(|&n| CandidateView {
+        node: n,
+        avail_cpu: quantize(view.avail(state, n, ResourceKind::Cpu)),
+        avail_mem: quantize(view.avail(state, n, ResourceKind::Mem)),
+        avail_bw: quantize(view.avail(state, n, ResourceKind::Bw)),
+        bw_to_owner: dep.topo.bandwidth(owner, n).min(1000.0),
+    }));
 }
 
 /// Candidate set of a MARL agent: itself plus cluster neighbors, capped
-/// to the DQN action-space size.  Uses the deployment's precomputed
-/// adjacency — O(degree), no topology rescan.
+/// to the DQN action-space size, written into a reusable buffer.  Uses
+/// the deployment's precomputed adjacency — O(degree), no topology
+/// rescan, no allocation on the steady-state path.
+pub fn marl_candidates_into(dep: &Deployment, owner: NodeId, out: &mut Vec<NodeId>) {
+    out.clear();
+    out.push(owner);
+    out.extend_from_slice(dep.cluster_neighbors_ref(owner));
+    out.truncate(MAX_NEIGHBORS + 1);
+}
+
+/// Allocating convenience wrapper over [`marl_candidates_into`].
 pub fn marl_candidates(dep: &Deployment, owner: NodeId) -> Vec<NodeId> {
-    let neighbors = dep.cluster_neighbors_ref(owner);
-    let mut cands = Vec::with_capacity(neighbors.len() + 1);
-    cands.push(owner);
-    cands.extend_from_slice(neighbors);
-    cands.truncate(MAX_NEIGHBORS + 1);
+    let mut cands = Vec::with_capacity(MAX_NEIGHBORS + 1);
+    marl_candidates_into(dep, owner, &mut cands);
     cands
 }
 
@@ -166,20 +174,31 @@ pub fn marl_candidates_alive(
     membership: &Membership,
     owner: NodeId,
 ) -> Vec<NodeId> {
-    let neighbors = membership.alive_neighbors(owner);
-    let mut cands = Vec::with_capacity(neighbors.len() + 1);
+    let mut cands = Vec::with_capacity(MAX_NEIGHBORS + 1);
+    marl_candidates_alive_into(dep, membership, owner, &mut cands);
+    cands
+}
+
+/// Buffer-filling variant of [`marl_candidates_alive`] (the per-decision
+/// hot path — no allocation once the buffer has warmed up).
+pub fn marl_candidates_alive_into(
+    dep: &Deployment,
+    membership: &Membership,
+    owner: NodeId,
+    out: &mut Vec<NodeId>,
+) {
+    out.clear();
     if membership.is_alive(owner) {
-        cands.push(owner);
+        out.push(owner);
     }
-    cands.extend_from_slice(neighbors);
-    if cands.is_empty() {
+    out.extend_from_slice(membership.alive_neighbors(owner));
+    if out.is_empty() {
         match membership.alive_members(dep.cluster_of(owner)).first() {
-            Some(&fallback) => cands.push(fallback),
-            None => cands.push(owner),
+            Some(&fallback) => out.push(fallback),
+            None => out.push(owner),
         }
     }
-    cands.truncate(MAX_NEIGHBORS + 1);
-    cands
+    out.truncate(MAX_NEIGHBORS + 1);
 }
 
 /// Mobility-aware variant of [`marl_candidates_alive`]: the alive
@@ -194,24 +213,34 @@ pub fn marl_candidates_proximity(
     membership: &Membership,
     owner: NodeId,
 ) -> Vec<NodeId> {
-    let neighbors = membership.alive_neighbors(owner);
-    let mut cands = Vec::with_capacity(neighbors.len() + 1);
+    let mut cands = Vec::with_capacity(MAX_NEIGHBORS + 1);
+    marl_candidates_proximity_into(dep, membership, owner, &mut cands);
+    cands
+}
+
+/// Buffer-filling variant of [`marl_candidates_proximity`].
+pub fn marl_candidates_proximity_into(
+    dep: &Deployment,
+    membership: &Membership,
+    owner: NodeId,
+    out: &mut Vec<NodeId>,
+) {
+    out.clear();
     let tail = if membership.is_alive(owner) {
-        cands.push(owner);
+        out.push(owner);
         1
     } else {
         0
     };
-    cands.extend_from_slice(neighbors);
-    nearest_first(&dep.topo, owner, &mut cands[tail..]);
-    if cands.is_empty() {
+    out.extend_from_slice(membership.alive_neighbors(owner));
+    nearest_first(&dep.topo, owner, &mut out[tail..]);
+    if out.is_empty() {
         match membership.alive_members(dep.cluster_of(owner)).first() {
-            Some(&fallback) => cands.push(fallback),
-            None => cands.push(owner),
+            Some(&fallback) => out.push(fallback),
+            None => out.push(owner),
         }
     }
-    cands.truncate(MAX_NEIGHBORS + 1);
-    cands
+    out.truncate(MAX_NEIGHBORS + 1);
 }
 
 /// Sample the actual (noisy) demand realized at execution time.
@@ -370,10 +399,20 @@ fn marl_wave_impl(
     let mut collisions = 0usize;
     let mut shield_corrections = 0usize;
 
+    // Per-decision scratch, reused across agents and rounds: candidate
+    // ids, candidate views, and the dense feature array all live outside
+    // the loop, so the steady-state decision path never heap-allocates.
+    let mut cands: Vec<NodeId> = Vec::with_capacity(MAX_NEIGHBORS + 1);
+    let mut cviews: Vec<CandidateView> = Vec::with_capacity(MAX_NEIGHBORS + 1);
+    let mut state_scratch = [0.0f32; STATE_DIM];
+    let mut active: Vec<usize> = Vec::with_capacity(pendings.len());
+    let mut proposals: Vec<ProposedAction> = Vec::with_capacity(pendings.len());
+    let mut final_targets: Vec<NodeId> = Vec::with_capacity(pendings.len());
+
     let mut round = 0usize;
     loop {
-        let active: Vec<usize> =
-            (0..pendings.len()).filter(|&i| pendings[i].next_layer < n_layers).collect();
+        active.clear();
+        active.extend((0..pendings.len()).filter(|&i| pendings[i].next_layer < n_layers));
         if active.is_empty() {
             break;
         }
@@ -384,18 +423,27 @@ fn marl_wave_impl(
         }
 
         // Each active agent proposes its current layer's placement.
-        let mut proposals: Vec<ProposedAction> = Vec::with_capacity(active.len());
-        let mut cand_sets: Vec<Vec<NodeId>> = Vec::with_capacity(active.len());
+        proposals.clear();
         let mut round_agent_secs = 0.0f64;
         for (pi, &ji) in active.iter().enumerate() {
             let owner = pendings[ji].job.owner;
             let layer = &graph.layers[pendings[ji].next_layer];
-            let cands = match membership {
-                Some(m) => marl_candidates_alive(dep, m, owner),
-                None => marl_candidates(dep, owner),
-            };
-            let cviews = candidate_views(dep, state, &views[ji], owner, &cands);
-            let choice = policy.choose(layer, &cviews, rng, true);
+            match membership {
+                Some(m) => marl_candidates_alive_into(dep, m, owner, &mut cands),
+                None => marl_candidates_into(dep, owner, &mut cands),
+            }
+            candidate_views_into(dep, state, &views[ji], owner, &cands, &mut cviews);
+            // Featurize once — with the owner-utilization slots filled —
+            // and hand the same state to the policy and the episode
+            // record (choose() no longer re-featurizes with zeroed owner
+            // slots).
+            let owner_util = [
+                state.util(owner, ResourceKind::Cpu),
+                state.util(owner, ResourceKind::Mem),
+                state.util(owner, ResourceKind::Bw),
+            ];
+            state_vector_into(layer, owner_util, &cviews, &mut state_scratch);
+            let choice = policy.choose(layer, &state_scratch, &cviews, rng, true);
             let target = cands[choice];
             // Observation + per-candidate policy evaluation cost; agents
             // run in parallel so the round costs the max over agents.
@@ -403,14 +451,9 @@ fn marl_wave_impl(
             round_agent_secs = round_agent_secs.max(agent_secs);
             pendings[ji].sched_secs += agent_secs;
 
-            let owner_util = [
-                state.util(owner, ResourceKind::Cpu),
-                state.util(owner, ResourceKind::Mem),
-                state.util(owner, ResourceKind::Bw),
-            ];
             pendings[ji].episode.steps.push(EpisodeStep {
                 key: table_key(layer_class(layer), &cviews[choice]),
-                state: state_vector(layer, owner_util, &cviews),
+                state: state_scratch,
                 action: choice,
                 n_candidates: cands.len(),
                 penalty: StepPenalty::default(),
@@ -423,11 +466,11 @@ fn marl_wave_impl(
                 demand: layer.demand(),
                 target,
             });
-            cand_sets.push(cands);
         }
 
         // Shield pass (or collision detection only).
-        let mut final_targets: Vec<NodeId> = proposals.iter().map(|p| p.target).collect();
+        final_targets.clear();
+        final_targets.extend(proposals.iter().map(|p| p.target));
         let mut round_shield_secs = 0.0;
         match shield.as_deref_mut() {
             Some(s) => {
@@ -523,6 +566,10 @@ fn central_wave_impl(
     let mut schedules = Vec::with_capacity(jobs.len());
     let mut queue_secs = 0.0f64;
 
+    // Per-decision scratch, reused across layers and jobs.
+    let mut cviews: Vec<CandidateView> = Vec::new();
+    let mut state_scratch = [0.0f32; STATE_DIM];
+
     // Collecting cluster-wide observations is the head's expensive step
     // (§III), so it snapshots once per wave; its own placements are
     // tracked immediately in the virtual view (it is the single
@@ -536,21 +583,22 @@ fn central_wave_impl(
         };
         for layer_id in 0..n_layers {
             let layer = &graph.layers[layer_id];
-            let cviews = candidate_views(dep, state, &view, job.owner, members);
-            let choice = policy.choose(layer, &cviews, rng, true);
-            let target = members[choice];
-            let step_secs =
-                members.len() as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
-            pending.sched_secs += step_secs;
-
+            candidate_views_into(dep, state, &view, job.owner, members, &mut cviews);
             let owner_util = [
                 state.util(job.owner, ResourceKind::Cpu),
                 state.util(job.owner, ResourceKind::Mem),
                 state.util(job.owner, ResourceKind::Bw),
             ];
+            state_vector_into(layer, owner_util, &cviews, &mut state_scratch);
+            let choice = policy.choose(layer, &state_scratch, &cviews, rng, true);
+            let target = members[choice];
+            let step_secs =
+                members.len() as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
+            pending.sched_secs += step_secs;
+
             pending.episode.steps.push(EpisodeStep {
                 key: table_key(layer_class(layer), &cviews[choice]),
-                state: state_vector(layer, owner_util, &cviews),
+                state: state_scratch,
                 action: choice,
                 n_candidates: members.len(),
                 penalty: StepPenalty::default(),
@@ -698,27 +746,36 @@ fn reschedule_impl(
     let view = View { demand: view_demand.to_vec() };
     let mut targets: Vec<NodeId> = Vec::with_capacity(stranded.len());
     let mut proposals: Vec<ProposedAction> = Vec::with_capacity(stranded.len());
+    // Per-decision scratch, reused across stranded layers.
+    let mut cands: Vec<NodeId> = Vec::with_capacity(MAX_NEIGHBORS + 1);
+    let mut cviews: Vec<CandidateView> = Vec::with_capacity(MAX_NEIGHBORS + 1);
+    let mut state_scratch = [0.0f32; STATE_DIM];
     // Per-owner decision cost: an owner with several stranded layers
     // re-decides them sequentially; distinct owners run in parallel.
     let mut owner_secs: Vec<(NodeId, f64)> = Vec::new();
     for (i, s) in stranded.iter().enumerate() {
         let layer = &graph.layers[s.layer_id];
         // Dead owners are excluded and a live fallback substituted by
-        // `marl_candidates_alive`, so the set is never empty; a fully
-        // dead cluster degenerates to the owner, which the caller's
-        // cluster invariant rules out.
-        let cands = if proximity {
-            marl_candidates_proximity(dep, membership, s.owner)
+        // `marl_candidates_alive_into`, so the set is never empty; a
+        // fully dead cluster degenerates to the owner, which the
+        // caller's cluster invariant rules out.
+        if proximity {
+            marl_candidates_proximity_into(dep, membership, s.owner, &mut cands);
         } else {
-            marl_candidates_alive(dep, membership, s.owner)
-        };
+            marl_candidates_alive_into(dep, membership, s.owner, &mut cands);
+        }
         if cands.len() == 1 && !membership.is_alive(cands[0]) {
             // Degenerate fallback (whole cluster dead): no alive host.
             targets.push(usize::MAX);
             continue;
         }
-        let cviews = candidate_views(dep, state, &view, s.owner, &cands);
-        let choice = policy.choose(layer, &cviews, rng, true);
+        candidate_views_into(dep, state, &view, s.owner, &cands, &mut cviews);
+        // Recovery decisions carry no owner-utilization reading (the
+        // periodic report a recovering owner acts on covers candidates,
+        // not itself) — the owner slots stay zero, exactly what the DQN
+        // path scored before the recorded-state refactor.
+        state_vector_into(layer, [0.0; 3], &cviews, &mut state_scratch);
+        let choice = policy.choose(layer, &state_scratch, &cviews, rng, true);
         let target = cands[choice];
         let secs = cands.len() as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
         match owner_secs.iter_mut().find(|(o, _)| *o == s.owner) {

@@ -88,6 +88,17 @@ impl DecentralShield {
     pub fn node_moved(&mut self, dep: &Deployment, node: NodeId) -> bool {
         self.subs.handoff_member(node, &dep.topo)
     }
+
+    /// Batched mobility handler: all of a tick's moved nodes at once.
+    /// Region decisions replay the per-node [`DecentralShield::node_moved`]
+    /// path exactly (same order, same tables — pinned by equivalence
+    /// tests), but the boundary-pair refreshes are deferred and issued
+    /// at most once per affected sub-cluster
+    /// ([`SubClusters::handoff_members`]) — the ROADMAP's batched
+    /// per-tick region refresh.  Returns the number of region handoffs.
+    pub fn nodes_moved(&mut self, dep: &Deployment, nodes: &[NodeId]) -> usize {
+        self.subs.handoff_members(nodes, &dep.topo)
+    }
 }
 
 impl Shield for DecentralShield {
@@ -540,6 +551,62 @@ mod tests {
         assert_eq!(out.collisions, 1);
         for &(_, tgt) in &out.corrections {
             assert!(d.subs.is_member(tgt), "correction onto a non-member");
+        }
+    }
+
+    #[test]
+    fn batched_moves_match_per_node_handoffs() {
+        // The tick-level batching must leave the shield in exactly the
+        // state the per-node handler produces, with the same handoff
+        // count, and keep producing valid checks afterwards.
+        let mut dep = dep10();
+        let members = dep.clusters[0].members.clone();
+        let mut batched = DecentralShield::new(&dep, &members, 3);
+        let mut per_node = DecentralShield::new(&dep, &members, 3);
+        let mut rng = Rng::new(0x30f);
+        let mut total = 0usize;
+        for _ in 0..30 {
+            let mut moved: Vec<NodeId> = Vec::new();
+            for _ in 0..1 + rng.below(4) {
+                let node = members[rng.below(members.len())];
+                if !moved.contains(&node) {
+                    moved.push(node);
+                }
+                dep.topo.positions[node] = crate::net::Pos {
+                    x: rng.range_f64(0.0, 60.0),
+                    y: rng.range_f64(0.0, 60.0),
+                };
+            }
+            moved.sort_unstable();
+            dep.topo.rebuild_adjacency();
+            dep.refresh_adjacency();
+            let a = batched.nodes_moved(&dep, &moved);
+            let mut b = 0usize;
+            for &node in &moved {
+                if per_node.node_moved(&dep, node) {
+                    b += 1;
+                }
+            }
+            assert_eq!(a, b, "handoff counts diverged");
+            assert_eq!(batched.subs, per_node.subs, "region tables diverged");
+            total += a;
+        }
+        assert!(total > 0, "vacuous: no handoff in 30 ticks");
+        // On their (identical) post-motion tables, both shields must
+        // produce the same round outcome.
+        let state = ResourceState::new(&dep);
+        let target = members[0];
+        let cap = state.caps(target).cpu;
+        let props = vec![
+            proposal(0, members[1], target, cap * 0.55, 40.0, 1.0),
+            proposal(1, members[2], target, cap * 0.55, 40.0, 1.0),
+        ];
+        let a = batched.check(&props, &state, &dep, 0.9);
+        let b = per_node.check(&props, &state, &dep, 0.9);
+        assert_eq!(a.collisions, b.collisions);
+        assert_eq!(a.corrections, b.corrections);
+        for &(_, tgt) in &a.corrections {
+            assert!(batched.subs.is_member(tgt), "correction onto a non-member");
         }
     }
 
