@@ -6,6 +6,11 @@
 //! * state-refresh staleness — how stale agent views drive collisions.
 //!
 //! Run: `cargo run --release --example ablations`
+//!
+//! Expected output: four tables — one per ablated knob — each with one
+//! row per knob value carrying median JCT, collision and correction
+//! counts, so the trade-off each knob buys is visible as a trend down
+//! the rows.  Deterministic for a fixed seed.
 
 use srole::config::ExperimentConfig;
 use srole::coordinator::{Experiment, Method};

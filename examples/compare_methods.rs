@@ -2,6 +2,11 @@
 //! configuration and print the paper's headline deltas.
 //!
 //! Run: `cargo run --release --example compare_methods [-- --model vgg16 --edges 25]`
+//!
+//! Expected output: one table row per method (median JCT, collisions,
+//! per-job scheduling/shielding overhead), followed by the paper-style
+//! percentage deltas of each shielded method against the worse of
+//! RL/MARL (the paper reports up to 59 % JCT / 48 % collision cuts).
 
 use srole::config::ExperimentConfig;
 use srole::coordinator::{Experiment, Method};

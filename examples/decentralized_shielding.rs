@@ -3,6 +3,12 @@
 //! the centralized shield on identical joint actions.
 //!
 //! Run: `cargo run --release --example decentralized_shielding`
+//!
+//! Expected output: the sub-cluster assignment (which nodes each of the
+//! k = 3 shields owns), the boundary pairs with their delegate nodes,
+//! then a verdict table comparing SROLE-C and SROLE-D on the identical
+//! joint action — collisions seen, corrections issued, and the modeled
+//! shielding seconds per round.
 
 use srole::cluster::{Deployment, REAL_EDGE_PROFILE};
 use srole::shield::{CentralShield, DecentralShield, ProposedAction, Shield};

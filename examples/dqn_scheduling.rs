@@ -5,6 +5,11 @@
 //! with the RL itself on the Rust request path.
 //!
 //! Run: `make artifacts && cargo run --release --example dqn_scheduling`
+//!
+//! Expected output: the PJRT platform banner, a per-layer placement
+//! table chosen by Q-network scores, and the active policy name.  When
+//! the AOT artifacts (or the `pjrt` feature) are absent it exits early
+//! with a descriptive message instead of panicking.
 
 use srole::cluster::{Deployment, CONTAINER_PROFILE};
 use srole::dnn::ModelKind;

@@ -13,6 +13,12 @@
 //! Run: `make artifacts && cargo run --release --example edge_cluster_train`
 //! (Pallas kernels run in interpret mode on CPU, so a step takes a few
 //! seconds; pass `--steps N` to shorten.)
+//!
+//! Expected output: the SROLE-C schedule for the LM job, a worker-spawn
+//! banner, a "transformer LM loss curve" table (step / loss /
+//! wall-ms-per-step rows) ending in an OK line once the loss has fallen
+//! ≥ 20 % — or a clear warning to raise `--steps`.  Without artifacts it
+//! exits early with a descriptive message.
 
 use srole::cluster::{Deployment, CONTAINER_PROFILE};
 use srole::dnn::ModelKind;

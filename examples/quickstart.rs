@@ -2,6 +2,12 @@
 //! job with SROLE-C (MARL + centralized shield), and print the schedule.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! Expected output: the elected cluster head and model summary, a
+//! "layer placement" table (one row per VGG-16 layer: host edge, CPU and
+//! memory demand), a "node loads after placement" table (per-node
+//! utilizations and task counts), and the round's collision/correction
+//! counts.  Deterministic for a fixed seed.
 
 use srole::cluster::{Deployment, ResourceKind, CONTAINER_PROFILE};
 use srole::dnn::ModelKind;

@@ -9,9 +9,10 @@
 //!        `[--models vgg16,googlenet,rnn] [--edges 5,10,15,20,25]`
 //!        `[--pretrain N]`
 //!
-//! `figures scale` sweeps 10→1000-node clusters concurrently (the
-//! ROADMAP scale ceiling; `--edges` overrides the sweep points, so CI
-//! smokes just the 1000-node cell); `figures churn` sweeps node-failure
+//! `figures scale` sweeps 10→10,000-node clusters concurrently (the
+//! sparse-link-model scale ceiling; `--edges` overrides the sweep
+//! points, so CI smokes just the 10,000-node cell; node density is held
+//! constant past 256 nodes); `figures churn` sweeps node-failure
 //! rates on a 100-node cluster through the dynamic event-driven driver;
 //! `figures
 //! mobility` sweeps a random-waypoint speed × pause grid (plus a
@@ -359,24 +360,39 @@ fn fig10_tasks_real(ctx: &Ctx) {
     t.print();
 }
 
-/// `figures scale`: the ROADMAP scale sweep — 10→1000-node clusters, all
-/// methods, one concurrent harness run.  `--edges` overrides the sweep
-/// points (CI smokes only the 1000-node cell).
+/// Target mean node degree of the scale sweep's constant-density
+/// geometry: the single cluster's disc grows with √n so the grid
+/// adjacency — and every O(n·k) structure keyed on it, including the
+/// sparse link cache — stays genuinely sparse up to 10k nodes.
+const SCALE_TARGET_DEGREE: f64 = 256.0;
+
+/// `figures scale`: the ROADMAP scale sweep — 10→10 000-node clusters,
+/// all methods, one concurrent harness run.  `--edges` overrides the
+/// sweep points (CI smokes only the 10 000-node ceiling cell).
 fn scale_sweep(ctx: &Ctx) {
     let edges: Vec<usize> = if ctx.edges_explicit {
         ctx.edges.clone()
     } else {
-        vec![10, 25, 50, 100, 300, 1000]
+        vec![10, 25, 50, 100, 300, 1000, 3000, 10_000]
     };
     let model = ctx.models.first().copied().unwrap_or(ModelKind::Vgg16);
     let sweep = Sweep::new(ctx.base(model)).methods(&Method::ALL).edges(&edges);
     let mut scenarios = sweep.scenarios();
     // The point of this sweep is CLUSTER scale, not deployment size:
     // grow one cluster (and its shield membership structures) to the
-    // full node count instead of tiling 5-node clusters.
+    // full node count instead of tiling 5-node clusters.  Density stays
+    // constant: past ~SCALE_TARGET_DEGREE nodes the cluster disc grows
+    // with √n, so adjacency degree — and the sparse link cache behind
+    // it — stays ~flat instead of going complete-graph quadratic.
     for sc in &mut scenarios {
         sc.cfg.cluster_size = sc.cfg.n_edges;
         sc.cfg.subclusters = (sc.cfg.n_edges / 10).max(2);
+        let profile = sc.cfg.profile.resource_profile();
+        let spread =
+            profile.range_m * (sc.cfg.n_edges as f64 / SCALE_TARGET_DEGREE).sqrt();
+        if spread > profile.cluster_spread_m {
+            sc.cfg.cluster_spread_m = spread;
+        }
     }
     let t0 = std::time::Instant::now();
     let reports = run_parallel(&scenarios, ctx.threads);
@@ -463,8 +479,9 @@ fn mobility_figure(ctx: &Ctx) {
     const MOB_METHODS: [Method; 3] = [Method::Marl, Method::SroleC, Method::SroleD];
     // Motion-free baseline: a *stationary* trace (one zero offset), not
     // `Static` — it runs the full mobility wrapper (same RNG fork, same
-    // initial link attenuation) while never moving anyone, so the rows
-    // differ only in actual motion.
+    // event cadence; link prices are always distance-attenuated now)
+    // while never moving anyone, so the rows differ only in actual
+    // motion.
     let mut grid: Vec<MobilityModel> =
         vec![MobilityModel::Trace { offsets: vec![(0.0, 0.0)], speed_mps: 1.0 }];
     for &speed in &[0.5, 1.0, 2.0] {

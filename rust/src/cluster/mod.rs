@@ -164,11 +164,27 @@ impl Deployment {
     /// ("the resources of the devices were assigned in a round-robin
     /// way", §V-A), positions geographically grouped.
     pub fn generate(rng: &mut Rng, n: usize, cluster_size: usize, profile: &ResourceProfile) -> Deployment {
+        Deployment::generate_spread(rng, n, cluster_size, profile, 0.0)
+    }
+
+    /// [`Deployment::generate`] with an explicit geographic cluster
+    /// spread in meters (`<= 0` falls back to the profile's default).
+    /// The scale sweeps use this to hold node *density* constant as a
+    /// single cluster grows to 10k nodes, keeping the grid adjacency —
+    /// and every O(n·k) structure built on it — genuinely sparse.
+    pub fn generate_spread(
+        rng: &mut Rng,
+        n: usize,
+        cluster_size: usize,
+        profile: &ResourceProfile,
+        spread_m: f64,
+    ) -> Deployment {
+        let spread = if spread_m > 0.0 { spread_m } else { profile.cluster_spread_m };
         let topo = Topology::generate_clustered(
             rng,
             n,
             cluster_size,
-            profile.cluster_spread_m,
+            spread,
             profile.range_m,
             &profile.bw_choices,
             profile.latency_s,

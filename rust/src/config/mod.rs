@@ -96,6 +96,19 @@ pub struct ExperimentConfig {
     /// baseline, so every cell runs the same driver and only the churn
     /// axis varies.
     pub event_driven: bool,
+    /// Geographic spread of each cluster in meters (0 = the profile's
+    /// default).  `figures scale` overrides this to keep node *density*
+    /// constant as single-cluster deployments grow toward 10k nodes —
+    /// the profile's 10 m disc would otherwise make the adjacency (and
+    /// every O(n·k) structure keyed on it) a complete graph.
+    pub cluster_spread_m: f64,
+    /// Run on the dense materialized link matrices instead of the sparse
+    /// on-demand pricing model.  The dense store is the in-tree
+    /// equivalence reference: it prices links through the identical
+    /// function, consumes no extra RNG, and must reproduce sparse runs
+    /// byte-identically (pinned by harness tests).  O(n²) memory — never
+    /// enable it at scale.
+    pub dense_links: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -123,6 +136,8 @@ impl Default for ExperimentConfig {
             mobility_tick_secs: mobility::DEFAULT_TICK_SECS,
             blast_radius_m: 0.0,
             event_driven: false,
+            cluster_spread_m: 0.0,
+            dense_links: false,
         }
     }
 }
@@ -232,6 +247,14 @@ impl ExperimentConfig {
             }
             "mobility_tick_secs" => self.mobility_tick_secs = parse_f64(val)?,
             "blast_radius_m" | "blast_radius" => self.blast_radius_m = parse_f64(val)?,
+            "cluster_spread_m" | "spread" => self.cluster_spread_m = parse_f64(val)?,
+            "dense_links" => {
+                self.dense_links = match val {
+                    "true" | "1" | "yes" => true,
+                    "false" | "0" | "no" => false,
+                    other => return Err(format!("bad boolean {other} for dense_links")),
+                }
+            }
             other => return Err(format!("unknown config key {other}")),
         }
         Ok(())
@@ -258,6 +281,9 @@ impl ExperimentConfig {
         }
         if self.blast_radius_m < 0.0 {
             return Err("blast_radius_m must be non-negative".into());
+        }
+        if self.cluster_spread_m.is_nan() || self.cluster_spread_m < 0.0 {
+            return Err("cluster_spread_m must be non-negative".into());
         }
         if self.mobility_tick_secs.is_nan() || self.mobility_tick_secs <= 0.0 {
             return Err("mobility_tick_secs must be positive".into());
@@ -464,6 +490,34 @@ mod tests {
         let mut bad = ExperimentConfig::default();
         bad.blast_radius_m = -3.0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn link_model_and_spread_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            dense_links = true
+            cluster_spread_m = 40
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.dense_links);
+        assert_eq!(cfg.cluster_spread_m, 40.0);
+        cfg.validate().unwrap();
+
+        let cfg = ExperimentConfig::from_toml("dense_links = false\nspread = 0").unwrap();
+        assert!(!cfg.dense_links);
+        assert_eq!(cfg.cluster_spread_m, 0.0);
+        cfg.validate().unwrap();
+
+        assert!(ExperimentConfig::from_toml("dense_links = \"maybe\"").is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.cluster_spread_m = -1.0;
+        assert!(bad.validate().is_err());
+        // The defaults stay on the sparse model with the profile spread.
+        let d = ExperimentConfig::default();
+        assert!(!d.dense_links);
+        assert_eq!(d.cluster_spread_m, 0.0);
     }
 
     #[test]

@@ -137,7 +137,18 @@ fn alive_head(dep: &Deployment, membership: &Membership, cluster: usize) -> Node
 pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetrics {
     let mut rng = Rng::new(seed);
     let profile = cfg.profile.resource_profile();
-    let mut dep = Deployment::generate(&mut rng, cfg.n_edges, cfg.cluster_size, profile);
+    let mut dep = Deployment::generate_spread(
+        &mut rng,
+        cfg.n_edges,
+        cfg.cluster_size,
+        profile,
+        cfg.cluster_spread_m,
+    );
+    if cfg.dense_links {
+        // Dense reference store: same prices, no RNG draws — dynamic
+        // runs must replay the sparse model byte-identically too.
+        dep.topo.use_dense_links();
+    }
     let graph = cfg.model.build();
     let spec = WorkloadSpec {
         model: cfg.model,
@@ -148,18 +159,18 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     };
     let workload = Workload::generate(&mut rng, &dep, &spec, 500_000.0);
 
-    // Mobility: wrap the topology in its motion process (own forked RNG
-    // stream, separate from scheduling draws) and price the initial
-    // distance attenuation into the link matrices.  The fork fires only
+    // Mobility: couple the topology to its motion process (own forked
+    // RNG stream, separate from scheduling draws).  The fork fires only
     // for mobility-enabled configs, so churn-only / Poisson scenarios
     // replay their pre-mobility RNG streams — and results — exactly.
-    // Sweeps that want a motion-free baseline comparable to mobile
-    // cells (same fork, same attenuation) use a stationary trace model
-    // rather than `Static` — see `figures mobility`.
+    // Link prices are always the distance-attenuated pricing function
+    // of the current positions (`net::link`), mobile or not; `figures
+    // mobility` keeps a stationary-trace baseline so its rows differ
+    // from the mobile cells only in actual motion (same RNG fork).
     let mut mobility: Option<DynamicTopology> = if cfg.mobility.enabled() {
         let groups: Vec<Vec<NodeId>> = dep.clusters.iter().map(|c| c.members.clone()).collect();
         let m_rng = rng.fork(0x0b17e);
-        Some(DynamicTopology::new(&mut dep.topo, cfg.mobility.clone(), &groups, m_rng))
+        Some(DynamicTopology::new(&dep.topo, cfg.mobility.clone(), &groups, m_rng))
     } else {
         None
     };

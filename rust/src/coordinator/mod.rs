@@ -100,7 +100,18 @@ impl Experiment {
         }
         let cfg = &self.cfg;
         let mut rng = Rng::new(seed);
-        let dep = Deployment::generate(&mut rng, cfg.n_edges, cfg.cluster_size, cfg.profile.resource_profile());
+        let mut dep = Deployment::generate_spread(
+            &mut rng,
+            cfg.n_edges,
+            cfg.cluster_size,
+            cfg.profile.resource_profile(),
+            cfg.cluster_spread_m,
+        );
+        if cfg.dense_links {
+            // The dense reference store: identical prices, no RNG draws —
+            // the run must replay the sparse model byte-identically.
+            dep.topo.use_dense_links();
+        }
         let graph = cfg.model.build();
         let spec = WorkloadSpec {
             model: cfg.model,

@@ -65,6 +65,9 @@ impl Scenario {
         if cfg.mobility.enabled() {
             label.push_str(&format!("/m{}", cfg.mobility.label()));
         }
+        if cfg.dense_links {
+            label.push_str("/dense");
+        }
         Scenario { label, method, cfg }
     }
 }
@@ -523,6 +526,50 @@ mod tests {
             moves += s.metrics.mobility_moves;
         }
         assert!(moves > 0, "vacuous: nothing moved in any mobility scenario");
+    }
+
+    #[test]
+    fn sparse_and_dense_link_models_are_byte_identical() {
+        // The link-model equivalence contract, at full-system altitude:
+        // ragged clusters (n % cluster_size != 0) with simultaneous
+        // random-waypoint mobility AND correlated blast-radius churn,
+        // across methods and seeds, must produce byte-identical
+        // `RunMetrics` whether links are priced by the sparse on-demand
+        // cache or read from the dense materialized reference.
+        let mut base = tiny_base();
+        base.n_edges = 13; // ragged: 5 + 5 + 3
+        base.cluster_size = 5;
+        base.mobility = MobilityModel::RandomWaypoint { speed_mps: 3.0, pause_secs: 0.0 };
+        base.mobility_tick_secs = 10.0;
+        base.failure_rate = 3.0;
+        base.rejoin_secs = 60.0;
+        base.blast_radius_m = 30.0;
+        let sweep = |dense: bool| {
+            let mut b = base.clone();
+            b.dense_links = dense;
+            Sweep::new(b)
+                .methods(&[Method::Marl, Method::SroleC, Method::SroleD, Method::Rl])
+                .seeds(&[1, 2])
+        };
+        let sparse = run_parallel(&sweep(false).scenarios(), 2);
+        let dense = run_parallel(&sweep(true).scenarios(), 2);
+        assert_eq!(sparse.len(), dense.len());
+        let (mut moves, mut failures, mut correlated) = (0usize, 0usize, 0usize);
+        for (s, d) in sparse.iter().zip(&dense) {
+            assert!(d.scenario.label.ends_with("/dense"), "{}", d.scenario.label);
+            assert_eq!(
+                s.metrics.to_json().to_string(),
+                d.metrics.to_json().to_string(),
+                "{}: sparse and dense link models diverged",
+                s.scenario.label
+            );
+            moves += s.metrics.mobility_moves;
+            failures += s.metrics.node_failures;
+            correlated += s.metrics.correlated_failures;
+        }
+        assert!(moves > 0, "vacuous: nothing moved");
+        assert!(failures > 0, "vacuous: no churn fired");
+        assert!(correlated > 0, "vacuous: no correlated blast fired");
     }
 
     #[test]

@@ -163,6 +163,16 @@ impl SpatialGrid {
     /// same `dist ≤ r` predicate as the scan baselines — excluding
     /// `exclude` (pass `usize::MAX` for none), ascending by id.
     /// Clears `out` first; no allocation once the buffer has warmed up.
+    ///
+    /// ```
+    /// use srole::net::{Pos, SpatialGrid};
+    ///
+    /// let positions: Vec<Pos> = (0..20).map(|i| Pos { x: i as f64 * 3.0, y: 0.0 }).collect();
+    /// let grid = SpatialGrid::build(&positions, 10.0);
+    /// let mut out = Vec::new();
+    /// grid.within_into(&positions, positions[0], 10.0, 0, &mut out);
+    /// assert_eq!(out, vec![1, 2, 3]); // 3, 6, 9 m away; 12 m is out of range
+    /// ```
     pub fn within_into(
         &self,
         positions: &[Pos],

@@ -1,0 +1,456 @@
+//! Sparse on-demand link pricing — the model that broke the 1000-node
+//! ceiling.
+//!
+//! The seed carried *dense* pairwise `bw`/`latency` matrices: O(n²)
+//! memory, O(n²) RNG draws at generation time, and an O(moved·n) matrix
+//! rewrite on every mobility tick.  At 10 000 nodes that is 1.6 GB of
+//! matrices before the first decision fires.  This module replaces the
+//! matrices with a *pricing function*: every link quality is derived on
+//! demand from
+//!
+//! * per-node **base rates** ([`LinkParams`]: one bandwidth rate and one
+//!   latency-jitter factor per node — O(n) state, O(n) RNG draws), and
+//! * the current node **positions**, through the same distance
+//!   [`attenuation`] law `DynamicTopology` has always used for mobility.
+//!
+//! Two interchangeable backends implement the price store:
+//!
+//! * [`SparseLinks`] — the production model: a bounded per-node cache
+//!   holding exactly the priced [`SpatialGrid`](super::SpatialGrid)
+//!   adjacency rows, so only O(n·k) links are ever materialized.  Reads
+//!   off the cached adjacency are an L1-resident binary search; reads of
+//!   non-adjacent pairs compute the pure pricing function on the fly
+//!   (no mutation — [`Topology`](super::Topology) stays `Sync`).
+//!   Repricing after motion is O(moved·k): moved rows rebuild, reverse
+//!   entries refresh in place, and per-node *epochs* lazily invalidate
+//!   whatever cross entries remain.
+//! * [`DenseLinks`] — the dense reference: full matrices materialized
+//!   from the *same* pricing function.  It exists so the sparse fast
+//!   path stays pinned to a bit-identical baseline (randomized
+//!   equivalence tests in `net`, harness-level `RunMetrics` equivalence,
+//!   and the `benches/hotpath.rs` sparse-vs-dense cells) — the same
+//!   discipline as `shield::reference` and the `*_scan` topology
+//!   baselines.
+//!
+//! Both backends price a pair `(i, j)` as
+//!
+//! ```text
+//! base_bw(i,j)  = min(rate[i], rate[j])                 (bottleneck NIC)
+//! base_lat(i,j) = latency_s · (jitter[i] + jitter[j])/2
+//! bw(i,j)  = base_bw(i,j)  · attenuation(dist(i,j), range)
+//! lat(i,j) = base_lat(i,j) / attenuation(dist(i,j), range)
+//! ```
+//!
+//! which is symmetric by construction, and — because the dense matrices
+//! are filled by calling the very same [`price`] function — sparse and
+//! dense reads return bit-identical `f64`s.
+
+use super::Pos;
+use crate::util::Rng;
+
+/// Bandwidth multiplier at exactly the transmission range; beyond the
+/// range the link floors here (reachable but slow) instead of vanishing.
+pub const EDGE_ATTENUATION: f64 = 0.25;
+
+/// Distance attenuation of link quality: full bandwidth up to half the
+/// transmission range, linear roll-off to [`EDGE_ATTENUATION`] at the
+/// range, floored beyond it.  Latency scales inversely.
+pub fn attenuation(dist: f64, range: f64) -> f64 {
+    if range <= 0.0 {
+        return 1.0;
+    }
+    let d = dist / range;
+    if d <= 0.5 {
+        1.0
+    } else if d >= 1.0 {
+        EDGE_ATTENUATION
+    } else {
+        1.0 - (1.0 - EDGE_ATTENUATION) * (d - 0.5) / 0.5
+    }
+}
+
+/// Per-node link parameters: the O(n) state every pair price derives
+/// from.  Replaces the seed's O(n²) base matrices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkParams {
+    /// Per-node base link rate in Mbps (sampled from the profile's
+    /// `bw_choices`); a pair's base bandwidth is the min of its ends.
+    pub rate: Vec<f64>,
+    /// Per-node latency jitter factor in [0.5, 1.5); a pair's base
+    /// latency is `latency_s` scaled by the mean of its ends.
+    pub jitter: Vec<f64>,
+    /// Base one-way control-message latency in seconds.
+    pub latency_s: f64,
+}
+
+impl LinkParams {
+    /// Sample per-node rates and jitters — 2n draws in node-id order
+    /// (the dense seed drew O(n²); generation is now linear).
+    pub fn generate(rng: &mut Rng, n: usize, bw_choices: &[f64], latency_s: f64) -> LinkParams {
+        let rate = (0..n).map(|_| *rng.choose(bw_choices)).collect();
+        let jitter = (0..n).map(|_| rng.range_f64(0.5, 1.5)).collect();
+        LinkParams { rate, jitter, latency_s }
+    }
+
+    /// Uniform parameters (tests / hand-built topologies): every node
+    /// gets the same `rate` and a jitter of exactly 1.0, so every pair
+    /// prices to `rate · att` and `latency_s / att`.
+    pub fn uniform(n: usize, rate: f64, latency_s: f64) -> LinkParams {
+        LinkParams { rate: vec![rate; n], jitter: vec![1.0; n], latency_s }
+    }
+
+    pub fn n(&self) -> usize {
+        self.rate.len()
+    }
+}
+
+/// Pure pricing function: `(bandwidth Mbps, one-way latency s)` of the
+/// link `(i, j)` at the current positions.  The single source of truth —
+/// the sparse cache, the dense matrices and every on-the-fly read all
+/// evaluate exactly this, so all paths agree bit-for-bit.
+#[inline]
+pub fn price(params: &LinkParams, positions: &[Pos], range: f64, i: usize, j: usize) -> (f64, f64) {
+    if i == j {
+        return (f64::INFINITY, 0.0);
+    }
+    let att = attenuation(positions[i].dist(&positions[j]), range);
+    let bw = params.rate[i].min(params.rate[j]) * att;
+    let lat = params.latency_s * 0.5 * (params.jitter[i] + params.jitter[j]) / att;
+    (bw, lat)
+}
+
+/// One cached link price in a node's row.
+#[derive(Debug, Clone, Copy)]
+struct CacheEntry {
+    peer: u32,
+    /// `epoch[peer]` at pricing time: the entry self-invalidates when
+    /// the peer moves (its epoch bumps) before this row is refreshed.
+    peer_epoch: u32,
+    bw: f64,
+    lat: f64,
+}
+
+/// Sparse link store: per-node rows of priced links, bounded by (and
+/// keyed on) the spatial-grid adjacency, so at most O(n·k) links are
+/// ever materialized.
+///
+/// Invariant (inherited from the adjacency cache): whoever mutates
+/// `positions` calls [`Topology::rebuild_adjacency`](super::Topology::rebuild_adjacency)
+/// (full refresh) or [`Topology::reprice_moved`](super::Topology::reprice_moved)
+/// (O(moved·k) incremental path) before reading prices.  Rows of nodes
+/// that did not move stay valid; their entries pointing *at* movers are
+/// caught by the epoch check and re-priced on the fly.
+#[derive(Debug, Clone, Default)]
+pub struct SparseLinks {
+    /// Position epoch per node, bumped by [`SparseLinks::reprice_moved`].
+    epoch: Vec<u32>,
+    /// Per-node cached rows, ascending by peer id (binary-searchable).
+    rows: Vec<Vec<CacheEntry>>,
+}
+
+impl SparseLinks {
+    /// Rebuild every row from the adjacency lists — O(n·k).  Called by
+    /// the generators and the full `rebuild_adjacency` hook.
+    pub fn refresh_all(
+        &mut self,
+        params: &LinkParams,
+        positions: &[Pos],
+        range: f64,
+        adjacency: &[Vec<usize>],
+    ) {
+        let n = positions.len();
+        self.epoch.resize(n, 0);
+        self.rows.resize_with(n, Vec::new);
+        for i in 0..n {
+            let mut row = std::mem::take(&mut self.rows[i]);
+            row.clear();
+            row.extend(adjacency[i].iter().map(|&j| {
+                let (bw, lat) = price(params, positions, range, i, j);
+                CacheEntry { peer: j as u32, peer_epoch: self.epoch[j], bw, lat }
+            }));
+            self.rows[i] = row;
+        }
+    }
+
+    /// Incremental reprice after `moved` nodes changed position —
+    /// O(moved·k): bump each mover's epoch (lazily invalidating every
+    /// cross entry that points at it), rebuild the movers' own rows from
+    /// the already-refreshed adjacency, and refresh reverse entries in
+    /// place where they exist.
+    pub fn reprice_moved(
+        &mut self,
+        params: &LinkParams,
+        positions: &[Pos],
+        range: f64,
+        adjacency: &[Vec<usize>],
+        moved: &[usize],
+    ) {
+        for &i in moved {
+            self.epoch[i] = self.epoch[i].wrapping_add(1);
+        }
+        for &i in moved {
+            let mut row = std::mem::take(&mut self.rows[i]);
+            row.clear();
+            for &j in &adjacency[i] {
+                // Price each mover-neighbor pair once (the function is
+                // symmetric): fill the mover's row and refresh the
+                // reverse entry in place where one exists (binary
+                // search, no insertion shifts).  Pairs with no reverse
+                // entry fall back to the pure compute on read.
+                let (bw, lat) = price(params, positions, range, i, j);
+                row.push(CacheEntry { peer: j as u32, peer_epoch: self.epoch[j], bw, lat });
+                if let Ok(pos) = self.rows[j].binary_search_by_key(&(i as u32), |e| e.peer) {
+                    self.rows[j][pos] =
+                        CacheEntry { peer: i as u32, peer_epoch: self.epoch[i], bw, lat };
+                }
+            }
+            self.rows[i] = row;
+        }
+    }
+
+    /// Price of link `(i, j)`: cached-row hit when the entry is present
+    /// and its peer epoch is current, pure compute otherwise.  `&self` —
+    /// misses never mutate, so concurrent scenario threads can read
+    /// freely.
+    #[inline]
+    pub fn link(
+        &self,
+        params: &LinkParams,
+        positions: &[Pos],
+        range: f64,
+        i: usize,
+        j: usize,
+    ) -> (f64, f64) {
+        if i == j {
+            return (f64::INFINITY, 0.0);
+        }
+        if let Ok(pos) = self.rows[i].binary_search_by_key(&(j as u32), |e| e.peer) {
+            let e = self.rows[i][pos];
+            if e.peer_epoch == self.epoch[j] {
+                return (e.bw, e.lat);
+            }
+        }
+        price(params, positions, range, i, j)
+    }
+
+    /// Total cached entries (diagnostics / the O(n·k) bound tests).
+    pub fn cached_links(&self) -> usize {
+        self.rows.iter().map(Vec::len).sum()
+    }
+
+    /// Fault injection (tests): overwrite — or insert — the cached
+    /// bandwidth of `(i, j)` in `i`'s row with current epochs, so the
+    /// poisoned value is what reads actually serve.
+    pub fn poison_bw(&mut self, i: usize, j: usize, bw: f64, lat: f64) {
+        let entry = CacheEntry { peer: j as u32, peer_epoch: self.epoch[j], bw, lat };
+        match self.rows[i].binary_search_by_key(&(j as u32), |e| e.peer) {
+            Ok(pos) => self.rows[i][pos] = entry,
+            Err(pos) => self.rows[i].insert(pos, entry),
+        }
+    }
+}
+
+/// Dense reference store: full matrices materialized from [`price`].
+/// O(n²) memory and O(moved·n) repricing — kept in-tree only as the
+/// equivalence baseline the sparse model is pinned against.
+#[derive(Debug, Clone, Default)]
+pub struct DenseLinks {
+    pub bw: Vec<Vec<f64>>,
+    pub latency: Vec<Vec<f64>>,
+}
+
+impl DenseLinks {
+    /// Materialize every pair — O(n²).
+    pub fn refresh_all(&mut self, params: &LinkParams, positions: &[Pos], range: f64) {
+        let n = positions.len();
+        self.bw = vec![vec![0.0; n]; n];
+        self.latency = vec![vec![0.0; n]; n];
+        for i in 0..n {
+            self.bw[i][i] = f64::INFINITY;
+            for j in (i + 1)..n {
+                let (bw, lat) = price(params, positions, range, i, j);
+                self.bw[i][j] = bw;
+                self.bw[j][i] = bw;
+                self.latency[i][j] = lat;
+                self.latency[j][i] = lat;
+            }
+        }
+    }
+
+    /// The seed's repricing shape: rewrite the full rows of every moved
+    /// node — O(moved·n).
+    pub fn reprice_moved(
+        &mut self,
+        params: &LinkParams,
+        positions: &[Pos],
+        range: f64,
+        moved: &[usize],
+    ) {
+        let n = positions.len();
+        for &i in moved {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let (bw, lat) = price(params, positions, range, i, j);
+                self.bw[i][j] = bw;
+                self.bw[j][i] = bw;
+                self.latency[i][j] = lat;
+                self.latency[j][i] = lat;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn link(&self, i: usize, j: usize) -> (f64, f64) {
+        if i == j {
+            return (f64::INFINITY, 0.0);
+        }
+        (self.bw[i][j], self.latency[i][j])
+    }
+
+    pub fn poison_bw(&mut self, i: usize, j: usize, bw: f64) {
+        self.bw[i][j] = bw;
+        self.bw[j][i] = bw;
+    }
+}
+
+/// The link store behind a [`Topology`](super::Topology): sparse
+/// on-demand pricing (production) or the dense materialized reference.
+#[derive(Debug, Clone)]
+pub enum LinkModel {
+    Sparse(SparseLinks),
+    Dense(DenseLinks),
+}
+
+impl LinkModel {
+    pub fn is_dense(&self) -> bool {
+        matches!(self, LinkModel::Dense(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup(n: usize, seed: u64) -> (LinkParams, Vec<Pos>) {
+        let mut rng = Rng::new(seed);
+        let params = LinkParams::generate(&mut rng, n, &[50.0, 100.0, 500.0], 0.002);
+        let positions = (0..n)
+            .map(|_| Pos { x: rng.range_f64(0.0, 60.0), y: rng.range_f64(0.0, 60.0) })
+            .collect();
+        (params, positions)
+    }
+
+    fn adjacency(positions: &[Pos], range: f64) -> Vec<Vec<usize>> {
+        (0..positions.len())
+            .map(|i| {
+                (0..positions.len())
+                    .filter(|&j| j != i && positions[i].dist(&positions[j]) <= range)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn price_is_symmetric_and_bounded() {
+        let (params, positions) = setup(20, 1);
+        for i in 0..20 {
+            for j in 0..20 {
+                let (bw, lat) = price(&params, &positions, 30.0, i, j);
+                let (bw2, lat2) = price(&params, &positions, 30.0, j, i);
+                assert_eq!(bw, bw2, "({i},{j})");
+                assert_eq!(lat, lat2);
+                if i == j {
+                    assert_eq!(bw, f64::INFINITY);
+                    assert_eq!(lat, 0.0);
+                } else {
+                    let base = params.rate[i].min(params.rate[j]);
+                    assert!(bw <= base + 1e-12);
+                    assert!(bw >= base * EDGE_ATTENUATION - 1e-12);
+                    assert!(lat > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_and_dense_agree_bitwise() {
+        let (params, positions) = setup(25, 7);
+        let adj = adjacency(&positions, 30.0);
+        let mut sparse = SparseLinks::default();
+        sparse.refresh_all(&params, &positions, 30.0, &adj);
+        let mut dense = DenseLinks::default();
+        dense.refresh_all(&params, &positions, 30.0);
+        for i in 0..25 {
+            for j in 0..25 {
+                assert_eq!(
+                    sparse.link(&params, &positions, 30.0, i, j),
+                    dense.link(i, j),
+                    "({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reprice_moved_matches_full_refresh() {
+        let (params, mut positions) = setup(30, 13);
+        let mut rng = Rng::new(99);
+        let mut sparse = SparseLinks::default();
+        let mut dense = DenseLinks::default();
+        let adj0 = adjacency(&positions, 25.0);
+        sparse.refresh_all(&params, &positions, 25.0, &adj0);
+        dense.refresh_all(&params, &positions, 25.0);
+        for round in 0..20 {
+            // Move a random subset, rebuild adjacency, reprice both
+            // models incrementally, and pin every pair to a fresh
+            // from-scratch pricing.
+            let mut moved: Vec<usize> = (0..30).filter(|_| rng.chance(0.3)).collect();
+            if moved.is_empty() {
+                moved.push(rng.below(30));
+            }
+            for &i in &moved {
+                positions[i] = Pos { x: rng.range_f64(0.0, 60.0), y: rng.range_f64(0.0, 60.0) };
+            }
+            let adj = adjacency(&positions, 25.0);
+            sparse.reprice_moved(&params, &positions, 25.0, &adj, &moved);
+            dense.reprice_moved(&params, &positions, 25.0, &moved);
+            for i in 0..30 {
+                for j in 0..30 {
+                    let want = if i == j {
+                        (f64::INFINITY, 0.0)
+                    } else {
+                        price(&params, &positions, 25.0, i, j)
+                    };
+                    assert_eq!(
+                        sparse.link(&params, &positions, 25.0, i, j),
+                        want,
+                        "sparse stale at round {round} ({i},{j})"
+                    );
+                    assert_eq!(dense.link(i, j), want, "dense stale at round {round} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cache_is_bounded_by_adjacency() {
+        let (params, positions) = setup(40, 3);
+        let adj = adjacency(&positions, 20.0);
+        let mut sparse = SparseLinks::default();
+        sparse.refresh_all(&params, &positions, 20.0, &adj);
+        let degree_total: usize = adj.iter().map(Vec::len).sum();
+        assert_eq!(sparse.cached_links(), degree_total);
+        assert!(degree_total < 40 * 40, "adjacency itself must be sparse here");
+    }
+
+    #[test]
+    fn uniform_params_price_flat() {
+        let params = LinkParams::uniform(4, 200.0, 0.001);
+        let positions = vec![Pos { x: 0.0, y: 0.0 }; 4];
+        let (bw, lat) = price(&params, &positions, 30.0, 0, 3);
+        assert_eq!(bw, 200.0);
+        assert_eq!(lat, 0.001);
+    }
+}

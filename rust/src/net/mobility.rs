@@ -15,11 +15,15 @@
 //! * [`MobilityState`] — per-node motion bookkeeping advanced at event-
 //!   queue granularity (`EventKind::MobilityTick`).  It owns a forked RNG
 //!   stream, so enabling mobility never perturbs the scheduling RNG.
-//! * [`DynamicTopology`] — wraps a [`Topology`]: whenever positions
-//!   advance it re-derives the affected bandwidth / latency entries from
-//!   the base (t = 0) matrices via a distance [`attenuation`] law and
-//!   rebuilds the adjacency cache, so neighbor sets, transfer times and
-//!   the RL agents' candidate features all follow the motion.
+//! * [`DynamicTopology`] — couples the motion process to a [`Topology`]:
+//!   whenever positions advance it calls
+//!   [`Topology::advance_links`], so the adjacency cache refreshes and
+//!   the moved nodes' link prices reprice incrementally — O(moved·k) on
+//!   the sparse link model (versus the dense reference's O(moved·n) row
+//!   rewrite).  Prices are always the distance-[`attenuation`]d pricing
+//!   function of the *current* positions (see [`super::link`]), so
+//!   neighbor sets, transfer times and the RL agents' candidate
+//!   features all follow the motion.
 //!
 //! Adding a motion model is local: add the variant, give it a label, an
 //! `enabled` rule and a waypoint rule (`MobilityState::pick_waypoint`) —
@@ -28,35 +32,19 @@
 use super::{Pos, Topology};
 use crate::util::Rng;
 
+// The attenuation law lives with the pricing function now (`net::link`);
+// re-exported here because mobility made it famous.
+pub use super::link::{attenuation, EDGE_ATTENUATION};
+
 /// Default mobility-tick period in simulated seconds.
 pub const DEFAULT_TICK_SECS: f64 = 10.0;
 /// Default random-waypoint speed (m/s) and pause (s).
 pub const DEFAULT_SPEED_MPS: f64 = 1.0;
 pub const DEFAULT_PAUSE_SECS: f64 = 30.0;
-/// Bandwidth multiplier at exactly the transmission range; beyond the
-/// range the link floors here (reachable but slow) instead of vanishing.
-pub const EDGE_ATTENUATION: f64 = 0.25;
 /// Roam disc: cluster radius is scaled by this factor (so waypoints
 /// cross sub-cluster boundaries) with a minimum in meters.
 const ROAM_FACTOR: f64 = 1.5;
 const MIN_ROAM_M: f64 = 5.0;
-
-/// Distance attenuation of link quality: full bandwidth up to half the
-/// transmission range, linear roll-off to [`EDGE_ATTENUATION`] at the
-/// range, floored beyond it.  Latency scales inversely.
-pub fn attenuation(dist: f64, range: f64) -> f64 {
-    if range <= 0.0 {
-        return 1.0;
-    }
-    let d = dist / range;
-    if d <= 0.5 {
-        1.0
-    } else if d >= 1.0 {
-        EDGE_ATTENUATION
-    } else {
-        1.0 - (1.0 - EDGE_ATTENUATION) * (d - 0.5) / 0.5
-    }
-}
 
 /// How (and whether) nodes move.
 #[derive(Debug, Clone, PartialEq, Default)]
@@ -291,64 +279,42 @@ impl MobilityState {
     }
 }
 
-/// Time-varying topology: the motion process plus the link model that
-/// keeps a wrapped [`Topology`]'s derived state (bandwidth, latency,
-/// adjacency cache) consistent with the current positions.
+/// Time-varying topology: the motion process coupled to a [`Topology`]
+/// whose position-derived state (link prices, adjacency cache) it keeps
+/// consistent with the current positions.
+///
+/// Since the sparse link model, this type carries *no* link state of its
+/// own: prices are always the pricing function of the current positions
+/// (`net::link`), so "repricing" a mobility tick reduces to
+/// [`Topology::advance_links`] — O(moved·k) cache invalidation on the
+/// sparse model instead of the seed's O(moved·n) matrix rewrite.
 #[derive(Debug, Clone)]
 pub struct DynamicTopology {
-    /// t = 0 pairwise link quality; the live matrices are these scaled
-    /// by the current distance [`attenuation`].
-    base_bw: Vec<Vec<f64>>,
-    base_latency: Vec<Vec<f64>>,
     pub motion: MobilityState,
 }
 
 impl DynamicTopology {
-    /// Wrap `topo`: snapshot the base matrices, apply the initial
-    /// distance attenuation and rebuild the adjacency cache.
+    /// Couple `topo` to a motion process.  Construction mutates nothing
+    /// — link prices already reflect the current positions (the sparse
+    /// model prices on demand), so unlike the matrix era no initial
+    /// repricing pass is needed.
     pub fn new(
-        topo: &mut Topology,
+        topo: &Topology,
         model: MobilityModel,
         groups: &[Vec<usize>],
         rng: Rng,
     ) -> DynamicTopology {
-        let base_bw = topo.bw.clone();
-        let base_latency = topo.latency.clone();
         let motion = MobilityState::new(topo, model, groups, rng);
-        let dyn_topo = DynamicTopology { base_bw, base_latency, motion };
-        let all: Vec<usize> = (0..topo.n()).collect();
-        dyn_topo.reprice(topo, &all);
-        topo.rebuild_adjacency();
-        dyn_topo
-    }
-
-    /// Re-derive the bandwidth / latency rows of `nodes` from the base
-    /// matrices and the current distances (symmetric writes).
-    fn reprice(&self, topo: &mut Topology, nodes: &[usize]) {
-        for &i in nodes {
-            for j in 0..topo.n() {
-                if i == j {
-                    continue;
-                }
-                let att = attenuation(topo.positions[i].dist(&topo.positions[j]), topo.range);
-                let bw = self.base_bw[i][j] * att;
-                topo.bw[i][j] = bw;
-                topo.bw[j][i] = bw;
-                let lat = self.base_latency[i][j] / att;
-                topo.latency[i][j] = lat;
-                topo.latency[j][i] = lat;
-            }
-        }
+        DynamicTopology { motion }
     }
 
     /// Advance the motion over `[now - dt, now]` and refresh every
-    /// position-derived structure of `topo` (link matrices of the moved
-    /// nodes, adjacency cache).  Returns the moved node ids, ascending.
+    /// position-derived structure of `topo` (adjacency cache, moved
+    /// nodes' link prices).  Returns the moved node ids, ascending.
     pub fn advance(&mut self, now: f64, dt: f64, topo: &mut Topology) -> Vec<usize> {
         let moved = self.motion.advance(now, dt, &mut topo.positions);
         if !moved.is_empty() {
-            self.reprice(topo, &moved);
-            topo.rebuild_adjacency();
+            topo.advance_links(&moved);
         }
         moved
     }
@@ -486,8 +452,7 @@ mod tests {
         let topo = Topology::from_parts(
             vec![Pos { x: 0.0, y: 0.0 }],
             30.0,
-            vec![vec![f64::INFINITY]],
-            vec![vec![0.0]],
+            crate::net::LinkParams::uniform(1, 100.0, 0.0),
         );
         let model = MobilityModel::Trace {
             offsets: vec![(10.0, 0.0), (10.0, 10.0), (0.0, 10.0), (0.0, 0.0)],
@@ -513,9 +478,8 @@ mod tests {
     #[test]
     fn dynamic_topology_repricing_follows_distance() {
         let mut topo = grid_topo(10);
-        let base = topo.bw.clone();
         let g = groups(10, 5);
-        let mut dt = DynamicTopology::new(&mut topo, rwp(3.0, 0.0), &g, Rng::new(21));
+        let mut dt = DynamicTopology::new(&topo, rwp(3.0, 0.0), &g, Rng::new(21));
         for tick in 1..=30 {
             dt.advance(tick as f64 * 10.0, 10.0, &mut topo);
         }
@@ -524,17 +488,61 @@ mod tests {
                 if i == j {
                     continue;
                 }
-                // Symmetric, bounded by the base, floored at the edge
-                // attenuation, and exactly the attenuation law.
-                assert_eq!(topo.bw[i][j], topo.bw[j][i]);
-                assert!(topo.bw[i][j] <= base[i][j] + 1e-9);
-                assert!(topo.bw[i][j] >= base[i][j] * EDGE_ATTENUATION - 1e-9);
+                // Symmetric, bounded by the base rate, floored at the
+                // edge attenuation, and exactly the attenuation law.
+                let bw = topo.bandwidth(i, j);
+                let base = topo.params.rate[i].min(topo.params.rate[j]);
+                assert_eq!(bw, topo.bandwidth(j, i));
+                assert!(bw <= base + 1e-9);
+                assert!(bw >= base * EDGE_ATTENUATION - 1e-9);
                 let att = attenuation(topo.positions[i].dist(&topo.positions[j]), topo.range);
-                assert!((topo.bw[i][j] - base[i][j] * att).abs() < 1e-9, "({i},{j})");
+                assert!((bw - base * att).abs() < 1e-9, "({i},{j})");
             }
             // Adjacency cache is in sync with the moved positions.
             assert_eq!(topo.neighbors(i), topo.neighbors_scan(i));
         }
+    }
+
+    #[test]
+    fn sparse_prices_never_stale_across_100_ticks() {
+        // The satellite regression: across ≥100 mobility ticks, the
+        // sparse cache must never serve a stale price — every read
+        // equals the pure pricing function of the *current* positions,
+        // and the dense reference (advanced through the identical
+        // motion) agrees bit-for-bit, transfer times included.
+        let mut sparse = grid_topo(30);
+        let mut dense = sparse.clone();
+        dense.use_dense_links();
+        assert!(dense.is_dense() && !sparse.is_dense());
+        let g = groups(30, 5);
+        let mut dyn_s = DynamicTopology::new(&sparse, rwp(3.0, 10.0), &g, Rng::new(0xca5e));
+        let mut dyn_d = DynamicTopology::new(&dense, rwp(3.0, 10.0), &g, Rng::new(0xca5e));
+        let mut qrng = Rng::new(0x9e11);
+        let mut moved_total = 0usize;
+        for tick in 1..=120 {
+            let now = tick as f64 * 10.0;
+            let ms = dyn_s.advance(now, 10.0, &mut sparse);
+            let md = dyn_d.advance(now, 10.0, &mut dense);
+            assert_eq!(ms, md, "tick {tick}: motion diverged");
+            moved_total += ms.len();
+            for _ in 0..40 {
+                let i = qrng.below(30);
+                let j = qrng.below(30);
+                let want = if i == j {
+                    (f64::INFINITY, 0.0)
+                } else {
+                    crate::net::link::price(&sparse.params, &sparse.positions, sparse.range, i, j)
+                };
+                assert_eq!(sparse.link_price(i, j), want, "tick {tick}: sparse stale ({i},{j})");
+                assert_eq!(dense.link_price(i, j), want, "tick {tick}: dense stale ({i},{j})");
+                assert_eq!(
+                    sparse.transfer_secs(i, j, 12.5, 2),
+                    dense.transfer_secs(i, j, 12.5, 2),
+                    "tick {tick}: transfer diverged ({i},{j})"
+                );
+            }
+        }
+        assert!(moved_total > 0, "vacuous: nothing moved in 120 ticks");
     }
 
     #[test]
@@ -545,7 +553,7 @@ mod tests {
         // advance.
         let mut topo = grid_topo(30);
         let g = groups(30, 5);
-        let mut dyn_topo = DynamicTopology::new(&mut topo, rwp(3.0, 0.0), &g, Rng::new(0x6e1d));
+        let mut dyn_topo = DynamicTopology::new(&topo, rwp(3.0, 0.0), &g, Rng::new(0x6e1d));
         let mut qrng = Rng::new(0x717);
         let mut within = Vec::new();
         let mut moved_total = 0usize;

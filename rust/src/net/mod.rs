@@ -1,26 +1,50 @@
 //! Edge-network substrate: 2-D geography, transmission ranges, and the
-//! pairwise bandwidth/latency model.
+//! sparse on-demand link-pricing model.
 //!
 //! The paper's testbeds shape bandwidth with `tcconfig` (containers) and
-//! `wondershaper` (Raspberry Pis); here a [`Topology`] carries an explicit
-//! symmetric bandwidth matrix plus node positions.  Geographic proximity
-//! drives both cluster formation (§III) and the neighbor sets that bound
-//! every MARL agent's action space ("edge nodes in its transmission
-//! range", §I).
+//! `wondershaper` (Raspberry Pis); here a [`Topology`] carries node
+//! positions plus per-node [`link::LinkParams`], and every pairwise link
+//! quality is *priced on demand* (distance-attenuated bottleneck rate —
+//! see [`link`]) instead of being stored in O(n²) matrices.  Geographic
+//! proximity drives both cluster formation (§III) and the neighbor sets
+//! that bound every MARL agent's action space ("edge nodes in its
+//! transmission range", §I).
 //!
 //! Positions are *mutable*: the [`mobility`] subsystem evolves them over
 //! simulated time.  Neighbor sets are served from a cached adjacency
 //! index (built at construction, O(degree) per query, no allocation via
 //! [`Topology::neighbors_ref`]); whoever mutates `positions` must call
-//! [`Topology::rebuild_adjacency`] — the explicit invalidation hook the
-//! mobility tick uses — which also refreshes the [`grid`] spatial hash
-//! that makes the rebuild itself (and radius queries such as the
-//! blast-radius victim search) sub-quadratic.
+//! [`Topology::rebuild_adjacency`] — the explicit invalidation hook that
+//! refreshes the [`grid`] spatial hash, the adjacency lists *and* the
+//! cached link prices together.  The mobility tick uses the cheaper
+//! [`Topology::advance_links`], whose sparse repricing is O(moved·k)
+//! instead of the dense reference's O(moved·n) row rewrite.
+//!
+//! # Example
+//!
+//! ```
+//! use srole::net::Topology;
+//! use srole::util::Rng;
+//!
+//! let mut rng = Rng::new(7);
+//! let topo = Topology::generate(&mut rng, 25, 100.0, 40.0, &[50.0, 100.0], 0.002);
+//!
+//! // Neighbor sets come from the cached spatial-grid adjacency…
+//! for &j in topo.neighbors_ref(0) {
+//!     assert!(topo.positions[0].dist(&topo.positions[j]) <= topo.range);
+//! }
+//! // …and link prices are derived on demand: symmetric, no matrices.
+//! assert_eq!(topo.bandwidth(0, 1), topo.bandwidth(1, 0));
+//! assert!(topo.transfer_secs(0, 1, 10.0, 1) > 0.0);
+//! assert_eq!(topo.transfer_secs(3, 3, 10.0, 1), 0.0); // self-transfers are free
+//! ```
 
 pub mod grid;
+pub mod link;
 pub mod mobility;
 
 pub use grid::SpatialGrid;
+pub use link::{LinkModel, LinkParams};
 pub use mobility::{DynamicTopology, MobilityModel, MobilityState};
 
 use crate::util::Rng;
@@ -44,10 +68,12 @@ pub struct Topology {
     pub positions: Vec<Pos>,
     /// Transmission range in meters: nodes within range are neighbors.
     pub range: f64,
-    /// Symmetric pairwise bandwidth in Mbps (`bw[i][j]`, `bw[i][i] = inf`).
-    pub bw: Vec<Vec<f64>>,
-    /// One-way latency in seconds for control messages.
-    pub latency: Vec<Vec<f64>>,
+    /// Per-node link parameters every pair price derives from (O(n)
+    /// state — the dense matrices are gone).
+    pub params: LinkParams,
+    /// The link store: sparse on-demand pricing (default) or the dense
+    /// materialized reference ([`Topology::use_dense_links`]).
+    link: LinkModel,
     /// Cached neighbor lists (ascending node id), derived from
     /// `positions` + `range`.  Invalidated explicitly via
     /// [`Topology::rebuild_adjacency`] when positions change.
@@ -59,16 +85,19 @@ pub struct Topology {
 }
 
 impl Topology {
-    /// Assemble a topology from its raw parts and build the adjacency
-    /// cache.
-    pub fn from_parts(
-        positions: Vec<Pos>,
-        range: f64,
-        bw: Vec<Vec<f64>>,
-        latency: Vec<Vec<f64>>,
-    ) -> Topology {
+    /// Assemble a topology from positions and per-node link parameters,
+    /// then build the adjacency cache and the sparse link cache.
+    pub fn from_parts(positions: Vec<Pos>, range: f64, params: LinkParams) -> Topology {
+        assert_eq!(positions.len(), params.n(), "one LinkParams entry per node");
         let grid = SpatialGrid::build(&[], 1.0);
-        let mut topo = Topology { positions, range, bw, latency, adjacency: Vec::new(), grid };
+        let mut topo = Topology {
+            positions,
+            range,
+            params,
+            link: LinkModel::Sparse(link::SparseLinks::default()),
+            adjacency: Vec::new(),
+            grid,
+        };
         topo.rebuild_adjacency();
         topo
     }
@@ -107,16 +136,9 @@ impl Topology {
         (0..self.n()).map(|i| self.neighbors_scan(i)).collect()
     }
 
-    /// Recompute the adjacency cache (and the spatial grid behind it)
-    /// from the current positions.  Must be called after any mutation of
-    /// `positions` (the mobility tick does; so do the generators).
-    ///
-    /// O(n·k): the positions are binned into a range-sized [`SpatialGrid`]
-    /// once, then each node queries its surrounding cells — instead of
-    /// the seed's O(n²) all-pairs scan.  The grid's CSR buffers and the
-    /// per-node list buffers are all reused across rebuilds, so a
-    /// steady-state mobility tick does not allocate here.
-    pub fn rebuild_adjacency(&mut self) {
+    /// Rebuild the spatial grid and the adjacency lists from the current
+    /// positions — O(n·k), buffers reused across rebuilds.
+    fn rebuild_adjacency_index(&mut self) {
         self.grid.rebuild(&self.positions, self.range);
         let n = self.n();
         self.adjacency.resize_with(n, Vec::new);
@@ -124,6 +146,58 @@ impl Topology {
             let mut list = std::mem::take(&mut self.adjacency[i]);
             self.grid.within_into(&self.positions, self.positions[i], self.range, i, &mut list);
             self.adjacency[i] = list;
+        }
+    }
+
+    /// Recompute every position-derived cache — spatial grid, adjacency
+    /// lists *and* link prices — from the current positions.  Must be
+    /// called after any mutation of `positions` (the generators do; so
+    /// does any test that teleports nodes).
+    ///
+    /// O(n·k) with the sparse link model: positions are binned into a
+    /// range-sized [`SpatialGrid`] once, each node queries its
+    /// surrounding cells, and the sparse link cache re-prices exactly
+    /// the adjacency rows.  The dense reference model re-materializes
+    /// its full matrices here (O(n²)) — that cost is the reason it is
+    /// only a reference.  The mobility tick uses the incremental
+    /// [`Topology::advance_links`] instead.
+    pub fn rebuild_adjacency(&mut self) {
+        self.rebuild_adjacency_index();
+        match &mut self.link {
+            LinkModel::Sparse(s) => {
+                s.refresh_all(&self.params, &self.positions, self.range, &self.adjacency)
+            }
+            LinkModel::Dense(d) => d.refresh_all(&self.params, &self.positions, self.range),
+        }
+    }
+
+    /// The mobility-tick path: positions of `moved` changed — rebuild
+    /// the grid + adjacency index (O(n·k)) and reprice incrementally:
+    /// O(moved·k) on the sparse model versus the dense reference's
+    /// O(moved·n) row rewrite.  Equivalent to
+    /// [`Topology::rebuild_adjacency`] whenever only `moved` nodes
+    /// actually changed position (pinned by randomized tests).
+    pub fn advance_links(&mut self, moved: &[usize]) {
+        self.rebuild_adjacency_index();
+        self.reprice_moved(moved);
+    }
+
+    /// Incremental link repricing after `moved` changed position.  The
+    /// adjacency index must already reflect the new positions
+    /// ([`Topology::advance_links`] bundles both); exposed separately so
+    /// `benches/hotpath.rs` can time the repricing alone.
+    pub fn reprice_moved(&mut self, moved: &[usize]) {
+        match &mut self.link {
+            LinkModel::Sparse(s) => s.reprice_moved(
+                &self.params,
+                &self.positions,
+                self.range,
+                &self.adjacency,
+                moved,
+            ),
+            LinkModel::Dense(d) => {
+                d.reprice_moved(&self.params, &self.positions, self.range, moved)
+            }
         }
     }
 
@@ -141,47 +215,112 @@ impl Topology {
     /// buffer on hot paths).  The grid reflects the positions as of the
     /// last [`Topology::rebuild_adjacency`]; callers that move nodes
     /// must rebuild first (the mobility tick already does).
+    ///
+    /// ```
+    /// use srole::net::Topology;
+    /// use srole::util::Rng;
+    ///
+    /// let mut rng = Rng::new(3);
+    /// let topo = Topology::generate(&mut rng, 30, 80.0, 25.0, &[100.0], 0.001);
+    /// let mut out = Vec::new();
+    /// topo.nodes_within_into(0, 40.0, &mut out);
+    /// assert_eq!(out, topo.nodes_within_scan(0, 40.0)); // pinned to the scan reference
+    /// ```
     pub fn nodes_within_into(&self, center: usize, r: f64, out: &mut Vec<usize>) {
         self.grid.within_into(&self.positions, self.positions[center], r, center, out);
     }
 
-    pub fn bandwidth(&self, a: usize, b: usize) -> f64 {
-        if a == b {
-            f64::INFINITY
-        } else {
-            self.bw[a][b]
+    /// `(bandwidth Mbps, one-way latency s)` of link `(a, b)` under the
+    /// active link model — one lookup for both quantities.
+    #[inline]
+    pub fn link_price(&self, a: usize, b: usize) -> (f64, f64) {
+        match &self.link {
+            LinkModel::Sparse(s) => s.link(&self.params, &self.positions, self.range, a, b),
+            LinkModel::Dense(d) => d.link(a, b),
         }
     }
 
+    pub fn bandwidth(&self, a: usize, b: usize) -> f64 {
+        self.link_price(a, b).0
+    }
+
     pub fn latency(&self, a: usize, b: usize) -> f64 {
-        if a == b {
-            0.0
-        } else {
-            self.latency[a][b]
-        }
+        self.link_price(a, b).1
     }
 
     /// Transfer time in seconds for `mb` megabytes between `a` and `b`,
     /// with `flows` concurrent flows sharing the link.  Degenerate
     /// inputs resolve conservatively: a zero-size (or negative) transfer
-    /// is free, a link with zero / negative / NaN bandwidth never
-    /// completes (`+inf`).
+    /// is free, a link with zero / negative / NaN bandwidth — whether
+    /// priced on demand or served from a (possibly poisoned) cache /
+    /// dense entry — never completes (`+inf`).
     pub fn transfer_secs(&self, a: usize, b: usize, mb: f64, flows: usize) -> f64 {
         if a == b || mb <= 0.0 {
             return 0.0;
         }
-        let link = self.bandwidth(a, b);
-        if link.is_nan() || link <= 0.0 {
-            // An unusable link reads as "never completes", not as a NaN
-            // silently propagating into the JCT sums.
+        let (link, lat) = self.link_price(a, b);
+        if link.is_nan() || link <= 0.0 || lat.is_nan() {
+            // An unusable link — degenerate bandwidth OR latency — reads
+            // as "never completes", not as a NaN silently propagating
+            // into the JCT sums.
             return f64::INFINITY;
         }
         let bw = link / flows.max(1) as f64; // Mbps
-        self.latency(a, b) + mb * 8.0 / bw
+        lat + mb * 8.0 / bw
+    }
+
+    /// Whether the dense reference store is active (tests / benches).
+    pub fn is_dense(&self) -> bool {
+        self.link.is_dense()
+    }
+
+    /// Switch to the dense reference store, materializing the full
+    /// matrices from the pricing function — O(n²) memory, kept in-tree
+    /// only so the sparse model stays pinned to it.  No RNG draws, so a
+    /// scenario's stream (and therefore everything downstream) is
+    /// unchanged by the switch.
+    pub fn use_dense_links(&mut self) {
+        let mut dense = link::DenseLinks::default();
+        dense.refresh_all(&self.params, &self.positions, self.range);
+        self.link = LinkModel::Dense(dense);
+    }
+
+    /// Switch (back) to the sparse on-demand store.
+    pub fn use_sparse_links(&mut self) {
+        let mut sparse = link::SparseLinks::default();
+        sparse.refresh_all(&self.params, &self.positions, self.range, &self.adjacency);
+        self.link = LinkModel::Sparse(sparse);
+    }
+
+    /// Total directed links currently materialized, self-links excluded
+    /// on both stores so the two figures are comparable (sparse: cached
+    /// adjacency entries, O(n·k); dense: the n·(n−1) off-diagonal
+    /// matrix cells).
+    pub fn materialized_links(&self) -> usize {
+        match &self.link {
+            LinkModel::Sparse(s) => s.cached_links(),
+            LinkModel::Dense(d) => d.bw.len() * d.bw.len().saturating_sub(1),
+        }
+    }
+
+    /// Fault injection (tests): force the *stored* bandwidth of `(a, b)`
+    /// to `bw` — the dense matrix entry, or a sparse cache entry with
+    /// current epochs — so degenerate-value guards can be exercised
+    /// against what reads actually serve.
+    pub fn poison_link_bw(&mut self, a: usize, b: usize, bw: f64) {
+        match &mut self.link {
+            LinkModel::Dense(d) => d.poison_bw(a, b, bw),
+            LinkModel::Sparse(s) => {
+                let (_, lat) = link::price(&self.params, &self.positions, self.range, a, b);
+                s.poison_bw(a, b, bw, lat);
+                s.poison_bw(b, a, bw, lat);
+            }
+        }
     }
 
     /// Generate a topology: positions uniform in a `side`×`side` square,
-    /// bandwidth sampled uniformly from `bw_choices` per unordered pair.
+    /// per-node base link rates sampled uniformly from `bw_choices`
+    /// (O(n) draws — the dense seed drew one value per pair).
     pub fn generate(
         rng: &mut Rng,
         n: usize,
@@ -192,20 +331,8 @@ impl Topology {
     ) -> Topology {
         let positions: Vec<Pos> =
             (0..n).map(|_| Pos { x: rng.range_f64(0.0, side), y: rng.range_f64(0.0, side) }).collect();
-        let mut bw = vec![vec![0.0; n]; n];
-        let mut latency = vec![vec![0.0; n]; n];
-        for i in 0..n {
-            bw[i][i] = f64::INFINITY;
-            for j in (i + 1)..n {
-                let b = *rng.choose(bw_choices);
-                bw[i][j] = b;
-                bw[j][i] = b;
-                let l = latency_s * rng.range_f64(0.5, 1.5);
-                latency[i][j] = l;
-                latency[j][i] = l;
-            }
-        }
-        Topology::from_parts(positions, range, bw, latency)
+        let params = LinkParams::generate(rng, n, bw_choices, latency_s);
+        Topology::from_parts(positions, range, params)
     }
 
     /// Generate positions pre-grouped into geographic clusters of
@@ -235,10 +362,8 @@ impl Topology {
                 positions.push(Pos { x: cx + r * ang.cos(), y: cy + r * ang.sin() });
             }
         }
-        let mut topo = Topology::generate(rng, n, 1.0, range, bw_choices, latency_s);
-        topo.positions = positions;
-        topo.rebuild_adjacency();
-        topo
+        let params = LinkParams::generate(rng, n, bw_choices, latency_s);
+        Topology::from_parts(positions, range, params)
     }
 }
 
@@ -252,13 +377,72 @@ mod tests {
     }
 
     #[test]
-    fn symmetric_bandwidth() {
+    fn symmetric_bandwidth_and_latency() {
         let t = topo(10);
         for i in 0..10 {
             for j in 0..10 {
-                assert_eq!(t.bw[i][j], t.bw[j][i]);
+                assert_eq!(t.bandwidth(i, j), t.bandwidth(j, i));
+                assert_eq!(t.latency(i, j), t.latency(j, i));
+            }
+            assert_eq!(t.bandwidth(i, i), f64::INFINITY);
+            assert_eq!(t.latency(i, i), 0.0);
+        }
+    }
+
+    #[test]
+    fn prices_follow_the_pricing_function() {
+        // Every read — cached or on demand, sparse or dense — must be
+        // exactly the pure pricing function of the current state.
+        let mut t = topo(12);
+        for dense in [false, true] {
+            if dense {
+                t.use_dense_links();
+            }
+            for i in 0..12 {
+                for j in 0..12 {
+                    let want = link::price(&t.params, &t.positions, t.range, i, j);
+                    assert_eq!(t.link_price(i, j), want, "dense={dense} ({i},{j})");
+                }
             }
         }
+    }
+
+    #[test]
+    fn sparse_materializes_only_adjacency() {
+        let t = topo(30);
+        let degree_total: usize = (0..30).map(|i| t.neighbors_ref(i).len()).sum();
+        assert_eq!(t.materialized_links(), degree_total);
+        assert!(degree_total < 30 * 30);
+        let mut dense = t.clone();
+        dense.use_dense_links();
+        assert_eq!(dense.materialized_links(), 30 * 29);
+    }
+
+    #[test]
+    fn link_model_round_trips_between_stores() {
+        // dense → sparse → dense: every switch re-derives from the same
+        // pricing function, so prices survive the round trip bit-for-bit
+        // — including after a teleport + rebuild while dense.
+        let all_prices = |t: &Topology| -> Vec<(f64, f64)> {
+            let mut v = Vec::with_capacity(15 * 15);
+            for i in 0..15 {
+                for j in 0..15 {
+                    v.push(t.link_price(i, j));
+                }
+            }
+            v
+        };
+        let mut t = topo(15);
+        t.use_dense_links();
+        t.positions[3] = Pos { x: 5.0, y: 5.0 };
+        t.rebuild_adjacency();
+        let want = all_prices(&t);
+        t.use_sparse_links();
+        assert!(!t.is_dense());
+        assert_eq!(all_prices(&t), want);
+        t.use_dense_links();
+        assert!(t.is_dense());
+        assert_eq!(all_prices(&t), want);
     }
 
     #[test]
@@ -287,7 +471,9 @@ mod tests {
     fn rebuild_adjacency_tracks_moved_positions() {
         let mut t = topo(12);
         // Teleport node 0 far away: after explicit invalidation it must
-        // drop out of everyone's neighbor list.
+        // drop out of everyone's neighbor list, and its link prices must
+        // follow the new distance.
+        let bw_before = t.bandwidth(0, 1);
         t.positions[0] = Pos { x: 1e6, y: 1e6 };
         t.rebuild_adjacency();
         assert!(t.neighbors_ref(0).is_empty());
@@ -295,11 +481,60 @@ mod tests {
             assert!(!t.neighbors_ref(i).contains(&0));
             assert_eq!(t.neighbors(i), t.neighbors_scan(i));
         }
-        // Teleport it back onto node 1: they become neighbors again.
+        let bw_far = t.bandwidth(0, 1);
+        assert!(bw_far <= bw_before, "teleporting away must not improve the link");
+        assert_eq!(
+            bw_far,
+            t.params.rate[0].min(t.params.rate[1]) * link::EDGE_ATTENUATION,
+            "far links floor at the edge attenuation"
+        );
+        // Teleport it back onto node 1: they become neighbors again and
+        // the link prices at full strength.
         t.positions[0] = t.positions[1];
         t.rebuild_adjacency();
         assert!(t.neighbors_ref(0).contains(&1));
         assert!(t.neighbors_ref(1).contains(&0));
+        assert_eq!(t.bandwidth(0, 1), t.params.rate[0].min(t.params.rate[1]));
+    }
+
+    #[test]
+    fn advance_links_matches_full_rebuild() {
+        // The incremental mobility path must leave exactly the state a
+        // full rebuild produces — adjacency and prices — across random
+        // churn, on both link models.
+        let mut rng = Rng::new(0x5fa7);
+        for dense in [false, true] {
+            let mut t = topo(25);
+            if dense {
+                t.use_dense_links();
+            }
+            for round in 0..10 {
+                let moved: Vec<usize> = {
+                    let mut m: Vec<usize> = (0..25).filter(|_| rng.chance(0.25)).collect();
+                    if m.is_empty() {
+                        m.push(rng.below(25));
+                    }
+                    m
+                };
+                for &i in &moved {
+                    t.positions[i] =
+                        Pos { x: rng.range_f64(0.0, 120.0), y: rng.range_f64(0.0, 120.0) };
+                }
+                t.advance_links(&moved);
+                let mut full = t.clone();
+                full.rebuild_adjacency();
+                for i in 0..25 {
+                    assert_eq!(t.neighbors_ref(i), full.neighbors_ref(i));
+                    for j in 0..25 {
+                        assert_eq!(
+                            t.link_price(i, j),
+                            full.link_price(i, j),
+                            "dense={dense} round={round} ({i},{j})"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]
@@ -355,26 +590,60 @@ mod tests {
 
     #[test]
     fn transfer_degenerate_inputs() {
-        let mut t = topo(5);
-        // Zero-size (and negative-size) transfers are free.
-        assert_eq!(t.transfer_secs(0, 1, 0.0, 1), 0.0);
-        assert_eq!(t.transfer_secs(0, 1, -3.0, 1), 0.0);
-        // Self-transfers are free even with broken links.
-        t.bw[2][2] = 0.0;
-        assert_eq!(t.transfer_secs(2, 2, 10.0, 1), 0.0);
-        // Zero, negative and NaN bandwidth are unusable links, not NaN
-        // leaking into JCT sums.
-        t.bw[0][1] = 0.0;
-        assert_eq!(t.transfer_secs(0, 1, 10.0, 1), f64::INFINITY);
-        t.bw[0][1] = -5.0;
-        assert_eq!(t.transfer_secs(0, 1, 10.0, 1), f64::INFINITY);
-        t.bw[0][1] = f64::NAN;
-        assert_eq!(t.transfer_secs(0, 1, 10.0, 1), f64::INFINITY);
-        // Zero flows behaves like one flow.
-        let a = t.transfer_secs(0, 2, 10.0, 0);
-        let b = t.transfer_secs(0, 2, 10.0, 1);
-        assert_eq!(a, b);
-        assert!(a.is_finite());
+        for dense in [false, true] {
+            let mut t = topo(5);
+            if dense {
+                t.use_dense_links();
+            }
+            // Zero-size (and negative-size) transfers are free.
+            assert_eq!(t.transfer_secs(0, 1, 0.0, 1), 0.0);
+            assert_eq!(t.transfer_secs(0, 1, -3.0, 1), 0.0);
+            // Self-transfers are free regardless of any stored value.
+            assert_eq!(t.transfer_secs(2, 2, 10.0, 1), 0.0);
+            // Zero, negative and NaN *stored* bandwidth (a poisoned cache
+            // entry on the sparse path, a poisoned matrix cell on the
+            // dense one) are unusable links, not NaN leaking into JCT
+            // sums — the satellite bugfix guard.
+            for bad in [0.0, -5.0, f64::NAN] {
+                t.poison_link_bw(0, 1, bad);
+                assert_eq!(
+                    t.transfer_secs(0, 1, 10.0, 1),
+                    f64::INFINITY,
+                    "dense={dense} bad={bad}"
+                );
+                assert_eq!(t.transfer_secs(1, 0, 10.0, 1), f64::INFINITY);
+            }
+            // Degenerate per-node rates poison the *on-demand* path the
+            // same way (no poisoned cache entry involved).  A zero rate
+            // bottlenecks the pair to zero; `f64::min` ignores a single
+            // NaN operand, so the NaN case needs both ends degenerate.
+            let mut t2 = topo(5);
+            if dense {
+                t2.use_dense_links();
+            }
+            t2.params.rate[3] = 0.0;
+            t2.rebuild_adjacency();
+            assert_eq!(t2.transfer_secs(3, 4, 10.0, 1), f64::INFINITY, "dense={dense}");
+            t2.params.rate[3] = f64::NAN;
+            t2.params.rate[4] = f64::NAN;
+            t2.rebuild_adjacency();
+            assert_eq!(t2.transfer_secs(3, 4, 10.0, 1), f64::INFINITY, "dense={dense}");
+            // Degenerate *latency* (NaN jitter) must not leak NaN into
+            // JCT sums either, even when bandwidth is healthy.
+            let mut t3 = topo(5);
+            if dense {
+                t3.use_dense_links();
+            }
+            t3.params.jitter[1] = f64::NAN;
+            t3.rebuild_adjacency();
+            assert!(t3.bandwidth(1, 2) > 0.0, "bandwidth side stays healthy");
+            assert_eq!(t3.transfer_secs(1, 2, 10.0, 1), f64::INFINITY, "dense={dense}");
+            // Zero flows behaves like one flow.
+            let a = t.transfer_secs(0, 2, 10.0, 0);
+            let b = t.transfer_secs(0, 2, 10.0, 1);
+            assert_eq!(a, b);
+            assert!(a.is_finite());
+        }
     }
 
     #[test]
@@ -408,8 +677,8 @@ mod tests {
             let mut rng = Rng::new(9);
             let t = Topology::generate_clustered(&mut rng, n, cs, 10.0, 25.0, &[100.0], 0.001);
             assert_eq!(t.n(), n, "n={n} cs={cs}");
-            assert_eq!(t.bw.len(), n);
-            assert_eq!(t.latency.len(), n);
+            assert_eq!(t.params.rate.len(), n);
+            assert_eq!(t.params.jitter.len(), n);
             let n_clusters = n.div_ceil(cs);
             // Each cluster's members stay within the spread diameter of
             // each other, including the ragged final cluster.
@@ -437,6 +706,11 @@ mod tests {
         let a = topo(8);
         let b = topo(8);
         assert_eq!(a.positions, b.positions);
-        assert_eq!(a.bw, b.bw);
+        assert_eq!(a.params, b.params);
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(a.link_price(i, j), b.link_price(i, j));
+            }
+        }
     }
 }

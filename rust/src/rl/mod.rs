@@ -109,6 +109,34 @@ pub struct Episode {
 /// A scheduling policy: picks a candidate index for the current layer.
 /// (Not `Send`: the DQN variant holds PJRT handles; the simulator is
 /// single-threaded by design for determinism.)
+///
+/// # Example
+///
+/// ```
+/// use srole::dnn::ModelKind;
+/// use srole::rl::{state_vector_into, CandidateView, Policy, TabularQ, STATE_DIM};
+/// use srole::util::Rng;
+///
+/// let graph = ModelKind::Rnn.build();
+/// let layer = &graph.layers[0];
+/// let cands: Vec<CandidateView> = (0..3)
+///     .map(|i| CandidateView {
+///         node: i,
+///         avail_cpu: 0.2 + 0.3 * i as f64,
+///         avail_mem: 0.5,
+///         avail_bw: 0.5,
+///         bw_to_owner: 100.0,
+///     })
+///     .collect();
+/// // The scheduler records the dense state once and hands it to the
+/// // policy — `choose` never re-featurizes.
+/// let mut state = [0.0f32; STATE_DIM];
+/// state_vector_into(layer, [0.1, 0.2, 0.3], &cands, &mut state);
+/// let mut policy = TabularQ::new(0.15, 0.0); // lr 0.15, ε = 0 (greedy)
+/// let mut rng = Rng::new(1);
+/// let action = policy.choose(layer, &state, &cands, &mut rng, false);
+/// assert!(action < cands.len());
+/// ```
 pub trait Policy {
     /// Choose among `cands` for `layer`; `explore` enables ε-greedy.
     /// `state` is the dense featurization the scheduler already recorded

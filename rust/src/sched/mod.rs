@@ -18,6 +18,13 @@
 //! Decision-time accounting uses explicit per-operation cost constants so
 //! Fig 7/12 can be regenerated; the constants are calibrated to
 //! edge-class hardware and documented inline.
+//!
+//! Candidate features read the network through [`crate::net::Topology`]
+//! — `bw_to_owner` comes from [`crate::net::Topology::bandwidth`], which
+//! since the sparse link model prices the pair on demand (bounded
+//! adjacency cache, `net::link`) rather than reading an O(n²) matrix;
+//! the candidate sets themselves stay O(degree) via the precomputed
+//! cluster adjacency.
 
 use crate::cluster::{Deployment, Membership, NodeId, ResourceKind, Resources};
 use crate::dnn::ModelGraph;

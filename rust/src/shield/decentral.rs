@@ -364,12 +364,8 @@ mod tests {
         let center = positions.len();
         positions.push(Pos { x: 15.0, y: 9.0 }); // within 60% of range 40 of all groups
         let n = positions.len();
-        let topo = Topology::from_parts(
-            positions,
-            40.0,
-            vec![vec![100.0; n]; n],
-            vec![vec![0.001; n]; n],
-        );
+        let topo =
+            Topology::from_parts(positions, 40.0, crate::net::LinkParams::uniform(n, 100.0, 0.001));
         let nodes: Vec<EdgeNode> = (0..n)
             .map(|id| EdgeNode { id, caps: Resources::new(1.0, 2048.0, 100.0) })
             .collect();

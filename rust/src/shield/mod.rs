@@ -58,6 +58,40 @@ pub struct ShieldOutcome {
 }
 
 /// A shield checks one round's joint action against the live state.
+///
+/// # Example
+///
+/// ```
+/// use srole::cluster::{Deployment, Resources, CONTAINER_PROFILE};
+/// use srole::shield::{CentralShield, DecentralShield, ProposedAction, Shield};
+/// use srole::sim::ResourceState;
+/// use srole::util::Rng;
+///
+/// let mut rng = Rng::new(7);
+/// let dep = Deployment::generate(&mut rng, 10, 5, &CONTAINER_PROFILE);
+/// let state = ResourceState::new(&dep);
+/// // Two agents pile heavy layers onto node 0 in the same round —
+/// // neither sees the other's pick (the action-collision source).
+/// let cap = *state.caps(0);
+/// let proposals: Vec<ProposedAction> = (0..2)
+///     .map(|i| ProposedAction {
+///         idx: i,
+///         agent: dep.clusters[0].members[i],
+///         job: i,
+///         layer_id: 0,
+///         demand: Resources::new(cap.cpu * 0.8, cap.mem * 0.3, 1.0),
+///         target: 0,
+///     })
+///     .collect();
+/// // SROLE-C: one shield at the cluster head sees the whole round.
+/// let mut central = CentralShield::new();
+/// let out = central.check(&proposals, &state, &dep, 0.9);
+/// assert_eq!(out.checked, 2);
+/// assert!(out.collisions >= 1, "1.6 CPU on one node must collide at α = 0.9");
+/// // SROLE-D: same contract, one shield per sub-cluster + delegates.
+/// let mut decentral = DecentralShield::new(&dep, &dep.clusters[0].members, 2);
+/// assert_eq!(decentral.check(&proposals, &state, &dep, 0.9).checked, 2);
+/// ```
 pub trait Shield {
     fn check(
         &mut self,

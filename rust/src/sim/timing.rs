@@ -20,6 +20,10 @@
 //!   *is* the iteration time.
 //! * `transfer` — activation bytes over the pairwise link for
 //!   consecutive layers on different nodes, throttled by NIC contention.
+//!   Link bandwidth/latency come from [`crate::net::Topology::transfer_secs`],
+//!   which since the sparse link model prices each pair on demand
+//!   (distance-attenuated per-node base rates, `net::link`) instead of
+//!   reading O(n²) matrices — this file is the model's hottest consumer.
 //! * `t_sync` — parameter-server synchronization: replica parameters flow
 //!   owner → cluster head, and heads share the global PS ingress with
 //!   every other cluster — the cause of the paper's "JCT grows with the
@@ -140,7 +144,15 @@ mod tests {
 
     fn dep(n: usize) -> Deployment {
         let mut rng = Rng::new(13);
-        Deployment::generate(&mut rng, n, 5, &CONTAINER_PROFILE)
+        let mut d = Deployment::generate(&mut rng, n, 5, &CONTAINER_PROFILE);
+        // These tests assert *relations of the timing model* (fill vs
+        // bottleneck, contention, memory pressure), not link-lottery
+        // outcomes: pin every node to a uniform fast base rate so a
+        // low-bandwidth draw can never make parameter sync the
+        // bottleneck and flip a compute-side inequality.
+        d.topo.params = crate::net::LinkParams::uniform(n, 1000.0, 0.002);
+        d.topo.rebuild_adjacency();
+        d
     }
 
     fn all_on(node: NodeId, graph: &ModelGraph) -> Vec<NodeId> {
