@@ -14,6 +14,16 @@
 //!   1000 / 3000 / 10 000 nodes in the scale sweep's constant-density
 //!   geometry (sparse must be strictly faster at 3000 and 10 000 —
 //!   asserted in full runs; smoke mode only prints);
+//! * partition rebuild: the grid-backed partitioner (`SubClusters::build`)
+//!   vs the pinned k-means + O(m²) scan reference (`build_reference`) at
+//!   1000 / 3000 / 10 000 members (grid must be strictly faster at 3000
+//!   and 10 000 — asserted in full runs; smoke runs only the 1000 cell);
+//! * region-sharded tick engine: one full SROLE-D scenario, lanes run
+//!   serially (`shards = 1`) vs across every core (`shards = N`), at
+//!   10 000 / 30 000 / 100 000 nodes in the scale-sweep geometry, with a
+//!   byte-identical-metrics check before timing (sharded must be
+//!   strictly faster at 30 000+ on multi-core hosts — full runs only;
+//!   smoke runs only the 10 000 cell);
 //! * parallel scenario harness: a 4-scenario sweep, serial vs parallel,
 //!   with a bit-identical-reports determinism check;
 //! * MARL wave decision latency and DES execution throughput;
@@ -24,7 +34,7 @@
 
 use srole::cluster::{Deployment, Membership, Resources, SubClusters, CONTAINER_PROFILE};
 use srole::config::ExperimentConfig;
-use srole::coordinator::{pretrain, Method};
+use srole::coordinator::{pretrain, Experiment, Method};
 use srole::dnn::ModelKind;
 use srole::harness::{run_parallel, Sweep};
 use srole::net::{DynamicTopology, MobilityModel, Topology};
@@ -491,6 +501,128 @@ fn main() {
         }
     }
 
+    // --- partition rebuild: grid-seeded vs k-means + O(m²) reference ----
+    // The grid partitioner's cells: `SubClusters::build` (spatial-grid
+    // seeding + grid-windowed boundary derivation) against
+    // `build_reference` (the pinned k-means + O(m²) scan path) on a
+    // single constant-density cluster.  The two seeders legitimately
+    // pick different (both valid) partitions, so equivalence is pinned
+    // where it is exact: from the SAME assignment, the grid boundary
+    // derivation must reproduce the scan derivation byte-for-byte.
+    let partition_sizes: &[usize] = if bench_fast { &[1000] } else { &[1000, 3000, 10_000] };
+    for &n in partition_sizes {
+        let mut rng_p = Rng::new(120 + n as u64);
+        let spread = 25.0 * (n as f64 / 256.0).sqrt();
+        let topo = Topology::generate_clustered(
+            &mut rng_p,
+            n,
+            n,
+            spread,
+            25.0,
+            &[100.0],
+            0.001,
+        );
+        let members: Vec<usize> = (0..n).collect();
+        let k = (n / 10).max(2);
+        // Equivalence before timing.
+        let subs = SubClusters::build(&members, &topo, k);
+        let scan_derived = SubClusters::from_assignment_reference(
+            subs.members.clone(),
+            subs.assignment.clone(),
+            subs.k,
+            &topo,
+        );
+        assert_eq!(subs, scan_derived, "grid boundary derivation diverged at {n} members");
+        let t_grid = bench
+            .measure(&format!("partition_build_grid_{n}m"), || {
+                SubClusters::build(&members, &topo, k)
+            })
+            .median_secs();
+        let t_ref = bench
+            .measure(&format!("partition_build_reference_{n}m"), || {
+                SubClusters::build_reference(&members, &topo, k)
+            })
+            .median_secs();
+        println!(
+            "partition build speedup (reference/grid) at {n} members, k={k}: {:.1}x",
+            t_ref / t_grid.max(1e-12)
+        );
+        if n >= 3000 && !bench_fast {
+            assert!(
+                t_grid < t_ref,
+                "grid partitioner must beat k-means + O(m²) scan at {n} members: \
+                 {t_grid} vs {t_ref}"
+            );
+        }
+    }
+
+    // --- region-sharded tick engine: serial vs sharded full runs --------
+    // The tentpole cells: one full SROLE-D scenario in the `figures
+    // scale` geometry (1000-node shield regions, constant density),
+    // lanes advanced serially (`shards = 1`) vs chunked across every
+    // core (`shards = N`).  Byte-identity across shard counts is
+    // asserted at the smallest size before anything is timed; the
+    // speedup assert is full-run + multi-core only.
+    let shard_workers = srole::harness::default_threads().max(2);
+    let shard_cfg = |n: usize, shards: usize| {
+        let mut cfg = ExperimentConfig {
+            n_edges: n,
+            cluster_size: n.min(1000),
+            model: ModelKind::Rnn,
+            iterations: 2,
+            pretrain_episodes: 10,
+            repetitions: 1,
+            shards,
+            ..Default::default()
+        };
+        cfg.subclusters = (cfg.cluster_size / 10).max(2);
+        let profile = cfg.profile.resource_profile();
+        let spread = profile.range_m * (cfg.cluster_size as f64 / 256.0).sqrt();
+        if spread > profile.cluster_spread_m {
+            cfg.cluster_spread_m = spread;
+        }
+        cfg
+    };
+    {
+        let a = Experiment::new(shard_cfg(10_000, 1)).run(Method::SroleD).metrics;
+        let b = Experiment::new(shard_cfg(10_000, shard_workers)).run(Method::SroleD).metrics;
+        assert_eq!(
+            a.to_json().to_string(),
+            b.to_json().to_string(),
+            "sharded tick engine diverged from the serial lane order at 10k nodes"
+        );
+        assert!(!a.jct.is_empty(), "vacuous: the 10k shard-equivalence cell ran no jobs");
+    }
+    // Full scenarios per sample are expensive — sweep-style sampling.
+    let mut tick_bench = Bench::with_config("hotpath_tick", srole::util::benchkit::BenchConfig::sweep());
+    let tick_sizes: &[usize] = if bench_fast { &[10_000] } else { &[10_000, 30_000, 100_000] };
+    for &n in tick_sizes {
+        let cfg_serial = shard_cfg(n, 1);
+        let cfg_sharded = shard_cfg(n, shard_workers);
+        let lanes = (n + cfg_serial.cluster_size - 1) / cfg_serial.cluster_size;
+        let t_serial = tick_bench
+            .measure(&format!("tick_engine_serial_{n}n"), || {
+                Experiment::new(cfg_serial.clone()).run(Method::SroleD).metrics.makespan
+            })
+            .median_secs();
+        let t_sharded = tick_bench
+            .measure(&format!("tick_engine_sharded_{n}n"), || {
+                Experiment::new(cfg_sharded.clone()).run(Method::SroleD).metrics.makespan
+            })
+            .median_secs();
+        println!(
+            "sharded tick speedup at {n} nodes ({lanes} lanes, {shard_workers} shards): {:.1}x",
+            t_serial / t_sharded.max(1e-12)
+        );
+        if n >= 30_000 && !bench_fast && srole::harness::default_threads() > 1 {
+            assert!(
+                t_sharded < t_serial,
+                "sharded tick engine must beat the serial lane order at {n} nodes: \
+                 {t_sharded} vs {t_serial}"
+            );
+        }
+    }
+
     // --- parallel harness: 4-scenario sweep, serial vs parallel ---------
     let sweep_base = ExperimentConfig {
         n_edges: 10,
@@ -565,8 +697,13 @@ fn main() {
     }
 
     bench.print_report();
+    tick_bench.print_report();
     match bench.write_json(std::path::Path::new(".")) {
         Ok(path) => println!("bench report: {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
+    match tick_bench.write_json(std::path::Path::new(".")) {
+        Ok(path) => println!("bench report: {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_hotpath_tick.json: {e}"),
     }
 }

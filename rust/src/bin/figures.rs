@@ -9,10 +9,11 @@
 //!        `[--models vgg16,googlenet,rnn] [--edges 5,10,15,20,25]`
 //!        `[--pretrain N]`
 //!
-//! `figures scale` sweeps 10→10,000-node clusters concurrently (the
-//! sparse-link-model scale ceiling; `--edges` overrides the sweep
-//! points, so CI smokes just the 10,000-node cell; node density is held
-//! constant past 256 nodes); `figures churn` sweeps node-failure
+//! `figures scale` sweeps 10→100,000-node deployments concurrently (the
+//! region-sharded tick-engine scale ceiling; `--edges` overrides the
+//! sweep points, so CI smokes just the 100,000-node cell; node density
+//! is held constant past 256 nodes and cells of ≥30,000 nodes shard
+//! their lanes across every core); `figures churn` sweeps node-failure
 //! rates on a 100-node cluster through the dynamic event-driven driver;
 //! `figures
 //! mobility` sweeps a random-waypoint speed × pause grid (plus a
@@ -361,35 +362,47 @@ fn fig10_tasks_real(ctx: &Ctx) {
 }
 
 /// Target mean node degree of the scale sweep's constant-density
-/// geometry: the single cluster's disc grows with √n so the grid
-/// adjacency — and every O(n·k) structure keyed on it, including the
-/// sparse link cache — stays genuinely sparse up to 10k nodes.
+/// geometry: each cluster's disc grows with √n so the grid adjacency —
+/// and every O(n·k) structure keyed on it, including the sparse link
+/// cache — stays genuinely sparse up to 100k nodes.
 const SCALE_TARGET_DEGREE: f64 = 256.0;
 
-/// `figures scale`: the ROADMAP scale sweep — 10→10 000-node clusters,
-/// all methods, one concurrent harness run.  `--edges` overrides the
-/// sweep points (CI smokes only the 10 000-node ceiling cell).
+/// Past this deployment size the scale sweep caps cluster size at
+/// [`SCALE_CLUSTER_CAP`] (so one scenario holds many shield regions)
+/// and shards its lanes across every core.
+const SCALE_SHARD_THRESHOLD: usize = 30_000;
+const SCALE_CLUSTER_CAP: usize = 1000;
+
+/// `figures scale`: the ROADMAP scale sweep — 10→100 000-node
+/// deployments, all methods, one concurrent harness run.  `--edges`
+/// overrides the sweep points (CI smokes only the 100 000-node ceiling
+/// cell).
 fn scale_sweep(ctx: &Ctx) {
     let edges: Vec<usize> = if ctx.edges_explicit {
         ctx.edges.clone()
     } else {
-        vec![10, 25, 50, 100, 300, 1000, 3000, 10_000]
+        vec![10, 25, 50, 100, 300, 1000, 3000, 10_000, 30_000, 100_000]
     };
     let model = ctx.models.first().copied().unwrap_or(ModelKind::Vgg16);
     let sweep = Sweep::new(ctx.base(model)).methods(&Method::ALL).edges(&edges);
     let mut scenarios = sweep.scenarios();
-    // The point of this sweep is CLUSTER scale, not deployment size:
-    // grow one cluster (and its shield membership structures) to the
-    // full node count instead of tiling 5-node clusters.  Density stays
+    // The point of this sweep is SHIELD-REGION scale, not tiling 5-node
+    // clusters: grow one cluster (and its shield membership structures)
+    // to the full node count, capped at SCALE_CLUSTER_CAP so the
+    // 30k/100k cells become many-region deployments the sharded tick
+    // engine can spread across cores (lane = cluster).  Density stays
     // constant: past ~SCALE_TARGET_DEGREE nodes the cluster disc grows
     // with √n, so adjacency degree — and the sparse link cache behind
     // it — stays ~flat instead of going complete-graph quadratic.
     for sc in &mut scenarios {
-        sc.cfg.cluster_size = sc.cfg.n_edges;
-        sc.cfg.subclusters = (sc.cfg.n_edges / 10).max(2);
+        sc.cfg.cluster_size = sc.cfg.n_edges.min(SCALE_CLUSTER_CAP);
+        sc.cfg.subclusters = (sc.cfg.cluster_size / 10).max(2);
+        if sc.cfg.n_edges >= SCALE_SHARD_THRESHOLD {
+            sc.cfg.shards = srole::harness::default_threads();
+        }
         let profile = sc.cfg.profile.resource_profile();
         let spread =
-            profile.range_m * (sc.cfg.n_edges as f64 / SCALE_TARGET_DEGREE).sqrt();
+            profile.range_m * (sc.cfg.cluster_size as f64 / SCALE_TARGET_DEGREE).sqrt();
         if spread > profile.cluster_spread_m {
             sc.cfg.cluster_spread_m = spread;
         }

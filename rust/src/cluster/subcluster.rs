@@ -1,14 +1,21 @@
 //! Sub-cluster partitioning for decentralized shielding (§IV-D).
 //!
 //! "A large cluster is divided into multiple sub-clusters according to the
-//! geographical proximity" — implemented as k-means on node positions
-//! (deterministic farthest-point initialization, fixed iteration count).
+//! geographical proximity" — implemented two ways behind one entry point:
+//! small memberships run deterministic k-means on node positions
+//! (farthest-point initialization, fixed iteration count) plus an O(m²)
+//! boundary scan; memberships of [`GRID_PARTITION_THRESHOLD`] and above
+//! run the grid-backed partitioner, which merges [`SpatialGrid`] cells
+//! down to ≤ k regions and derives boundary pairs from grid adjacency in
+//! O(m·k).  The k-means + scan path stays in-tree as the pinned
+//! equivalence reference (ARCHITECTURE.md policy).
+//!
 //! Boundary nodes are those within transmission range of a node in a
 //! different sub-cluster; each pair of *neighboring* sub-clusters elects a
 //! delegate shield for its shared boundary.
 
 use super::NodeId;
-use crate::net::Topology;
+use crate::net::{Pos, SpatialGrid, Topology};
 use crate::util::NodeSet;
 
 /// The sub-cluster decomposition of one cluster.
@@ -56,24 +63,83 @@ pub struct SubClusters {
 /// transmission range — the fidelity gap §IV-D accepts by design.
 pub const BOUNDARY_RANGE_FRAC: f64 = 0.6;
 
+/// Memberships at or above this size build through the grid-backed
+/// partitioner (cell-merge regions + grid-adjacency boundary pairs);
+/// below it the original k-means + O(m²) scan runs — small memberships
+/// keep their historical partitions bit-exactly, and the scan is the
+/// faster option there anyway.
+pub const GRID_PARTITION_THRESHOLD: usize = 64;
+
 impl SubClusters {
-    /// Partition `members` into `k` sub-clusters by position and build
-    /// the dense lookup tables.
+    /// Partition `members` into (at most) `k` sub-clusters by position
+    /// and build the dense lookup tables.  Large memberships
+    /// (≥ [`GRID_PARTITION_THRESHOLD`]) route through the grid-backed
+    /// cell-merge partitioner; small ones keep the k-means reference
+    /// path.  Either way the boundary/delegate tables come out of the
+    /// same accumulation rules, pinned to the O(m²) scan reference by
+    /// equivalence tests.
     pub fn build(members: &[NodeId], topo: &Topology, k: usize) -> SubClusters {
+        if members.len() >= GRID_PARTITION_THRESHOLD {
+            SubClusters::build_grid(members, topo, k)
+        } else {
+            SubClusters::build_reference(members, topo, k)
+        }
+    }
+
+    /// The pinned reference builder: deterministic k-means assignment +
+    /// the O(m²) boundary scan (exactly the pre-grid `build`).  Kept
+    /// in-tree per the ARCHITECTURE.md pinning policy; the grid builder's
+    /// boundary derivation is equivalence-tested against it.
+    pub fn build_reference(members: &[NodeId], topo: &Topology, k: usize) -> SubClusters {
         let k = k.clamp(1, members.len().max(1));
         let assignment = kmeans(members, topo, k);
-        SubClusters::from_assignment(members.to_vec(), assignment, k, topo)
+        SubClusters::from_assignment_reference(members.to_vec(), assignment, k, topo)
+    }
+
+    /// Grid-backed builder: seed regions from [`SpatialGrid`] cells
+    /// (cell-merge down to ≤ `k` regions, so degenerate inputs — fewer
+    /// occupied cells than `k`, all-coincident positions — yield fewer
+    /// regions instead of panicking), then derive boundary pairs from
+    /// grid adjacency in O(m·k) instead of the all-pairs scan.
+    pub fn build_grid(members: &[NodeId], topo: &Topology, k: usize) -> SubClusters {
+        let k = k.clamp(1, members.len().max(1));
+        let (assignment, k_eff) = grid_partition(members, topo, k);
+        SubClusters::from_assignment(members.to_vec(), assignment, k_eff, topo)
     }
 
     /// Build from a fixed `(members, assignment)` pair — the from-scratch
-    /// reference construction the incremental membership ops
+    /// construction the incremental membership ops
     /// ([`SubClusters::remove_member`] / [`SubClusters::add_member`]) are
-    /// pinned against by randomized equivalence tests.
+    /// pinned against by randomized equivalence tests.  Boundary pairs
+    /// derive through the grid for large memberships (byte-identical to
+    /// the scan — see [`SubClusters::from_assignment_reference`]).
     pub fn from_assignment(
         members: Vec<NodeId>,
         assignment: Vec<usize>,
         k: usize,
         topo: &Topology,
+    ) -> SubClusters {
+        SubClusters::from_assignment_impl(members, assignment, k, topo, false)
+    }
+
+    /// Reference construction forcing the O(m²) boundary scan regardless
+    /// of membership size — what the grid-backed builds and incremental
+    /// updates are pinned against by randomized equivalence tests.
+    pub fn from_assignment_reference(
+        members: Vec<NodeId>,
+        assignment: Vec<usize>,
+        k: usize,
+        topo: &Topology,
+    ) -> SubClusters {
+        SubClusters::from_assignment_impl(members, assignment, k, topo, true)
+    }
+
+    fn from_assignment_impl(
+        members: Vec<NodeId>,
+        assignment: Vec<usize>,
+        k: usize,
+        topo: &Topology,
+        force_scan: bool,
     ) -> SubClusters {
         assert_eq!(members.len(), assignment.len());
         let n = topo.n();
@@ -89,7 +155,8 @@ impl SubClusters {
             pair_boundary: Vec::new(),
             pair_allowed: Vec::new(),
         };
-        sc.boundaries = sc.find_boundaries(topo);
+        sc.boundaries =
+            if force_scan { sc.find_boundaries_scan(topo) } else { sc.find_boundaries(topo) };
         sc.build_indices(n);
         sc
     }
@@ -308,6 +375,17 @@ impl SubClusters {
     /// lexicographic order, so per-pair node vectors come out identical
     /// to a [`SubClusters::from_assignment`] reference rebuild.
     fn refresh_pairs_of(&mut self, sub: usize, topo: &Topology) {
+        if self.members.len() >= GRID_PARTITION_THRESHOLD {
+            self.refresh_pairs_of_grid(sub, topo);
+        } else {
+            self.refresh_pairs_of_scan(sub, topo);
+        }
+    }
+
+    /// Reference refresh: the O(|sub| · members) index scan.  What the
+    /// grid-backed refresh is pinned against (via the reference rebuild
+    /// in the randomized equivalence tests).
+    fn refresh_pairs_of_scan(&mut self, sub: usize, topo: &Topology) {
         let m_len = self.members.len();
         // Member indices of `sub`, ascending.
         let sub_idx: Vec<usize> = (0..m_len).filter(|&i| self.assignment[i] == sub).collect();
@@ -326,6 +404,43 @@ impl SubClusters {
                 }
             }
         }
+        self.finish_refresh(sub, fresh);
+    }
+
+    /// Grid-backed refresh: query the boundary radius around each `sub`
+    /// member through a [`SpatialGrid`] over the member positions —
+    /// O(|sub| · local density) instead of O(|sub| · members).  The
+    /// discovered index pairs are sorted and deduplicated (both-in-`sub`
+    /// pairs surface from each end) before accumulation, restoring the
+    /// scan's ascending lexicographic (i, j) visit order so the per-pair
+    /// node vectors come out bit-identical.
+    fn refresh_pairs_of_grid(&mut self, sub: usize, topo: &Topology) {
+        let pts: Vec<Pos> = self.members.iter().map(|&m| topo.positions[m]).collect();
+        let r = topo.range * BOUNDARY_RANGE_FRAC;
+        let grid = SpatialGrid::build(&pts, r.max(1e-9));
+        let mut near: Vec<usize> = Vec::new();
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
+        for i in 0..pts.len() {
+            if self.assignment[i] != sub {
+                continue;
+            }
+            grid.within_into(&pts, pts[i], r, i, &mut near);
+            for &j in &near {
+                pairs.push((i.min(j), i.max(j)));
+            }
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        let mut fresh: Vec<((usize, usize), Vec<NodeId>)> = Vec::new();
+        for &(i, j) in &pairs {
+            self.accumulate_boundary_pair(&mut fresh, topo, i, j);
+        }
+        self.finish_refresh(sub, fresh);
+    }
+
+    /// Splice `sub`'s freshly derived pairs over its stale ones and
+    /// re-derive the (small, O(k²)-sized) pair tables.
+    fn finish_refresh(&mut self, sub: usize, fresh: Vec<((usize, usize), Vec<NodeId>)>) {
         self.boundaries.retain(|((a, b), _)| *a != sub && *b != sub);
         self.boundaries.extend(fresh);
         self.boundaries.sort_by_key(|(k2, _)| *k2);
@@ -396,10 +511,46 @@ impl SubClusters {
     }
 
     fn find_boundaries(&self, topo: &Topology) -> Vec<((usize, usize), Vec<NodeId>)> {
+        if self.members.len() >= GRID_PARTITION_THRESHOLD {
+            self.find_boundaries_grid(topo)
+        } else {
+            self.find_boundaries_scan(topo)
+        }
+    }
+
+    /// Reference boundary derivation: the O(m²) all-pairs scan, kept
+    /// in-tree as the pin for the grid-adjacency derivation.
+    fn find_boundaries_scan(&self, topo: &Topology) -> Vec<((usize, usize), Vec<NodeId>)> {
         let mut out: Vec<((usize, usize), Vec<NodeId>)> = Vec::new();
         for i in 0..self.members.len() {
             for j in (i + 1)..self.members.len() {
                 self.accumulate_boundary_pair(&mut out, topo, i, j);
+            }
+        }
+        out.sort_by_key(|(k2, _)| *k2);
+        out
+    }
+
+    /// Grid-adjacency boundary derivation: each member queries the
+    /// boundary radius through a [`SpatialGrid`] over the member
+    /// positions, visiting only the (i, j) pairs that can possibly
+    /// accumulate — O(m · local density) instead of O(m²).  The query
+    /// returns ascending indices and `i` ascends outside, so pairs are
+    /// visited in exactly the scan's lexicographic order and the output
+    /// is bit-identical (the accumulate predicate re-checks the same
+    /// exact distance the grid pre-filtered on).
+    fn find_boundaries_grid(&self, topo: &Topology) -> Vec<((usize, usize), Vec<NodeId>)> {
+        let pts: Vec<Pos> = self.members.iter().map(|&m| topo.positions[m]).collect();
+        let r = topo.range * BOUNDARY_RANGE_FRAC;
+        let grid = SpatialGrid::build(&pts, r.max(1e-9));
+        let mut out: Vec<((usize, usize), Vec<NodeId>)> = Vec::new();
+        let mut near: Vec<usize> = Vec::new();
+        for i in 0..pts.len() {
+            grid.within_into(&pts, pts[i], r, i, &mut near);
+            for &j in &near {
+                if j > i {
+                    self.accumulate_boundary_pair(&mut out, topo, i, j);
+                }
             }
         }
         out.sort_by_key(|(k2, _)| *k2);
@@ -498,6 +649,67 @@ fn kmeans(members: &[NodeId], topo: &Topology, k: usize) -> Vec<usize> {
 
 fn d2(a: (f64, f64), b: (f64, f64)) -> f64 {
     (a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)
+}
+
+/// Grid-backed region assignment: bin the member positions into
+/// boundary-radius-sized [`SpatialGrid`] cells, then merge the occupied
+/// cells down to at most `k` regions — farthest-point seeding over the
+/// cell centroids (the k-means init rule lifted from members to cells)
+/// and nearest-seed assignment (ties to the lowest seed index).  Every
+/// member inherits its cell's region, so assignment costs O(m + cells·k)
+/// instead of k-means' O(m·k·iters).
+///
+/// Returns `(assignment, k_eff)` with `k_eff ≤ k`: degenerate inputs —
+/// all-coincident positions, fewer occupied cells than `k` — yield
+/// fewer regions instead of panicking or fabricating empty ones.
+fn grid_partition(members: &[NodeId], topo: &Topology, k: usize) -> (Vec<usize>, usize) {
+    if members.is_empty() {
+        return (Vec::new(), 1);
+    }
+    let pts: Vec<Pos> = members.iter().map(|&m| topo.positions[m]).collect();
+    let cell = (topo.range * BOUNDARY_RANGE_FRAC).max(1e-9);
+    let grid = SpatialGrid::build(&pts, cell);
+    // Occupied cells with their member-position centroids, in cell-index
+    // order (deterministic).
+    let cells: Vec<(Vec<usize>, (f64, f64))> = grid
+        .cells()
+        .map(|(_, items)| {
+            let (sx, sy) =
+                items.iter().fold((0.0, 0.0), |(x, y), &i| (x + pts[i].x, y + pts[i].y));
+            let c = (sx / items.len() as f64, sy / items.len() as f64);
+            (items.to_vec(), c)
+        })
+        .collect();
+    let k_eff = k.min(cells.len()).max(1);
+    let mut seeds: Vec<(f64, f64)> = Vec::with_capacity(k_eff);
+    seeds.push(cells[0].1);
+    while seeds.len() < k_eff {
+        let far = cells
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| {
+                let da = seeds.iter().map(|s| d2(a.1, *s)).fold(f64::MAX, f64::min);
+                let db = seeds.iter().map(|s| d2(b.1, *s)).fold(f64::MAX, f64::min);
+                da.partial_cmp(&db).unwrap()
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        seeds.push(cells[far].1);
+    }
+    let mut assignment = vec![0usize; members.len()];
+    for (items, c) in &cells {
+        let mut best = (f64::MAX, 0usize);
+        for (s, seed) in seeds.iter().enumerate() {
+            let dist = d2(*c, *seed);
+            if dist < best.0 {
+                best = (dist, s);
+            }
+        }
+        for &i in items {
+            assignment[i] = best.1;
+        }
+    }
+    (assignment, k_eff)
 }
 
 #[cfg(test)]
@@ -917,5 +1129,136 @@ mod tests {
             assert!(!sc.is_member(n));
             assert!(!sc.is_boundary(n));
         }
+    }
+
+    #[test]
+    fn grid_build_is_pinned_to_the_scan_reference() {
+        // At grid scale, `build` routes through the cell-merge
+        // partitioner and grid-adjacency boundary derivation; the whole
+        // structure must equal the forced O(m²) scan over the same
+        // (members, assignment) pair, byte for byte.
+        for (case, (n, k)) in [(64usize, 4usize), (96, 6), (150, 10)].into_iter().enumerate() {
+            let t = {
+                let mut trng = Rng::new(0x9137 + case as u64);
+                Topology::generate(&mut trng, n, 250.0, 30.0, &[100.0], 0.001)
+            };
+            let members: Vec<NodeId> = (0..n).collect();
+            let sc = SubClusters::build(&members, &t, k);
+            assert!(sc.k >= 2 && sc.k <= k, "n={n} produced k={}", sc.k);
+            let reference = SubClusters::from_assignment_reference(
+                sc.members.clone(),
+                sc.assignment.clone(),
+                sc.k,
+                &t,
+            );
+            assert_eq!(sc, reference, "case {case} n={n} k={k}");
+            let covered: usize = (0..sc.k).map(|s| sc.members_of(s).len()).sum();
+            assert_eq!(covered, n, "every member owned by exactly one region");
+        }
+    }
+
+    #[test]
+    fn grid_boundary_derivation_matches_scan_on_partial_membership() {
+        // A ≥ threshold membership that is a strict subset of the node-id
+        // space (the common case inside a cluster) must still derive
+        // scan-identical boundaries through the grid.
+        let t = {
+            let mut trng = Rng::new(0x5b5e7);
+            Topology::generate(&mut trng, 120, 240.0, 30.0, &[100.0], 0.001)
+        };
+        let members: Vec<NodeId> = (20..100).collect();
+        assert!(members.len() >= GRID_PARTITION_THRESHOLD);
+        let sc = SubClusters::build(&members, &t, 5);
+        let reference = SubClusters::from_assignment_reference(
+            sc.members.clone(),
+            sc.assignment.clone(),
+            sc.k,
+            &t,
+        );
+        assert_eq!(sc, reference);
+    }
+
+    #[test]
+    fn degenerate_partitions_yield_fewer_regions_without_panicking() {
+        // k far beyond the member count clamps down instead of panicking.
+        let t = topo(20);
+        let members: Vec<NodeId> = (0..20).collect();
+        let sc = SubClusters::build(&members, &t, 200);
+        assert!(sc.k <= 20);
+        assert_eq!(sc.assignment.len(), 20);
+
+        // Empty membership: one (empty) region, no boundaries.
+        let sc = SubClusters::build(&[], &t, 4);
+        assert_eq!(sc.k, 1);
+        assert!(sc.members.is_empty());
+        assert!(sc.boundaries.is_empty());
+        assert!(!sc.is_member(0));
+
+        // All-coincident positions at grid scale: a single occupied cell
+        // collapses to one region — no empty fabricated regions, no
+        // panic, no boundary pairs (a pair needs two regions).
+        let n = 80usize;
+        let mut t = {
+            let mut trng = Rng::new(0xC01D);
+            Topology::generate(&mut trng, n, 200.0, 30.0, &[100.0], 0.001)
+        };
+        for p in &mut t.positions {
+            *p = crate::net::Pos { x: 12.0, y: 34.0 };
+        }
+        t.rebuild_adjacency();
+        let members: Vec<NodeId> = (0..n).collect();
+        let sc = SubClusters::build(&members, &t, 8);
+        assert_eq!(sc.k, 1, "coincident members collapse to one region");
+        assert!(sc.assignment.iter().all(|&a| a == 0));
+        assert!(sc.boundaries.is_empty());
+        assert_eq!(sc.members_of(0).len(), n);
+    }
+
+    #[test]
+    fn prop_grid_partition_matches_scan_reference_under_churn_and_mobility() {
+        // Acceptance pin: a ≥ 100-step randomized churn + mobility +
+        // handoff run on a grid-scale membership stays byte-identical to
+        // the O(m²) scan reference rebuild after every step — the
+        // incremental grid refresh and the forced-scan construction
+        // never diverge.
+        let mut rng = Rng::new(0x61D5);
+        let n = 96usize;
+        let mut t = {
+            let mut trng = Rng::new(4242);
+            Topology::generate(&mut trng, n, 220.0, 30.0, &[100.0], 0.001)
+        };
+        let members: Vec<NodeId> = (0..n).collect();
+        let mut sc = SubClusters::build(&members, &t, 6);
+        assert!(sc.members.len() >= GRID_PARTITION_THRESHOLD);
+        let mut handoffs = 0usize;
+        for step in 0..120 {
+            let node = rng.below(n);
+            match rng.below(4) {
+                0 => {
+                    sc.remove_member(node, &t);
+                }
+                1 => {
+                    sc.add_member(node, &t);
+                }
+                _ => {
+                    t.positions[node] = crate::net::Pos {
+                        x: rng.range_f64(-20.0, 240.0),
+                        y: rng.range_f64(-20.0, 240.0),
+                    };
+                    t.rebuild_adjacency();
+                    if sc.handoff_member(node, &t) {
+                        handoffs += 1;
+                    }
+                }
+            }
+            let reference = SubClusters::from_assignment_reference(
+                sc.members.clone(),
+                sc.assignment.clone(),
+                sc.k,
+                &t,
+            );
+            assert_eq!(sc, reference, "step {step} node {node}");
+        }
+        assert!(handoffs > 0, "120 steps never crossed a region");
     }
 }

@@ -109,6 +109,12 @@ pub struct ExperimentConfig {
     /// byte-identically (pinned by harness tests).  O(n²) memory — never
     /// enable it at scale.
     pub dense_links: bool,
+    /// Worker threads for the region-sharded tick engine.  `0` keeps the
+    /// legacy single-stream dynamic driver; `>= 1` routes dynamic runs to
+    /// `coordinator::shard`, where `1` runs every region lane inline
+    /// (the serial reference) and `N` spreads lanes over `N` OS threads.
+    /// Results are byte-identical for every value `>= 1`.
+    pub shards: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -138,6 +144,7 @@ impl Default for ExperimentConfig {
             event_driven: false,
             cluster_spread_m: 0.0,
             dense_links: false,
+            shards: 0,
         }
     }
 }
@@ -255,6 +262,7 @@ impl ExperimentConfig {
                     other => return Err(format!("bad boolean {other} for dense_links")),
                 }
             }
+            "shards" => self.shards = parse_usize(val)?,
             other => return Err(format!("unknown config key {other}")),
         }
         Ok(())
@@ -318,6 +326,7 @@ impl ExperimentConfig {
     /// explicit opt-in) instead of the static pre-batched wave path.
     pub fn dynamic(&self) -> bool {
         self.event_driven
+            || self.shards > 0
             || self.failure_rate > 0.0
             || self.mobility.enabled()
             || !matches!(self.arrival, ArrivalProcess::Batched { .. })
@@ -518,6 +527,19 @@ mod tests {
         let d = ExperimentConfig::default();
         assert!(!d.dense_links);
         assert_eq!(d.cluster_spread_m, 0.0);
+    }
+
+    #[test]
+    fn shards_key_parses_and_routes_dynamic() {
+        let cfg = ExperimentConfig::from_toml("shards = 4").unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert!(cfg.dynamic(), "shards > 0 must route through the event engines");
+        cfg.validate().unwrap();
+
+        let d = ExperimentConfig::default();
+        assert_eq!(d.shards, 0, "default stays on the legacy single-stream driver");
+        assert!(!d.dynamic());
+        assert!(ExperimentConfig::from_toml("shards = -1").is_err());
     }
 
     #[test]

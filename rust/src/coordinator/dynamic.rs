@@ -21,9 +21,13 @@
 //!   (`sched::reschedule_stranded`) with full decision-latency
 //!   accounting, so the overhead figures stay regenerable under churn.
 //!
-//! Determinism: one RNG stream drives generation and the single-threaded
+//! Determinism: one RNG stream drives generation and the single-stream
 //! event loop, so a `(config, method, seed)` triple replays bit-identically
-//! regardless of harness thread count.
+//! regardless of harness thread count.  With `cfg.shards >= 1` the run
+//! routes to the region-sharded engine (`coordinator::shard`) instead,
+//! which forks per-region RNG streams and is byte-identical across shard
+//! counts (but a different — equally deterministic — stream than this
+//! legacy single-stream driver, which `shards = 0` keeps untouched).
 //!
 //! The `IterEnd`/`BgStart`/`BgEnd`/`Sample` handlers deliberately mirror
 //! `sim::engine` rather than share its code: the static executor is the
@@ -60,15 +64,16 @@ pub const VIEW_REFRESH_SECS: f64 = 60.0;
 pub const WAVE_BATCH_SECS: f64 = 5.0;
 
 /// Per-cluster shield instance (lives across waves and churn events, so
-/// its incremental region state persists).
-enum ClusterShield {
+/// its incremental region state persists).  Shared with the sharded
+/// engine, where each lane owns its cluster's instance.
+pub(super) enum ClusterShield {
     None,
     Central(CentralShield),
     Decentral(DecentralShield),
 }
 
 impl ClusterShield {
-    fn as_dyn(&mut self) -> Option<&mut dyn Shield> {
+    pub(super) fn as_dyn(&mut self) -> Option<&mut dyn Shield> {
         match self {
             ClusterShield::None => None,
             ClusterShield::Central(s) => Some(s),
@@ -78,24 +83,24 @@ impl ClusterShield {
 }
 
 /// One arrival batch: the cluster's jobs that decide concurrently.
-struct Wave {
-    cluster: usize,
-    jobs: Vec<DlJob>,
+pub(super) struct Wave {
+    pub(super) cluster: usize,
+    pub(super) jobs: Vec<DlJob>,
     /// Fire time: the latest arrival in the batch.
-    t: f64,
+    pub(super) t: f64,
 }
 
 /// Execution bookkeeping for one scheduled job.
-struct Run {
-    sched: JobSchedule,
-    start: f64,
-    iters_done: usize,
-    done: bool,
+pub(super) struct Run {
+    pub(super) sched: JobSchedule,
+    pub(super) start: f64,
+    pub(super) iters_done: usize,
+    pub(super) done: bool,
 }
 
 /// Group a cluster's jobs into concurrent-decision waves: jobs arriving
 /// within [`WAVE_BATCH_SECS`] of a batch's first arrival share its wave.
-fn build_waves(dep: &Deployment, workload: &Workload) -> Vec<Wave> {
+pub(super) fn build_waves(dep: &Deployment, workload: &Workload) -> Vec<Wave> {
     let mut waves = Vec::new();
     for ci in 0..dep.clusters.len() {
         let mut jobs: Vec<DlJob> =
@@ -118,7 +123,7 @@ fn build_waves(dep: &Deployment, workload: &Workload) -> Vec<Wave> {
 
 /// Highest-capacity *alive* member of a cluster — the acting head after
 /// the original head fails (deterministic re-election).
-fn alive_head(dep: &Deployment, membership: &Membership, cluster: usize) -> NodeId {
+pub(super) fn alive_head(dep: &Deployment, membership: &Membership, cluster: usize) -> NodeId {
     let members = membership.alive_members(cluster);
     members
         .iter()
@@ -135,6 +140,9 @@ fn alive_head(dep: &Deployment, membership: &Membership, cluster: usize) -> Node
 /// `Experiment::run_once` for configurations with churn or online
 /// arrivals.
 pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetrics {
+    if cfg.shards > 0 {
+        return super::shard::run_sharded(cfg, method, seed);
+    }
     let mut rng = Rng::new(seed);
     let profile = cfg.profile.resource_profile();
     let mut dep = Deployment::generate_spread(

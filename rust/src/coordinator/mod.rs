@@ -8,6 +8,7 @@
 //! driver instead.
 
 pub mod dynamic;
+pub mod shard;
 
 use crate::cluster::Deployment;
 use crate::config::ExperimentConfig;

@@ -1,0 +1,762 @@
+//! Region-sharded tick engine: one dynamic scenario across OS threads.
+//!
+//! The legacy driver (`coordinator::dynamic`, `shards = 0`) runs a whole
+//! scenario on one time-ordered queue.  That is the right reference
+//! semantics, but it caps a 100k-node run at one core.  This driver
+//! shards the event loop by *shield region* — one lane per cluster,
+//! which is exactly the granularity at which the paper's agents, shields
+//! and placements are confined:
+//!
+//! * **Lane-local events** (`JobArrival`, `IterEnd`, `BgStart`, `BgEnd`)
+//!   touch only their cluster's nodes — placements are always
+//!   within-cluster — so each lane owns a private event queue, RNG
+//!   stream, policy, shield and an O(cluster)-memory
+//!   [`ResourceState::for_cluster`] slice, and advances independently.
+//! * **Cross-region events** (`Sample`, `ViewRefresh`, `NodeFail`,
+//!   `NodeJoin`, `MobilityTick`) live on a driver-owned queue.  Each
+//!   iteration the driver peeks the next cross-region time `T`, advances
+//!   every lane through its events with `t <= T` (the epoch), then
+//!   handles the barrier event serially with exclusive access to every
+//!   lane.  Joining the worker scope *is* the epoch barrier — no locks,
+//!   no atomics, no channel.
+//!
+//! Determinism: the setup replays the legacy RNG draw order (deployment,
+//! workload, mobility fork, pretraining fork, churn schedule), then
+//! forks one child stream per lane in cluster order.  Lane decisions
+//! draw only from their lane's stream, and barrier handlers use the
+//! affected lane's stream, so metrics are **byte-identical across shard
+//! counts**: `shards = 1` runs the lanes inline on the calling thread
+//! and is the pinned serial reference for `shards = N` (equivalence
+//! tests below).  `shards = 0` keeps the single-stream legacy driver
+//! bit-for-bit untouched; its interleaved draw order is a different (also
+//! deterministic) stream, so the two engines are separate baselines.
+//!
+//! Ties: a lane event at exactly the barrier time fires before the
+//! barrier event (lanes advance through `t <= T` first).  This rule is
+//! part of the engine's contract — it is what makes the epoch partition
+//! independent of the shard count.
+
+use crate::cluster::{Deployment, Membership, NodeId, ResourceKind, Resources};
+use crate::config::ExperimentConfig;
+use crate::dnn::ModelGraph;
+use crate::metrics::RunMetrics;
+use crate::net::mobility::DynamicTopology;
+use crate::rl::{Policy, TabularQ};
+use crate::sched::{
+    central_wave_dynamic, marl_wave_dynamic, noisy_demand, reschedule_migrated,
+    reschedule_stranded, Stranded, WaveOutcome,
+};
+use crate::shield::{CentralShield, DecentralShield};
+use crate::sim::engine::SAMPLE_PERIOD_SECS;
+use crate::sim::event::{EventKind, EventQueue};
+use crate::sim::{timing, ResourceState, TaskHandle};
+use crate::util::Rng;
+use crate::workload::{Workload, WorkloadSpec};
+
+use super::dynamic::{alive_head, build_waves, ClusterShield, Run, Wave, VIEW_REFRESH_SECS};
+use super::{pretrain, Method};
+
+/// One shield region's independent slice of the simulation: private
+/// queue, RNG stream, policy, shield, and cluster-sliced resource state.
+struct Lane {
+    cluster: usize,
+    queue: EventQueue,
+    rng: Rng,
+    policy: TabularQ,
+    fwd_baseline: usize,
+    shield: ClusterShield,
+    state: ResourceState,
+    /// Global indices of this cluster's background segments, ascending.
+    /// Lane `BgStart`/`BgEnd` payloads are indices into this list, so
+    /// lane queues never reference another lane's tables.
+    own_bg: Vec<usize>,
+    bg_slots: Vec<Option<TaskHandle>>,
+    /// Indexed by global job id; only this cluster's jobs are `Some`.
+    runs: Vec<Option<Run>>,
+    /// This cluster's jobs not yet completed.
+    remaining: usize,
+    /// Set when the lane's last job completes past the horizon — the
+    /// lane-local analogue of the legacy driver's loop `break`.
+    done: bool,
+    /// Per tracked node (`state.node_ids()` order): overload edge
+    /// detector state for the runtime_overloads transition count.
+    was_overloaded: Vec<bool>,
+    metrics: RunMetrics,
+}
+
+/// Shared read-only context for one epoch.  Everything here is frozen
+/// while lanes advance; barrier handlers (which mutate the deployment,
+/// membership and view) run after the scope join with `&mut` access.
+#[derive(Clone, Copy)]
+struct Ctx<'a> {
+    dep: &'a Deployment,
+    membership: &'a Membership,
+    graph: &'a ModelGraph,
+    workload: &'a Workload,
+    waves: &'a [Wave],
+    cfg: &'a ExperimentConfig,
+    method: Method,
+    horizon: f64,
+    n_clusters: usize,
+}
+
+/// Flag overload transitions on the lane's own nodes.  Placements never
+/// leave a cluster, so a node's utilization only changes at its own
+/// lane's events or at barrier events handled with that lane borrowed —
+/// checking lane-locally counts exactly the transitions the legacy
+/// full-deployment scan would, independent of shard count.
+fn check_lane_overloads(lane: &mut Lane, alpha: f64) {
+    let base = lane.state.base();
+    for n in lane.state.node_ids() {
+        let now = lane.state.actual_overloaded(n, alpha);
+        if now && !lane.was_overloaded[n - base] {
+            lane.metrics.runtime_overloads += 1;
+        }
+        lane.was_overloaded[n - base] = now;
+    }
+}
+
+/// Drain one lane's queue through every event with `t <= until`,
+/// mirroring the legacy handlers for the four lane-local kinds.
+fn advance_lane(lane: &mut Lane, ctx: Ctx<'_>, until: f64) {
+    let alpha = ctx.cfg.reward.alpha;
+    while !lane.done {
+        match lane.queue.peek() {
+            Some(head) if head.t <= until => {}
+            _ => break,
+        }
+        let ev = lane.queue.pop().expect("peeked event vanished");
+        match ev.kind {
+            EventKind::JobArrival { wave } => {
+                let w = &ctx.waves[wave];
+                let out: WaveOutcome = {
+                    let shield = lane.shield.as_dyn();
+                    let policy: &mut dyn Policy = &mut lane.policy;
+                    match ctx.method {
+                        Method::Rl => central_wave_dynamic(
+                            ctx.dep, ctx.membership, &mut lane.state, ctx.graph, &w.jobs,
+                            policy, &ctx.cfg.reward, &mut lane.rng,
+                        ),
+                        Method::Marl | Method::SroleC | Method::SroleD => marl_wave_dynamic(
+                            ctx.dep, ctx.membership, &mut lane.state, ctx.graph, &w.jobs,
+                            policy, shield, &ctx.cfg.reward, ctx.cfg.refresh_rounds,
+                            &mut lane.rng,
+                        ),
+                    }
+                };
+                lane.metrics.collisions += out.collisions;
+                lane.metrics.shield_corrections += out.shield_corrections;
+                for s in out.schedules {
+                    let ji = s.job.id;
+                    let start = ev.t + s.decision_secs;
+                    lane.queue.push(start, EventKind::IterEnd { job: ji });
+                    lane.runs[ji] = Some(Run { sched: s, start, iters_done: 0, done: false });
+                }
+                check_lane_overloads(lane, alpha);
+            }
+            EventKind::IterEnd { job } => {
+                let run = lane.runs[job].as_mut().expect("IterEnd for an unscheduled job");
+                if run.done {
+                    continue;
+                }
+                if ev.t > run.start {
+                    run.iters_done += 1;
+                }
+                if run.iters_done >= run.sched.job.iterations {
+                    run.done = true;
+                    lane.remaining -= 1;
+                    for &h in &run.sched.handles {
+                        lane.state.release(h);
+                    }
+                    run.sched.handles.clear();
+                    let train_secs = ev.t - run.start;
+                    lane.policy.learn(&run.sched.episode, train_secs.max(1.0), &ctx.cfg.reward);
+                    lane.metrics.jct.push(train_secs);
+                    lane.metrics.decision_secs.push(run.sched.decision_secs);
+                    lane.metrics.sched_secs.push(run.sched.sched_secs);
+                    lane.metrics.shield_secs.push(run.sched.shield_secs);
+                    lane.metrics.memory_violations += run.sched.memory_violations;
+                    lane.metrics.makespan = lane.metrics.makespan.max(ev.t);
+                    check_lane_overloads(lane, alpha);
+                    if lane.remaining == 0 && ev.t >= ctx.horizon {
+                        lane.done = true;
+                    }
+                } else {
+                    let head = alive_head(ctx.dep, ctx.membership, run.sched.job.cluster);
+                    let mut dt = timing::iteration_secs(
+                        ctx.dep,
+                        &lane.state,
+                        ctx.graph,
+                        &run.sched.placement,
+                        run.sched.job.owner,
+                        head,
+                        ctx.n_clusters,
+                    );
+                    if run.iters_done == 0 {
+                        dt += timing::pipeline_fill_secs(
+                            ctx.dep,
+                            &lane.state,
+                            ctx.graph,
+                            &run.sched.placement,
+                        );
+                    }
+                    lane.queue.push(ev.t + dt.max(1e-6), EventKind::IterEnd { job });
+                }
+            }
+            EventKind::BgStart { bg } => {
+                let gi = lane.own_bg[bg];
+                let b = &ctx.workload.background[gi];
+                // A segment destined for a dead node is lost, not queued.
+                if ctx.membership.is_alive(b.node) {
+                    let h = lane.state.place(b.node, b.demand, b.demand, false);
+                    lane.bg_slots[bg] = Some(h);
+                    lane.queue.push(b.end.max(ev.t), EventKind::BgEnd { bg });
+                    check_lane_overloads(lane, alpha);
+                }
+            }
+            EventKind::BgEnd { bg } => {
+                if let Some(h) = lane.bg_slots[bg].take() {
+                    lane.state.release(h);
+                }
+                check_lane_overloads(lane, alpha);
+            }
+            _ => unreachable!("cross-region event in a lane queue"),
+        }
+    }
+}
+
+/// Advance every lane through its events with `t <= until`.  Lanes are
+/// mutually independent between barriers, so chunking them across a
+/// thread scope is race-free by construction; the scope join is the
+/// epoch barrier.  `shards = 1` runs inline — same code path, same
+/// results, no threads.
+fn advance_all(lanes: &mut [Lane], ctx: Ctx<'_>, until: f64, shards: usize) {
+    let workers = shards.min(lanes.len()).max(1);
+    if workers <= 1 {
+        for lane in lanes.iter_mut() {
+            advance_lane(lane, ctx, until);
+        }
+        return;
+    }
+    let chunk = (lanes.len() + workers - 1) / workers;
+    std::thread::scope(|s| {
+        for group in lanes.chunks_mut(chunk) {
+            s.spawn(move || {
+                for lane in group {
+                    advance_lane(lane, ctx, until);
+                }
+            });
+        }
+    });
+}
+
+/// One measured dynamic run on the region-sharded engine (`cfg.shards
+/// >= 1`).  Epoch-barrier loop: advance all lanes to the next
+/// cross-region event's time, then handle it serially.
+pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetrics {
+    let shards = cfg.shards.max(1);
+    let mut rng = Rng::new(seed);
+    let profile = cfg.profile.resource_profile();
+    let mut dep = Deployment::generate_spread(
+        &mut rng,
+        cfg.n_edges,
+        cfg.cluster_size,
+        profile,
+        cfg.cluster_spread_m,
+    );
+    if cfg.dense_links {
+        dep.topo.use_dense_links();
+    }
+    let graph = cfg.model.build();
+    let spec = WorkloadSpec {
+        model: cfg.model,
+        jobs_per_cluster: cfg.jobs_per_cluster,
+        iterations: cfg.iterations,
+        workload: cfg.workload,
+        arrival: cfg.arrival.clone(),
+    };
+    let workload = Workload::generate(&mut rng, &dep, &spec, 500_000.0);
+
+    // Same fork discipline as the legacy driver: mobility gets its own
+    // stream only when enabled, pretraining always forks.
+    let mut mobility: Option<DynamicTopology> = if cfg.mobility.enabled() {
+        let groups: Vec<Vec<NodeId>> = dep.clusters.iter().map(|c| c.members.clone()).collect();
+        let m_rng = rng.fork(0x0b17e);
+        Some(DynamicTopology::new(&dep.topo, cfg.mobility.clone(), &groups, m_rng))
+    } else {
+        None
+    };
+
+    let mut pretrained = TabularQ::new(cfg.lr, cfg.epsilon);
+    pretrain(&mut pretrained, cfg, &mut rng.fork(0xbeef));
+    let fwd_baseline = pretrained.fwd_errors();
+
+    let mut membership = Membership::full(&dep);
+    let n_clusters = dep.clusters.len();
+    let horizon = cfg.iterations as f64 * crate::dnn::profile::TARGET_ITER_SECS * 2.5;
+
+    // Cross-region (driver) queue: sampling, view refresh, mobility and
+    // the up-front churn schedule — drawn from the main stream *before*
+    // the lane forks, so the schedule is independent of lane activity.
+    let mut driver_queue = EventQueue::new();
+    driver_queue.push(SAMPLE_PERIOD_SECS, EventKind::Sample);
+    driver_queue.push(VIEW_REFRESH_SECS, EventKind::ViewRefresh);
+    if mobility.is_some() {
+        driver_queue.push(cfg.mobility_tick_secs, EventKind::MobilityTick);
+    }
+    if cfg.failure_rate > 0.0 {
+        let rate = cfg.failure_rate / 1000.0;
+        let mut t = rng.exp(rate);
+        while t < horizon {
+            let node = rng.below(dep.n());
+            driver_queue.push(t, EventKind::NodeFail { node });
+            if cfg.rejoin_secs > 0.0 {
+                driver_queue.push(t + cfg.rejoin_secs, EventKind::NodeJoin { node });
+            }
+            t += rng.exp(rate);
+        }
+    }
+
+    let waves = build_waves(&dep, &workload);
+    let n_jobs = workload.dl_jobs.len();
+
+    // Lane construction: fork one child RNG per lane in cluster order
+    // (the only draws after this point are lane-local or handler-local),
+    // clone the shared pretrained policy, slice the resource state, and
+    // seed each queue with its cluster's background churn.
+    let mut lanes: Vec<Lane> = (0..n_clusters)
+        .map(|ci| {
+            let members = &dep.clusters[ci].members;
+            let mut lane = Lane {
+                cluster: ci,
+                queue: EventQueue::new(),
+                rng: rng.fork(ci as u64),
+                policy: pretrained.clone(),
+                fwd_baseline,
+                shield: match method {
+                    Method::SroleC => ClusterShield::Central(CentralShield::new()),
+                    Method::SroleD => ClusterShield::Decentral(DecentralShield::new(
+                        &dep,
+                        members,
+                        cfg.subclusters,
+                    )),
+                    Method::Rl | Method::Marl => ClusterShield::None,
+                },
+                state: ResourceState::for_cluster(&dep, members),
+                own_bg: Vec::new(),
+                bg_slots: Vec::new(),
+                runs: (0..n_jobs).map(|_| None).collect(),
+                remaining: workload.dl_jobs.iter().filter(|j| j.cluster == ci).count(),
+                done: false,
+                was_overloaded: Vec::new(),
+                metrics: RunMetrics::default(),
+            };
+            for (gi, bg) in workload.background.iter().enumerate() {
+                if dep.cluster_of(bg.node) == ci {
+                    lane.own_bg.push(gi);
+                }
+            }
+            lane.bg_slots = vec![None; lane.own_bg.len()];
+            // The PageRank background already running at t = 0 is placed
+            // now (the lane-sliced mirror of `place_initial_background`);
+            // pre-placed segments seed their ends first, then pending
+            // segments their starts — the legacy push order, per lane.
+            for (li, &gi) in lane.own_bg.iter().enumerate() {
+                let bg = &workload.background[gi];
+                if bg.start <= 0.0 && bg.end > 0.0 {
+                    let h = lane.state.place(bg.node, bg.demand, bg.demand, false);
+                    lane.bg_slots[li] = Some(h);
+                    lane.queue.push(bg.end, EventKind::BgEnd { bg: li });
+                }
+            }
+            for (li, &gi) in lane.own_bg.iter().enumerate() {
+                if lane.bg_slots[li].is_none() {
+                    lane.queue.push(workload.background[gi].start, EventKind::BgStart { bg: li });
+                }
+            }
+            lane.was_overloaded = lane
+                .state
+                .node_ids()
+                .map(|n| lane.state.actual_overloaded(n, cfg.reward.alpha))
+                .collect();
+            lane
+        })
+        .collect();
+
+    // Route arrival waves into their cluster's lane.
+    for (wi, w) in waves.iter().enumerate() {
+        lanes[w.cluster].queue.push(w.t, EventKind::JobArrival { wave: wi });
+    }
+
+    // Stale state view for failure/migration handlers (paper §III).
+    let mut view_demand: Vec<Resources> =
+        (0..dep.n()).map(|n| *lanes[dep.cluster_of(n)].state.demand(n)).collect();
+
+    let mut metrics = RunMetrics::default();
+    let mut blast_scratch: Vec<NodeId> = Vec::new();
+    let mut moved_by_cluster: Vec<Vec<NodeId>> = vec![Vec::new(); n_clusters];
+
+    loop {
+        let barrier = driver_queue.peek().map(|e| e.t);
+        {
+            let ctx = Ctx {
+                dep: &dep,
+                membership: &membership,
+                graph: &graph,
+                workload: &workload,
+                waves: &waves,
+                cfg,
+                method,
+                horizon,
+                n_clusters,
+            };
+            advance_all(&mut lanes, ctx, barrier.unwrap_or(f64::INFINITY), shards);
+        }
+        let Some(ev) = driver_queue.pop() else { break };
+        let total_remaining: usize = lanes.iter().map(|l| l.remaining).sum();
+        match ev.kind {
+            EventKind::Sample => {
+                if total_remaining > 0 || ev.t < horizon {
+                    // Lanes hold contiguous ascending node spans, so
+                    // cluster-order iteration reproduces the legacy
+                    // whole-deployment node order.
+                    for lane in &lanes {
+                        for n in lane.state.node_ids() {
+                            metrics.tasks_per_device.push(lane.state.task_count(n) as f64);
+                            metrics.util_cpu.push(
+                                lane.state.actual_util(n, ResourceKind::Cpu).clamp(0.0, 2.0),
+                            );
+                            metrics.util_mem.push(
+                                lane.state.actual_util(n, ResourceKind::Mem).clamp(0.0, 2.0),
+                            );
+                            metrics.util_bw.push(
+                                lane.state.actual_util(n, ResourceKind::Bw).clamp(0.0, 2.0),
+                            );
+                        }
+                    }
+                    driver_queue.push(ev.t + SAMPLE_PERIOD_SECS, EventKind::Sample);
+                }
+            }
+            EventKind::ViewRefresh => {
+                for lane in &lanes {
+                    for n in lane.state.node_ids() {
+                        view_demand[n] = *lane.state.demand(n);
+                    }
+                }
+                if total_remaining > 0 {
+                    driver_queue.push(ev.t + VIEW_REFRESH_SECS, EventKind::ViewRefresh);
+                }
+            }
+            EventKind::NodeFail { node } => {
+                if total_remaining == 0 {
+                    continue;
+                }
+                if !membership.is_alive(node)
+                    || membership.alive_members(dep.cluster_of(node)).len() <= 1
+                {
+                    continue;
+                }
+                let mut victims = vec![node];
+                if cfg.blast_radius_m > 0.0 {
+                    dep.topo.nodes_within_into(node, cfg.blast_radius_m, &mut blast_scratch);
+                    victims
+                        .extend(blast_scratch.iter().copied().filter(|&v| membership.is_alive(v)));
+                }
+                for (vi, &victim) in victims.iter().enumerate() {
+                    let cluster = dep.cluster_of(victim);
+                    if !membership.is_alive(victim)
+                        || membership.alive_members(cluster).len() <= 1
+                    {
+                        continue;
+                    }
+                    membership.fail(&dep, victim);
+                    metrics.node_failures += 1;
+                    if vi > 0 {
+                        metrics.correlated_failures += 1;
+                        if cfg.rejoin_secs > 0.0 {
+                            let back = ev.t + cfg.rejoin_secs;
+                            driver_queue.push(back, EventKind::NodeJoin { node: victim });
+                        }
+                    }
+                    let lane = &mut lanes[cluster];
+                    match &mut lane.shield {
+                        ClusterShield::Central(s) => {
+                            s.set_alive(Some(membership.alive_cluster_set(cluster).clone()));
+                        }
+                        ClusterShield::Decentral(s) => {
+                            s.node_failed(&dep, victim);
+                        }
+                        ClusterShield::None => {}
+                    }
+                    for (li, &gi) in lane.own_bg.iter().enumerate() {
+                        if workload.background[gi].node == victim {
+                            if let Some(h) = lane.bg_slots[li].take() {
+                                lane.state.release(h);
+                            }
+                        }
+                    }
+                    let mut stranded: Vec<Stranded> = Vec::new();
+                    for (ji, run) in lane.runs.iter_mut().enumerate() {
+                        let Some(run) = run else { continue };
+                        if run.done {
+                            continue;
+                        }
+                        for (layer_id, &host) in run.sched.placement.iter().enumerate() {
+                            if host == victim {
+                                lane.state.release(run.sched.handles[layer_id]);
+                                stranded.push(Stranded {
+                                    job: ji,
+                                    owner: run.sched.job.owner,
+                                    layer_id,
+                                });
+                            }
+                        }
+                    }
+                    if !stranded.is_empty() {
+                        let outcome = {
+                            let shield = lane.shield.as_dyn();
+                            let policy: &mut dyn Policy = &mut lane.policy;
+                            reschedule_stranded(
+                                &dep, &membership, &lane.state, &graph, &view_demand, &stranded,
+                                victim, policy, shield, &cfg.reward, &mut lane.rng,
+                            )
+                        };
+                        metrics.collisions += outcome.collisions;
+                        metrics.shield_corrections += outcome.corrections;
+                        metrics.rescheduled_layers += stranded.len();
+                        for (s, &target) in stranded.iter().zip(&outcome.targets) {
+                            let target = if target == usize::MAX {
+                                membership.alive_members(cluster)[0]
+                            } else {
+                                target
+                            };
+                            let est = graph.layers[s.layer_id].demand();
+                            let actual = noisy_demand(&est, &mut lane.rng);
+                            let h = lane.state.place(target, est, actual, true);
+                            let run = lane.runs[s.job].as_mut().unwrap();
+                            run.sched.placement[s.layer_id] = target;
+                            run.sched.handles[s.layer_id] = h;
+                        }
+                        let mut charged: Vec<usize> = stranded.iter().map(|s| s.job).collect();
+                        charged.sort_unstable();
+                        charged.dedup();
+                        for ji in charged {
+                            let run = lane.runs[ji].as_mut().unwrap();
+                            run.sched.decision_secs += outcome.sched_secs + outcome.shield_secs;
+                            run.sched.sched_secs += outcome.sched_secs;
+                            run.sched.shield_secs += outcome.shield_secs;
+                        }
+                    }
+                    check_lane_overloads(lane, cfg.reward.alpha);
+                }
+            }
+            EventKind::NodeJoin { node } => {
+                if total_remaining == 0 || !membership.join(&dep, node) {
+                    continue;
+                }
+                let cluster = dep.cluster_of(node);
+                match &mut lanes[cluster].shield {
+                    ClusterShield::Central(s) => {
+                        s.set_alive(Some(membership.alive_cluster_set(cluster).clone()));
+                    }
+                    ClusterShield::Decentral(s) => {
+                        s.node_joined(&dep, node);
+                    }
+                    ClusterShield::None => {}
+                }
+            }
+            EventKind::MobilityTick => {
+                if total_remaining == 0 {
+                    continue;
+                }
+                let Some(dyn_topo) = mobility.as_mut() else { continue };
+                driver_queue.push(ev.t + cfg.mobility_tick_secs, EventKind::MobilityTick);
+                let moved = dyn_topo.advance(ev.t, cfg.mobility_tick_secs, &mut dep.topo);
+                if moved.is_empty() {
+                    continue;
+                }
+                metrics.mobility_moves += moved.len();
+                dep.refresh_adjacency();
+                let alive = membership.alive_set().clone();
+                membership = Membership::rebuild(&dep, &alive);
+                for &node in &moved {
+                    moved_by_cluster[dep.cluster_of(node)].push(node);
+                }
+                for (cluster, nodes) in moved_by_cluster.iter_mut().enumerate() {
+                    if nodes.is_empty() {
+                        continue;
+                    }
+                    if let ClusterShield::Decentral(s) = &mut lanes[cluster].shield {
+                        metrics.region_handoffs += s.nodes_moved(&dep, nodes);
+                    }
+                    nodes.clear();
+                }
+                // Mobility-aware migration, lane by lane (a job's layers
+                // never leave its cluster, so per-lane run scans are the
+                // legacy per-cluster grouping).
+                for lane in lanes.iter_mut() {
+                    let mut stranded: Vec<Stranded> = Vec::new();
+                    for (ji, run) in lane.runs.iter().enumerate() {
+                        let Some(run) = run else { continue };
+                        let owner = run.sched.job.owner;
+                        if run.done || !membership.is_alive(owner) {
+                            continue;
+                        }
+                        if membership.alive_neighbors(owner).is_empty() {
+                            continue;
+                        }
+                        for (layer_id, &host) in run.sched.placement.iter().enumerate() {
+                            let reachable = host == owner
+                                || membership.alive_neighbors(owner).binary_search(&host).is_ok();
+                            if !reachable && membership.is_alive(host) {
+                                stranded.push(Stranded { job: ji, owner, layer_id });
+                            }
+                        }
+                    }
+                    if stranded.is_empty() {
+                        continue;
+                    }
+                    let mut old_hosts: Vec<NodeId> = Vec::with_capacity(stranded.len());
+                    for s in &stranded {
+                        let run = lane.runs[s.job].as_mut().unwrap();
+                        old_hosts.push(run.sched.placement[s.layer_id]);
+                        lane.state.release(run.sched.handles[s.layer_id]);
+                    }
+                    let outcome = {
+                        let shield = lane.shield.as_dyn();
+                        let policy: &mut dyn Policy = &mut lane.policy;
+                        reschedule_migrated(
+                            &dep, &membership, &lane.state, &graph, &view_demand, &stranded,
+                            policy, shield, &cfg.reward, &mut lane.rng,
+                        )
+                    };
+                    metrics.collisions += outcome.collisions;
+                    metrics.shield_corrections += outcome.corrections;
+                    for ((s, &target), &old) in
+                        stranded.iter().zip(&outcome.targets).zip(&old_hosts)
+                    {
+                        let target = if target == usize::MAX { old } else { target };
+                        if target != old {
+                            metrics.migrated_layers += 1;
+                        }
+                        let est = graph.layers[s.layer_id].demand();
+                        let actual = noisy_demand(&est, &mut lane.rng);
+                        let h = lane.state.place(target, est, actual, true);
+                        let run = lane.runs[s.job].as_mut().unwrap();
+                        run.sched.placement[s.layer_id] = target;
+                        run.sched.handles[s.layer_id] = h;
+                    }
+                    let mut charged: Vec<usize> = stranded.iter().map(|s| s.job).collect();
+                    charged.sort_unstable();
+                    charged.dedup();
+                    for ji in charged {
+                        let run = lane.runs[ji].as_mut().unwrap();
+                        run.sched.decision_secs += outcome.sched_secs + outcome.shield_secs;
+                        run.sched.sched_secs += outcome.sched_secs;
+                        run.sched.shield_secs += outcome.shield_secs;
+                    }
+                }
+                for lane in lanes.iter_mut() {
+                    check_lane_overloads(lane, cfg.reward.alpha);
+                }
+            }
+            _ => unreachable!("lane-local event in the driver queue"),
+        }
+    }
+
+    // Merge: lane metrics in cluster order, then the driver's
+    // cross-region samples and counters — both orders are fixed by the
+    // cluster layout, never by the shard count.
+    let mut merged = RunMetrics::default();
+    let mut qnet = 0usize;
+    for lane in &lanes {
+        merged.absorb(&lane.metrics);
+        qnet += lane.policy.fwd_errors().saturating_sub(lane.fwd_baseline);
+    }
+    merged.absorb(&metrics);
+    merged.qnet_fwd_errors = qnet;
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::ModelKind;
+
+    fn sharded_cfg(shards: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            n_edges: 10,
+            cluster_size: 5,
+            model: ModelKind::Rnn,
+            iterations: 5,
+            pretrain_episodes: 20,
+            repetitions: 1,
+            failure_rate: 3.0,
+            rejoin_secs: 120.0,
+            shards,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn sharded_runs_complete_all_jobs() {
+        let cfg = sharded_cfg(1);
+        assert!(cfg.dynamic(), "shards > 0 must route through the event engines");
+        for m in Method::ALL {
+            let r = run_sharded(&cfg, m, 5);
+            assert_eq!(r.jct.len(), 2 * 3, "{}: wrong job count", m.name());
+            assert!(r.jct.iter().all(|&t| t.is_finite() && t > 0.0), "{}", m.name());
+            assert!(!r.decision_secs.is_empty());
+        }
+    }
+
+    #[test]
+    fn metrics_are_byte_identical_across_shard_counts() {
+        // shards = 1 (inline serial) is the pinned reference for every
+        // worker count, including more workers than lanes.
+        for m in [Method::Marl, Method::SroleD] {
+            let base = run_sharded(&sharded_cfg(1), m, 11).to_json().to_string();
+            for shards in [2usize, 8] {
+                let r = run_sharded(&sharded_cfg(shards), m, 11).to_json().to_string();
+                assert_eq!(base, r, "{} diverges at shards={}", m.name(), shards);
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_composes_with_mobility_and_blast_churn() {
+        let mut cfg = sharded_cfg(1);
+        cfg.mobility =
+            crate::net::MobilityModel::RandomWaypoint { speed_mps: 2.0, pause_secs: 0.0 };
+        cfg.mobility_tick_secs = 10.0;
+        cfg.blast_radius_m = 200.0;
+        let a = run_sharded(&cfg, Method::SroleD, 9).to_json().to_string();
+        cfg.shards = 2;
+        let b = run_sharded(&cfg, Method::SroleD, 9).to_json().to_string();
+        cfg.shards = 8;
+        let c = run_sharded(&cfg, Method::SroleD, 9).to_json().to_string();
+        assert_eq!(a, b, "mobility + blast churn diverges at shards=2");
+        assert_eq!(a, c, "mobility + blast churn diverges at shards=8");
+    }
+
+    #[test]
+    fn run_dynamic_routes_shards_to_the_sharded_engine() {
+        let cfg = sharded_cfg(2);
+        let routed = super::super::dynamic::run_dynamic(&cfg, Method::Marl, 7);
+        let direct = run_sharded(&cfg, Method::Marl, 7);
+        assert_eq!(routed.to_json().to_string(), direct.to_json().to_string());
+    }
+
+    #[test]
+    fn churn_fires_and_reschedules_under_sharding() {
+        let mut failures = 0;
+        let mut rescheduled = 0;
+        for seed in [1u64, 2, 3] {
+            let r = run_sharded(&sharded_cfg(2), Method::SroleC, seed);
+            failures += r.node_failures;
+            rescheduled += r.rescheduled_layers;
+        }
+        assert!(failures > 0, "no failure event fired across 3 seeds");
+        assert!(rescheduled > 0, "failures never stranded a layer");
+    }
+}

@@ -68,6 +68,9 @@ impl Scenario {
         if cfg.dense_links {
             label.push_str("/dense");
         }
+        if cfg.shards > 0 {
+            label.push_str(&format!("/sh{}", cfg.shards));
+        }
         Scenario { label, method, cfg }
     }
 }
@@ -526,6 +529,47 @@ mod tests {
             moves += s.metrics.mobility_moves;
         }
         assert!(moves > 0, "vacuous: nothing moved in any mobility scenario");
+    }
+
+    #[test]
+    fn sharded_runs_are_byte_identical_across_shard_counts() {
+        // The region-sharded tick engine's acceptance criterion at
+        // harness altitude: the same churn sweep must produce
+        // byte-identical `RunMetrics` whether each scenario runs its
+        // lanes serially (shards = 1) or across worker threads
+        // (shards = 2, 8), and the shard knob must tag the label.
+        let mut base = tiny_base();
+        base.n_edges = 10; // two clusters → two lanes
+        base.cluster_size = 5;
+        base.failure_rate = 3.0;
+        base.rejoin_secs = 120.0;
+        let sweep = |shards: usize| {
+            let mut b = base.clone();
+            b.shards = shards;
+            Sweep::new(b).methods(&[Method::Marl, Method::SroleD])
+        };
+        let serial = run_parallel(&sweep(1).scenarios(), 2);
+        let mut failures = 0usize;
+        for &shards in &[2usize, 8] {
+            let wide = run_parallel(&sweep(shards).scenarios(), 2);
+            assert_eq!(serial.len(), wide.len());
+            for (s, w) in serial.iter().zip(&wide) {
+                assert!(s.scenario.label.ends_with("/sh1"), "{}", s.scenario.label);
+                assert!(
+                    w.scenario.label.ends_with(&format!("/sh{shards}")),
+                    "{}",
+                    w.scenario.label
+                );
+                assert_eq!(
+                    s.metrics.to_json().to_string(),
+                    w.metrics.to_json().to_string(),
+                    "{}: report diverged between shards=1 and shards={shards}",
+                    s.scenario.label
+                );
+                failures += s.metrics.node_failures;
+            }
+        }
+        assert!(failures > 0, "vacuous: no churn fired in any sharded scenario");
     }
 
     #[test]

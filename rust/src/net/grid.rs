@@ -141,6 +141,26 @@ impl SpatialGrid {
         self.nx * self.ny
     }
 
+    /// The ids binned into cell `c` (ascending — nodes are filled in id
+    /// order).  Empty slice for empty cells.
+    pub fn cell_items(&self, c: usize) -> &[usize] {
+        &self.items[self.starts[c]..self.starts[c + 1]]
+    }
+
+    /// Iterate the *non-empty* cells in cell-index order as
+    /// `(cell_index, member ids)` — the seed enumeration the grid-backed
+    /// sub-cluster partitioner merges into regions.
+    pub fn cells(&self) -> impl Iterator<Item = (usize, &[usize])> + '_ {
+        (0..self.n_cells()).filter_map(move |c| {
+            let items = self.cell_items(c);
+            if items.is_empty() {
+                None
+            } else {
+                Some((c, items))
+            }
+        })
+    }
+
     /// Clamped cell index along one axis (monotone non-decreasing in
     /// the coordinate — the property the query range relies on).
     #[inline]
@@ -314,6 +334,23 @@ mod tests {
                 assert_eq!(out_a, scan(&positions, positions[i], cell, i));
             }
         }
+    }
+
+    #[test]
+    fn cell_iteration_covers_every_node_once() {
+        let mut rng = Rng::new(0xce11);
+        let positions = random_positions(&mut rng, 80, 150.0);
+        let grid = SpatialGrid::build(&positions, 20.0);
+        let mut seen: Vec<usize> = Vec::new();
+        for (c, items) in grid.cells() {
+            assert!(!items.is_empty(), "cells() must skip empty cells");
+            assert!(c < grid.n_cells());
+            assert!(items.windows(2).all(|w| w[0] < w[1]), "cell ids ascend");
+            assert_eq!(items, grid.cell_items(c));
+            seen.extend_from_slice(items);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..80).collect::<Vec<_>>());
     }
 
     #[test]

@@ -88,6 +88,9 @@ fn quantize(frac: f64) -> f64 {
 /// An agent's (possibly stale) view of node availability.
 #[derive(Debug, Clone)]
 struct View {
+    /// First node id the view covers — nonzero when snapshotting a
+    /// cluster-sliced [`ResourceState`] (the sharded engine's lanes).
+    base: usize,
     /// Estimated resident demand per node as of the last refresh.
     demand: Vec<Resources>,
 }
@@ -103,14 +106,14 @@ pub const REF_BW_MBPS: f64 = 1000.0;
 
 impl View {
     fn snapshot(state: &ResourceState) -> View {
-        View { demand: (0..state.n()).map(|n| *state.demand(n)).collect() }
+        View { base: state.base(), demand: state.node_ids().map(|n| *state.demand(n)).collect() }
     }
 
     /// Absolute free capacity of `node` for resource `k`, normalized to
     /// the Table-I maximum, clamped to [0, 1].
     fn avail(&self, state: &ResourceState, node: NodeId, k: ResourceKind) -> f64 {
         let caps = state.caps(node);
-        let free = caps.get(k) - self.demand[node].get(k);
+        let free = caps.get(k) - self.demand[node - self.base].get(k);
         let reference = match k {
             ResourceKind::Cpu => REF_CPU,
             ResourceKind::Mem => REF_MEM_MB,
@@ -121,7 +124,8 @@ impl View {
 
     /// The agent immediately accounts for its *own* placements.
     fn add(&mut self, node: NodeId, demand: &Resources) {
-        self.demand[node] = self.demand[node].add(demand);
+        let i = node - self.base;
+        self.demand[i] = self.demand[i].add(demand);
     }
 }
 
@@ -306,20 +310,21 @@ fn detect_collisions(
     state: &ResourceState,
     alpha: f64,
 ) -> usize {
+    let base = state.base();
     let mut extra = vec![Resources::default(); state.n()];
     let mut seen = vec![false; state.n()];
     let mut touched: Vec<NodeId> = Vec::with_capacity(proposals.len());
     for p in proposals {
-        if !seen[p.target] {
-            seen[p.target] = true;
+        if !seen[p.target - base] {
+            seen[p.target - base] = true;
             touched.push(p.target);
         }
-        extra[p.target] = extra[p.target].add(&p.demand);
+        extra[p.target - base] = extra[p.target - base].add(&p.demand);
     }
     touched
         .into_iter()
         .filter(|&node| {
-            ResourceKind::ALL.iter().any(|&k| state.util_with(node, &extra[node], k) > alpha)
+            ResourceKind::ALL.iter().any(|&k| state.util_with(node, &extra[node - base], k) > alpha)
         })
         .count()
 }
@@ -750,7 +755,9 @@ fn reschedule_impl(
     rng: &mut Rng,
     proximity: bool,
 ) -> ReschedOutcome {
-    let view = View { demand: view_demand.to_vec() };
+    // The driver's stale view is always deployment-wide (base 0), even
+    // when `state` is a cluster-sliced lane state.
+    let view = View { base: 0, demand: view_demand.to_vec() };
     let mut targets: Vec<NodeId> = Vec::with_capacity(stranded.len());
     let mut proposals: Vec<ProposedAction> = Vec::with_capacity(stranded.len());
     // Per-decision scratch, reused across stranded layers.

@@ -121,6 +121,40 @@ impl Shield for DecentralShield {
         let mut collided_nodes: Vec<NodeId> = Vec::new();
         let mut per_shield_secs = vec![0.0f64; self.subs.k];
 
+        // Region-local fast path: one O(proposals) bucketing pass builds
+        // every shield's and every delegate's visible set, replacing the
+        // per-sub and per-pair rescans (O(P·k + P·pairs)).  A proposal
+        // lands in its agent's sub-shield bucket when it targets an
+        // interior node, and in the bucket of each boundary pair that
+        // involves the agent's sub-cluster and covers its target.  The
+        // outer loop walks proposals in index order, so every bucket is
+        // ascending — the exact visible sets (and hence corrections,
+        // collisions and latency figures) the rescans produced, pinned by
+        // the `shield::reference` equivalence tests.
+        let mut sub_visible: Vec<Vec<usize>> = vec![Vec::new(); self.subs.k];
+        let mut pair_visible: Vec<Vec<usize>> = vec![Vec::new(); self.subs.boundaries.len()];
+        let mut pairs_of_sub: Vec<Vec<usize>> = vec![Vec::new(); self.subs.k];
+        for (bi, ((a, b), _)) in self.subs.boundaries.iter().enumerate() {
+            pairs_of_sub[*a].push(bi);
+            pairs_of_sub[*b].push(bi);
+        }
+        for (i, p) in proposals.iter().enumerate() {
+            if !self.subs.is_member(p.agent) {
+                continue;
+            }
+            let s = self.subs.sub_of(p.agent);
+            if !self.subs.is_boundary(p.target) {
+                if self.subs.in_sub(p.agent, s) {
+                    sub_visible[s].push(i);
+                }
+            }
+            for &bi in &pairs_of_sub[s] {
+                if self.subs.pair_boundary_set(bi).contains(p.target) {
+                    pair_visible[bi].push(i);
+                }
+            }
+        }
+
         // Phase 1: each sub-cluster shield checks the actions reported by
         // its own agents that target *interior* nodes of its sub-cluster;
         // boundary-targeted actions are forwarded to the delegates instead
@@ -129,14 +163,7 @@ impl Shield for DecentralShield {
         // sub-cluster's own agents (any out-of-sub agent in range would
         // make the node a boundary node), so the local view is complete.
         for s in 0..self.subs.k {
-            let visible: Vec<usize> = proposals
-                .iter()
-                .enumerate()
-                .filter(|(_, p)| {
-                    self.subs.in_sub(p.agent, s) && !self.subs.is_boundary(p.target)
-                })
-                .map(|(i, _)| i)
-                .collect();
+            let visible = std::mem::take(&mut sub_visible[s]);
             let subs = &self.subs;
             let checkable = |n: NodeId| subs.in_sub(n, s) && !subs.is_boundary(n);
             // Safe alternatives are drawn from the shield's own sub-cluster
@@ -170,22 +197,10 @@ impl Shield for DecentralShield {
         // target the pair's boundary nodes.
         let mut delegate_secs = 0.0f64;
         for bi in 0..self.subs.boundaries.len() {
-            let (a, b) = self.subs.boundaries[bi].0;
-            let visible: Vec<usize> = proposals
-                .iter()
-                .enumerate()
-                .filter(|(_, p)| {
-                    if !self.subs.is_member(p.agent) {
-                        return false;
-                    }
-                    let s = self.subs.sub_of(p.agent);
-                    (s == a || s == b) && self.subs.pair_boundary_set(bi).contains(p.target)
-                })
-                // Actions already corrected in phase 1 keep their original
-                // target in `proposals`; the delegate sees the *reported*
-                // action — a second fidelity leak matching the paper.
-                .map(|(i, _)| i)
-                .collect();
+            // Actions already corrected in phase 1 keep their original
+            // target in `proposals`; the delegate sees the *reported*
+            // action — a second fidelity leak matching the paper.
+            let visible = std::mem::take(&mut pair_visible[bi]);
             if visible.is_empty() {
                 continue;
             }

@@ -103,6 +103,12 @@ impl EventQueue {
         self.heap.pop()
     }
 
+    /// The event `pop` would return, without removing it — the shard
+    /// driver peeks the global queue to pick each epoch's barrier time.
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek()
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -158,6 +164,19 @@ mod tests {
         assert_eq!(q.pop().unwrap().t, 10.0);
         assert!(q.pop().is_none());
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn peek_matches_pop_without_consuming() {
+        let mut q = EventQueue::new();
+        assert!(q.peek().is_none());
+        q.push(5.0, EventKind::Sample);
+        q.push(1.0, EventKind::ViewRefresh);
+        let head = *q.peek().unwrap();
+        assert_eq!(head.t, 1.0);
+        assert_eq!(q.len(), 2, "peek must not consume");
+        let popped = q.pop().unwrap();
+        assert_eq!((popped.t, popped.seq), (head.t, head.seq));
     }
 
     #[test]

@@ -28,9 +28,18 @@ struct Resident {
     is_dl: bool,
 }
 
-/// Live resource state over all nodes of a deployment.
+/// Live resource state over the nodes of a deployment — either all of
+/// them (`new`, `base == 0`) or one cluster's contiguous id slice
+/// (`for_cluster`), which is what lets the sharded tick engine give each
+/// region lane its own O(cluster)-memory state instead of an O(n) clone.
+/// All public APIs keep taking *global* `NodeId`s; the offset is an
+/// internal storage detail.  Touching a node outside the tracked slice
+/// panics (index out of bounds) — lanes own disjoint node ranges by
+/// construction.
 #[derive(Debug, Clone)]
 pub struct ResourceState {
+    /// First tracked node id (0 for whole-deployment states).
+    base: usize,
     caps: Vec<Resources>,
     est: Vec<Resources>,
     actual: Vec<Resources>,
@@ -43,6 +52,7 @@ impl ResourceState {
     pub fn new(dep: &Deployment) -> ResourceState {
         let n = dep.n();
         ResourceState {
+            base: 0,
             caps: dep.nodes.iter().map(|d| d.caps).collect(),
             est: vec![Resources::default(); n],
             actual: vec![Resources::default(); n],
@@ -52,23 +62,57 @@ impl ResourceState {
         }
     }
 
+    /// State over one cluster's member span only (`min..=max` of
+    /// `members`): O(cluster) memory, global-`NodeId` API.
+    pub fn for_cluster(dep: &Deployment, members: &[NodeId]) -> ResourceState {
+        let base = members.iter().copied().min().unwrap_or(0);
+        let end = members.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+        let n = end - base;
+        ResourceState {
+            base,
+            caps: dep.nodes[base..end].iter().map(|d| d.caps).collect(),
+            est: vec![Resources::default(); n],
+            actual: vec![Resources::default(); n],
+            dl_tasks: vec![0; n],
+            bg_tasks: vec![0; n],
+            residents: Vec::new(),
+        }
+    }
+
+    /// Number of tracked nodes (the whole deployment for `new`).
     pub fn n(&self) -> usize {
         self.caps.len()
     }
 
+    /// First tracked node id (0 unless built with `for_cluster`).
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// The tracked global node ids, ascending.
+    pub fn node_ids(&self) -> std::ops::Range<usize> {
+        self.base..self.base + self.caps.len()
+    }
+
+    #[inline]
+    fn ix(&self, node: NodeId) -> usize {
+        node - self.base
+    }
+
     #[inline]
     pub fn caps(&self, node: NodeId) -> &Resources {
-        &self.caps[node]
+        &self.caps[self.ix(node)]
     }
 
     /// Place a task; returns a handle for later release.
     pub fn place(&mut self, node: NodeId, est: Resources, actual: Resources, is_dl: bool) -> TaskHandle {
-        self.est[node] = self.est[node].add(&est);
-        self.actual[node] = self.actual[node].add(&actual);
+        let i = self.ix(node);
+        self.est[i] = self.est[i].add(&est);
+        self.actual[i] = self.actual[i].add(&actual);
         if is_dl {
-            self.dl_tasks[node] += 1;
+            self.dl_tasks[i] += 1;
         } else {
-            self.bg_tasks[node] += 1;
+            self.bg_tasks[i] += 1;
         }
         self.residents.push(Some(Resident { node, est, actual, is_dl }));
         TaskHandle(self.residents.len() - 1)
@@ -77,12 +121,13 @@ impl ResourceState {
     /// Release a previously placed task.
     pub fn release(&mut self, h: TaskHandle) {
         let r = self.residents[h.0].take().expect("double release");
-        self.est[r.node] = self.est[r.node].sub(&r.est);
-        self.actual[r.node] = self.actual[r.node].sub(&r.actual);
+        let i = self.ix(r.node);
+        self.est[i] = self.est[i].sub(&r.est);
+        self.actual[i] = self.actual[i].sub(&r.actual);
         if r.is_dl {
-            self.dl_tasks[r.node] -= 1;
+            self.dl_tasks[i] -= 1;
         } else {
-            self.bg_tasks[r.node] -= 1;
+            self.bg_tasks[i] -= 1;
         }
     }
 
@@ -90,23 +135,27 @@ impl ResourceState {
     /// hypothetical extra demand.
     #[inline]
     pub fn util_with(&self, node: NodeId, extra: &Resources, k: ResourceKind) -> f64 {
-        self.caps[node].utilization(&self.est[node].add(extra), k)
+        let i = self.ix(node);
+        self.caps[i].utilization(&self.est[i].add(extra), k)
     }
 
     /// Estimated utilization of one resource (Eq. 1).
     #[inline]
     pub fn util(&self, node: NodeId, k: ResourceKind) -> f64 {
-        self.caps[node].utilization(&self.est[node], k)
+        let i = self.ix(node);
+        self.caps[i].utilization(&self.est[i], k)
     }
 
     /// Actual (noisy) utilization of one resource.
     pub fn actual_util(&self, node: NodeId, k: ResourceKind) -> f64 {
-        self.caps[node].utilization(&self.actual[node], k)
+        let i = self.ix(node);
+        self.caps[i].utilization(&self.actual[i], k)
     }
 
     /// Combined estimated utilization (Eq. 2).
     pub fn combined_util(&self, node: NodeId) -> f64 {
-        self.caps[node].combined_utilization(&self.est[node])
+        let i = self.ix(node);
+        self.caps[i].combined_utilization(&self.est[i])
     }
 
     /// Whether any resource exceeds `alpha` on `node` (estimates).
@@ -122,22 +171,23 @@ impl ResourceState {
     /// Estimated resident demand.
     #[inline]
     pub fn demand(&self, node: NodeId) -> &Resources {
-        &self.est[node]
+        &self.est[self.ix(node)]
     }
 
     /// Actual resident demand.
     pub fn actual_demand(&self, node: NodeId) -> &Resources {
-        &self.actual[node]
+        &self.actual[self.ix(node)]
     }
 
     /// Number of resident DL partitions on `node`.
     pub fn dl_task_count(&self, node: NodeId) -> usize {
-        self.dl_tasks[node]
+        self.dl_tasks[self.ix(node)]
     }
 
     /// Number of resident tasks (DL + background) on `node`.
     pub fn task_count(&self, node: NodeId) -> usize {
-        self.dl_tasks[node] + self.bg_tasks[node]
+        let i = self.ix(node);
+        self.dl_tasks[i] + self.bg_tasks[i]
     }
 
     /// CPU share actually granted to a task demanding `cpu_demand` on
@@ -148,8 +198,9 @@ impl ResourceState {
     /// what makes balanced schedules (the shield's goal) faster.
     #[inline]
     pub fn cpu_share(&self, node: NodeId, cpu_demand: f64) -> f64 {
-        let total = self.actual[node].cpu;
-        let cap = self.caps[node].cpu;
+        let i = self.ix(node);
+        let total = self.actual[i].cpu;
+        let cap = self.caps[i].cpu;
         cap * cpu_demand / total.max(cpu_demand).max(1e-9)
     }
 
@@ -171,8 +222,9 @@ impl ResourceState {
     /// bandwidth demand exceeds its NIC capacity.
     #[inline]
     pub fn bw_share(&self, node: NodeId) -> f64 {
-        let total = self.actual[node].bw;
-        let cap = self.caps[node].bw;
+        let i = self.ix(node);
+        let total = self.actual[i].bw;
+        let cap = self.caps[i].bw;
         if total <= cap {
             1.0
         } else {
@@ -274,6 +326,49 @@ mod tests {
         assert_eq!(s.mem_pressure(4), 1.0);
         s.place(4, r(0.1, mem * 0.75, 0.0), r(0.1, mem * 0.75, 0.0), true);
         assert!(s.mem_pressure(4) > 1.0);
+    }
+
+    #[test]
+    fn cluster_slice_state_matches_full_state() {
+        // A `for_cluster` state over cluster 1 (nodes 5..10 of a 10-node,
+        // 2-cluster deployment) must answer every query exactly like the
+        // whole-deployment state under the same placement sequence.
+        let mut rng = Rng::new(1);
+        let dep = Deployment::generate(&mut rng, 10, 5, &CONTAINER_PROFILE);
+        let members = dep.clusters[1].members.clone();
+        let mut full = ResourceState::new(&dep);
+        let mut slice = ResourceState::for_cluster(&dep, &members);
+        assert_eq!(slice.base(), 5);
+        assert_eq!(slice.n(), 5);
+        assert_eq!(slice.node_ids().collect::<Vec<_>>(), members);
+        let mut handles = Vec::new();
+        for (i, &node) in members.iter().enumerate() {
+            let est = r(0.1 * (i + 1) as f64, 20.0 * (i + 1) as f64, 2.0);
+            let actual = r(0.12 * (i + 1) as f64, 22.0 * (i + 1) as f64, 2.0);
+            let hf = full.place(node, est, actual, i % 2 == 0);
+            let hs = slice.place(node, est, actual, i % 2 == 0);
+            handles.push((hf, hs));
+        }
+        for &node in &members {
+            assert_eq!(slice.caps(node), full.caps(node));
+            assert_eq!(slice.demand(node), full.demand(node));
+            assert_eq!(slice.actual_demand(node), full.actual_demand(node));
+            assert_eq!(slice.task_count(node), full.task_count(node));
+            assert_eq!(slice.dl_task_count(node), full.dl_task_count(node));
+            for k in ResourceKind::ALL {
+                assert_eq!(slice.util(node, k), full.util(node, k));
+                assert_eq!(slice.actual_util(node, k), full.actual_util(node, k));
+            }
+            assert_eq!(slice.combined_util(node), full.combined_util(node));
+            assert_eq!(slice.overloaded(node, 0.5), full.overloaded(node, 0.5));
+            assert_eq!(slice.cpu_share(node, 0.2), full.cpu_share(node, 0.2));
+            assert_eq!(slice.mem_pressure(node), full.mem_pressure(node));
+            assert_eq!(slice.bw_share(node), full.bw_share(node));
+        }
+        let (hf, hs) = handles[2];
+        full.release(hf);
+        slice.release(hs);
+        assert_eq!(slice.demand(members[2]), full.demand(members[2]));
     }
 
     #[test]

@@ -332,6 +332,42 @@ fn prop_indexed_shields_match_scan_reference() {
 }
 
 #[test]
+fn prop_decentral_bucketing_matches_scan_on_large_rounds() {
+    // The O(P) proposal-bucketing fast path exists for *large* rounds —
+    // pin it to the scan reference where it matters: many proposals per
+    // round, many sub-clusters (hence many boundary pairs), repeated
+    // rounds on one long-lived shield so bucket reuse is exercised.
+    use srole::shield::reference::DecentralShieldScan;
+    let mut rng = Rng::new(0xb0c4e7);
+    for case in 0..12 {
+        let n = 24 + rng.below(40);
+        let dep = Deployment::generate(&mut rng, n, n, &CONTAINER_PROFILE);
+        let members = dep.clusters[0].members.clone();
+        let mut state = ResourceState::new(&dep);
+        for &m in &members {
+            if rng.chance(0.3) {
+                let caps = *state.caps(m);
+                let frac = rng.range_f64(0.0, 0.6);
+                state.place(m, caps.scale(frac), caps.scale(frac), false);
+            }
+        }
+        let k = 3 + rng.below(4);
+        let mut d = DecentralShield::new(&dep, &members, k);
+        let mut d_ref = DecentralShieldScan::new(&dep, &members, k);
+        for round in 0..4 {
+            let props = random_round(&mut rng, &members, &state, 64);
+            let od = d.check(&props, &state, &dep, 0.9);
+            let odr = d_ref.check(&props, &state, &dep, 0.9);
+            assert_eq!(od.corrections, odr.corrections, "case {case} round {round}");
+            assert_eq!(od.collisions, odr.collisions, "case {case} round {round}");
+            assert!((od.shield_secs - odr.shield_secs).abs() < 1e-12, "case {case}");
+            assert_eq!(d.total_checked, d_ref.total_checked, "case {case} round {round}");
+            assert_eq!(d.delegate_rounds, d_ref.delegate_rounds, "case {case} round {round}");
+        }
+    }
+}
+
+#[test]
 fn prop_shield_scratch_reuse_stays_clean_across_rounds() {
     // One long-lived indexed shield (its scratch buffers reused every
     // round) must keep matching FRESH scan-based shields round by round —
