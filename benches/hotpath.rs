@@ -27,6 +27,12 @@
 //! * parallel scenario harness: a 4-scenario sweep, serial vs parallel,
 //!   with a bit-identical-reports determinism check;
 //! * MARL wave decision latency and DES execution throughput;
+//! * batched vs per-agent Q-net decision path: one wave on the host
+//!   Q-net backend with one fixed-lane matmul per chunk of greedy agents
+//!   vs one forward per agent, at 100 / 300 / 1000 concurrent agents
+//!   with byte-identical outcomes asserted before timing (batched must
+//!   be strictly faster at 300+ — asserted in full runs; smoke runs only
+//!   the 1000-agent cell);
 //! * PJRT `qnet_fwd` action-scoring latency (the DQN request path),
 //!   skipped when artifacts are absent.
 //!
@@ -42,7 +48,7 @@ use srole::rl::features::{state_vector_vec, CandidateView};
 use srole::rl::replay::Replay;
 use srole::rl::{state_vector_into, RewardParams, TabularQ, STATE_DIM};
 use srole::runtime::qnet::TdBatch;
-use srole::sched::marl_wave;
+use srole::sched::{marl_wave, marl_wave_dynamic, DecisionConfig, DecisionMode, WaveOutcome};
 use srole::shield::reference::{CentralShieldScan, DecentralShieldScan};
 use srole::shield::{CentralShield, DecentralShield, ProposedAction, Shield};
 use srole::sim::{Executor, ResourceState};
@@ -685,6 +691,87 @@ fn main() {
     });
     println!("DES throughput: {thr:.0} job-iterations/sec");
 
+    // --- batched vs per-agent Q-net decision path ------------------------
+    // The tentpole cells: one marl wave where every round's greedy
+    // forwards are issued as fixed-lane batched matmuls
+    // (`Policy::choose_batch` → `QNetSession::fwd_batch_into`) vs the
+    // per-agent reference (`choose`, one forward per agent).  Runs on
+    // the host Q-net backend — bitwise row-for-row with the batched
+    // kernel — so the cells work without compiled artifacts.  The
+    // outcomes must be byte-identical before anything is timed; batched
+    // must be strictly faster at 300+ agents (full runs only; smoke
+    // runs only the 1000-agent cell).
+    let mut decision_bench = Bench::new("hotpath_decision");
+    {
+        let mut rng_d = Rng::new(31);
+        let dep_d = Deployment::generate(&mut rng_d, 100, 100, &CONTAINER_PROFILE);
+        let membership_d = Membership::full(&dep_d);
+        let graph_d = ModelKind::Rnn.build();
+        let members_d = dep_d.clusters[0].members.clone();
+        let make_jobs = |n: usize| -> Vec<srole::workload::DlJob> {
+            (0..n)
+                .map(|id| srole::workload::DlJob {
+                    id,
+                    cluster: 0,
+                    owner: members_d[id % members_d.len()],
+                    model: ModelKind::Rnn,
+                    arrival: 0.0,
+                    iterations: 2,
+                })
+                .collect()
+        };
+        // One deterministic wave: fresh policy, state and RNG per run,
+        // so both modes (and every timing sample) replay identical work.
+        let run_wave = |jobs: &[srole::workload::DlJob], mode: DecisionMode| -> WaveOutcome {
+            let mut policy = srole::rl::dqn::DqnPolicy::new_host(7);
+            let mut st = ResourceState::new(&dep_d);
+            let mut r = Rng::new(4242);
+            let dc = DecisionConfig { mode, batched_eval_cost: false };
+            marl_wave_dynamic(
+                &dep_d, &membership_d, &mut st, &graph_d, jobs, &mut policy, None, &params, 3,
+                dc, &mut r,
+            )
+        };
+        let decision_sizes: &[usize] = if bench_fast { &[1000] } else { &[100, 300, 1000] };
+        for &n in decision_sizes {
+            let jobs = make_jobs(n);
+            // Byte-identity before timing.
+            let a = run_wave(&jobs, DecisionMode::Batched);
+            let b = run_wave(&jobs, DecisionMode::PerAgent);
+            assert_eq!(a.collisions, b.collisions, "collisions diverged at {n} agents");
+            assert_eq!(a.schedules.len(), b.schedules.len());
+            for (x, y) in a.schedules.iter().zip(&b.schedules) {
+                assert_eq!(x.placement, y.placement, "placement diverged at {n} agents");
+                assert_eq!(
+                    x.decision_secs.to_bits(),
+                    y.decision_secs.to_bits(),
+                    "decision_secs diverged at {n} agents"
+                );
+            }
+            let t_batched = decision_bench
+                .measure(&format!("decision_batched_{n}a"), || {
+                    run_wave(&jobs, DecisionMode::Batched).collisions
+                })
+                .median_secs();
+            let t_per_agent = decision_bench
+                .measure(&format!("decision_per_agent_{n}a"), || {
+                    run_wave(&jobs, DecisionMode::PerAgent).collisions
+                })
+                .median_secs();
+            println!(
+                "batched decision speedup (per-agent/batched) at {n} agents: {:.1}x",
+                t_per_agent / t_batched.max(1e-12)
+            );
+            if n >= 300 && !bench_fast {
+                assert!(
+                    t_batched < t_per_agent,
+                    "batched decisions must beat per-agent forwards at {n} agents: \
+                     {t_batched} vs {t_per_agent}"
+                );
+            }
+        }
+    }
+
     // --- PJRT qnet forward latency (request path of the DQN policy) -----
     let dir = srole::runtime::Engine::default_dir();
     if dir.join("manifest.json").exists() && srole::runtime::PJRT_AVAILABLE {
@@ -698,6 +785,7 @@ fn main() {
 
     bench.print_report();
     tick_bench.print_report();
+    decision_bench.print_report();
     match bench.write_json(std::path::Path::new(".")) {
         Ok(path) => println!("bench report: {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
@@ -705,5 +793,9 @@ fn main() {
     match tick_bench.write_json(std::path::Path::new(".")) {
         Ok(path) => println!("bench report: {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_hotpath_tick.json: {e}"),
+    }
+    match decision_bench.write_json(std::path::Path::new(".")) {
+        Ok(path) => println!("bench report: {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_hotpath_decision.json: {e}"),
     }
 }

@@ -10,7 +10,9 @@ reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
 Artifacts (all lowered with return_tuple=True; Rust unwraps tuples):
 
   qnet_init      (seed i32[])                              -> 6 qnet params
-  qnet_fwd       (6 params, states f32[B,36])              -> qvalues f32[B,11]
+  qnet_fwd       (6 params, states f32[1,36])              -> qvalues f32[1,11]
+  qnet_fwd_batch (6 params, states f32[L,36])              -> qvalues f32[L,11]
+                 (L = --qnet-fwd-batch lanes; Rust pads ragged chunks)
   qnet_train     (6 params, 6 target params, batch, lr, gamma)
                                                            -> 6 params', loss
   lm_init        (seed i32[])                              -> 14 LM params
@@ -85,7 +87,7 @@ class Builder:
         print(f"  manifest: {path}")
 
 
-def build_qnet(b: Builder, batch: int):
+def build_qnet(b: Builder, batch: int, fwd_batch: int):
     pn = list(M.QNET_PARAM_NAMES)
     ps = [spec(s) for s in M.QNET_PARAM_SHAPES]
     b.manifest["meta"]["qnet"] = {
@@ -94,11 +96,13 @@ def build_qnet(b: Builder, batch: int):
         "max_neighbors": M.MAX_NEIGHBORS,
         "hidden": M.QNET_HIDDEN,
         "train_batch": batch,
+        "fwd_batch": fwd_batch,
     }
 
     b.emit("qnet_init", M.qnet_init, ["seed"], [spec((), I32)], pn, ps)
 
-    # Action selection runs per agent decision; B=1 keeps latency minimal.
+    # Per-decision action selection; B=1 keeps single-request latency
+    # minimal and stays the reference the batched lane is pinned to.
     b.emit(
         "qnet_fwd",
         M.qnet_fwd,
@@ -106,6 +110,18 @@ def build_qnet(b: Builder, batch: int):
         ps + [spec((1, M.STATE_DIM))],
         ["qvalues"],
         [spec((1, M.NUM_ACTIONS))],
+    )
+
+    # Whole-round action selection: one fixed-lane forward scores every
+    # greedy agent of a wave round; the Rust side zero-pads the final
+    # ragged chunk up to the lane width.
+    b.emit(
+        "qnet_fwd_batch",
+        M.qnet_fwd,
+        pn + ["states"],
+        ps + [spec((fwd_batch, M.STATE_DIM))],
+        ["qvalues"],
+        [spec((fwd_batch, M.NUM_ACTIONS))],
     )
 
     batch_in = [
@@ -175,6 +191,8 @@ def main():
     ap.add_argument("--out", default="../artifacts/manifest.json",
                     help="manifest path; artifacts land in its directory")
     ap.add_argument("--qnet-batch", type=int, default=32)
+    ap.add_argument("--qnet-fwd-batch", type=int, default=32,
+                    help="lane width of the batched decision forward")
     ap.add_argument("--lm-batch", type=int, default=8)
     ap.add_argument("--lm-vocab", type=int, default=512)
     ap.add_argument("--lm-seq", type=int, default=64)
@@ -188,7 +206,7 @@ def main():
     b = Builder(out_dir)
 
     print("lowering qnet artifacts ...")
-    build_qnet(b, args.qnet_batch)
+    build_qnet(b, args.qnet_batch, args.qnet_fwd_batch)
     cfg = M.LmConfig(
         vocab=args.lm_vocab,
         seq=args.lm_seq,

@@ -115,6 +115,17 @@ pub struct ExperimentConfig {
     /// (the serial reference) and `N` spreads lanes over `N` OS threads.
     /// Results are byte-identical for every value `>= 1`.
     pub shards: usize,
+    /// Evaluate each wave round's greedy Q-net forwards as one batched
+    /// matmul instead of one forward per agent.  The per-agent path
+    /// stays as the in-tree equivalence reference: batched runs must
+    /// reproduce it byte-identically (pinned by harness tests), so this
+    /// knob only trades wall-clock, never results.
+    pub batch_decisions: bool,
+    /// Model the *latency* benefit of batching too: charge one amortized
+    /// batch evaluation per marl wave round instead of per-candidate
+    /// policy-eval costs.  Off by default so modeled `decision_secs`
+    /// keeps the paper's legacy per-candidate accounting.
+    pub batched_eval_cost: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -145,6 +156,8 @@ impl Default for ExperimentConfig {
             cluster_spread_m: 0.0,
             dense_links: false,
             shards: 0,
+            batch_decisions: true,
+            batched_eval_cost: false,
         }
     }
 }
@@ -263,6 +276,20 @@ impl ExperimentConfig {
                 }
             }
             "shards" => self.shards = parse_usize(val)?,
+            "batch_decisions" => {
+                self.batch_decisions = match val {
+                    "true" | "1" | "yes" => true,
+                    "false" | "0" | "no" => false,
+                    other => return Err(format!("bad boolean {other} for batch_decisions")),
+                }
+            }
+            "batched_eval_cost" => {
+                self.batched_eval_cost = match val {
+                    "true" | "1" | "yes" => true,
+                    "false" | "0" | "no" => false,
+                    other => return Err(format!("bad boolean {other} for batched_eval_cost")),
+                }
+            }
             other => return Err(format!("unknown config key {other}")),
         }
         Ok(())
@@ -540,6 +567,28 @@ mod tests {
         assert_eq!(d.shards, 0, "default stays on the legacy single-stream driver");
         assert!(!d.dynamic());
         assert!(ExperimentConfig::from_toml("shards = -1").is_err());
+    }
+
+    #[test]
+    fn decision_path_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            batch_decisions = false
+            batched_eval_cost = true
+            "#,
+        )
+        .unwrap();
+        assert!(!cfg.batch_decisions);
+        assert!(cfg.batched_eval_cost);
+        cfg.validate().unwrap();
+
+        // Batched decisions are the default; the cost knob is opt-in so
+        // modeled latency keeps the legacy per-candidate accounting.
+        let d = ExperimentConfig::default();
+        assert!(d.batch_decisions);
+        assert!(!d.batched_eval_cost);
+        assert!(ExperimentConfig::from_toml("batch_decisions = \"maybe\"").is_err());
+        assert!(ExperimentConfig::from_toml("batched_eval_cost = \"2\"").is_err());
     }
 
     #[test]

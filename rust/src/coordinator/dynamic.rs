@@ -43,7 +43,7 @@ use crate::net::mobility::DynamicTopology;
 use crate::rl::{Policy, TabularQ};
 use crate::sched::{
     central_wave_dynamic, marl_wave_dynamic, noisy_demand, reschedule_migrated,
-    reschedule_stranded, JobSchedule, Stranded, WaveOutcome,
+    reschedule_stranded, DecisionConfig, DecisionMode, JobSchedule, Stranded, WaveOutcome,
 };
 use crate::shield::{CentralShield, DecentralShield, Shield};
 use crate::sim::engine::SAMPLE_PERIOD_SECS;
@@ -189,6 +189,13 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     // Baseline after pretraining: the run's metric must count only
     // forward errors the measured run itself experienced.
     let fwd_errors_baseline = policy.fwd_errors();
+    let batch_baseline = policy.batch_stats();
+    // Decision path: batched greedy forwards by default, replaying the
+    // per-agent reference byte-identically (pinned by harness tests).
+    let dc = DecisionConfig {
+        mode: if cfg.batch_decisions { DecisionMode::Batched } else { DecisionMode::PerAgent },
+        batched_eval_cost: cfg.batched_eval_cost,
+    };
 
     let mut membership = Membership::full(&dep);
     let mut shields: Vec<ClusterShield> = dep
@@ -283,12 +290,12 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 let shield = shields[w.cluster].as_dyn();
                 let out: WaveOutcome = match method {
                     Method::Rl => central_wave_dynamic(
-                        &dep, &membership, &mut state, &graph, &w.jobs, policy, &cfg.reward,
+                        &dep, &membership, &mut state, &graph, &w.jobs, policy, &cfg.reward, dc,
                         &mut rng,
                     ),
                     Method::Marl | Method::SroleC | Method::SroleD => marl_wave_dynamic(
                         &dep, &membership, &mut state, &graph, &w.jobs, policy, shield,
-                        &cfg.reward, cfg.refresh_rounds, &mut rng,
+                        &cfg.reward, cfg.refresh_rounds, dc, &mut rng,
                     ),
                 };
                 metrics.collisions += out.collisions;
@@ -474,7 +481,7 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                         let shield = shields[cluster].as_dyn();
                         let outcome = reschedule_stranded(
                             &dep, &membership, &state, &graph, &view_demand, &stranded, victim,
-                            policy, shield, &cfg.reward, &mut rng,
+                            policy, shield, &cfg.reward, dc, &mut rng,
                         );
                         metrics.collisions += outcome.collisions;
                         metrics.shield_corrections += outcome.corrections;
@@ -613,7 +620,7 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                     let shield = shields[cluster].as_dyn();
                     let outcome = reschedule_migrated(
                         &dep, &membership, &state, &graph, &view_demand, stranded, policy,
-                        shield, &cfg.reward, &mut rng,
+                        shield, &cfg.reward, dc, &mut rng,
                     );
                     metrics.collisions += outcome.collisions;
                     metrics.shield_corrections += outcome.corrections;
@@ -648,6 +655,10 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
         }
     }
     metrics.qnet_fwd_errors = policy.fwd_errors().saturating_sub(fwd_errors_baseline);
+    let (fwds, rows, pads) = policy.batch_stats();
+    metrics.qnet_batch_fwds = fwds.saturating_sub(batch_baseline.0);
+    metrics.qnet_batch_rows = rows.saturating_sub(batch_baseline.1);
+    metrics.qnet_batch_pad_rows = pads.saturating_sub(batch_baseline.2);
     metrics
 }
 

@@ -134,6 +134,7 @@ impl Experiment {
         // Baseline after pretraining: the run's metric must count only
         // forward errors the measured run itself experienced.
         let fwd_errors_baseline = policy.fwd_errors();
+        let batch_baseline = policy.batch_stats();
 
         let mut state = ResourceState::new(&dep);
         // The PageRank background load is already running when the DL
@@ -177,6 +178,10 @@ impl Experiment {
             }
         }
         metrics.qnet_fwd_errors = policy.fwd_errors().saturating_sub(fwd_errors_baseline);
+        let (fwds, rows, pads) = policy.batch_stats();
+        metrics.qnet_batch_fwds = fwds.saturating_sub(batch_baseline.0);
+        metrics.qnet_batch_rows = rows.saturating_sub(batch_baseline.1);
+        metrics.qnet_batch_pad_rows = pads.saturating_sub(batch_baseline.2);
         metrics.runtime_overloads = report.runtime_overloads;
         metrics.tasks_per_device = report.tasks_per_device;
         metrics.util_cpu = report.util_cpu;

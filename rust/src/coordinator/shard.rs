@@ -44,7 +44,7 @@ use crate::net::mobility::DynamicTopology;
 use crate::rl::{Policy, TabularQ};
 use crate::sched::{
     central_wave_dynamic, marl_wave_dynamic, noisy_demand, reschedule_migrated,
-    reschedule_stranded, Stranded, WaveOutcome,
+    reschedule_stranded, DecisionConfig, DecisionMode, Stranded, WaveOutcome,
 };
 use crate::shield::{CentralShield, DecentralShield};
 use crate::sim::engine::SAMPLE_PERIOD_SECS;
@@ -64,6 +64,7 @@ struct Lane {
     rng: Rng,
     policy: TabularQ,
     fwd_baseline: usize,
+    batch_baseline: (usize, usize, usize),
     shield: ClusterShield,
     state: ResourceState,
     /// Global indices of this cluster's background segments, ascending.
@@ -98,6 +99,7 @@ struct Ctx<'a> {
     method: Method,
     horizon: f64,
     n_clusters: usize,
+    dc: DecisionConfig,
 }
 
 /// Flag overload transitions on the lane's own nodes.  Placements never
@@ -135,11 +137,11 @@ fn advance_lane(lane: &mut Lane, ctx: Ctx<'_>, until: f64) {
                     match ctx.method {
                         Method::Rl => central_wave_dynamic(
                             ctx.dep, ctx.membership, &mut lane.state, ctx.graph, &w.jobs,
-                            policy, &ctx.cfg.reward, &mut lane.rng,
+                            policy, &ctx.cfg.reward, ctx.dc, &mut lane.rng,
                         ),
                         Method::Marl | Method::SroleC | Method::SroleD => marl_wave_dynamic(
                             ctx.dep, ctx.membership, &mut lane.state, ctx.graph, &w.jobs,
-                            policy, shield, &ctx.cfg.reward, ctx.cfg.refresh_rounds,
+                            policy, shield, &ctx.cfg.reward, ctx.cfg.refresh_rounds, ctx.dc,
                             &mut lane.rng,
                         ),
                     }
@@ -290,6 +292,11 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     let mut pretrained = TabularQ::new(cfg.lr, cfg.epsilon);
     pretrain(&mut pretrained, cfg, &mut rng.fork(0xbeef));
     let fwd_baseline = pretrained.fwd_errors();
+    let batch_baseline = pretrained.batch_stats();
+    let dc = DecisionConfig {
+        mode: if cfg.batch_decisions { DecisionMode::Batched } else { DecisionMode::PerAgent },
+        batched_eval_cost: cfg.batched_eval_cost,
+    };
 
     let mut membership = Membership::full(&dep);
     let n_clusters = dep.clusters.len();
@@ -333,6 +340,7 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 rng: rng.fork(ci as u64),
                 policy: pretrained.clone(),
                 fwd_baseline,
+                batch_baseline,
                 shield: match method {
                     Method::SroleC => ClusterShield::Central(CentralShield::new()),
                     Method::SroleD => ClusterShield::Decentral(DecentralShield::new(
@@ -409,6 +417,7 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 method,
                 horizon,
                 n_clusters,
+                dc,
             };
             advance_all(&mut lanes, ctx, barrier.unwrap_or(f64::INFINITY), shards);
         }
@@ -518,7 +527,7 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                             let policy: &mut dyn Policy = &mut lane.policy;
                             reschedule_stranded(
                                 &dep, &membership, &lane.state, &graph, &view_demand, &stranded,
-                                victim, policy, shield, &cfg.reward, &mut lane.rng,
+                                victim, policy, shield, &cfg.reward, dc, &mut lane.rng,
                             )
                         };
                         metrics.collisions += outcome.collisions;
@@ -627,7 +636,7 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                         let policy: &mut dyn Policy = &mut lane.policy;
                         reschedule_migrated(
                             &dep, &membership, &lane.state, &graph, &view_demand, &stranded,
-                            policy, shield, &cfg.reward, &mut lane.rng,
+                            policy, shield, &cfg.reward, dc, &mut lane.rng,
                         )
                     };
                     metrics.collisions += outcome.collisions;
@@ -669,12 +678,20 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     // cluster layout, never by the shard count.
     let mut merged = RunMetrics::default();
     let mut qnet = 0usize;
+    let mut batch = (0usize, 0usize, 0usize);
     for lane in &lanes {
         merged.absorb(&lane.metrics);
         qnet += lane.policy.fwd_errors().saturating_sub(lane.fwd_baseline);
+        let (fwds, rows, pads) = lane.policy.batch_stats();
+        batch.0 += fwds.saturating_sub(lane.batch_baseline.0);
+        batch.1 += rows.saturating_sub(lane.batch_baseline.1);
+        batch.2 += pads.saturating_sub(lane.batch_baseline.2);
     }
     merged.absorb(&metrics);
     merged.qnet_fwd_errors = qnet;
+    merged.qnet_batch_fwds = batch.0;
+    merged.qnet_batch_rows = batch.1;
+    merged.qnet_batch_pad_rows = batch.2;
     merged
 }
 

@@ -71,6 +71,12 @@ impl Scenario {
         if cfg.shards > 0 {
             label.push_str(&format!("/sh{}", cfg.shards));
         }
+        if !cfg.batch_decisions {
+            label.push_str("/perdec");
+        }
+        if cfg.batched_eval_cost {
+            label.push_str("/bcost");
+        }
         Scenario { label, method, cfg }
     }
 }
@@ -614,6 +620,60 @@ mod tests {
         assert!(moves > 0, "vacuous: nothing moved");
         assert!(failures > 0, "vacuous: no churn fired");
         assert!(correlated > 0, "vacuous: no correlated blast fired");
+    }
+
+    #[test]
+    fn decision_path_knobs_tag_labels() {
+        let mut cfg = tiny_base();
+        cfg.batch_decisions = false;
+        cfg.batched_eval_cost = true;
+        let s = Scenario::new(Method::Marl, cfg);
+        assert!(s.label.ends_with("/perdec/bcost"), "{}", s.label);
+        // The default (batched, legacy cost) keeps the bare label.
+        let d = Scenario::new(Method::Marl, tiny_base());
+        assert_eq!(d.label.split('/').count(), 6, "defaults must not tag: {}", d.label);
+    }
+
+    #[test]
+    fn batched_decisions_replay_per_decision_reference_byte_identically() {
+        // The batched decision path's acceptance criterion at harness
+        // altitude: under churn + mobility, on the legacy driver and on
+        // every shard count, batched runs must produce byte-identical
+        // `RunMetrics` to the per-decision reference, and the reference
+        // knob must tag the label.
+        let mut base = tiny_base();
+        base.n_edges = 10; // two clusters → two lanes when sharded
+        base.cluster_size = 5;
+        base.failure_rate = 3.0;
+        base.rejoin_secs = 120.0;
+        base.mobility = MobilityModel::RandomWaypoint { speed_mps: 3.0, pause_secs: 0.0 };
+        base.mobility_tick_secs = 10.0;
+        let sweep = |batch: bool, shards: usize| {
+            let mut b = base.clone();
+            b.batch_decisions = batch;
+            b.shards = shards;
+            Sweep::new(b).methods(&[Method::Marl, Method::SroleD])
+        };
+        let (mut failures, mut moves) = (0usize, 0usize);
+        for &shards in &[0usize, 1, 2, 8] {
+            let batched = run_parallel(&sweep(true, shards).scenarios(), 2);
+            let perdec = run_parallel(&sweep(false, shards).scenarios(), 2);
+            assert_eq!(batched.len(), perdec.len());
+            for (b, p) in batched.iter().zip(&perdec) {
+                assert!(p.scenario.label.ends_with("/perdec"), "{}", p.scenario.label);
+                assert!(!b.scenario.label.contains("/perdec"), "{}", b.scenario.label);
+                assert_eq!(
+                    b.metrics.to_json().to_string(),
+                    p.metrics.to_json().to_string(),
+                    "{}: batched diverged from the per-decision reference (shards={shards})",
+                    b.scenario.label
+                );
+                failures += b.metrics.node_failures;
+                moves += b.metrics.mobility_moves;
+            }
+        }
+        assert!(failures > 0, "vacuous: no churn fired in any scenario");
+        assert!(moves > 0, "vacuous: nothing moved in any scenario");
     }
 
     #[test]

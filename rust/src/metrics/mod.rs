@@ -47,6 +47,15 @@ pub struct RunMetrics {
     /// non-zero count flags a degraded decision path that previously
     /// hid behind silent all-zero Q values.
     pub qnet_fwd_errors: usize,
+    /// Batched Q-net forward chunks issued by the batched decision path
+    /// (one fixed-lane matmul each; 0 when the per-agent reference path
+    /// or a tabular policy runs).
+    pub qnet_batch_fwds: usize,
+    /// Real agent rows scored through those batched chunks.
+    pub qnet_batch_rows: usize,
+    /// Zero-padding rows added to fill each chunk to the lane size
+    /// (computed and discarded; a measure of ragged-batch waste).
+    pub qnet_batch_pad_rows: usize,
     /// Per-(node, sample) task counts.
     pub tasks_per_device: Vec<f64>,
     /// Per-(node, sample) utilization per resource.
@@ -137,6 +146,9 @@ impl RunMetrics {
             ("region_handoffs", Json::Num(self.region_handoffs as f64)),
             ("migrated_layers", Json::Num(self.migrated_layers as f64)),
             ("qnet_fwd_errors", Json::Num(self.qnet_fwd_errors as f64)),
+            ("qnet_batch_fwds", Json::Num(self.qnet_batch_fwds as f64)),
+            ("qnet_batch_rows", Json::Num(self.qnet_batch_rows as f64)),
+            ("qnet_batch_pad_rows", Json::Num(self.qnet_batch_pad_rows as f64)),
             ("tasks_per_device", arr(&self.tasks_per_device)),
             ("util_cpu", arr(&self.util_cpu)),
             ("util_mem", arr(&self.util_mem)),
@@ -162,6 +174,9 @@ impl RunMetrics {
         self.region_handoffs += other.region_handoffs;
         self.migrated_layers += other.migrated_layers;
         self.qnet_fwd_errors += other.qnet_fwd_errors;
+        self.qnet_batch_fwds += other.qnet_batch_fwds;
+        self.qnet_batch_rows += other.qnet_batch_rows;
+        self.qnet_batch_pad_rows += other.qnet_batch_pad_rows;
         self.tasks_per_device.extend_from_slice(&other.tasks_per_device);
         self.util_cpu.extend_from_slice(&other.util_cpu);
         self.util_mem.extend_from_slice(&other.util_mem);
@@ -191,6 +206,9 @@ mod tests {
             region_handoffs: 2,
             migrated_layers: 1,
             qnet_fwd_errors: 3,
+            qnet_batch_fwds: 5,
+            qnet_batch_rows: 40,
+            qnet_batch_pad_rows: 3,
             tasks_per_device: vec![2.0, 3.0, 5.0],
             util_cpu: vec![0.5, 0.6],
             util_mem: vec![0.4, 0.5],
@@ -221,6 +239,9 @@ mod tests {
         assert_eq!(a.migrated_layers, 2);
         assert_eq!(a.mobility_moves, 8);
         assert_eq!(a.qnet_fwd_errors, 6);
+        assert_eq!(a.qnet_batch_fwds, 10);
+        assert_eq!(a.qnet_batch_rows, 80);
+        assert_eq!(a.qnet_batch_pad_rows, 6);
         assert_eq!(a.makespan, 1234.0);
     }
 
@@ -231,6 +252,9 @@ mod tests {
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("collisions").unwrap().as_usize(), Some(4));
         assert_eq!(parsed.get("qnet_fwd_errors").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("qnet_batch_fwds").unwrap().as_usize(), Some(5));
+        assert_eq!(parsed.get("qnet_batch_rows").unwrap().as_usize(), Some(40));
+        assert_eq!(parsed.get("qnet_batch_pad_rows").unwrap().as_usize(), Some(3));
         assert_eq!(parsed.get("jct").unwrap().as_arr().unwrap().len(), 3);
     }
 

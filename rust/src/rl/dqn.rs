@@ -22,6 +22,35 @@ use super::features::{CandidateView, NUM_ACTIONS, STATE_DIM};
 use super::replay::Replay;
 use super::{Episode, Policy, RewardParams};
 
+/// Greedy-by-utilization fallback pick when the Q-net forward fails:
+/// the candidate with the most combined free capacity (ties to the
+/// lowest index, deterministic).
+fn greedy_by_util(cands: &[CandidateView], n: usize) -> usize {
+    let mut best = 0usize;
+    let mut best_avail = f64::NEG_INFINITY;
+    for (i, c) in cands.iter().enumerate().take(n) {
+        let avail = c.avail_cpu + c.avail_mem + c.avail_bw;
+        if avail > best_avail {
+            best_avail = avail;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Argmax over the first `n` Q-values (ties to the lowest index).
+fn argmax_q(q: &[f32], n: usize) -> usize {
+    let mut best = 0usize;
+    let mut best_q = f32::NEG_INFINITY;
+    for (i, &qi) in q.iter().enumerate().take(n) {
+        if qi > best_q {
+            best_q = qi;
+            best = i;
+        }
+    }
+    best
+}
+
 /// DQN policy owning an engine-bound Q-network session.
 pub struct DqnPolicy<'e> {
     session: QNetSession<'e>,
@@ -36,6 +65,11 @@ pub struct DqnPolicy<'e> {
     qnet_fwd_errors: usize,
     /// Reused per-decision Q-value buffer (allocated once).
     q_buf: Vec<f32>,
+    /// Reused batched-decision scratch: greedy row indices, their
+    /// gathered states, and the chunk Q-value panel.
+    greedy_rows: Vec<usize>,
+    greedy_states: Vec<f32>,
+    batch_q: Vec<f32>,
     /// Reused TD mini-batch scratch (allocated once, cleared per step).
     batch: TdBatch,
     rng: Rng,
@@ -43,11 +77,21 @@ pub struct DqnPolicy<'e> {
 
 impl<'e> DqnPolicy<'e> {
     pub fn new(engine: &'e mut Engine, seed: i32) -> Result<DqnPolicy<'e>> {
-        let session = QNetSession::new(engine, seed)?;
+        Ok(Self::from_session(QNetSession::new(engine, seed)?, seed))
+    }
+
+    /// Pure-host policy over [`QNetSession::new_host`] — runnable in
+    /// stub builds with no PJRT client (the decision benches and the
+    /// stub-build batched-vs-per-row equivalence tests run on this).
+    pub fn new_host(seed: i32) -> DqnPolicy<'static> {
+        DqnPolicy::from_session(QNetSession::new_host(seed), seed)
+    }
+
+    fn from_session(session: QNetSession<'e>, seed: i32) -> DqnPolicy<'e> {
         assert_eq!(session.state_dim, STATE_DIM, "artifact/feature dim mismatch");
         assert_eq!(session.num_actions, NUM_ACTIONS);
         let train_batch = session.train_batch;
-        Ok(DqnPolicy {
+        DqnPolicy {
             session,
             replay: Replay::new(4096, STATE_DIM),
             epsilon: 0.1,
@@ -57,9 +101,23 @@ impl<'e> DqnPolicy<'e> {
             episodes_seen: 0,
             qnet_fwd_errors: 0,
             q_buf: vec![0.0; NUM_ACTIONS],
+            greedy_rows: Vec::new(),
+            greedy_states: Vec::new(),
+            batch_q: Vec::new(),
             batch: TdBatch::with_capacity(train_batch, STATE_DIM),
             rng: Rng::new(seed as u64 ^ 0x9e3779b97f4a7c15),
-        })
+        }
+    }
+
+    /// Arm the session's fault-injection hook (tests): the next `n`
+    /// forwards — single rows or whole batch chunks — fail.
+    pub fn inject_fwd_faults(&mut self, n: usize) {
+        self.session.inject_fwd_faults(n);
+    }
+
+    /// Fixed lane width of the batched decision forward.
+    pub fn fwd_lanes(&self) -> usize {
+        self.session.fwd_lanes()
     }
 
     /// Dense state for a decision (exposed so the scheduler can record it).
@@ -106,35 +164,73 @@ impl Policy for DqnPolicy<'_> {
             return rng.below(n);
         }
         match self.session.fwd_into(state, &mut self.q_buf) {
-            Ok(()) => {
-                let mut best = 0usize;
-                let mut best_q = f32::NEG_INFINITY;
-                for (i, &qi) in self.q_buf.iter().enumerate().take(n) {
-                    if qi > best_q {
-                        best_q = qi;
-                        best = i;
-                    }
-                }
-                best
-            }
+            Ok(()) => argmax_q(&self.q_buf, n),
             Err(_) => {
                 // A failing Q-net must not silently collapse onto action
                 // 0 (the old all-zero-Q behavior): count the failure and
-                // fall back to greedy-by-utilization — the candidate with
-                // the most combined free capacity (ties to the lowest
-                // index, deterministic).
+                // fall back to greedy-by-utilization.
                 self.qnet_fwd_errors += 1;
-                let mut best = 0usize;
-                let mut best_avail = f64::NEG_INFINITY;
-                for (i, c) in cands.iter().enumerate().take(n) {
-                    let avail = c.avail_cpu + c.avail_mem + c.avail_bw;
-                    if avail > best_avail {
-                        best_avail = avail;
-                        best = i;
-                    }
-                }
-                best
+                greedy_by_util(cands, n)
             }
+        }
+    }
+
+    /// Whole-round override of the default per-row loop.  Pass 1 replays
+    /// the epsilon/explore RNG decisions in row order — exactly the
+    /// draws [`DqnPolicy::choose`] would make, so the stream is
+    /// untouched (forwards consume no RNG).  Pass 2 scores every greedy
+    /// row through fixed-lane batched forwards, one chunk of up to
+    /// [`DqnPolicy::fwd_lanes`] rows per call.  A failing chunk degrades
+    /// only its own rows to the greedy-by-utilization fallback and
+    /// counts one fwd error per degraded row.
+    #[allow(clippy::too_many_arguments)]
+    fn choose_batch(
+        &mut self,
+        _layers: &[&Layer],
+        states: &[f32],
+        cviews: &[CandidateView],
+        offsets: &[usize],
+        rng: &mut Rng,
+        explore: bool,
+        out: &mut Vec<usize>,
+    ) {
+        let rows = offsets.len() - 1;
+        out.clear();
+        self.greedy_rows.clear();
+        self.greedy_states.clear();
+        for r in 0..rows {
+            let n_cands = offsets[r + 1] - offsets[r];
+            assert!(n_cands > 0);
+            let n = n_cands.min(NUM_ACTIONS);
+            if explore && rng.chance(self.epsilon) {
+                out.push(rng.below(n));
+            } else {
+                self.greedy_rows.push(r);
+                self.greedy_states.extend_from_slice(&states[r * STATE_DIM..(r + 1) * STATE_DIM]);
+                out.push(usize::MAX); // placeholder — overwritten in pass 2
+            }
+        }
+        let lanes = self.session.fwd_lanes();
+        let mut start = 0;
+        while start < self.greedy_rows.len() {
+            let chunk = lanes.min(self.greedy_rows.len() - start);
+            self.batch_q.resize(chunk * NUM_ACTIONS, 0.0);
+            let sts = &self.greedy_states[start * STATE_DIM..(start + chunk) * STATE_DIM];
+            let ok = self.session.fwd_batch_into(sts, chunk, &mut self.batch_q).is_ok();
+            if !ok {
+                self.qnet_fwd_errors += chunk;
+            }
+            for idx in 0..chunk {
+                let r = self.greedy_rows[start + idx];
+                let cands = &cviews[offsets[r]..offsets[r + 1]];
+                let n = cands.len().min(NUM_ACTIONS);
+                out[r] = if ok {
+                    argmax_q(&self.batch_q[idx * NUM_ACTIONS..(idx + 1) * NUM_ACTIONS], n)
+                } else {
+                    greedy_by_util(cands, n)
+                };
+            }
+            start += chunk;
         }
     }
 
@@ -167,6 +263,10 @@ impl Policy for DqnPolicy<'_> {
 
     fn fwd_errors(&self) -> usize {
         self.qnet_fwd_errors
+    }
+
+    fn batch_stats(&self) -> (usize, usize, usize) {
+        self.session.batch_stats()
     }
 
     fn name(&self) -> &'static str {
@@ -208,6 +308,100 @@ mod tests {
             }
         }
         assert_eq!(p.fwd_errors(), 0, "healthy artifacts must not trip the fallback");
+    }
+
+    /// Build a `rows`-round batch (varying candidate counts, random
+    /// states) for the choose_batch tests.
+    fn batch_inputs(
+        rows: usize,
+        cands_of: impl Fn(usize) -> usize,
+    ) -> (Vec<f32>, Vec<CandidateView>, Vec<usize>) {
+        let mut seed = Rng::new(21);
+        let mut states = Vec::new();
+        let mut cviews = Vec::new();
+        let mut offsets = vec![0usize];
+        for r in 0..rows {
+            for _ in 0..STATE_DIM {
+                states.push((seed.f64() * 2.0 - 1.0) as f32);
+            }
+            cviews.extend(cands(cands_of(r)));
+            offsets.push(cviews.len());
+        }
+        (states, cviews, offsets)
+    }
+
+    /// The policy-level pin: `choose_batch` must replay per-row `choose`
+    /// exactly — same picks, same residual RNG stream — across full and
+    /// ragged lane chunks, with exploration drawn in row order.
+    #[test]
+    fn host_choose_batch_matches_per_row_choose() {
+        let graph = ModelKind::Rnn.build();
+        let mut a = DqnPolicy::new_host(9);
+        let mut b = DqnPolicy::new_host(9);
+        a.epsilon = 0.5;
+        b.epsilon = 0.5;
+        let rows = 2 * a.fwd_lanes() + 6; // two full lanes + a ragged tail
+        let layers: Vec<&Layer> =
+            (0..rows).map(|r| &graph.layers[r % graph.layers.len()]).collect();
+        let (states, cviews, offsets) = batch_inputs(rows, |r| 1 + r % 6);
+        for explore in [true, false] {
+            let mut rng_a = Rng::new(77);
+            let mut rng_b = Rng::new(77);
+            let mut batched = Vec::new();
+            a.choose_batch(&layers, &states, &cviews, &offsets, &mut rng_a, explore, &mut batched);
+            let mut looped = Vec::new();
+            for r in 0..rows {
+                let state: &[f32; STATE_DIM] =
+                    states[r * STATE_DIM..(r + 1) * STATE_DIM].try_into().unwrap();
+                let cs = &cviews[offsets[r]..offsets[r + 1]];
+                looped.push(b.choose(layers[r], state, cs, &mut rng_b, explore));
+            }
+            assert_eq!(batched, looped, "explore={explore}");
+            // Identical residual RNG state: the next draws agree.
+            for _ in 0..8 {
+                assert_eq!(rng_a.f64().to_bits(), rng_b.f64().to_bits());
+            }
+        }
+        assert_eq!(a.fwd_errors(), 0);
+        assert_eq!(b.fwd_errors(), 0);
+        let (fwds, brows, _) = a.batch_stats();
+        assert!(fwds >= 3 && brows <= 2 * rows, "batched path issued chunked forwards");
+        assert_eq!(b.batch_stats(), (0, 0, 0), "per-row path issues none");
+    }
+
+    /// A fault mid-round degrades only its own chunk: those rows fall
+    /// back to greedy-by-utilization and count one fwd error each; later
+    /// chunks still score through the net.
+    #[test]
+    fn batch_chunk_fault_falls_back_and_counts() {
+        let graph = ModelKind::Rnn.build();
+        let mut faulty = DqnPolicy::new_host(4);
+        let mut healthy = DqnPolicy::new_host(4);
+        let lanes = faulty.fwd_lanes();
+        let rows = lanes + 8;
+        let layers: Vec<&Layer> =
+            (0..rows).map(|r| &graph.layers[r % graph.layers.len()]).collect();
+        // cands(4) has strictly increasing free capacity, so the
+        // greedy-by-utilization fallback always picks index 3.
+        let (states, cviews, offsets) = batch_inputs(rows, |_| 4);
+        faulty.inject_fwd_faults(1);
+        let mut rng_f = Rng::new(11);
+        let mut rng_h = Rng::new(11);
+        let mut picks_f = Vec::new();
+        let mut picks_h = Vec::new();
+        faulty.choose_batch(&layers, &states, &cviews, &offsets, &mut rng_f, false, &mut picks_f);
+        healthy.choose_batch(&layers, &states, &cviews, &offsets, &mut rng_h, false, &mut picks_h);
+        assert_eq!(faulty.fwd_errors(), lanes, "one error per degraded row");
+        assert_eq!(healthy.fwd_errors(), 0);
+        for r in 0..lanes {
+            assert_eq!(picks_f[r], 3, "row {r} must fall back to greedy-by-utilization");
+        }
+        for r in lanes..rows {
+            assert_eq!(picks_f[r], picks_h[r], "row {r} is past the failed chunk");
+        }
+        // The failed chunk is not counted as an issued batch forward.
+        assert_eq!(faulty.batch_stats(), (1, 8, lanes - 8));
+        assert_eq!(healthy.batch_stats(), (2, rows, lanes - 8));
     }
 
     #[test]

@@ -151,6 +151,40 @@ pub trait Policy {
         explore: bool,
     ) -> usize;
 
+    /// Choose for a whole wave round at once — the batched decision path.
+    ///
+    /// Row `r` (of `offsets.len() - 1`) is the decision for `layers[r]`
+    /// with dense state `states[r·STATE_DIM..]` and candidates
+    /// `cviews[offsets[r]..offsets[r + 1]]`; the chosen candidate index
+    /// is written to `out[r]`.
+    ///
+    /// RNG-order contract: implementations must consume `rng` in row
+    /// order, drawing exactly what `choose` would draw per row *before*
+    /// issuing any forwards (forwards consume no RNG), so a batched round
+    /// leaves the stream byte-identical to per-row calls.  The default
+    /// implementation simply loops [`Policy::choose`] in row order —
+    /// equivalence by construction; [`dqn::DqnPolicy`] overrides it to
+    /// score all greedy rows in one fixed-lane batched forward.
+    #[allow(clippy::too_many_arguments)]
+    fn choose_batch(
+        &mut self,
+        layers: &[&Layer],
+        states: &[f32],
+        cviews: &[CandidateView],
+        offsets: &[usize],
+        rng: &mut Rng,
+        explore: bool,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        for r in 0..offsets.len() - 1 {
+            let state: &[f32; STATE_DIM] =
+                states[r * STATE_DIM..(r + 1) * STATE_DIM].try_into().expect("row width");
+            let cands = &cviews[offsets[r]..offsets[r + 1]];
+            out.push(self.choose(layers[r], state, cands, rng, explore));
+        }
+    }
+
     /// Episodic update once the job's training time is known.
     fn learn(&mut self, episode: &Episode, training_time: f64, params: &RewardParams);
 
@@ -166,6 +200,14 @@ pub trait Policy {
     /// at the end of a run.
     fn fwd_errors(&self) -> usize {
         0
+    }
+
+    /// `(batch_fwds, batch_rows, batch_pad_rows)` accumulated by the
+    /// batched forward path so far (DQN only; tabular policies decide
+    /// without forwards).  Drivers copy these into the `qnet_batch_*`
+    /// counters of [`RunMetrics`](crate::metrics::RunMetrics).
+    fn batch_stats(&self) -> (usize, usize, usize) {
+        (0, 0, 0)
     }
 
     /// Policy name for reports.
@@ -447,6 +489,51 @@ mod tests {
         assert_eq!(q2.epsilon, 0.05);
         // Corrupted input is rejected.
         assert!(TabularQ::from_json(&crate::util::json::Json::parse("{}").unwrap()).is_err());
+    }
+
+    /// The default `choose_batch` must replay per-row `choose` exactly:
+    /// same picks *and* the same RNG stream afterwards (the batched wave
+    /// path relies on this for byte-identical runs with `TabularQ`).
+    #[test]
+    fn default_choose_batch_matches_per_row_choose() {
+        let graph = ModelKind::Rnn.build();
+        let mut rng_seed = Rng::new(17);
+        let layers: Vec<&Layer> = (0..7).map(|i| &graph.layers[i % graph.layers.len()]).collect();
+        let mut states = Vec::new();
+        let mut cviews = Vec::new();
+        let mut offsets = vec![0usize];
+        for r in 0..layers.len() {
+            for _ in 0..STATE_DIM {
+                states.push(rng_seed.f64() as f32);
+            }
+            for _ in 0..(1 + r % 4) {
+                cviews.push(cand(rng_seed.f64(), rng_seed.f64(), rng_seed.f64()));
+            }
+            offsets.push(cviews.len());
+        }
+        let mut a = TabularQ::new(0.2, 0.35);
+        let mut b = a.clone();
+        for k in 0..TABLE_SIZE {
+            a.table[k] = (k as f64 * 0.37).sin();
+            b.table[k] = a.table[k];
+        }
+        let mut rng_a = Rng::new(123);
+        let mut rng_b = Rng::new(123);
+        let mut batched = Vec::new();
+        a.choose_batch(&layers, &states, &cviews, &offsets, &mut rng_a, true, &mut batched);
+        let mut looped = Vec::new();
+        for r in 0..layers.len() {
+            let state: &[f32; STATE_DIM] =
+                states[r * STATE_DIM..(r + 1) * STATE_DIM].try_into().unwrap();
+            let cands = &cviews[offsets[r]..offsets[r + 1]];
+            looped.push(b.choose(layers[r], state, cands, &mut rng_b, true));
+        }
+        assert_eq!(batched, looped);
+        // Identical residual RNG state: the next draws agree.
+        for _ in 0..8 {
+            assert_eq!(rng_a.f64().to_bits(), rng_b.f64().to_bits());
+        }
+        assert_eq!(a.batch_stats(), (0, 0, 0), "tabular policies issue no forwards");
     }
 
     #[test]

@@ -154,5 +154,16 @@ mod tests {
         for name in ["qnet_init", "qnet_fwd", "qnet_train", "lm_init", "lm_grad", "lm_update", "lm_eval"] {
             assert!(m.artifacts.contains_key(name), "missing {name}");
         }
+        // Manifests regenerated since the batched decision path also
+        // carry the fixed-lane forward; its states slot must agree with
+        // `meta.qnet.fwd_batch`.
+        if let Some(batch) = m.artifacts.get("qnet_fwd_batch") {
+            let lanes = m.meta_usize("qnet", "fwd_batch").unwrap();
+            let state_dim = m.meta_usize("qnet", "state_dim").unwrap();
+            let num_actions = m.meta_usize("qnet", "num_actions").unwrap();
+            let states = batch.inputs.last().unwrap();
+            assert_eq!(states.shape, vec![lanes, state_dim]);
+            assert_eq!(batch.outputs[0].shape, vec![lanes, num_actions]);
+        }
     }
 }

@@ -152,6 +152,39 @@ impl Literal {
         }
     }
 
+    /// Vectorized row refill for fixed-lane batch literals: overwrite the
+    /// first `rows` rows of `row_len` elements from `data` in one
+    /// `copy_from_slice`, then zero the remaining pad rows.  The batched
+    /// Q-net forward refills its `[lanes, state_dim]` states slot through
+    /// this instead of `rows` single-row copies.
+    pub fn copy_rows_from_f32(&mut self, data: &[f32], rows: usize, row_len: usize) -> Result<()> {
+        let used = rows * row_len;
+        if data.len() < used {
+            return Err(Error::msg(format!(
+                "copy_rows_from_f32: {} rows of {} need {} elems, source has {}",
+                rows,
+                row_len,
+                used,
+                data.len()
+            )));
+        }
+        match &mut self.data {
+            Data::F32(v) if v.len() >= used => {
+                v[..used].copy_from_slice(&data[..used]);
+                v[used..].fill(0.0);
+                Ok(())
+            }
+            Data::F32(v) => Err(Error::msg(format!(
+                "copy_rows_from_f32: literal has {} elems, {} rows of {} need {}",
+                v.len(),
+                rows,
+                row_len,
+                used
+            ))),
+            Data::S32(_) => Err(Error::msg("copy_rows_from_f32: element type mismatch")),
+        }
+    }
+
     /// Read an F32 literal's payload into a caller buffer without
     /// allocating (the output half of the buffer-reuse hook).
     pub fn copy_to_f32(&self, out: &mut [f32]) -> Result<()> {
@@ -293,6 +326,20 @@ mod tests {
         let mut i = Literal::vec1(&[1i32, 2]);
         assert!(i.copy_from_f32(&[1.0, 2.0]).is_err());
         assert!(i.copy_to_f32(&mut [0.0; 2]).is_err());
+    }
+
+    #[test]
+    fn row_batch_refill_pads_with_zeros() {
+        let mut l = Literal::vec1(&[9.0f32; 8]).reshape(&[4, 2]).unwrap();
+        l.copy_rows_from_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 3, 2).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 0.0, 0.0]);
+        // Full refill leaves no pad tail; short source is rejected.
+        l.copy_rows_from_f32(&[7.0; 8], 4, 2).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![7.0; 8]);
+        assert!(l.copy_rows_from_f32(&[1.0; 3], 2, 2).is_err());
+        assert!(l.copy_rows_from_f32(&[1.0; 16], 5, 2).is_err());
+        let mut i = Literal::vec1(&[1i32, 2]);
+        assert!(i.copy_rows_from_f32(&[1.0, 2.0], 1, 2).is_err());
     }
 
     #[test]

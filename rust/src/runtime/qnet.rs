@@ -1,22 +1,48 @@
 //! Q-network session over the `qnet_*` artifacts.
 //!
-//! Parameters live in Rust as literals; every call is a pure PJRT
-//! execution.  This is the function approximator behind
-//! [`DqnPolicy`](crate::rl::dqn::DqnPolicy): `fwd` scores a single
-//! decision state (B=1 artifact), `train` runs one TD mini-batch step
-//! against a target-network copy.
+//! Parameters live either as PJRT literals (every call a pure PJRT
+//! execution) or in a pure-host MLP mirror with the same geometry
+//! ([`QNetSession::new_host`]), which runs in stub builds with no PJRT
+//! client.  This is the function approximator behind
+//! [`DqnPolicy`](crate::rl::dqn::DqnPolicy): `fwd_into` scores a single
+//! decision state (B=1 artifact), `fwd_batch_into` scores a whole wave
+//! round of states in fixed-lane chunks (the batched decision path),
+//! `train` runs one TD mini-batch step against a target-network copy.
 
 use crate::bail;
 use crate::util::error::Result;
+use crate::util::Rng;
 
 use super::{lit_f32, lit_i32, scalar_f32, scalar_i32, to_scalar_f32, Engine};
 
 #[cfg(not(pjrt_vendored))]
 use super::pjrt_stub as xla;
 
+/// Host-backend geometry — mirrors `meta.qnet` in the compiled manifest
+/// (`python/compile/model.py`: 36 → 64 → 64 → 11).
+const HOST_STATE_DIM: usize = 36;
+const HOST_HIDDEN: usize = 64;
+const HOST_NUM_ACTIONS: usize = 11;
+/// Fixed batch-lane width of the host backend (the compiled
+/// `qnet_fwd_batch` artifact publishes its own via `meta.qnet.fwd_batch`).
+pub const HOST_FWD_LANES: usize = 32;
+
+/// Pure-host parameter set: `[w1, b1, w2, b2, w3, b3]`, weights stored
+/// input-major (`w[i * n_out + j]`), exactly the layout and order of the
+/// compiled artifact's parameter tuple.
+struct HostNet {
+    params: [Vec<f32>; 6],
+    target: [Vec<f32>; 6],
+    /// Hidden-activation panels for the batched forward
+    /// (`HOST_FWD_LANES × HOST_HIDDEN`, reused across calls).
+    h1: Vec<f32>,
+    h2: Vec<f32>,
+}
+
 /// Owned Q-network parameters + target-network copy.
 pub struct QNetSession<'e> {
-    engine: &'e mut Engine,
+    engine: Option<&'e mut Engine>,
+    host: Option<HostNet>,
     pub params: Vec<xla::Literal>,
     pub target: Vec<xla::Literal>,
     pub state_dim: usize,
@@ -30,6 +56,23 @@ pub struct QNetSession<'e> {
     /// every parameter update; on the steady-state decision path each
     /// forward only overwrites the state slot in place.
     fwd_inputs: Option<Vec<xla::Literal>>,
+    /// Cached `qnet_fwd_batch` input vector, same lifecycle as
+    /// `fwd_inputs` but with a `[fwd_lanes, state_dim]` states slot.
+    batch_inputs: Option<Vec<xla::Literal>>,
+    /// Rows per batched forward: the fixed lane width every chunk is
+    /// padded up to.
+    fwd_lanes: usize,
+    /// Padded lane-size staging area for the current chunk's states.
+    batch_scratch: Vec<f32>,
+    /// Lane-size output staging (`fwd_lanes × num_actions`).
+    batch_out: Vec<f32>,
+    batch_fwds: usize,
+    batch_rows: usize,
+    batch_pad_rows: usize,
+    /// Fault-injection hook: each pending fault fails one forward call
+    /// (chunk or single row) with an error, exercising the
+    /// greedy-by-utilization fallback path end to end.
+    faults_to_inject: usize,
 }
 
 /// One TD training batch (row-major, `len == batch`).
@@ -93,16 +136,236 @@ fn read_q_row(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
     Ok(())
 }
 
+/// Refill the cached `[lanes, state_dim]` batch states slot: `rows` real
+/// rows, zero pad tail (host stub: one vectorized in-place row copy;
+/// vendored PJRT: rebuild the device literal from a padded buffer).
+#[cfg(not(pjrt_vendored))]
+fn refill_batch_states(
+    slot: &mut xla::Literal,
+    _dims: &[usize],
+    states: &[f32],
+    rows: usize,
+    row_len: usize,
+) -> Result<()> {
+    slot.copy_rows_from_f32(states, rows, row_len)
+}
+
+#[cfg(pjrt_vendored)]
+fn refill_batch_states(
+    slot: &mut xla::Literal,
+    dims: &[usize],
+    states: &[f32],
+    rows: usize,
+    row_len: usize,
+) -> Result<()> {
+    let mut padded = vec![0.0f32; dims.iter().product()];
+    padded[..rows * row_len].copy_from_slice(&states[..rows * row_len]);
+    *slot = lit_f32(dims, &padded)?;
+    Ok(())
+}
+
+/// One dense output row: `out[j] = act(b[j] + Σ_i x[i]·w[i·n + j])`,
+/// accumulating `i` in ascending order — the accumulation-order contract
+/// shared with [`dense_panel`], which makes the per-row and batched host
+/// forwards bitwise identical.  Weight reads stride by `n`: this is the
+/// natural one-row kernel and the in-tree reference the batch kernel is
+/// pinned against.
+fn dense_row(x: &[f32], w: &[f32], b: &[f32], n: usize, relu: bool, out: &mut [f32]) {
+    for (j, o) in out[..n].iter_mut().enumerate() {
+        let mut acc = b[j];
+        for (i, &xi) in x.iter().enumerate() {
+            acc += xi * w[i * n + j];
+        }
+        *o = if relu && acc < 0.0 { 0.0 } else { acc };
+    }
+}
+
+/// Batched dense layer over a row panel: for each input feature `i`
+/// (ascending), stream weight row `w[i·n..]` across every panel row —
+/// `out[r][j] += x[r][i]·w[i][j]`.  Every accumulator `out[r][j]` sums
+/// the same terms in the same ascending-`i` order as [`dense_row`], so
+/// results are bitwise identical row-for-row; the difference is the
+/// unit-stride inner loop over a contiguous weight row, which the
+/// one-row kernel cannot have — that is where the measured batch
+/// speedup comes from.
+#[allow(clippy::too_many_arguments)]
+fn dense_panel(
+    x: &[f32],
+    rows: usize,
+    k: usize,
+    w: &[f32],
+    b: &[f32],
+    n: usize,
+    relu: bool,
+    out: &mut [f32],
+) {
+    for r in 0..rows {
+        let xr = &x[r * k..r * k + k];
+        let or = &mut out[r * n..r * n + n];
+        or.copy_from_slice(&b[..n]);
+        for (i, &xi) in xr.iter().enumerate() {
+            let wr = &w[i * n..i * n + n];
+            for (o, &wj) in or.iter_mut().zip(wr) {
+                *o += xi * wj;
+            }
+        }
+    }
+    if relu {
+        for v in &mut out[..rows * n] {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+}
+
+/// Panel forward through the full 36 → 64 → 64 → 11 MLP with the given
+/// parameter set, leaving hidden activations in `h1`/`h2`.
+fn mlp_panel(
+    p: &[Vec<f32>; 6],
+    x: &[f32],
+    rows: usize,
+    h1: &mut [f32],
+    h2: &mut [f32],
+    out: &mut [f32],
+) {
+    dense_panel(x, rows, HOST_STATE_DIM, &p[0], &p[1], HOST_HIDDEN, true, h1);
+    dense_panel(h1, rows, HOST_HIDDEN, &p[2], &p[3], HOST_HIDDEN, true, h2);
+    dense_panel(h2, rows, HOST_HIDDEN, &p[4], &p[5], HOST_NUM_ACTIONS, false, out);
+}
+
+/// Box-Muller standard normal off the deterministic experiment stream.
+fn normal(rng: &mut Rng) -> f64 {
+    let u1 = rng.f64().max(1e-12);
+    let u2 = rng.f64();
+    (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+}
+
+/// He-initialized host parameters, matching the compiled `qnet_init`
+/// scheme (normal · √(2/fan_in) weights, zero biases) on the crate RNG.
+fn host_init(rng: &mut Rng) -> [Vec<f32>; 6] {
+    let he = |rng: &mut Rng, fan_in: usize, len: usize| -> Vec<f32> {
+        let sd = (2.0 / fan_in as f64).sqrt();
+        (0..len).map(|_| (normal(rng) * sd) as f32).collect()
+    };
+    [
+        he(rng, HOST_STATE_DIM, HOST_STATE_DIM * HOST_HIDDEN),
+        vec![0.0; HOST_HIDDEN],
+        he(rng, HOST_HIDDEN, HOST_HIDDEN * HOST_HIDDEN),
+        vec![0.0; HOST_HIDDEN],
+        he(rng, HOST_HIDDEN, HOST_HIDDEN * HOST_NUM_ACTIONS),
+        vec![0.0; HOST_NUM_ACTIONS],
+    ]
+}
+
+/// Backprop one dense layer: SGD-update `w`/`b` from the output-side
+/// gradient `g_out` and return the input-side gradient (masked by the
+/// input activations' ReLU derivative when `mask` — the inputs of every
+/// hidden-to-hidden layer are post-ReLU, so `x > 0` is exactly `relu'`).
+#[allow(clippy::too_many_arguments)]
+fn backprop_dense(
+    w: &mut [f32],
+    b: &mut [f32],
+    x: &[f32],
+    g_out: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    lr: f32,
+    mask: bool,
+) -> Vec<f32> {
+    let mut g_in = vec![0.0f32; rows * k];
+    for r in 0..rows {
+        let go = &g_out[r * n..r * n + n];
+        let xr = &x[r * k..r * k + k];
+        let gr = &mut g_in[r * k..r * k + k];
+        for i in 0..k {
+            if mask && xr[i] <= 0.0 {
+                continue;
+            }
+            let wr = &w[i * n..i * n + n];
+            let mut acc = 0.0f32;
+            for (gj, &wj) in go.iter().zip(wr) {
+                acc += gj * wj;
+            }
+            gr[i] = acc;
+        }
+    }
+    for r in 0..rows {
+        let go = &g_out[r * n..r * n + n];
+        let xr = &x[r * k..r * k + k];
+        for i in 0..k {
+            let wr = &mut w[i * n..i * n + n];
+            let xi = xr[i];
+            for (wj, &gj) in wr.iter_mut().zip(go) {
+                *wj -= lr * xi * gj;
+            }
+        }
+        for (bj, &gj) in b.iter_mut().zip(go) {
+            *bj -= lr * gj;
+        }
+    }
+    g_in
+}
+
+impl HostNet {
+    /// Per-row reference forward (see [`dense_row`]).
+    fn fwd_row(&mut self, state: &[f32], out: &mut [f32]) {
+        let h1 = &mut self.h1[..HOST_HIDDEN];
+        let h2 = &mut self.h2[..HOST_HIDDEN];
+        dense_row(state, &self.params[0], &self.params[1], HOST_HIDDEN, true, h1);
+        dense_row(h1, &self.params[2], &self.params[3], HOST_HIDDEN, true, h2);
+        dense_row(h2, &self.params[4], &self.params[5], HOST_NUM_ACTIONS, false, out);
+    }
+
+    /// One TD SGD step over a full batch; returns the (squared-error)
+    /// loss.  The host trainer is a lightweight stand-in for the compiled
+    /// Huber-loss artifact, not bitwise-pinned to it — the host backend
+    /// is its own reference (its row and batch *forwards* are what the
+    /// equivalence tests pin to each other).
+    fn train_step(&mut self, batch: &TdBatch, b: usize, lr: f32, gamma: f32) -> f32 {
+        const H: usize = HOST_HIDDEN;
+        const A: usize = HOST_NUM_ACTIONS;
+        let mut h1 = vec![0.0f32; b * H];
+        let mut h2 = vec![0.0f32; b * H];
+        let mut q = vec![0.0f32; b * A];
+        mlp_panel(&self.params, &batch.states, b, &mut h1, &mut h2, &mut q);
+        let mut th1 = vec![0.0f32; b * H];
+        let mut th2 = vec![0.0f32; b * H];
+        let mut tq = vec![0.0f32; b * A];
+        mlp_panel(&self.target, &batch.next_states, b, &mut th1, &mut th2, &mut tq);
+        let mut g3 = vec![0.0f32; b * A];
+        let mut loss = 0.0f32;
+        for r in 0..b {
+            let best = tq[r * A..r * A + A].iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let target = batch.rewards[r] + gamma * (1.0 - batch.dones[r]) * best;
+            let a = (batch.actions[r].max(0) as usize).min(A - 1);
+            let err = q[r * A + a] - target;
+            loss += 0.5 * err * err;
+            g3[r * A + a] = err / b as f32;
+        }
+        let [w1, b1, w2, b2, w3, b3] = &mut self.params;
+        let g2 = backprop_dense(w3, b3, &h2, &g3, b, H, A, lr, true);
+        let g1 = backprop_dense(w2, b2, &h1, &g2, b, H, H, lr, true);
+        backprop_dense(w1, b1, &batch.states, &g1, b, HOST_STATE_DIM, H, lr, false);
+        loss / b as f32
+    }
+}
+
 impl<'e> QNetSession<'e> {
     /// Initialize from the `qnet_init` artifact with the given seed.
     pub fn new(engine: &'e mut Engine, seed: i32) -> Result<QNetSession<'e>> {
         let state_dim = engine.manifest.meta_usize("qnet", "state_dim")?;
         let num_actions = engine.manifest.meta_usize("qnet", "num_actions")?;
         let train_batch = engine.manifest.meta_usize("qnet", "train_batch")?;
+        // Older manifests predate the batch-forward artifact; fall back
+        // to the train width so chunking stays well-defined.
+        let fwd_lanes = engine.manifest.meta_usize("qnet", "fwd_batch").unwrap_or(train_batch);
         let params = engine.run("qnet_init", &[scalar_i32(seed)])?;
         let target = engine.run("qnet_init", &[scalar_i32(seed)])?;
         Ok(QNetSession {
-            engine,
+            engine: Some(engine),
+            host: None,
             params,
             target,
             state_dim,
@@ -111,22 +374,99 @@ impl<'e> QNetSession<'e> {
             train_steps: 0,
             target_sync_every: 16,
             fwd_inputs: None,
+            batch_inputs: None,
+            fwd_lanes,
+            batch_scratch: vec![0.0; fwd_lanes * state_dim],
+            batch_out: vec![0.0; fwd_lanes * num_actions],
+            batch_fwds: 0,
+            batch_rows: 0,
+            batch_pad_rows: 0,
+            faults_to_inject: 0,
         })
     }
 
+    /// Pure-host session: a seeded He-initialized MLP with the compiled
+    /// artifacts' 36 → 64 → 64 → 11 geometry, runnable in stub builds
+    /// with no PJRT client — this is what the decision benches and the
+    /// stub-build equivalence tests execute.  Not bitwise-pinned to the
+    /// compiled graphs; the host backend is its own reference (its
+    /// per-row and batched forwards are pinned to *each other*).
+    pub fn new_host(seed: i32) -> QNetSession<'static> {
+        let mut rng = Rng::new((seed as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ 0x5eed);
+        let params = host_init(&mut rng);
+        let target = params.clone();
+        QNetSession {
+            engine: None,
+            host: Some(HostNet {
+                params,
+                target,
+                h1: vec![0.0; HOST_FWD_LANES * HOST_HIDDEN],
+                h2: vec![0.0; HOST_FWD_LANES * HOST_HIDDEN],
+            }),
+            params: Vec::new(),
+            target: Vec::new(),
+            state_dim: HOST_STATE_DIM,
+            num_actions: HOST_NUM_ACTIONS,
+            train_batch: HOST_FWD_LANES,
+            train_steps: 0,
+            target_sync_every: 16,
+            fwd_inputs: None,
+            batch_inputs: None,
+            fwd_lanes: HOST_FWD_LANES,
+            batch_scratch: vec![0.0; HOST_FWD_LANES * HOST_STATE_DIM],
+            batch_out: vec![0.0; HOST_FWD_LANES * HOST_NUM_ACTIONS],
+            batch_fwds: 0,
+            batch_rows: 0,
+            batch_pad_rows: 0,
+            faults_to_inject: 0,
+        }
+    }
+
+    /// Fixed lane width of the batched forward (chunk + pad unit).
+    pub fn fwd_lanes(&self) -> usize {
+        self.fwd_lanes
+    }
+
+    /// `(batch_fwds, batch_rows, batch_pad_rows)` since construction:
+    /// chunks issued, real rows scored, pad rows wasted on ragged final
+    /// chunks.
+    pub fn batch_stats(&self) -> (usize, usize, usize) {
+        (self.batch_fwds, self.batch_rows, self.batch_pad_rows)
+    }
+
+    /// Arm the fault-injection hook: the next `n` forward calls (single
+    /// rows or batch chunks) fail with an error instead of executing.
+    pub fn inject_fwd_faults(&mut self, n: usize) {
+        self.faults_to_inject += n;
+    }
+
+    fn take_fault(&mut self) -> Result<()> {
+        if self.faults_to_inject > 0 {
+            self.faults_to_inject -= 1;
+            bail!("injected qnet forward fault");
+        }
+        Ok(())
+    }
+
     /// Q-values for one state, written into `out` (`len == num_actions`)
-    /// — the per-decision request path.  The parameter literals are
-    /// cloned once per parameter *update*, not per call: steady-state
-    /// forwards reuse the cached input vector and overwrite its state
-    /// slot — in place under the host stub (zero allocations per
-    /// decision), as one rebuilt device literal per call under vendored
-    /// PJRT.
+    /// — the per-decision request path and the in-tree reference the
+    /// batched forward is pinned against.  On the PJRT backend the
+    /// parameter literals are cloned once per parameter *update*, not
+    /// per call: steady-state forwards reuse the cached input vector and
+    /// overwrite its state slot — in place under the host stub (zero
+    /// allocations per decision), as one rebuilt device literal per call
+    /// under vendored PJRT.
     pub fn fwd_into(&mut self, state: &[f32], out: &mut [f32]) -> Result<()> {
         if state.len() != self.state_dim {
             bail!("state dim {} != {}", state.len(), self.state_dim);
         }
         if out.len() != self.num_actions {
             bail!("q-out dim {} != {}", out.len(), self.num_actions);
+        }
+        self.take_fault()?;
+        if let Some(net) = self.host.as_mut() {
+            net.fwd_row(state, out);
+            return Ok(());
         }
         if self.fwd_inputs.is_none() {
             let mut inputs = clone_literals(&self.params)?;
@@ -138,8 +478,85 @@ impl<'e> QNetSession<'e> {
             refill_state(slot, &[1, self.state_dim], state)?;
         }
         let inputs = self.fwd_inputs.as_ref().expect("cached fwd inputs");
-        let result = self.engine.run("qnet_fwd", inputs)?;
+        let engine = self.engine.as_deref_mut().expect("pjrt session has an engine");
+        let result = engine.run("qnet_fwd", inputs)?;
         read_q_row(&result[0], out)
+    }
+
+    /// Q-values for `rows` states (row-major `rows × state_dim`), written
+    /// row-for-row into `out` (`rows × num_actions`) — the batched
+    /// decision path.  Work is issued in fixed-lane chunks of
+    /// [`QNetSession::fwd_lanes`] rows; the final ragged chunk is
+    /// zero-padded up to the lane width (exactly what a fixed-shape
+    /// compiled artifact forces) and the pad rows' outputs are
+    /// discarded.  Outputs are bitwise identical to `rows` calls of
+    /// [`QNetSession::fwd_into`].  Per issued chunk: `batch_fwds` + 1,
+    /// `batch_rows` + real rows, `batch_pad_rows` + padding.
+    pub fn fwd_batch_into(&mut self, states: &[f32], rows: usize, out: &mut [f32]) -> Result<()> {
+        let need_in = rows * self.state_dim;
+        if states.len() < need_in {
+            bail!("batch states have {} elems, {} rows need {}", states.len(), rows, need_in);
+        }
+        let need_out = rows * self.num_actions;
+        if out.len() < need_out {
+            bail!("batch q-out has {} elems, {} rows need {}", out.len(), rows, need_out);
+        }
+        let mut done = 0;
+        while done < rows {
+            let chunk = self.fwd_lanes.min(rows - done);
+            self.fwd_chunk(
+                &states[done * self.state_dim..(done + chunk) * self.state_dim],
+                chunk,
+                &mut out[done * self.num_actions..(done + chunk) * self.num_actions],
+            )?;
+            done += chunk;
+        }
+        Ok(())
+    }
+
+    /// One fixed-lane chunk (`1 ≤ rows ≤ fwd_lanes`): stage into the
+    /// padded lane-size scratch, run the whole lane, copy the real rows
+    /// out.
+    fn fwd_chunk(&mut self, states: &[f32], rows: usize, out: &mut [f32]) -> Result<()> {
+        let lanes = self.fwd_lanes;
+        debug_assert!(rows >= 1 && rows <= lanes);
+        self.take_fault()?;
+        let used = rows * self.state_dim;
+        self.batch_scratch[..used].copy_from_slice(states);
+        self.batch_scratch[used..].fill(0.0);
+        if self.host.is_some() {
+            let net = self.host.as_mut().expect("host net");
+            // The full lane runs — pad rows included — mirroring the
+            // fixed-shape artifact; pad outputs land in the discarded
+            // tail of `batch_out`.
+            mlp_panel(
+                &net.params,
+                &self.batch_scratch,
+                lanes,
+                &mut net.h1,
+                &mut net.h2,
+                &mut self.batch_out,
+            );
+        } else {
+            if self.batch_inputs.is_none() {
+                let mut inputs = clone_literals(&self.params)?;
+                inputs.push(lit_f32(&[lanes, self.state_dim], &self.batch_scratch)?);
+                self.batch_inputs = Some(inputs);
+            } else {
+                let inputs = self.batch_inputs.as_mut().expect("cached batch inputs");
+                let slot = inputs.last_mut().expect("batch states slot");
+                refill_batch_states(slot, &[lanes, self.state_dim], states, rows, self.state_dim)?;
+            }
+            let inputs = self.batch_inputs.as_ref().expect("cached batch inputs");
+            let engine = self.engine.as_deref_mut().expect("pjrt session has an engine");
+            let result = engine.run("qnet_fwd_batch", inputs)?;
+            read_q_row(&result[0], &mut self.batch_out)?;
+        }
+        out.copy_from_slice(&self.batch_out[..rows * self.num_actions]);
+        self.batch_fwds += 1;
+        self.batch_rows += rows;
+        self.batch_pad_rows += lanes - rows;
+        Ok(())
     }
 
     /// Allocating convenience wrapper over [`QNetSession::fwd_into`].
@@ -156,6 +573,15 @@ impl<'e> QNetSession<'e> {
         if batch.actions.len() != b {
             bail!("batch size {} != artifact batch {}", batch.actions.len(), b);
         }
+        if self.host.is_some() {
+            let loss = self.host.as_mut().expect("host net").train_step(batch, b, lr, gamma);
+            self.train_steps += 1;
+            if self.train_steps % self.target_sync_every == 0 {
+                let net = self.host.as_mut().expect("host net");
+                net.target = net.params.clone();
+            }
+            return Ok(loss);
+        }
         let mut inputs = clone_literals(&self.params)?;
         inputs.extend(clone_literals(&self.target)?);
         inputs.push(lit_f32(&[b, self.state_dim], &batch.states)?);
@@ -165,11 +591,13 @@ impl<'e> QNetSession<'e> {
         inputs.push(lit_f32(&[b], &batch.dones)?);
         inputs.push(scalar_f32(lr));
         inputs.push(scalar_f32(gamma));
-        let mut out = self.engine.run("qnet_train", &inputs)?;
+        let engine = self.engine.as_deref_mut().expect("pjrt session has an engine");
+        let mut out = engine.run("qnet_train", &inputs)?;
         let loss = to_scalar_f32(&out.pop().expect("loss"))?;
         self.params = out;
         // The cached forward inputs embed the old parameters.
         self.fwd_inputs = None;
+        self.batch_inputs = None;
         self.train_steps += 1;
         if self.train_steps % self.target_sync_every == 0 {
             self.target = clone_literals(&self.params)?;
@@ -206,7 +634,7 @@ mod tests {
     #[test]
     fn fwd_scores_and_train_reduces_loss() {
         let Some(mut eng) = test_engine_owned() else { return };
-        
+
         let mut q = QNetSession::new(&mut eng, 3).unwrap();
         let s = vec![0.25f32; q.state_dim];
         let q0 = q.fwd(&s).unwrap();
@@ -236,8 +664,102 @@ mod tests {
     #[test]
     fn bad_state_dim_rejected() {
         let Some(mut eng) = test_engine_owned() else { return };
-        
+
         let mut q = QNetSession::new(&mut eng, 0).unwrap();
         assert!(q.fwd(&[0.0; 3]).is_err());
+    }
+
+    /// The tentpole pin: batched forwards must replay the per-row
+    /// reference bitwise, row for row — including ragged final chunks
+    /// whose lane is zero-padded (rows 31/33/70 cross and straddle the
+    /// 32-lane boundary).
+    #[test]
+    fn host_batch_forward_is_bitwise_row_for_row() {
+        let mut s = QNetSession::new_host(7);
+        let mut rng = Rng::new(99);
+        for &rows in &[1usize, 5, 31, 32, 33, 70] {
+            let states: Vec<f32> =
+                (0..rows * s.state_dim).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+            let mut batch = vec![0.0f32; rows * s.num_actions];
+            s.fwd_batch_into(&states, rows, &mut batch).unwrap();
+            let mut row = vec![0.0f32; s.num_actions];
+            for r in 0..rows {
+                s.fwd_into(&states[r * s.state_dim..(r + 1) * s.state_dim], &mut row).unwrap();
+                for j in 0..s.num_actions {
+                    assert_eq!(
+                        row[j].to_bits(),
+                        batch[r * s.num_actions + j].to_bits(),
+                        "rows={rows} row={r} q={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn host_batch_counters_track_chunks_rows_and_padding() {
+        let mut s = QNetSession::new_host(3);
+        assert_eq!(s.fwd_lanes(), HOST_FWD_LANES);
+        let rows = HOST_FWD_LANES + 1;
+        let states = vec![0.1f32; rows * s.state_dim];
+        let mut out = vec![0.0f32; rows * s.num_actions];
+        s.fwd_batch_into(&states, rows, &mut out).unwrap();
+        // 33 rows = one full lane + one 1-row chunk padded by 31.
+        assert_eq!(s.batch_stats(), (2, rows, HOST_FWD_LANES - 1));
+        let full = HOST_FWD_LANES * s.state_dim;
+        let full_out = HOST_FWD_LANES * s.num_actions;
+        s.fwd_batch_into(&states[..full], HOST_FWD_LANES, &mut out[..full_out]).unwrap();
+        assert_eq!(s.batch_stats(), (3, rows + HOST_FWD_LANES, HOST_FWD_LANES - 1));
+        // The per-row reference path never touches the batch counters.
+        let mut row = vec![0.0f32; s.num_actions];
+        s.fwd_into(&states[..s.state_dim], &mut row).unwrap();
+        assert_eq!(s.batch_stats(), (3, rows + HOST_FWD_LANES, HOST_FWD_LANES - 1));
+    }
+
+    #[test]
+    fn host_train_reduces_loss_and_changes_scores() {
+        let mut q = QNetSession::new_host(5);
+        let s = vec![0.25f32; q.state_dim];
+        let q0 = q.fwd(&s).unwrap();
+        let b = q.train_batch;
+        let batch = TdBatch {
+            states: vec![0.1; b * q.state_dim],
+            actions: (0..b as i32).map(|i| i % q.num_actions as i32).collect(),
+            rewards: vec![1.0; b],
+            next_states: vec![0.1; b * q.state_dim],
+            dones: vec![1.0; b],
+        };
+        let first = q.train(&batch, 0.05, 0.95).unwrap();
+        let mut last = first;
+        for _ in 0..25 {
+            last = q.train(&batch, 0.05, 0.95).unwrap();
+        }
+        assert!(last < 0.6 * first, "first={first} last={last}");
+        let q1 = q.fwd(&s).unwrap();
+        assert_ne!(q0, q1);
+        // Training invalidates nothing on the host path: batched and
+        // per-row forwards stay bitwise identical on the new weights.
+        let mut batch_q = vec![0.0f32; q.num_actions];
+        q.fwd_batch_into(&s, 1, &mut batch_q).unwrap();
+        let row_q = q.fwd(&s).unwrap();
+        assert_eq!(
+            batch_q.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            row_q.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn injected_faults_fail_forwards_then_clear() {
+        let mut s = QNetSession::new_host(1);
+        s.inject_fwd_faults(2);
+        let states = vec![0.0f32; s.state_dim];
+        let mut out = vec![0.0f32; s.num_actions];
+        assert!(s.fwd_into(&states, &mut out).is_err());
+        assert!(s.fwd_batch_into(&states, 1, &mut out).is_err());
+        assert!(s.fwd_into(&states, &mut out).is_ok(), "faults are one-shot");
+        // A failed chunk is not counted as an issued batch forward.
+        assert_eq!(s.batch_stats(), (0, 0, 0));
+        s.fwd_batch_into(&states, 1, &mut out).unwrap();
+        assert_eq!(s.batch_stats(), (1, 1, HOST_FWD_LANES - 1));
     }
 }

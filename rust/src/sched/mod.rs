@@ -27,7 +27,7 @@
 //! cluster adjacency.
 
 use crate::cluster::{Deployment, Membership, NodeId, ResourceKind, Resources};
-use crate::dnn::ModelGraph;
+use crate::dnn::{Layer, ModelGraph};
 use crate::rl::{
     features::MAX_NEIGHBORS, layer_class, nearest_first, state_vector_into, table_key,
     CandidateView, Episode, EpisodeStep, Policy, RewardParams, StepPenalty, STATE_DIM,
@@ -42,12 +42,53 @@ use crate::workload::DlJob;
 pub const POLICY_EVAL_SECS_PER_CAND: f64 = 0.002;
 /// Collecting one node's resource report when building the observation.
 pub const OBS_SECS_PER_NODE: f64 = 0.0008;
+/// Fixed dispatch overhead of one batched policy evaluation (the single
+/// Q-net forward a whole wave round shares under
+/// [`DecisionConfig::batched_eval_cost`]).
+pub const POLICY_EVAL_SECS_PER_BATCH: f64 = 0.004;
+/// Marginal per-row cost of that batched evaluation.
+pub const POLICY_EVAL_SECS_PER_BATCH_ROW: f64 = 0.0002;
 /// Rounds between refreshes of the agents' state views (staleness of the
 /// periodic utilization reports, §III).
 pub const DEFAULT_REFRESH_ROUNDS: usize = 3;
 /// Relative std-dev of actual vs estimated demands (the paper's
 /// "time-varying and dynamic" demands that shields cannot foresee).
 pub const DEMAND_NOISE_SD: f64 = 0.15;
+
+/// How a wave evaluates its policy decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionMode {
+    /// Collect every active agent's featurized state first, decide the
+    /// whole round through one [`Policy::choose_batch`] call, then
+    /// commit — one batched Q-net forward per round (the default).
+    Batched,
+    /// The original interleaved decide-per-agent loop, kept verbatim as
+    /// the in-tree reference the batched path is pinned against.
+    PerAgent,
+}
+
+/// Decision-path configuration threaded from the experiment config into
+/// the wave schedulers.  Both knobs default to values that replay every
+/// pinned result byte-identically: `Batched` produces the same
+/// placements, episodes, RNG stream, and latency accounting as
+/// `PerAgent` (see the RNG-order contract on [`Policy::choose_batch`]).
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionConfig {
+    pub mode: DecisionMode,
+    /// Model MARL-round `decision_secs` as one amortized batched
+    /// evaluation per round ([`POLICY_EVAL_SECS_PER_BATCH`] +
+    /// rows × [`POLICY_EVAL_SECS_PER_BATCH_ROW`]) instead of the legacy
+    /// per-candidate accounting.  Off by default so latency figures stay
+    /// pinned; only meaningful in `Batched` mode (the per-agent
+    /// reference has no batched forward to price).
+    pub batched_eval_cost: bool,
+}
+
+impl Default for DecisionConfig {
+    fn default() -> Self {
+        DecisionConfig { mode: DecisionMode::Batched, batched_eval_cost: false }
+    }
+}
 
 /// A fully scheduled job, ready for execution.
 #[derive(Debug)]
@@ -364,7 +405,8 @@ pub fn marl_wave(
     refresh_rounds: usize,
     rng: &mut Rng,
 ) -> WaveOutcome {
-    marl_wave_impl(dep, None, state, graph, jobs, policy, shield, params, refresh_rounds, rng)
+    let dc = DecisionConfig::default();
+    marl_wave_impl(dep, None, state, graph, jobs, policy, shield, params, refresh_rounds, dc, rng)
 }
 
 /// Multi-agent wave under dynamic membership: agents draw candidates from
@@ -383,10 +425,11 @@ pub fn marl_wave_dynamic(
     shield: Option<&mut dyn Shield>,
     params: &RewardParams,
     refresh_rounds: usize,
+    dc: DecisionConfig,
     rng: &mut Rng,
 ) -> WaveOutcome {
     marl_wave_impl(
-        dep, Some(membership), state, graph, jobs, policy, shield, params, refresh_rounds, rng,
+        dep, Some(membership), state, graph, jobs, policy, shield, params, refresh_rounds, dc, rng,
     )
 }
 
@@ -401,6 +444,7 @@ fn marl_wave_impl(
     mut shield: Option<&mut dyn Shield>,
     params: &RewardParams,
     refresh_rounds: usize,
+    dc: DecisionConfig,
     rng: &mut Rng,
 ) -> WaveOutcome {
     let n_layers = graph.n_layers();
@@ -420,6 +464,14 @@ fn marl_wave_impl(
     let mut active: Vec<usize> = Vec::with_capacity(pendings.len());
     let mut proposals: Vec<ProposedAction> = Vec::with_capacity(pendings.len());
     let mut final_targets: Vec<NodeId> = Vec::with_capacity(pendings.len());
+    // Batched-mode round scratch: the whole round's featurized states
+    // (row-major), flattened candidate views with row offsets, layer
+    // refs, and the chosen candidate per row — all reused across rounds.
+    let mut batch_layers: Vec<&Layer> = Vec::with_capacity(pendings.len());
+    let mut batch_states: Vec<f32> = Vec::with_capacity(pendings.len() * STATE_DIM);
+    let mut batch_cviews: Vec<CandidateView> = Vec::new();
+    let mut batch_offsets: Vec<usize> = Vec::with_capacity(pendings.len() + 1);
+    let mut batch_choices: Vec<usize> = Vec::with_capacity(pendings.len());
 
     let mut round = 0usize;
     loop {
@@ -435,49 +487,151 @@ fn marl_wave_impl(
         }
 
         // Each active agent proposes its current layer's placement.
+        //
+        // Batched mode splits the round into collect → batch-forward →
+        // commit: featurize every active agent first (featurization
+        // draws no RNG), then decide all rows through one
+        // `choose_batch` call — which by its RNG-order contract draws
+        // the per-agent epsilon stream in the same agent order the
+        // per-agent loop would — then build the proposals.  Agents of a
+        // round never see each other's picks in either mode (that is
+        // the paper's action-collision source), so batching the
+        // forwards changes no decision.
         proposals.clear();
         let mut round_agent_secs = 0.0f64;
-        for (pi, &ji) in active.iter().enumerate() {
-            let owner = pendings[ji].job.owner;
-            let layer = &graph.layers[pendings[ji].next_layer];
-            match membership {
-                Some(m) => marl_candidates_alive_into(dep, m, owner, &mut cands),
-                None => marl_candidates_into(dep, owner, &mut cands),
-            }
-            candidate_views_into(dep, state, &views[ji], owner, &cands, &mut cviews);
-            // Featurize once — with the owner-utilization slots filled —
-            // and hand the same state to the policy and the episode
-            // record (choose() no longer re-featurizes with zeroed owner
-            // slots).
-            let owner_util = [
-                state.util(owner, ResourceKind::Cpu),
-                state.util(owner, ResourceKind::Mem),
-                state.util(owner, ResourceKind::Bw),
-            ];
-            state_vector_into(layer, owner_util, &cviews, &mut state_scratch);
-            let choice = policy.choose(layer, &state_scratch, &cviews, rng, true);
-            let target = cands[choice];
-            // Observation + per-candidate policy evaluation cost; agents
-            // run in parallel so the round costs the max over agents.
-            let agent_secs = cands.len() as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
-            round_agent_secs = round_agent_secs.max(agent_secs);
-            pendings[ji].sched_secs += agent_secs;
+        match dc.mode {
+            DecisionMode::PerAgent => {
+                for (pi, &ji) in active.iter().enumerate() {
+                    let owner = pendings[ji].job.owner;
+                    let layer = &graph.layers[pendings[ji].next_layer];
+                    match membership {
+                        Some(m) => marl_candidates_alive_into(dep, m, owner, &mut cands),
+                        None => marl_candidates_into(dep, owner, &mut cands),
+                    }
+                    candidate_views_into(dep, state, &views[ji], owner, &cands, &mut cviews);
+                    // Featurize once — with the owner-utilization slots
+                    // filled — and hand the same state to the policy and
+                    // the episode record (choose() no longer
+                    // re-featurizes with zeroed owner slots).
+                    let owner_util = [
+                        state.util(owner, ResourceKind::Cpu),
+                        state.util(owner, ResourceKind::Mem),
+                        state.util(owner, ResourceKind::Bw),
+                    ];
+                    state_vector_into(layer, owner_util, &cviews, &mut state_scratch);
+                    let choice = policy.choose(layer, &state_scratch, &cviews, rng, true);
+                    let target = cands[choice];
+                    // Observation + per-candidate policy evaluation cost;
+                    // agents run in parallel so the round costs the max
+                    // over agents.
+                    let agent_secs =
+                        cands.len() as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
+                    round_agent_secs = round_agent_secs.max(agent_secs);
+                    pendings[ji].sched_secs += agent_secs;
 
-            pendings[ji].episode.steps.push(EpisodeStep {
-                key: table_key(layer_class(layer), &cviews[choice]),
-                state: state_scratch,
-                action: choice,
-                n_candidates: cands.len(),
-                penalty: StepPenalty::default(),
-            });
-            proposals.push(ProposedAction {
-                idx: pi,
-                agent: owner,
-                job: pendings[ji].job.id,
-                layer_id: pendings[ji].next_layer,
-                demand: layer.demand(),
-                target,
-            });
+                    pendings[ji].episode.steps.push(EpisodeStep {
+                        key: table_key(layer_class(layer), &cviews[choice]),
+                        state: state_scratch,
+                        action: choice,
+                        n_candidates: cands.len(),
+                        penalty: StepPenalty::default(),
+                    });
+                    proposals.push(ProposedAction {
+                        idx: pi,
+                        agent: owner,
+                        job: pendings[ji].job.id,
+                        layer_id: pendings[ji].next_layer,
+                        demand: layer.demand(),
+                        target,
+                    });
+                }
+            }
+            DecisionMode::Batched => {
+                batch_layers.clear();
+                batch_states.clear();
+                batch_cviews.clear();
+                batch_offsets.clear();
+                batch_offsets.push(0);
+                for &ji in active.iter() {
+                    let owner = pendings[ji].job.owner;
+                    let layer = &graph.layers[pendings[ji].next_layer];
+                    match membership {
+                        Some(m) => marl_candidates_alive_into(dep, m, owner, &mut cands),
+                        None => marl_candidates_into(dep, owner, &mut cands),
+                    }
+                    candidate_views_into(dep, state, &views[ji], owner, &cands, &mut cviews);
+                    let owner_util = [
+                        state.util(owner, ResourceKind::Cpu),
+                        state.util(owner, ResourceKind::Mem),
+                        state.util(owner, ResourceKind::Bw),
+                    ];
+                    state_vector_into(layer, owner_util, &cviews, &mut state_scratch);
+                    batch_layers.push(layer);
+                    batch_states.extend_from_slice(&state_scratch);
+                    batch_cviews.extend_from_slice(&cviews);
+                    batch_offsets.push(batch_cviews.len());
+                }
+                policy.choose_batch(
+                    &batch_layers,
+                    &batch_states,
+                    &batch_cviews,
+                    &batch_offsets,
+                    rng,
+                    true,
+                    &mut batch_choices,
+                );
+                let rows = active.len();
+                let batch_eval_secs =
+                    POLICY_EVAL_SECS_PER_BATCH + rows as f64 * POLICY_EVAL_SECS_PER_BATCH_ROW;
+                let mut round_obs_secs = 0.0f64;
+                for (pi, &ji) in active.iter().enumerate() {
+                    let owner = pendings[ji].job.owner;
+                    let (o0, o1) = (batch_offsets[pi], batch_offsets[pi + 1]);
+                    let rcviews = &batch_cviews[o0..o1];
+                    let n_cands = o1 - o0;
+                    let choice = batch_choices[pi];
+                    let target = rcviews[choice].node;
+                    let layer = batch_layers[pi];
+                    let agent_secs = if dc.batched_eval_cost {
+                        // One amortized batched evaluation per round:
+                        // each agent pays its own observation plus an
+                        // equal share of the round's single forward.
+                        let obs = n_cands as f64 * OBS_SECS_PER_NODE;
+                        round_obs_secs = round_obs_secs.max(obs);
+                        obs + batch_eval_secs / rows as f64
+                    } else {
+                        // Legacy per-candidate accounting — pinned
+                        // latency figures replay byte-identical.
+                        let secs =
+                            n_cands as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
+                        round_agent_secs = round_agent_secs.max(secs);
+                        secs
+                    };
+                    pendings[ji].sched_secs += agent_secs;
+                    let state_row: [f32; STATE_DIM] = batch_states
+                        [pi * STATE_DIM..(pi + 1) * STATE_DIM]
+                        .try_into()
+                        .expect("row width");
+                    pendings[ji].episode.steps.push(EpisodeStep {
+                        key: table_key(layer_class(layer), &rcviews[choice]),
+                        state: state_row,
+                        action: choice,
+                        n_candidates: n_cands,
+                        penalty: StepPenalty::default(),
+                    });
+                    proposals.push(ProposedAction {
+                        idx: pi,
+                        agent: owner,
+                        job: pendings[ji].job.id,
+                        layer_id: pendings[ji].next_layer,
+                        demand: layer.demand(),
+                        target,
+                    });
+                }
+                if dc.batched_eval_cost {
+                    round_agent_secs = round_obs_secs + batch_eval_secs;
+                }
+            }
         }
 
         // Shield pass (or collision detection only).
@@ -543,7 +697,7 @@ pub fn central_wave(
     params: &RewardParams,
     rng: &mut Rng,
 ) -> WaveOutcome {
-    central_wave_impl(dep, None, state, graph, jobs, policy, params, rng)
+    central_wave_impl(dep, None, state, graph, jobs, policy, params, DecisionConfig::default(), rng)
 }
 
 /// Centralized-RL wave under dynamic membership: the head's candidate
@@ -557,9 +711,10 @@ pub fn central_wave_dynamic(
     jobs: &[DlJob],
     policy: &mut dyn Policy,
     params: &RewardParams,
+    dc: DecisionConfig,
     rng: &mut Rng,
 ) -> WaveOutcome {
-    central_wave_impl(dep, Some(membership), state, graph, jobs, policy, params, rng)
+    central_wave_impl(dep, Some(membership), state, graph, jobs, policy, params, dc, rng)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -571,6 +726,7 @@ fn central_wave_impl(
     jobs: &[DlJob],
     policy: &mut dyn Policy,
     params: &RewardParams,
+    dc: DecisionConfig,
     rng: &mut Rng,
 ) -> WaveOutcome {
     let n_layers = graph.n_layers();
@@ -581,6 +737,7 @@ fn central_wave_impl(
     // Per-decision scratch, reused across layers and jobs.
     let mut cviews: Vec<CandidateView> = Vec::new();
     let mut state_scratch = [0.0f32; STATE_DIM];
+    let mut batch_choice: Vec<usize> = Vec::with_capacity(1);
 
     // Collecting cluster-wide observations is the head's expensive step
     // (§III), so it snapshots once per wave; its own placements are
@@ -602,7 +759,26 @@ fn central_wave_impl(
                 state.util(job.owner, ResourceKind::Bw),
             ];
             state_vector_into(layer, owner_util, &cviews, &mut state_scratch);
-            let choice = policy.choose(layer, &state_scratch, &cviews, rng, true);
+            // The head's decisions are sequentially dependent — each
+            // placement updates the virtual view the next decision
+            // reads — so a "round" here is one row and the batched path
+            // degenerates to 1-row forwards with identical results.
+            let choice = match dc.mode {
+                DecisionMode::PerAgent => policy.choose(layer, &state_scratch, &cviews, rng, true),
+                DecisionMode::Batched => {
+                    let offsets = [0, cviews.len()];
+                    policy.choose_batch(
+                        &[layer],
+                        &state_scratch,
+                        &cviews,
+                        &offsets,
+                        rng,
+                        true,
+                        &mut batch_choice,
+                    );
+                    batch_choice[0]
+                }
+            };
             let target = members[choice];
             let step_secs =
                 members.len() as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
@@ -699,6 +875,7 @@ pub fn reschedule_stranded(
     policy: &mut dyn Policy,
     shield: Option<&mut dyn Shield>,
     params: &RewardParams,
+    dc: DecisionConfig,
     rng: &mut Rng,
 ) -> ReschedOutcome {
     debug_assert!(
@@ -706,7 +883,8 @@ pub fn reschedule_stranded(
         "caller must mark the failed node dead before rescheduling"
     );
     reschedule_impl(
-        dep, membership, state, graph, view_demand, stranded, policy, shield, params, rng, false,
+        dep, membership, state, graph, view_demand, stranded, policy, shield, params, dc, rng,
+        false,
     )
 }
 
@@ -734,10 +912,12 @@ pub fn reschedule_migrated(
     policy: &mut dyn Policy,
     shield: Option<&mut dyn Shield>,
     params: &RewardParams,
+    dc: DecisionConfig,
     rng: &mut Rng,
 ) -> ReschedOutcome {
     reschedule_impl(
-        dep, membership, state, graph, view_demand, stranded, policy, shield, params, rng, true,
+        dep, membership, state, graph, view_demand, stranded, policy, shield, params, dc, rng,
+        true,
     )
 }
 
@@ -752,6 +932,7 @@ fn reschedule_impl(
     policy: &mut dyn Policy,
     mut shield: Option<&mut dyn Shield>,
     params: &RewardParams,
+    dc: DecisionConfig,
     rng: &mut Rng,
     proximity: bool,
 ) -> ReschedOutcome {
@@ -766,45 +947,118 @@ fn reschedule_impl(
     let mut state_scratch = [0.0f32; STATE_DIM];
     // Per-owner decision cost: an owner with several stranded layers
     // re-decides them sequentially; distinct owners run in parallel.
+    // (Reschedule rounds keep the legacy per-candidate accounting in
+    // both modes — the recovery path is not on the pinned Fig 7 axis.)
     let mut owner_secs: Vec<(NodeId, f64)> = Vec::new();
-    for (i, s) in stranded.iter().enumerate() {
-        let layer = &graph.layers[s.layer_id];
-        // Dead owners are excluded and a live fallback substituted by
-        // `marl_candidates_alive_into`, so the set is never empty; a
-        // fully dead cluster degenerates to the owner, which the
-        // caller's cluster invariant rules out.
-        if proximity {
-            marl_candidates_proximity_into(dep, membership, s.owner, &mut cands);
-        } else {
-            marl_candidates_alive_into(dep, membership, s.owner, &mut cands);
+    match dc.mode {
+        DecisionMode::PerAgent => {
+            for (i, s) in stranded.iter().enumerate() {
+                let layer = &graph.layers[s.layer_id];
+                // Dead owners are excluded and a live fallback
+                // substituted by `marl_candidates_alive_into`, so the
+                // set is never empty; a fully dead cluster degenerates
+                // to the owner, which the caller's cluster invariant
+                // rules out.
+                if proximity {
+                    marl_candidates_proximity_into(dep, membership, s.owner, &mut cands);
+                } else {
+                    marl_candidates_alive_into(dep, membership, s.owner, &mut cands);
+                }
+                if cands.len() == 1 && !membership.is_alive(cands[0]) {
+                    // Degenerate fallback (whole cluster dead): no alive
+                    // host.
+                    targets.push(usize::MAX);
+                    continue;
+                }
+                candidate_views_into(dep, state, &view, s.owner, &cands, &mut cviews);
+                // Recovery decisions carry no owner-utilization reading
+                // (the periodic report a recovering owner acts on covers
+                // candidates, not itself) — the owner slots stay zero,
+                // exactly what the DQN path scored before the
+                // recorded-state refactor.
+                state_vector_into(layer, [0.0; 3], &cviews, &mut state_scratch);
+                let choice = policy.choose(layer, &state_scratch, &cviews, rng, true);
+                let target = cands[choice];
+                let secs = cands.len() as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
+                match owner_secs.iter_mut().find(|(o, _)| *o == s.owner) {
+                    Some((_, acc)) => *acc += secs,
+                    None => owner_secs.push((s.owner, secs)),
+                }
+                proposals.push(ProposedAction {
+                    idx: i,
+                    agent: s.owner,
+                    job: s.job,
+                    layer_id: s.layer_id,
+                    demand: layer.demand(),
+                    target,
+                });
+                targets.push(target);
+            }
         }
-        if cands.len() == 1 && !membership.is_alive(cands[0]) {
-            // Degenerate fallback (whole cluster dead): no alive host.
-            targets.push(usize::MAX);
-            continue;
+        DecisionMode::Batched => {
+            // Re-proposals of a recovery round are mutually independent
+            // — every row reads the same frozen stale view — so this
+            // batches for real: collect all rows, one `choose_batch`,
+            // then build the joint re-proposal.
+            let mut batch_layers: Vec<&Layer> = Vec::with_capacity(stranded.len());
+            let mut batch_states: Vec<f32> = Vec::with_capacity(stranded.len() * STATE_DIM);
+            let mut batch_cviews: Vec<CandidateView> = Vec::new();
+            let mut batch_offsets: Vec<usize> = Vec::with_capacity(stranded.len() + 1);
+            // Stranded index per batch row (degenerate rows are skipped).
+            let mut batch_rows: Vec<usize> = Vec::with_capacity(stranded.len());
+            batch_offsets.push(0);
+            for (i, s) in stranded.iter().enumerate() {
+                let layer = &graph.layers[s.layer_id];
+                if proximity {
+                    marl_candidates_proximity_into(dep, membership, s.owner, &mut cands);
+                } else {
+                    marl_candidates_alive_into(dep, membership, s.owner, &mut cands);
+                }
+                if cands.len() == 1 && !membership.is_alive(cands[0]) {
+                    targets.push(usize::MAX);
+                    continue;
+                }
+                // Placeholder — overwritten once the batch is scored.
+                targets.push(usize::MAX);
+                candidate_views_into(dep, state, &view, s.owner, &cands, &mut cviews);
+                state_vector_into(layer, [0.0; 3], &cviews, &mut state_scratch);
+                batch_layers.push(layer);
+                batch_states.extend_from_slice(&state_scratch);
+                batch_cviews.extend_from_slice(&cviews);
+                batch_offsets.push(batch_cviews.len());
+                batch_rows.push(i);
+            }
+            let mut choices: Vec<usize> = Vec::with_capacity(batch_rows.len());
+            policy.choose_batch(
+                &batch_layers,
+                &batch_states,
+                &batch_cviews,
+                &batch_offsets,
+                rng,
+                true,
+                &mut choices,
+            );
+            for (r, &i) in batch_rows.iter().enumerate() {
+                let s = &stranded[i];
+                let (o0, o1) = (batch_offsets[r], batch_offsets[r + 1]);
+                let rcviews = &batch_cviews[o0..o1];
+                let target = rcviews[choices[r]].node;
+                let secs = (o1 - o0) as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
+                match owner_secs.iter_mut().find(|(o, _)| *o == s.owner) {
+                    Some((_, acc)) => *acc += secs,
+                    None => owner_secs.push((s.owner, secs)),
+                }
+                proposals.push(ProposedAction {
+                    idx: i,
+                    agent: s.owner,
+                    job: s.job,
+                    layer_id: s.layer_id,
+                    demand: batch_layers[r].demand(),
+                    target,
+                });
+                targets[i] = target;
+            }
         }
-        candidate_views_into(dep, state, &view, s.owner, &cands, &mut cviews);
-        // Recovery decisions carry no owner-utilization reading (the
-        // periodic report a recovering owner acts on covers candidates,
-        // not itself) — the owner slots stay zero, exactly what the DQN
-        // path scored before the recorded-state refactor.
-        state_vector_into(layer, [0.0; 3], &cviews, &mut state_scratch);
-        let choice = policy.choose(layer, &state_scratch, &cviews, rng, true);
-        let target = cands[choice];
-        let secs = cands.len() as f64 * (OBS_SECS_PER_NODE + POLICY_EVAL_SECS_PER_CAND);
-        match owner_secs.iter_mut().find(|(o, _)| *o == s.owner) {
-            Some((_, acc)) => *acc += secs,
-            None => owner_secs.push((s.owner, secs)),
-        }
-        proposals.push(ProposedAction {
-            idx: i,
-            agent: s.owner,
-            job: s.job,
-            layer_id: s.layer_id,
-            demand: layer.demand(),
-            target,
-        });
-        targets.push(target);
     }
     let sched_secs = owner_secs.iter().map(|&(_, s)| s).fold(0.0, f64::max);
 
@@ -971,7 +1225,7 @@ mod tests {
         let params = RewardParams::default();
         let out = marl_wave_dynamic(
             &dep, &membership, &mut state, &graph, &jobs, &mut policy, None, &params, 3,
-            &mut rng,
+            DecisionConfig::default(), &mut rng,
         );
         for s in &out.schedules {
             for &n in &s.placement {
@@ -981,7 +1235,8 @@ mod tests {
         // The centralized head must also restrict itself to survivors.
         let mut state2 = ResourceState::new(&dep);
         let out2 = central_wave_dynamic(
-            &dep, &membership, &mut state2, &graph, &jobs, &mut policy, &params, &mut rng,
+            &dep, &membership, &mut state2, &graph, &jobs, &mut policy, &params,
+            DecisionConfig::default(), &mut rng,
         );
         for s in &out2.schedules {
             for &n in &s.placement {
@@ -1021,7 +1276,7 @@ mod tests {
         let view: Vec<Resources> = (0..state.n()).map(|n| *state.demand(n)).collect();
         let outcome = reschedule_stranded(
             &dep, &membership, &state, &graph, &view, &stranded, failed, &mut policy, None,
-            &params, &mut rng,
+            &params, DecisionConfig::default(), &mut rng,
         );
         assert_eq!(outcome.targets.len(), stranded.len());
         for &t in &outcome.targets {
@@ -1106,7 +1361,7 @@ mod tests {
         let view: Vec<Resources> = (0..state.n()).map(|n| *state.demand(n)).collect();
         let outcome = reschedule_migrated(
             &dep, &membership, &state, &graph, &view, &stranded, &mut policy, None, &params,
-            &mut rng,
+            DecisionConfig::default(), &mut rng,
         );
         assert_eq!(outcome.targets.len(), stranded.len());
         for (s, &t) in stranded.iter().zip(&outcome.targets) {
@@ -1117,6 +1372,147 @@ mod tests {
             }
         }
         assert!(outcome.sched_secs > 0.0, "migration rounds must account latency");
+    }
+
+    /// Deterministic shielded wave under a given decision config; fresh
+    /// deployment/workload/rng per call so runs are comparable.
+    fn run_wave(policy: &mut dyn Policy, dc: DecisionConfig) -> (WaveOutcome, Rng) {
+        let (dep, mut state, _g, jobs, mut rng) = setup(5);
+        let graph = ModelKind::Vgg16.build();
+        let membership = Membership::full(&dep);
+        let mut shield = CentralShield::new();
+        let params = RewardParams::default();
+        let out = marl_wave_dynamic(
+            &dep, &membership, &mut state, &graph, &jobs, policy, Some(&mut shield), &params, 3,
+            dc, &mut rng,
+        );
+        (out, rng)
+    }
+
+    fn assert_waves_identical(a: &WaveOutcome, b: &WaveOutcome) {
+        assert_eq!(a.collisions, b.collisions);
+        assert_eq!(a.shield_corrections, b.shield_corrections);
+        assert_eq!(a.schedules.len(), b.schedules.len());
+        for (sa, sb) in a.schedules.iter().zip(&b.schedules) {
+            assert_eq!(sa.placement, sb.placement);
+            assert_eq!(sa.memory_violations, sb.memory_violations);
+            assert_eq!(sa.decision_secs.to_bits(), sb.decision_secs.to_bits());
+            assert_eq!(sa.sched_secs.to_bits(), sb.sched_secs.to_bits());
+            assert_eq!(sa.shield_secs.to_bits(), sb.shield_secs.to_bits());
+            assert_eq!(sa.episode.steps.len(), sb.episode.steps.len());
+            for (ta, tb) in sa.episode.steps.iter().zip(&sb.episode.steps) {
+                assert_eq!(ta.key, tb.key);
+                assert_eq!(ta.action, tb.action);
+                assert_eq!(ta.n_candidates, tb.n_candidates);
+                assert_eq!(ta.penalty, tb.penalty);
+                for (xa, xb) in ta.state.iter().zip(&tb.state) {
+                    assert_eq!(xa.to_bits(), xb.to_bits());
+                }
+            }
+        }
+    }
+
+    /// The tentpole pin at wave level: the batched collect → forward →
+    /// commit round must replay the per-agent reference exactly —
+    /// placements, episodes, penalties, latency bits, and the residual
+    /// RNG stream.
+    #[test]
+    fn batched_wave_replays_per_agent_reference_exactly() {
+        let per_agent = DecisionConfig { mode: DecisionMode::PerAgent, batched_eval_cost: false };
+        let mut pa = TabularQ::new(0.2, 0.3);
+        let mut pb = TabularQ::new(0.2, 0.3);
+        let (a, mut rng_a) = run_wave(&mut pa, DecisionConfig::default());
+        let (b, mut rng_b) = run_wave(&mut pb, per_agent);
+        assert_waves_identical(&a, &b);
+        for _ in 0..8 {
+            assert_eq!(rng_a.f64().to_bits(), rng_b.f64().to_bits());
+        }
+        assert_eq!(pa.table, pb.table, "shield notifications updated the same cells");
+    }
+
+    /// Same pin with the DQN host policy, whose `choose_batch` override
+    /// actually issues fixed-lane batched forwards.
+    #[test]
+    fn batched_wave_with_dqn_host_matches_per_agent() {
+        use crate::rl::dqn::DqnPolicy;
+        let per_agent = DecisionConfig { mode: DecisionMode::PerAgent, batched_eval_cost: false };
+        let mut pa = DqnPolicy::new_host(6);
+        let mut pb = DqnPolicy::new_host(6);
+        let (a, _) = run_wave(&mut pa, DecisionConfig::default());
+        let (b, _) = run_wave(&mut pb, per_agent);
+        assert_waves_identical(&a, &b);
+        assert_eq!(pa.fwd_errors(), 0);
+        assert_eq!(pb.fwd_errors(), 0);
+        let (fwds, rows, _) = pa.batch_stats();
+        assert!(fwds > 0 && rows > 0, "batched mode must issue batch forwards");
+        assert_eq!(pb.batch_stats(), (0, 0, 0), "per-agent mode issues none");
+    }
+
+    /// The latency-model knob amortizes one batched evaluation per round
+    /// without steering any decision.
+    #[test]
+    fn batched_eval_cost_amortizes_latency_without_changing_decisions() {
+        let costed = DecisionConfig { mode: DecisionMode::Batched, batched_eval_cost: true };
+        let mut pa = TabularQ::new(0.2, 0.3);
+        let mut pc = TabularQ::new(0.2, 0.3);
+        let (a, mut rng_a) = run_wave(&mut pa, DecisionConfig::default());
+        let (c, mut rng_c) = run_wave(&mut pc, costed);
+        for (sa, sc) in a.schedules.iter().zip(&c.schedules) {
+            assert_eq!(sa.placement, sc.placement, "cost model must not steer decisions");
+        }
+        for _ in 0..8 {
+            assert_eq!(rng_a.f64().to_bits(), rng_c.f64().to_bits());
+        }
+        let legacy: f64 = a.schedules.iter().map(|s| s.decision_secs).sum();
+        let amortized: f64 = c.schedules.iter().map(|s| s.decision_secs).sum();
+        // One shared forward per round beats per-candidate evaluation
+        // whenever agents see more than a couple of candidates.
+        assert!(amortized < legacy, "amortized {amortized} !< legacy {legacy}");
+    }
+
+    /// Recovery rounds batch for real (rows are independent); the joint
+    /// re-proposal must match the per-agent reference exactly.
+    #[test]
+    fn batched_reschedule_replays_per_agent_reference_exactly() {
+        let run = |mode: DecisionMode| -> ReschedOutcome {
+            let (dep, mut state, graph, jobs, mut rng) = setup(5);
+            let mut policy = TabularQ::new(0.2, 0.1);
+            let params = RewardParams::default();
+            let out = marl_wave(
+                &dep, &mut state, &graph, &jobs, &mut policy, None, &params, 3, &mut rng,
+            );
+            let mut counts = vec![0usize; dep.n()];
+            for s in &out.schedules {
+                for &n in &s.placement {
+                    counts[n] += 1;
+                }
+            }
+            let failed = (0..dep.n()).max_by_key(|&n| counts[n]).unwrap();
+            let mut membership = Membership::full(&dep);
+            membership.fail(&dep, failed);
+            let mut stranded = Vec::new();
+            for (ji, s) in out.schedules.iter().enumerate() {
+                for (layer_id, &n) in s.placement.iter().enumerate() {
+                    if n == failed {
+                        stranded.push(Stranded { job: ji, owner: s.job.owner, layer_id });
+                    }
+                }
+            }
+            assert!(!stranded.is_empty());
+            let view: Vec<Resources> = (0..state.n()).map(|n| *state.demand(n)).collect();
+            let dc = DecisionConfig { mode, batched_eval_cost: false };
+            reschedule_stranded(
+                &dep, &membership, &state, &graph, &view, &stranded, failed, &mut policy, None,
+                &params, dc, &mut rng,
+            )
+        };
+        let a = run(DecisionMode::Batched);
+        let b = run(DecisionMode::PerAgent);
+        assert_eq!(a.targets, b.targets);
+        assert_eq!(a.collisions, b.collisions);
+        assert_eq!(a.corrections, b.corrections);
+        assert_eq!(a.sched_secs.to_bits(), b.sched_secs.to_bits());
+        assert_eq!(a.shield_secs.to_bits(), b.shield_secs.to_bits());
     }
 
     #[test]
