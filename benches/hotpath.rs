@@ -33,6 +33,11 @@
 //!   with byte-identical outcomes asserted before timing (batched must
 //!   be strictly faster at 300+ — asserted in full runs; smoke runs only
 //!   the 1000-agent cell);
+//! * in-sim tracing: byte-identity of `RunMetrics` across trace
+//!   off / profile / full on a sharded SROLE-D scenario, the inert-guard
+//!   microbench (span + event + sample with no recorder installed)
+//!   projected against the trace-off run (instrumentation must cost ≤2%
+//!   when off — asserted in full runs), and measured armed-run cells;
 //! * PJRT `qnet_fwd` action-scoring latency (the DQN request path),
 //!   skipped when artifacts are absent.
 //!
@@ -772,6 +777,106 @@ fn main() {
         }
     }
 
+    // --- in-sim tracing: zero-overhead-when-off + armed-run cost --------
+    // The obs subsystem's cells: (1) byte-identity — arming the tracer
+    // (profile or full) must leave `RunMetrics` byte-identical to the
+    // trace-off reference on a full sharded SROLE-D scenario; (2) the
+    // inert-guard microbench — span + event + gated sample with no
+    // recorder installed, i.e. the exact trace-off code path of every
+    // instrumentation point — projected over the armed run's span count
+    // against the trace-off run, asserting the instrumentation costs
+    // ≤2% of the run when off (full runs only; wall-clock comparisons
+    // are not a reliable gate on CI shared runners); (3) measured
+    // trace-off vs profile vs full full-run cells.
+    let mut trace_bench =
+        Bench::with_config("hotpath_trace", srole::util::benchkit::BenchConfig::sweep());
+    {
+        use srole::obs::{self, Phase, Series, TraceKind, TraceMode};
+        let trace_cfg = |mode: TraceMode| {
+            let mut cfg = shard_cfg(1000, shard_workers);
+            cfg.trace = mode;
+            cfg
+        };
+        // Byte-identity (and a populated report) before timing.
+        let (off, none) = Experiment::new(trace_cfg(TraceMode::Off)).run_traced(Method::SroleD);
+        assert!(none.is_none(), "trace-off run must not carry a report");
+        assert!(!off.metrics.jct.is_empty(), "vacuous: the trace cell ran no jobs");
+        let mut n_spans = 0u64;
+        for mode in [TraceMode::Profile, TraceMode::Full] {
+            let (armed, report) = Experiment::new(trace_cfg(mode)).run_traced(Method::SroleD);
+            assert_eq!(
+                off.metrics.to_json().to_string(),
+                armed.metrics.to_json().to_string(),
+                "tracing ({}) perturbed the run",
+                mode.name()
+            );
+            let report = report.expect("armed run must carry a report");
+            let total = report.total_profile();
+            assert!(
+                total.count[Phase::EventDispatch as usize] > 0,
+                "armed run timed no event dispatches"
+            );
+            if mode == TraceMode::Full {
+                assert!(!report.records.is_empty(), "full mode captured no records");
+            }
+            n_spans = total.count.iter().sum();
+        }
+        // Inert-guard microbench: pointer check only, no clock reads.
+        const INERT_ITERS: usize = 100_000;
+        assert!(!obs::active(), "bench thread must not have a recorder installed");
+        let t_inert = trace_bench
+            .measure("trace_inert_guard_100k", || {
+                let mut acc = 0usize;
+                for i in 0..INERT_ITERS {
+                    let _sp = obs::span(Phase::EventDispatch);
+                    obs::event(TraceKind::Arrival, i as f64, 0.0, 0.0);
+                    if obs::active() {
+                        obs::sample(Series::QueueDepth, i as f64, 0.0);
+                        acc += 1;
+                    }
+                }
+                acc
+            })
+            .median_secs();
+        let t_off = trace_bench
+            .measure("trace_off_run_1000n", || {
+                Experiment::new(trace_cfg(TraceMode::Off)).run(Method::SroleD).metrics.makespan
+            })
+            .median_secs();
+        let t_profile = trace_bench
+            .measure("trace_profile_run_1000n", || {
+                let exp = Experiment::new(trace_cfg(TraceMode::Profile));
+                exp.run_traced(Method::SroleD).0.metrics.makespan
+            })
+            .median_secs();
+        let t_full = trace_bench
+            .measure("trace_full_run_1000n", || {
+                let exp = Experiment::new(trace_cfg(TraceMode::Full));
+                exp.run_traced(Method::SroleD).0.metrics.makespan
+            })
+            .median_secs();
+        // Projected trace-off overhead: every span the armed run timed
+        // is one inert guard triple in the off run.
+        let per_point = t_inert / INERT_ITERS as f64;
+        let projected = per_point * n_spans as f64 / t_off.max(1e-12);
+        println!(
+            "trace cost at 1000 nodes: off {t_off:.3}s, profile {t_profile:.3}s (+{:.1}%), \
+             full {t_full:.3}s (+{:.1}%); {n_spans} spans × {:.1}ns inert guard → \
+             projected trace-off overhead {:.3}%",
+            (t_profile / t_off.max(1e-12) - 1.0) * 100.0,
+            (t_full / t_off.max(1e-12) - 1.0) * 100.0,
+            per_point * 1e9,
+            projected * 100.0
+        );
+        if !bench_fast {
+            assert!(
+                projected <= 0.02,
+                "trace-off instrumentation must cost ≤2% of the run: projected {:.3}%",
+                projected * 100.0
+            );
+        }
+    }
+
     // --- PJRT qnet forward latency (request path of the DQN policy) -----
     let dir = srole::runtime::Engine::default_dir();
     if dir.join("manifest.json").exists() && srole::runtime::PJRT_AVAILABLE {
@@ -786,6 +891,7 @@ fn main() {
     bench.print_report();
     tick_bench.print_report();
     decision_bench.print_report();
+    trace_bench.print_report();
     match bench.write_json(std::path::Path::new(".")) {
         Ok(path) => println!("bench report: {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
@@ -797,5 +903,9 @@ fn main() {
     match decision_bench.write_json(std::path::Path::new(".")) {
         Ok(path) => println!("bench report: {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_hotpath_decision.json: {e}"),
+    }
+    match trace_bench.write_json(std::path::Path::new(".")) {
+        Ok(path) => println!("bench report: {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_hotpath_trace.json: {e}"),
     }
 }

@@ -4,10 +4,10 @@
 //! `(method × configuration)` cell is an independent, deterministic
 //! scenario, executed across OS threads.
 //!
-//! Usage: `figures <fig4|fig5|...|fig13|scale|churn|mobility|all>`
+//! Usage: `figures <fig4|fig5|...|fig13|scale|churn|mobility|profile|all>`
 //!        `[--reps N] [--seed S] [--iterations N] [--threads T]`
 //!        `[--models vgg16,googlenet,rnn] [--edges 5,10,15,20,25]`
-//!        `[--pretrain N]`
+//!        `[--pretrain N] [--trace PATH]`
 //!
 //! `figures scale` sweeps 10→100,000-node deployments concurrently (the
 //! region-sharded tick-engine scale ceiling; `--edges` overrides the
@@ -19,6 +19,10 @@
 //! mobility` sweeps a random-waypoint speed × pause grid (plus a
 //! stationary-trace baseline and a square trace patrol) on a 50-node
 //! cluster, reporting shield-region handoffs and layer migrations;
+//! `figures profile` runs one traced sharded SROLE-D cell (10 000 nodes
+//! by default) and prints the per-phase per-lane wall-clock attribution
+//! table plus sampled-series percentiles — `--trace PATH` additionally
+//! writes the JSONL event trace and its Chrome `trace_event` twin;
 //! `--edges` reshapes the
 //! Fig 4 sweep the same way.  Absolute numbers live on this simulated
 //! testbed, not the authors' EC2 cluster; the *shape* (who wins, by what
@@ -27,7 +31,7 @@
 use srole::config::ExperimentConfig;
 use srole::coordinator::Method;
 use srole::dnn::ModelKind;
-use srole::harness::{run_parallel, write_bench_json, ScenarioReport, Sweep};
+use srole::harness::{run_parallel, write_bench_json, Scenario, ScenarioReport, Sweep};
 use srole::util::cli::{Cli, CliError};
 use srole::util::table::{f, Table};
 
@@ -40,7 +44,8 @@ fn main() {
         .opt("threads", Some("0"), "worker threads (0 = all cores)")
         .opt("models", Some("vgg16,googlenet,rnn"), "comma-separated models")
         .opt("edges", Some("5,10,15,20,25"), "comma-separated cluster sizes (fig4; overrides the scale sweep)")
-        .opt("pretrain", Some("300"), "offline pre-training episodes per scenario");
+        .opt("pretrain", Some("300"), "offline pre-training episodes per scenario")
+        .opt("trace", None, "profile: write the JSONL event trace here (arms full mode)");
     let args = match cli.parse(&argv) {
         Ok(a) => a,
         Err(CliError::Help) => {
@@ -73,6 +78,7 @@ fn main() {
             .split(',')
             .map(|e| e.trim().parse().unwrap_or_else(|_| panic!("bad edge count {e}")))
             .collect(),
+        trace: args.get("trace").map(std::path::PathBuf::from),
     };
 
     let all = which == "all";
@@ -129,8 +135,14 @@ fn main() {
         matched = true;
         mobility_figure(&ctx);
     }
+    if which == "profile" {
+        matched = true;
+        profile_figure(&ctx);
+    }
     if !matched {
-        eprintln!("unknown figure {which}; use fig4..fig13, scale, churn, mobility, or all");
+        eprintln!(
+            "unknown figure {which}; use fig4..fig13, scale, churn, mobility, profile, or all"
+        );
         std::process::exit(2);
     }
 }
@@ -146,6 +158,9 @@ struct Ctx {
     /// Whether `--edges` was passed on the command line (the scale sweep
     /// keeps its own 10→1000 default otherwise).
     edges_explicit: bool,
+    /// `figures profile`: write the JSONL event trace here (arms the
+    /// full trace mode instead of profile-only).
+    trace: Option<std::path::PathBuf>,
 }
 
 impl Ctx {
@@ -535,6 +550,93 @@ fn mobility_figure(ctx: &Ctx) {
     t.print();
     println!("{} scenarios in {wall:.1}s wall", reports.len());
     write_bench("mobility", &reports);
+}
+
+/// `figures profile`: one traced, sharded SROLE-D cell — 10 000 nodes
+/// unless `--edges` overrides — printing the per-phase per-lane
+/// wall-clock attribution table (driver row last) and percentiles of
+/// every sampled series.  `--trace PATH` arms full trace mode and
+/// writes the JSONL event trace plus its Chrome `trace_event` twin.
+fn profile_figure(ctx: &Ctx) {
+    use srole::obs::{ObsReport, Phase, Series, TraceMode};
+    use srole::util::stats::Pcts;
+
+    let model = ctx.models.first().copied().unwrap_or(ModelKind::Vgg16);
+    let mut cfg = ctx.base(model);
+    cfg.n_edges =
+        if ctx.edges_explicit { *ctx.edges.first().expect("one edge count") } else { 10_000 };
+    // Same shape rules as the scale sweep: big many-region clusters,
+    // lanes sharded across every core.
+    cfg.cluster_size = cfg.n_edges.min(SCALE_CLUSTER_CAP);
+    cfg.subclusters = (cfg.cluster_size / 10).max(2);
+    cfg.shards = srole::harness::default_threads();
+    cfg.trace = if ctx.trace.is_some() { TraceMode::Full } else { TraceMode::Profile };
+    let scenarios = vec![Scenario::new(Method::SroleD, cfg)];
+    let reports = run_parallel(&scenarios, 1);
+    let report = &reports[0];
+    let obs = report.obs.as_ref().expect("traced run must carry an obs report");
+
+    let mut header: Vec<String> = vec!["lane".into()];
+    header.extend(Phase::ALL.iter().map(|p| p.name().to_string()));
+    header.push("total_s".into());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!("profile: per-phase wall-clock [s] — {}", report.scenario.label),
+        &header_refs,
+    );
+    for (lane, prof) in &obs.lanes {
+        let mut cells = vec![ObsReport::lane_label(*lane)];
+        for p in Phase::ALL {
+            cells.push(format!("{:.3}", prof.secs[p as usize]));
+        }
+        cells.push(format!("{:.3}", prof.total_secs()));
+        t.row(cells);
+    }
+    t.print();
+
+    let mut ps = Table::new(
+        "profile: sampled series percentiles",
+        &["series", "n", "p50", "p90", "p99", "p99.9"],
+    );
+    for s in Series::ALL {
+        let vals: Vec<f64> = obs.series[s as usize].iter().map(|&(_, _, v)| v).collect();
+        match Pcts::of(&vals) {
+            Some(p) => ps.row(vec![
+                s.name().to_string(),
+                p.n.to_string(),
+                f(p.p50),
+                f(p.p90),
+                f(p.p99),
+                f(p.p999),
+            ]),
+            None => {
+                let dash = || "-".to_string();
+                ps.row(vec![s.name().to_string(), "0".into(), dash(), dash(), dash(), dash()])
+            }
+        };
+    }
+    ps.print();
+
+    let total = obs.total_profile();
+    println!(
+        "{:.1}s wall, {:.1}s attributed across {} lanes, {} trace records ({} dropped)",
+        report.wall_secs,
+        total.total_secs(),
+        obs.lanes.len(),
+        obs.records.len(),
+        obs.dropped
+    );
+    if let Some(path) = &ctx.trace {
+        match obs.write_trace(path) {
+            Ok(chrome) => {
+                println!("trace: {} + {}", path.display(), chrome.display());
+            }
+            Err(e) => {
+                eprintln!("could not write trace to {}: {e}", path.display());
+                std::process::exit(1);
+            }
+        }
+    }
 }
 
 /// Persist a sweep's wall-clock profile as `BENCH_<name>.json` (perf

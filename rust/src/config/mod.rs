@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 use crate::cluster::profiles::{ResourceProfile, CONTAINER_PROFILE, REAL_EDGE_PROFILE};
 use crate::dnn::ModelKind;
 use crate::net::mobility::{self, MobilityModel};
+use crate::obs::TraceMode;
 use crate::rl::RewardParams;
 use crate::workload::ArrivalProcess;
 
@@ -126,6 +127,12 @@ pub struct ExperimentConfig {
     /// policy-eval costs.  Off by default so modeled `decision_secs`
     /// keeps the paper's legacy per-candidate accounting.
     pub batched_eval_cost: bool,
+    /// Observability mode (`off | profile | full`, see `obs`).  `off`
+    /// (the default) arms nothing — the per-decision loop keeps its
+    /// uninstrumented cost.  Tracing only *reads* state and draws no
+    /// RNG, so `RunMetrics` is byte-identical across modes (pinned by
+    /// harness tests).
+    pub trace: TraceMode,
 }
 
 impl Default for ExperimentConfig {
@@ -158,6 +165,7 @@ impl Default for ExperimentConfig {
             shards: 0,
             batch_decisions: true,
             batched_eval_cost: false,
+            trace: TraceMode::Off,
         }
     }
 }
@@ -289,6 +297,10 @@ impl ExperimentConfig {
                     "false" | "0" | "no" => false,
                     other => return Err(format!("bad boolean {other} for batched_eval_cost")),
                 }
+            }
+            "trace" => {
+                self.trace =
+                    TraceMode::parse(val).ok_or(format!("unknown trace mode {val} for trace"))?
             }
             other => return Err(format!("unknown config key {other}")),
         }
@@ -589,6 +601,22 @@ mod tests {
         assert!(!d.batched_eval_cost);
         assert!(ExperimentConfig::from_toml("batch_decisions = \"maybe\"").is_err());
         assert!(ExperimentConfig::from_toml("batched_eval_cost = \"2\"").is_err());
+    }
+
+    #[test]
+    fn trace_key_parses_and_defaults_off() {
+        let cfg = ExperimentConfig::from_toml("trace = \"profile\"").unwrap();
+        assert_eq!(cfg.trace, TraceMode::Profile);
+        cfg.validate().unwrap();
+        let cfg = ExperimentConfig::from_toml("trace = \"full\"").unwrap();
+        assert_eq!(cfg.trace, TraceMode::Full);
+        // Tracing is observation-only: it must never flip a config onto
+        // a different driver.
+        assert!(!cfg.dynamic());
+
+        let d = ExperimentConfig::default();
+        assert_eq!(d.trace, TraceMode::Off, "tracing must be off by default");
+        assert!(ExperimentConfig::from_toml("trace = \"verbose\"").is_err());
     }
 
     #[test]

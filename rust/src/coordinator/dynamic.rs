@@ -40,6 +40,7 @@ use crate::cluster::{Deployment, Membership, NodeId, Resources};
 use crate::config::ExperimentConfig;
 use crate::metrics::RunMetrics;
 use crate::net::mobility::DynamicTopology;
+use crate::obs;
 use crate::rl::{Policy, TabularQ};
 use crate::sched::{
     central_wave_dynamic, marl_wave_dynamic, noisy_demand, reschedule_migrated,
@@ -283,10 +284,17 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
             }
         };
 
+    // Collision count at the previous Sample event (windowed-delta
+    // sampler state; read-only w.r.t. the simulation).
+    let mut last_collisions: usize = 0;
+
     while let Some(ev) = queue.pop() {
+        obs::sim_time(ev.t);
+        let _ev_span = obs::span(obs::Phase::EventDispatch);
         match ev.kind {
             EventKind::JobArrival { wave } => {
                 let w = &waves[wave];
+                obs::event(obs::TraceKind::Arrival, ev.t, w.cluster as f64, w.jobs.len() as f64);
                 let shield = shields[w.cluster].as_dyn();
                 let out: WaveOutcome = match method {
                     Method::Rl => central_wave_dynamic(
@@ -300,6 +308,14 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 };
                 metrics.collisions += out.collisions;
                 metrics.shield_corrections += out.shield_corrections;
+                let cl = w.cluster as f64;
+                obs::event(obs::TraceKind::Placement, ev.t, cl, out.schedules.len() as f64);
+                if out.collisions > 0 {
+                    obs::event(obs::TraceKind::Collision, ev.t, cl, out.collisions as f64);
+                }
+                if out.shield_corrections > 0 {
+                    obs::event(obs::TraceKind::Correction, ev.t, cl, out.shield_corrections as f64);
+                }
                 for s in out.schedules {
                     let ji = s.job.id;
                     let start = ev.t + s.decision_secs;
@@ -382,6 +398,26 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                             state.actual_util(n, crate::cluster::ResourceKind::Bw).clamp(0.0, 2.0),
                         );
                     }
+                    // Windowed samplers: read-only over the metrics just
+                    // pushed and engine state (no RNG, pinned).
+                    if obs::active() {
+                        let n = dep.n();
+                        let tail =
+                            |v: &[f64]| crate::util::stats::mean_of(&v[v.len() - n..]);
+                        obs::sample(obs::Series::QueueDepth, ev.t, queue.len() as f64);
+                        obs::sample(obs::Series::UtilCpu, ev.t, tail(&metrics.util_cpu));
+                        obs::sample(obs::Series::UtilMem, ev.t, tail(&metrics.util_mem));
+                        obs::sample(obs::Series::UtilBw, ev.t, tail(&metrics.util_bw));
+                        let window = metrics.collisions - last_collisions;
+                        obs::sample(obs::Series::CollisionsWindow, ev.t, window as f64);
+                        last_collisions = metrics.collisions;
+                        let (_, rows, pads) = policy.batch_stats();
+                        let rows = rows.saturating_sub(batch_baseline.1);
+                        let pads = pads.saturating_sub(batch_baseline.2);
+                        let occ =
+                            if rows + pads > 0 { rows as f64 / (rows + pads) as f64 } else { 0.0 };
+                        obs::sample(obs::Series::QnetOccupancy, ev.t, occ);
+                    }
                     queue.push(ev.t + SAMPLE_PERIOD_SECS, EventKind::Sample);
                 }
             }
@@ -433,6 +469,12 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                     }
                     membership.fail(&dep, victim);
                     metrics.node_failures += 1;
+                    obs::event(
+                        obs::TraceKind::Failure,
+                        ev.t,
+                        victim as f64,
+                        if vi > 0 { 1.0 } else { 0.0 },
+                    );
                     if vi > 0 {
                         metrics.correlated_failures += 1;
                         // Secondary victims rejoin on the same schedule
@@ -520,6 +562,7 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 if remaining == 0 || !membership.join(&dep, node) {
                     continue;
                 }
+                obs::event(obs::TraceKind::Join, ev.t, node as f64, 0.0);
                 let cluster = dep.cluster_of(node);
                 match &mut shields[cluster] {
                     ClusterShield::Central(s) => {
@@ -570,7 +613,12 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                         continue;
                     }
                     if let ClusterShield::Decentral(s) = &mut shields[cluster] {
-                        metrics.region_handoffs += s.nodes_moved(&dep, nodes);
+                        let handoffs = s.nodes_moved(&dep, nodes);
+                        metrics.region_handoffs += handoffs;
+                        if handoffs > 0 {
+                            let (c, h) = (cluster as f64, handoffs as f64);
+                            obs::event(obs::TraceKind::Handoff, ev.t, c, h);
+                        }
                     }
                     nodes.clear();
                 }

@@ -14,6 +14,7 @@ use crate::cluster::Deployment;
 use crate::config::ExperimentConfig;
 use crate::dnn::ModelGraph;
 use crate::metrics::RunMetrics;
+use crate::obs::{self, ObsReport, Recorder, TraceMode};
 use crate::rl::{Policy, TabularQ};
 use crate::sched::{central_wave, marl_wave, JobSchedule, WaveOutcome};
 use crate::shield::{CentralShield, DecentralShield, Shield};
@@ -89,6 +90,41 @@ impl Experiment {
             pooled.absorb(&m);
         }
         ExperimentResult { method, metrics: pooled }
+    }
+
+    /// [`Experiment::run`] with the observability layer armed on the
+    /// *first* repetition (when `cfg.trace != off`): repetition 0 runs
+    /// traced, the rest plain, and the pooled metrics are byte-identical
+    /// to an untraced [`Experiment::run`] — tracing only reads state and
+    /// draws no RNG.
+    pub fn run_traced(&self, method: Method) -> (ExperimentResult, Option<ObsReport>) {
+        let mut pooled = RunMetrics::default();
+        let mut report = None;
+        for rep in 0..self.cfg.repetitions {
+            let seed = self.cfg.seed + 1000 * rep as u64;
+            if rep == 0 {
+                let (m, r) = self.run_once_traced(method, seed);
+                pooled.absorb(&m);
+                report = r;
+            } else {
+                pooled.absorb(&self.run_once(method, seed));
+            }
+        }
+        (ExperimentResult { method, metrics: pooled }, report)
+    }
+
+    /// One measured run with a driver [`Recorder`] installed around the
+    /// unchanged [`Experiment::run_once`] (lane recorders are installed
+    /// by the sharded engine itself).  With `trace: off` this *is*
+    /// `run_once`: no recorder exists and every instrumentation point
+    /// stays an inert pointer check.
+    pub fn run_once_traced(&self, method: Method, seed: u64) -> (RunMetrics, Option<ObsReport>) {
+        if self.cfg.trace == TraceMode::Off {
+            return (self.run_once(method, seed), None);
+        }
+        let mut rec = Recorder::new(self.cfg.trace, obs::DRIVER_LANE);
+        let metrics = obs::with_recorder(&mut rec, || self.run_once(method, seed));
+        (metrics, Some(rec.into_report()))
     }
 
     /// One measured run.  Configurations with churn or online arrivals

@@ -41,6 +41,7 @@ use crate::config::ExperimentConfig;
 use crate::dnn::ModelGraph;
 use crate::metrics::RunMetrics;
 use crate::net::mobility::DynamicTopology;
+use crate::obs;
 use crate::rl::{Policy, TabularQ};
 use crate::sched::{
     central_wave_dynamic, marl_wave_dynamic, noisy_demand, reschedule_migrated,
@@ -83,6 +84,11 @@ struct Lane {
     /// detector state for the runtime_overloads transition count.
     was_overloaded: Vec<bool>,
     metrics: RunMetrics,
+    /// Per-lane trace recorder, sharing the driver's wall anchor; `None`
+    /// when tracing is off ([`advance_lane`] then installs nothing).
+    /// Merged into the driver recorder in cluster order at the end of
+    /// the run — attribution is independent of worker-thread chunking.
+    obs: Option<Box<obs::Recorder>>,
 }
 
 /// Shared read-only context for one epoch.  Everything here is frozen
@@ -118,9 +124,22 @@ fn check_lane_overloads(lane: &mut Lane, alpha: f64) {
     }
 }
 
-/// Drain one lane's queue through every event with `t <= until`,
-/// mirroring the legacy handlers for the four lane-local kinds.
+/// Drain one lane's queue through every event with `t <= until`.  When
+/// tracing is armed the lane's recorder is installed around the drain
+/// (worker threads have no thread-local recorder of their own), so lane
+/// spans land on the lane's own profile row.
 fn advance_lane(lane: &mut Lane, ctx: Ctx<'_>, until: f64) {
+    if let Some(mut rec) = lane.obs.take() {
+        obs::with_recorder(&mut rec, || advance_lane_events(lane, ctx, until));
+        lane.obs = Some(rec);
+    } else {
+        advance_lane_events(lane, ctx, until);
+    }
+}
+
+/// The actual drain, mirroring the legacy handlers for the four
+/// lane-local kinds.
+fn advance_lane_events(lane: &mut Lane, ctx: Ctx<'_>, until: f64) {
     let alpha = ctx.cfg.reward.alpha;
     while !lane.done {
         match lane.queue.peek() {
@@ -128,9 +147,12 @@ fn advance_lane(lane: &mut Lane, ctx: Ctx<'_>, until: f64) {
             _ => break,
         }
         let ev = lane.queue.pop().expect("peeked event vanished");
+        obs::sim_time(ev.t);
+        let _ev_span = obs::span(obs::Phase::EventDispatch);
         match ev.kind {
             EventKind::JobArrival { wave } => {
                 let w = &ctx.waves[wave];
+                obs::event(obs::TraceKind::Arrival, ev.t, w.cluster as f64, w.jobs.len() as f64);
                 let out: WaveOutcome = {
                     let shield = lane.shield.as_dyn();
                     let policy: &mut dyn Policy = &mut lane.policy;
@@ -148,6 +170,14 @@ fn advance_lane(lane: &mut Lane, ctx: Ctx<'_>, until: f64) {
                 };
                 lane.metrics.collisions += out.collisions;
                 lane.metrics.shield_corrections += out.shield_corrections;
+                let cl = w.cluster as f64;
+                obs::event(obs::TraceKind::Placement, ev.t, cl, out.schedules.len() as f64);
+                if out.collisions > 0 {
+                    obs::event(obs::TraceKind::Collision, ev.t, cl, out.collisions as f64);
+                }
+                if out.shield_corrections > 0 {
+                    obs::event(obs::TraceKind::Correction, ev.t, cl, out.shield_corrections as f64);
+                }
                 for s in out.schedules {
                     let ji = s.job.id;
                     let start = ev.t + s.decision_secs;
@@ -358,6 +388,10 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 done: false,
                 was_overloaded: Vec::new(),
                 metrics: RunMetrics::default(),
+                obs: obs::mode().map(|m| {
+                    let anchor = obs::anchor().expect("mode() implies an installed recorder");
+                    Box::new(obs::Recorder::with_anchor(m, ci as u32, anchor))
+                }),
             };
             for (gi, bg) in workload.background.iter().enumerate() {
                 if dep.cluster_of(bg.node) == ci {
@@ -403,6 +437,9 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     let mut metrics = RunMetrics::default();
     let mut blast_scratch: Vec<NodeId> = Vec::new();
     let mut moved_by_cluster: Vec<Vec<NodeId>> = vec![Vec::new(); n_clusters];
+    // Collision total at the previous Sample event (windowed-delta
+    // sampler state; read-only w.r.t. the simulation).
+    let mut last_collisions: usize = 0;
 
     loop {
         let barrier = driver_queue.peek().map(|e| e.t);
@@ -422,6 +459,10 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
             advance_all(&mut lanes, ctx, barrier.unwrap_or(f64::INFINITY), shards);
         }
         let Some(ev) = driver_queue.pop() else { break };
+        obs::sim_time(ev.t);
+        // The whole serial barrier section (driver event + any lane
+        // mutations it performs) is attributed to the driver row.
+        let _barrier_span = obs::span(obs::Phase::EpochBarrier);
         let total_remaining: usize = lanes.iter().map(|l| l.remaining).sum();
         match ev.kind {
             EventKind::Sample => {
@@ -442,6 +483,33 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                                 lane.state.actual_util(n, ResourceKind::Bw).clamp(0.0, 2.0),
                             );
                         }
+                    }
+                    // Windowed samplers: read-only over the samples just
+                    // pushed and lane state (no RNG, pinned).
+                    if obs::active() {
+                        let n = dep.n();
+                        let tail =
+                            |v: &[f64]| crate::util::stats::mean_of(&v[v.len() - n..]);
+                        let depth = driver_queue.len()
+                            + lanes.iter().map(|l| l.queue.len()).sum::<usize>();
+                        obs::sample(obs::Series::QueueDepth, ev.t, depth as f64);
+                        obs::sample(obs::Series::UtilCpu, ev.t, tail(&metrics.util_cpu));
+                        obs::sample(obs::Series::UtilMem, ev.t, tail(&metrics.util_mem));
+                        obs::sample(obs::Series::UtilBw, ev.t, tail(&metrics.util_bw));
+                        let total = metrics.collisions
+                            + lanes.iter().map(|l| l.metrics.collisions).sum::<usize>();
+                        let window = total - last_collisions;
+                        obs::sample(obs::Series::CollisionsWindow, ev.t, window as f64);
+                        last_collisions = total;
+                        let (mut rows, mut pads) = (0usize, 0usize);
+                        for lane in &lanes {
+                            let (_, r, p) = lane.policy.batch_stats();
+                            rows += r.saturating_sub(lane.batch_baseline.1);
+                            pads += p.saturating_sub(lane.batch_baseline.2);
+                        }
+                        let occ =
+                            if rows + pads > 0 { rows as f64 / (rows + pads) as f64 } else { 0.0 };
+                        obs::sample(obs::Series::QnetOccupancy, ev.t, occ);
                     }
                     driver_queue.push(ev.t + SAMPLE_PERIOD_SECS, EventKind::Sample);
                 }
@@ -480,6 +548,12 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                     }
                     membership.fail(&dep, victim);
                     metrics.node_failures += 1;
+                    obs::event(
+                        obs::TraceKind::Failure,
+                        ev.t,
+                        victim as f64,
+                        if vi > 0 { 1.0 } else { 0.0 },
+                    );
                     if vi > 0 {
                         metrics.correlated_failures += 1;
                         if cfg.rejoin_secs > 0.0 {
@@ -563,6 +637,7 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 if total_remaining == 0 || !membership.join(&dep, node) {
                     continue;
                 }
+                obs::event(obs::TraceKind::Join, ev.t, node as f64, 0.0);
                 let cluster = dep.cluster_of(node);
                 match &mut lanes[cluster].shield {
                     ClusterShield::Central(s) => {
@@ -596,7 +671,12 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                         continue;
                     }
                     if let ClusterShield::Decentral(s) = &mut lanes[cluster].shield {
-                        metrics.region_handoffs += s.nodes_moved(&dep, nodes);
+                        let handoffs = s.nodes_moved(&dep, nodes);
+                        metrics.region_handoffs += handoffs;
+                        if handoffs > 0 {
+                            let (c, h) = (cluster as f64, handoffs as f64);
+                            obs::event(obs::TraceKind::Handoff, ev.t, c, h);
+                        }
                     }
                     nodes.clear();
                 }
@@ -670,6 +750,15 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 }
             }
             _ => unreachable!("lane-local event in the driver queue"),
+        }
+    }
+
+    // Merge lane recorders into the driver recorder in cluster order —
+    // the same merge rule as the metrics below, so the per-lane profile
+    // rows are independent of worker-thread chunking.
+    for lane in lanes.iter_mut() {
+        if let Some(rec) = lane.obs.take() {
+            obs::merge_lane(*rec);
         }
     }
 

@@ -27,6 +27,7 @@ use crate::coordinator::{Experiment, Method};
 use crate::dnn::ModelKind;
 use crate::metrics::RunMetrics;
 use crate::net::MobilityModel;
+use crate::obs::{ObsReport, TraceMode};
 use crate::util::json::{obj, Json};
 use crate::util::stats::Summary;
 use crate::util::table::{f, Table};
@@ -77,6 +78,9 @@ impl Scenario {
         if cfg.batched_eval_cost {
             label.push_str("/bcost");
         }
+        if cfg.trace != TraceMode::Off {
+            label.push_str(&format!("/tr{}", cfg.trace.name()));
+        }
         Scenario { label, method, cfg }
     }
 }
@@ -86,6 +90,9 @@ impl Scenario {
 pub struct ScenarioReport {
     pub scenario: Scenario,
     pub metrics: RunMetrics,
+    /// Observability report from the scenario's first repetition —
+    /// `Some` only when `cfg.trace != off` (`Experiment::run_traced`).
+    pub obs: Option<ObsReport>,
     /// Wall-clock seconds this scenario took on its worker thread.
     pub wall_secs: f64,
 }
@@ -270,10 +277,11 @@ pub fn run_parallel(scenarios: &[Scenario], threads: usize) -> Vec<ScenarioRepor
                 let sc = &scenarios[i];
                 let t0 = Instant::now();
                 let exp = Experiment::new(sc.cfg.clone());
-                let metrics = exp.run(sc.method).metrics;
+                let (result, obs) = exp.run_traced(sc.method);
                 let report = ScenarioReport {
                     scenario: sc.clone(),
-                    metrics,
+                    metrics: result.metrics,
+                    obs,
                     wall_secs: t0.elapsed().as_secs_f64(),
                 };
                 slots.lock().unwrap()[i] = Some(report);
@@ -670,6 +678,72 @@ mod tests {
                 );
                 failures += b.metrics.node_failures;
                 moves += b.metrics.mobility_moves;
+            }
+        }
+        assert!(failures > 0, "vacuous: no churn fired in any scenario");
+        assert!(moves > 0, "vacuous: nothing moved in any scenario");
+    }
+
+    #[test]
+    fn trace_modes_leave_metrics_byte_identical() {
+        // The observability layer's acceptance criterion: arming the
+        // tracer (profile or full) under churn + mobility, on the legacy
+        // driver and on every shard count, must leave `RunMetrics`
+        // byte-identical to the trace-off reference — the obs layer only
+        // reads state and never draws RNG — while the traced runs carry
+        // a populated `ObsReport` and the trace knob tags the label.
+        let mut base = tiny_base();
+        base.n_edges = 10; // two clusters → two lanes when sharded
+        base.cluster_size = 5;
+        base.failure_rate = 3.0;
+        base.rejoin_secs = 120.0;
+        base.mobility = MobilityModel::RandomWaypoint { speed_mps: 3.0, pause_secs: 0.0 };
+        base.mobility_tick_secs = 10.0;
+        let sweep = |trace: TraceMode, shards: usize| {
+            let mut b = base.clone();
+            b.trace = trace;
+            b.shards = shards;
+            Sweep::new(b).methods(&[Method::Marl, Method::SroleD])
+        };
+        let (mut failures, mut moves) = (0usize, 0usize);
+        for &shards in &[0usize, 1, 8] {
+            let off = run_parallel(&sweep(TraceMode::Off, shards).scenarios(), 2);
+            for o in &off {
+                assert!(o.obs.is_none(), "{}: trace off must carry no report", o.scenario.label);
+                assert!(!o.scenario.label.contains("/tr"), "{}", o.scenario.label);
+            }
+            for mode in [TraceMode::Profile, TraceMode::Full] {
+                let traced = run_parallel(&sweep(mode, shards).scenarios(), 2);
+                assert_eq!(off.len(), traced.len());
+                for (o, t) in off.iter().zip(&traced) {
+                    assert!(
+                        t.scenario.label.ends_with(&format!("/tr{}", mode.name())),
+                        "{}",
+                        t.scenario.label
+                    );
+                    assert_eq!(
+                        o.metrics.to_json().to_string(),
+                        t.metrics.to_json().to_string(),
+                        "{}: tracing perturbed the run (shards={shards})",
+                        t.scenario.label
+                    );
+                    let obs = t.obs.as_ref().expect("traced run must carry a report");
+                    assert_eq!(obs.mode, mode);
+                    assert!(
+                        obs.total_profile().count.iter().sum::<u64>() > 0,
+                        "{}: no phase ever timed",
+                        t.scenario.label
+                    );
+                    if mode == TraceMode::Full {
+                        assert!(!obs.records.is_empty(), "{}", t.scenario.label);
+                    }
+                    if shards > 0 {
+                        // Two cluster lanes plus the driver row.
+                        assert!(obs.lanes.len() >= 3, "{}: {:?}", t.scenario.label, obs.lanes);
+                    }
+                    failures += t.metrics.node_failures;
+                    moves += t.metrics.mobility_moves;
+                }
             }
         }
         assert!(failures > 0, "vacuous: no churn fired in any scenario");

@@ -48,6 +48,7 @@ pub mod emu;
 pub mod harness;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod rl;
 pub mod runtime;
 pub mod sched;

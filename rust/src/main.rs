@@ -43,6 +43,7 @@ fn cmd_run(argv: &[String]) -> i32 {
         .opt("repetitions", Some("5"), "independent repetitions")
         .opt("iterations", Some("50"), "training iterations per job")
         .opt("threads", Some("0"), "worker threads for multi-method runs (0 = all cores)")
+        .opt("trace", None, "arm full tracing and write the JSONL event trace here")
         .flag("real", "use the real-device profile (10 Pis, one cluster)")
         .flag("json", "emit raw metrics as JSON");
     let args = match cli.parse(argv) {
@@ -76,6 +77,9 @@ fn cmd_run(argv: &[String]) -> i32 {
         cfg.apply("seed", args.get("seed").unwrap())?;
         cfg.apply("repetitions", args.get("repetitions").unwrap())?;
         cfg.apply("iterations", args.get("iterations").unwrap())?;
+        if args.get("trace").is_some() {
+            cfg.apply("trace", "full")?;
+        }
         cfg.validate()?;
         Ok(cfg)
     };
@@ -134,6 +138,21 @@ fn cmd_run(argv: &[String]) -> i32 {
         ]);
     }
     table.print();
+    if let Some(path) = args.get("trace") {
+        // First method's first-repetition trace — each scenario records
+        // independently; one file keeps the CLI surface simple.
+        let path = std::path::Path::new(path);
+        match reports.iter().find_map(|r| r.obs.as_ref()) {
+            Some(obs) => match obs.write_trace(path) {
+                Ok(chrome) => println!("trace: {} + {}", path.display(), chrome.display()),
+                Err(e) => {
+                    eprintln!("write {}: {e}", path.display());
+                    return 1;
+                }
+            },
+            None => eprintln!("no trace captured (tracer off?)"),
+        }
+    }
     0
 }
 

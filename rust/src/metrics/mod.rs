@@ -3,7 +3,7 @@
 //! utilization, computation-time overhead — plus action collisions.
 
 use crate::util::json::{obj, Json};
-use crate::util::stats::Summary;
+use crate::util::stats::{mean_of, Summary};
 
 /// Raw metrics of one experiment run (one method × one configuration ×
 /// one seed).
@@ -93,30 +93,18 @@ impl RunMetrics {
     }
 
     pub fn mean_sched_secs(&self) -> f64 {
-        if self.sched_secs.is_empty() {
-            0.0
-        } else {
-            self.sched_secs.iter().sum::<f64>() / self.sched_secs.len() as f64
-        }
+        mean_of(&self.sched_secs)
     }
 
     pub fn mean_shield_secs(&self) -> f64 {
-        if self.shield_secs.is_empty() {
-            0.0
-        } else {
-            self.shield_secs.iter().sum::<f64>() / self.shield_secs.len() as f64
-        }
+        mean_of(&self.shield_secs)
     }
 
     /// Mean full decision latency (queue + scheduling + shielding) —
     /// the paper's "time from when a job is initiated to when the task
     /// assignment schedule is made".
     pub fn mean_decision_secs(&self) -> f64 {
-        if self.decision_secs.is_empty() {
-            0.0
-        } else {
-            self.decision_secs.iter().sum::<f64>() / self.decision_secs.len() as f64
-        }
+        mean_of(&self.decision_secs)
     }
 
     /// Combined per-job decision overhead (Fig 7 total bar height):
@@ -262,5 +250,81 @@ mod tests {
     #[should_panic]
     fn unknown_resource_panics() {
         sample().util_summary("gpu");
+    }
+
+    /// Fill every field with nonzero random values so a field whose
+    /// `absorb` arm is missing cannot hide behind a zero default.
+    fn randomized(rng: &mut crate::util::Rng) -> RunMetrics {
+        fn v(rng: &mut crate::util::Rng) -> Vec<f64> {
+            (0..rng.below(5) + 1).map(|_| rng.range_f64(0.1, 100.0)).collect()
+        }
+        fn c(rng: &mut crate::util::Rng) -> usize {
+            rng.below(10) + 1
+        }
+        RunMetrics {
+            jct: v(rng),
+            decision_secs: v(rng),
+            sched_secs: v(rng),
+            shield_secs: v(rng),
+            collisions: c(rng),
+            runtime_overloads: c(rng),
+            shield_corrections: c(rng),
+            memory_violations: c(rng),
+            node_failures: c(rng),
+            correlated_failures: c(rng),
+            rescheduled_layers: c(rng),
+            mobility_moves: c(rng),
+            region_handoffs: c(rng),
+            migrated_layers: c(rng),
+            qnet_fwd_errors: c(rng),
+            qnet_batch_fwds: c(rng),
+            qnet_batch_rows: c(rng),
+            qnet_batch_pad_rows: c(rng),
+            tasks_per_device: v(rng),
+            util_cpu: v(rng),
+            util_mem: v(rng),
+            util_bw: v(rng),
+            makespan: rng.range_f64(1.0, 1e4),
+        }
+    }
+
+    /// Property: absorbing two randomized runs must extend every array
+    /// field and sum every counter (max for `makespan`).  Driven by the
+    /// `to_json` key set, so adding a field to the struct + serializer
+    /// while forgetting its `absorb` arm fails here instead of silently
+    /// dropping repetitions.
+    #[test]
+    fn absorb_covers_every_field() {
+        let mut rng = crate::util::Rng::new(0xab50b);
+        for _ in 0..16 {
+            let a = randomized(&mut rng);
+            let b = randomized(&mut rng);
+            let mut merged = a.clone();
+            merged.absorb(&b);
+            let (Json::Obj(ma), Json::Obj(mb), Json::Obj(mm)) =
+                (a.to_json(), b.to_json(), merged.to_json())
+            else {
+                panic!("to_json must serialize to an object");
+            };
+            assert_eq!(ma.len(), mm.len(), "absorb must not add or drop fields");
+            for (key, va) in &ma {
+                let (vb, vm) = (&mb[key], &mm[key]);
+                match (va, vb, vm) {
+                    (Json::Arr(x), Json::Arr(y), Json::Arr(z)) => {
+                        assert_eq!(z.len(), x.len() + y.len(), "{key} must pool samples");
+                        assert_eq!(&z[..x.len()], &x[..], "{key} must keep self's samples");
+                        assert_eq!(&z[x.len()..], &y[..], "{key} must append other's");
+                    }
+                    (Json::Num(x), Json::Num(y), Json::Num(z)) => {
+                        if key == "makespan" {
+                            assert_eq!(*z, x.max(*y), "makespan must merge by max");
+                        } else {
+                            assert!((z - (x + y)).abs() < 1e-9, "counter {key} must sum");
+                        }
+                    }
+                    _ => panic!("unexpected shapes for field {key}"),
+                }
+            }
+        }
     }
 }

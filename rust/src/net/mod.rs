@@ -47,6 +47,7 @@ pub use grid::SpatialGrid;
 pub use link::{LinkModel, LinkParams};
 pub use mobility::{DynamicTopology, MobilityModel, MobilityState};
 
+use crate::obs;
 use crate::util::Rng;
 
 /// 2-D position in meters (arbitrary plane).
@@ -163,6 +164,7 @@ impl Topology {
     /// [`Topology::advance_links`] instead.
     pub fn rebuild_adjacency(&mut self) {
         self.rebuild_adjacency_index();
+        let _sp = obs::span(obs::Phase::LinkReprice);
         match &mut self.link {
             LinkModel::Sparse(s) => {
                 s.refresh_all(&self.params, &self.positions, self.range, &self.adjacency)
@@ -187,6 +189,7 @@ impl Topology {
     /// ([`Topology::advance_links`] bundles both); exposed separately so
     /// `benches/hotpath.rs` can time the repricing alone.
     pub fn reprice_moved(&mut self, moved: &[usize]) {
+        let _sp = obs::span(obs::Phase::LinkReprice);
         match &mut self.link {
             LinkModel::Sparse(s) => s.reprice_moved(
                 &self.params,

@@ -1,0 +1,796 @@
+//! In-sim tracing and per-phase self-profiling.
+//!
+//! The engine's fast paths (zero-alloc decisions, sparse links, sharded
+//! lanes, batched forwards) are pinned byte-identical — but opaque: at
+//! 100k nodes nothing says whether wall-clock goes to partitioning,
+//! shield checks, link repricing or Q-net forwards.  This module is the
+//! observability layer: scoped **span timers** accumulated into a
+//! per-phase [`PhaseProfile`] with per-lane attribution, a bounded
+//! **ring-buffer event trace** ([`TraceRecord`]) exported as JSONL and
+//! as a Chrome-`trace_event` document, and **windowed time-series
+//! samplers** riding the existing `EventKind::Sample` hook.
+//!
+//! ## The contract
+//!
+//! * **Zero overhead when off.**  Nothing is installed unless a run was
+//!   started through `Experiment::run_once_traced` with `trace !=
+//!   off`.  Every instrumentation point ([`span`], [`event`],
+//!   [`sample`], [`sim_time`]) first reads one thread-local pointer;
+//!   when it is null the call does no allocation and — critically — no
+//!   clock read.  Phase timers wrap whole rounds / events, never
+//!   individual decisions, so even armed runs batch their clock reads
+//!   at round granularity.
+//! * **Tracing never perturbs the simulation.**  The recorder only
+//!   *reads* state and wall-clock; it draws no RNG and mutates nothing
+//!   the engine observes, so `RunMetrics` stays byte-identical across
+//!   `trace` modes, shard counts and thread counts (pinned by harness
+//!   tests).
+//! * **Per-lane attribution.**  The sharded engine installs one
+//!   [`Recorder`] per lane for the duration of its epoch advance;
+//!   barrier and driver work lands on the driver recorder.  Lane
+//!   recorders are merged into the driver in cluster order — the same
+//!   merge rule as metrics — so the profile is independent of how lanes
+//!   were chunked across worker threads.
+//!
+//! ## Modes
+//!
+//! * `off` — nothing armed (the default; the per-decision loop keeps
+//!   its PR 7 cost).
+//! * `profile` — span timers + samplers only; the trace ring stays
+//!   empty.
+//! * `full` — everything: spans also append [`TraceRecord`]s, and
+//!   instant records (arrival / placement / collision / correction /
+//!   handoff / failure / join) are captured with sim-time + wall-time.
+
+use std::cell::Cell;
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+/// Hot phases attributed by the span timers, in profile-column order.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Phase {
+    /// Sub-cluster partition construction / re-partition (SROLE-D).
+    PartitionBuild = 0,
+    /// `Shield::check` — collision detection + correction.
+    ShieldCheck = 1,
+    /// Batched Q-net forward chunks of one decision round.
+    QnetForward = 2,
+    /// Link reprice after motion (`Topology::advance_links`).
+    LinkReprice = 3,
+    /// One simulation event popped + handled (inclusive of the above).
+    EventDispatch = 4,
+    /// Serial barrier section of the sharded engine (driver events +
+    /// lane merges between epochs).
+    EpochBarrier = 5,
+}
+
+/// Number of phases (array sizes in [`PhaseProfile`]).
+pub const N_PHASES: usize = 6;
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::PartitionBuild,
+        Phase::ShieldCheck,
+        Phase::QnetForward,
+        Phase::LinkReprice,
+        Phase::EventDispatch,
+        Phase::EpochBarrier,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::PartitionBuild => "partition_build",
+            Phase::ShieldCheck => "shield_check",
+            Phase::QnetForward => "qnet_forward",
+            Phase::LinkReprice => "link_reprice",
+            Phase::EventDispatch => "event_dispatch",
+            Phase::EpochBarrier => "epoch_barrier",
+        }
+    }
+}
+
+/// Trace verbosity knob (`ExperimentConfig::trace`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum TraceMode {
+    /// Nothing armed; instrumentation points are inert pointer checks.
+    #[default]
+    Off,
+    /// Span timers + time-series samplers (no per-event records).
+    Profile,
+    /// Profile plus the bounded ring-buffer event trace.
+    Full,
+}
+
+impl TraceMode {
+    pub fn parse(s: &str) -> Option<TraceMode> {
+        match s {
+            "off" => Some(TraceMode::Off),
+            "profile" => Some(TraceMode::Profile),
+            "full" => Some(TraceMode::Full),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceMode::Off => "off",
+            TraceMode::Profile => "profile",
+            TraceMode::Full => "full",
+        }
+    }
+}
+
+/// Instant (zero-duration) trace record kinds.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TraceKind {
+    /// A wave of jobs arrived (`a` = cluster, `b` = jobs in the wave).
+    Arrival,
+    /// A wave committed placements (`a` = cluster, `b` = jobs placed).
+    Placement,
+    /// Collisions detected in a wave (`a` = cluster, `b` = count).
+    Collision,
+    /// Shield corrections applied in a wave (`a` = cluster, `b` = count).
+    Correction,
+    /// Shield-region handoffs after motion (`a` = cluster, `b` = count).
+    Handoff,
+    /// A node failed (`a` = node, `b` = 1 if a correlated blast victim).
+    Failure,
+    /// A failed node rejoined (`a` = node).
+    Join,
+}
+
+impl TraceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Arrival => "arrival",
+            TraceKind::Placement => "placement",
+            TraceKind::Collision => "collision",
+            TraceKind::Correction => "correction",
+            TraceKind::Handoff => "handoff",
+            TraceKind::Failure => "failure",
+            TraceKind::Join => "join",
+        }
+    }
+}
+
+/// Windowed time-series sampled on the `EventKind::Sample` hook.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Series {
+    /// Pending events across every live queue at sample time.
+    QueueDepth = 0,
+    /// Mean actual CPU utilization over all nodes.
+    UtilCpu = 1,
+    /// Mean actual memory utilization over all nodes.
+    UtilMem = 2,
+    /// Mean actual bandwidth utilization over all nodes.
+    UtilBw = 3,
+    /// Collisions detected since the previous sample (per-window delta).
+    CollisionsWindow = 4,
+    /// Batched-forward occupancy so far: rows / (rows + pad rows).
+    QnetOccupancy = 5,
+}
+
+/// Number of sampled series.
+pub const N_SERIES: usize = 6;
+
+impl Series {
+    pub const ALL: [Series; N_SERIES] = [
+        Series::QueueDepth,
+        Series::UtilCpu,
+        Series::UtilMem,
+        Series::UtilBw,
+        Series::CollisionsWindow,
+        Series::QnetOccupancy,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Series::QueueDepth => "queue_depth",
+            Series::UtilCpu => "util_cpu",
+            Series::UtilMem => "util_mem",
+            Series::UtilBw => "util_bw",
+            Series::CollisionsWindow => "collisions_window",
+            Series::QnetOccupancy => "qnet_occupancy",
+        }
+    }
+}
+
+/// One time-series sample: sim-time, wall-µs since the run anchor, value.
+pub type SamplePoint = (f64, f64, f64);
+
+/// Per-phase accumulated wall-clock (seconds) and span counts.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseProfile {
+    pub secs: [f64; N_PHASES],
+    pub count: [u64; N_PHASES],
+}
+
+impl PhaseProfile {
+    pub fn add(&mut self, phase: Phase, secs: f64) {
+        self.secs[phase as usize] += secs;
+        self.count[phase as usize] += 1;
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        // EventDispatch/EpochBarrier are inclusive wrappers around the
+        // leaf phases; the attributable total is the wrapper sum.
+        self.secs[Phase::EventDispatch as usize] + self.secs[Phase::EpochBarrier as usize]
+    }
+}
+
+/// One trace record: a completed span (`ph == 'X'`), an instant event
+/// (`ph == 'i'`), or a counter sample (`ph == 'C'`) — the three Chrome
+/// `trace_event` phases the exporters emit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// Wall-clock µs since the run anchor (span start for `'X'`).
+    pub ts_us: f64,
+    /// Span duration in µs (0 for instants and counters).
+    pub dur_us: f64,
+    /// Phase, instant-kind or `series:*` name.
+    pub name: &'static str,
+    /// Chrome phase char: `'X'` span, `'i'` instant, `'C'` counter.
+    pub ph: char,
+    /// Simulation time when the record was captured.
+    pub sim_t: f64,
+    /// Owning lane (cluster index), or [`DRIVER_LANE`].
+    pub lane: u32,
+    /// Kind-specific payload (node / cluster / count / sample value).
+    pub a: f64,
+    /// Second payload slot (see [`TraceKind`]).
+    pub b: f64,
+}
+
+impl TraceRecord {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("ts_us", Json::Num(self.ts_us)),
+            ("dur_us", Json::Num(self.dur_us)),
+            ("name", Json::Str(self.name.to_string())),
+            ("ph", Json::Str(self.ph.to_string())),
+            ("sim_t", Json::Num(self.sim_t)),
+            ("lane", Json::Num(self.lane as f64)),
+            ("a", Json::Num(self.a)),
+            ("b", Json::Num(self.b)),
+        ])
+    }
+}
+
+/// Lane id of the driver / single-stream recorder.
+pub const DRIVER_LANE: u32 = u32::MAX;
+
+/// Default trace-ring capacity per recorder (records; oldest overwritten).
+pub const RING_CAP: usize = 1 << 16;
+
+/// One thread's (or lane's) trace collector: a phase profile, a bounded
+/// record ring and the sampled series.  Install with [`with_recorder`];
+/// the instrumentation free functions find it through a thread-local.
+pub struct Recorder {
+    pub mode: TraceMode,
+    pub lane: u32,
+    anchor: Instant,
+    sim_now: f64,
+    pub profile: PhaseProfile,
+    /// Bounded ring: once `cap` records exist, new pushes overwrite the
+    /// oldest (`head` marks the oldest slot) and count as `dropped`.
+    ring: Vec<TraceRecord>,
+    head: usize,
+    cap: usize,
+    dropped: u64,
+    series: [Vec<SamplePoint>; N_SERIES],
+    /// Lane profiles merged into this (driver) recorder, cluster order.
+    merged_lanes: Vec<(u32, PhaseProfile)>,
+}
+
+impl Recorder {
+    pub fn new(mode: TraceMode, lane: u32) -> Recorder {
+        Recorder::with_anchor(mode, lane, Instant::now())
+    }
+
+    /// Lane recorders share the driver's anchor so every record's
+    /// `ts_us` lives on one run-relative timeline.
+    pub fn with_anchor(mode: TraceMode, lane: u32, anchor: Instant) -> Recorder {
+        Recorder {
+            mode,
+            lane,
+            anchor,
+            sim_now: 0.0,
+            profile: PhaseProfile::default(),
+            ring: Vec::new(),
+            head: 0,
+            cap: RING_CAP,
+            dropped: 0,
+            series: Default::default(),
+            merged_lanes: Vec::new(),
+        }
+    }
+
+    fn wall_us(&self) -> f64 {
+        self.anchor.elapsed().as_secs_f64() * 1e6
+    }
+
+    fn push(&mut self, rec: TraceRecord) {
+        if self.ring.len() < self.cap {
+            self.ring.push(rec);
+        } else {
+            self.ring[self.head] = rec;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Records in push (chronological-per-lane) order.
+    fn drain_ring(&mut self) -> Vec<TraceRecord> {
+        let head = std::mem::take(&mut self.head);
+        let mut ring = std::mem::take(&mut self.ring);
+        ring.rotate_left(head);
+        ring
+    }
+
+    /// Absorb a finished lane recorder (driver side, called in cluster
+    /// order): its profile is kept as a per-lane row, its records and
+    /// samples append to the driver's.
+    pub fn absorb_lane(&mut self, mut lane: Recorder) {
+        self.merged_lanes.push((lane.lane, lane.profile.clone()));
+        for rec in lane.drain_ring() {
+            self.push(rec);
+        }
+        self.dropped += lane.dropped;
+        for (dst, src) in self.series.iter_mut().zip(lane.series.iter_mut()) {
+            dst.append(src);
+        }
+    }
+
+    /// Finish the recorder into an exportable report.
+    pub fn into_report(mut self) -> ObsReport {
+        let wall_secs = self.anchor.elapsed().as_secs_f64();
+        let mut lanes = std::mem::take(&mut self.merged_lanes);
+        lanes.push((self.lane, self.profile.clone()));
+        let records = self.drain_ring();
+        ObsReport {
+            mode: self.mode,
+            lanes,
+            records,
+            dropped: self.dropped,
+            series: self.series,
+            wall_secs,
+        }
+    }
+}
+
+/// Finished, exportable observation report: per-lane phase profiles
+/// (driver row last), the merged trace records, and the sampled series.
+#[derive(Debug)]
+pub struct ObsReport {
+    pub mode: TraceMode,
+    /// `(lane, profile)` rows — lanes in cluster order, then the driver
+    /// row ([`DRIVER_LANE`]).
+    pub lanes: Vec<(u32, PhaseProfile)>,
+    pub records: Vec<TraceRecord>,
+    /// Records overwritten by the bounded ring (0 means the trace is
+    /// complete).
+    pub dropped: u64,
+    pub series: [Vec<SamplePoint>; N_SERIES],
+    /// Wall-clock of the whole traced run.
+    pub wall_secs: f64,
+}
+
+impl ObsReport {
+    /// Human label for a profile row.
+    pub fn lane_label(lane: u32) -> String {
+        if lane == DRIVER_LANE {
+            "driver".to_string()
+        } else {
+            format!("lane {lane}")
+        }
+    }
+
+    /// Whole-run profile: every lane row plus the driver row, summed.
+    pub fn total_profile(&self) -> PhaseProfile {
+        let mut total = PhaseProfile::default();
+        for (_, p) in &self.lanes {
+            for i in 0..N_PHASES {
+                total.secs[i] += p.secs[i];
+                total.count[i] += p.count[i];
+            }
+        }
+        total
+    }
+
+    /// JSONL export: one JSON object per line — first every trace
+    /// record, then every series sample as a `ph: "C"` counter line
+    /// (`name` = the series name, value in `a`).  Schema keys:
+    /// `ts_us, dur_us, name, ph, sim_t, lane, a, b`.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for r in &self.records {
+            out.push_str(&r.to_json().to_string());
+            out.push('\n');
+        }
+        for (si, s) in Series::ALL.iter().enumerate() {
+            for &(sim_t, wall_us, v) in &self.series[si] {
+                let rec = TraceRecord {
+                    ts_us: wall_us,
+                    dur_us: 0.0,
+                    name: s.name(),
+                    ph: 'C',
+                    sim_t,
+                    lane: DRIVER_LANE,
+                    a: v,
+                    b: 0.0,
+                };
+                out.push_str(&rec.to_json().to_string());
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Chrome `trace_event` document (`chrome://tracing` / Perfetto):
+    /// spans as `"X"` duration events (tid = lane), instants as `"i"`,
+    /// series samples as `"C"` counter events.
+    pub fn to_chrome_trace(&self) -> Json {
+        let mut events: Vec<Json> = Vec::with_capacity(self.records.len());
+        for r in &self.records {
+            let mut fields = vec![
+                ("name", Json::Str(r.name.to_string())),
+                ("ph", Json::Str(r.ph.to_string())),
+                ("ts", Json::Num(r.ts_us)),
+                ("pid", Json::Num(0.0)),
+                ("tid", Json::Num(r.lane as f64)),
+            ];
+            if r.ph == 'X' {
+                fields.push(("dur", Json::Num(r.dur_us)));
+            }
+            if r.ph == 'i' {
+                // Thread-scoped instant marker.
+                fields.push(("s", Json::Str("t".to_string())));
+            }
+            fields.push((
+                "args",
+                obj(vec![
+                    ("sim_t", Json::Num(r.sim_t)),
+                    ("a", Json::Num(r.a)),
+                    ("b", Json::Num(r.b)),
+                ]),
+            ));
+            events.push(obj(fields));
+        }
+        for (si, s) in Series::ALL.iter().enumerate() {
+            for &(sim_t, wall_us, v) in &self.series[si] {
+                events.push(obj(vec![
+                    ("name", Json::Str(s.name().to_string())),
+                    ("ph", Json::Str("C".to_string())),
+                    ("ts", Json::Num(wall_us)),
+                    ("pid", Json::Num(0.0)),
+                    ("tid", Json::Num(0.0)),
+                    (
+                        "args",
+                        obj(vec![("value", Json::Num(v)), ("sim_t", Json::Num(sim_t))]),
+                    ),
+                ]));
+            }
+        }
+        obj(vec![("traceEvents", Json::Arr(events))])
+    }
+
+    /// Write the JSONL trace to `path` and the Chrome trace next to it
+    /// (`<stem>.chrome.json`).  Returns the Chrome-trace path.
+    pub fn write_trace(&self, path: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        std::fs::write(path, self.to_jsonl())?;
+        let chrome = path.with_extension("chrome.json");
+        std::fs::write(&chrome, self.to_chrome_trace().to_string())?;
+        Ok(chrome)
+    }
+}
+
+thread_local! {
+    /// The thread's installed recorder (null = tracing off).
+    static CURRENT: Cell<*mut Recorder> = const { Cell::new(std::ptr::null_mut()) };
+}
+
+/// Run `f` with `rec` installed as this thread's recorder, restoring
+/// the previous installation afterwards (panic-safe).  Scoped-TLS: the
+/// recorder is only reachable through the instrumentation functions
+/// while `f` runs.
+pub fn with_recorder<R>(rec: &mut Recorder, f: impl FnOnce() -> R) -> R {
+    struct Restore(*mut Recorder);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            CURRENT.with(|c| c.set(self.0));
+        }
+    }
+    let prev = CURRENT.with(|c| c.replace(rec as *mut Recorder));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// The thread's installed recorder, if any (transient borrow).
+#[inline]
+fn current<'a>() -> Option<&'a mut Recorder> {
+    let p = CURRENT.with(|c| c.get());
+    // SAFETY: non-null only inside a `with_recorder` scope, which holds
+    // the exclusive `&mut Recorder` for its whole extent; access is
+    // confined to short instrumentation calls that never re-enter.
+    if p.is_null() {
+        None
+    } else {
+        Some(unsafe { &mut *p })
+    }
+}
+
+/// True when a recorder is installed on this thread.  Gate any
+/// sampler-value computation behind this so trace-off runs skip it.
+#[inline]
+pub fn active() -> bool {
+    CURRENT.with(|c| !c.get().is_null())
+}
+
+/// Installed mode, if a recorder is armed on this thread.
+#[inline]
+pub fn mode() -> Option<TraceMode> {
+    current().map(|r| r.mode)
+}
+
+/// The installed recorder's wall anchor (for lane recorders sharing the
+/// driver's timeline).
+#[inline]
+pub fn anchor() -> Option<Instant> {
+    current().map(|r| r.anchor)
+}
+
+/// Note the current simulation time (called at event dispatch; spans
+/// and records completed afterwards carry it).
+#[inline]
+pub fn sim_time(t: f64) {
+    if let Some(rec) = current() {
+        rec.sim_now = t;
+    }
+}
+
+/// Merge a finished lane recorder into the thread's (driver) recorder.
+pub fn merge_lane(lane: Recorder) {
+    if let Some(rec) = current() {
+        rec.absorb_lane(lane);
+    }
+}
+
+/// Scoped phase timer.  Inert (no clock read, no allocation) unless a
+/// recorder is installed; on drop it adds the elapsed wall-clock to the
+/// recorder's profile and, in `full` mode, appends a span record.
+pub struct SpanGuard {
+    armed: Option<(Phase, Instant)>,
+}
+
+/// Start a phase span (see [`SpanGuard`]).
+#[inline]
+pub fn span(phase: Phase) -> SpanGuard {
+    let armed = if active() { Some((phase, Instant::now())) } else { None };
+    SpanGuard { armed }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some((phase, t0)) = self.armed else { return };
+        let dur = t0.elapsed().as_secs_f64();
+        if let Some(rec) = current() {
+            rec.profile.add(phase, dur);
+            if rec.mode == TraceMode::Full {
+                let ts_us = t0.duration_since(rec.anchor).as_secs_f64() * 1e6;
+                let rec_lane = rec.lane;
+                let sim_t = rec.sim_now;
+                rec.push(TraceRecord {
+                    ts_us,
+                    dur_us: dur * 1e6,
+                    name: phase.name(),
+                    ph: 'X',
+                    sim_t,
+                    lane: rec_lane,
+                    a: 0.0,
+                    b: 0.0,
+                });
+            }
+        }
+    }
+}
+
+/// Record an instant trace event (`full` mode only; inert otherwise).
+#[inline]
+pub fn event(kind: TraceKind, sim_t: f64, a: f64, b: f64) {
+    if let Some(rec) = current() {
+        if rec.mode == TraceMode::Full {
+            let ts_us = rec.wall_us();
+            let lane = rec.lane;
+            rec.push(TraceRecord {
+                ts_us,
+                dur_us: 0.0,
+                name: kind.name(),
+                ph: 'i',
+                sim_t,
+                lane,
+                a,
+                b,
+            });
+        }
+    }
+}
+
+/// Record one time-series sample (`profile` and `full` modes).
+#[inline]
+pub fn sample(series: Series, sim_t: f64, v: f64) {
+    if let Some(rec) = current() {
+        let wall = rec.wall_us();
+        rec.series[series as usize].push((sim_t, wall, v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_when_nothing_installed() {
+        assert!(!active());
+        assert_eq!(mode(), None);
+        // None of these may panic or observe state without a recorder.
+        let _s = span(Phase::ShieldCheck);
+        drop(_s);
+        event(TraceKind::Arrival, 1.0, 2.0, 3.0);
+        sample(Series::QueueDepth, 1.0, 4.0);
+        sim_time(9.0);
+        assert!(!active());
+    }
+
+    #[test]
+    fn spans_accumulate_into_the_profile() {
+        let mut rec = Recorder::new(TraceMode::Profile, DRIVER_LANE);
+        with_recorder(&mut rec, || {
+            assert!(active());
+            assert_eq!(mode(), Some(TraceMode::Profile));
+            for _ in 0..3 {
+                let _s = span(Phase::ShieldCheck);
+            }
+            let _outer = span(Phase::EventDispatch);
+            let _inner = span(Phase::QnetForward);
+        });
+        assert!(!active(), "installation must be scoped");
+        assert_eq!(rec.profile.count[Phase::ShieldCheck as usize], 3);
+        assert_eq!(rec.profile.count[Phase::QnetForward as usize], 1);
+        assert_eq!(rec.profile.count[Phase::EventDispatch as usize], 1);
+        assert!(rec.profile.secs[Phase::ShieldCheck as usize] >= 0.0);
+        // Profile mode records no ring entries.
+        assert!(rec.into_report().records.is_empty());
+    }
+
+    #[test]
+    fn full_mode_records_spans_and_instants() {
+        let mut rec = Recorder::new(TraceMode::Full, 3);
+        with_recorder(&mut rec, || {
+            sim_time(42.0);
+            let _s = span(Phase::LinkReprice);
+            drop(_s);
+            event(TraceKind::Failure, 50.0, 7.0, 1.0);
+            sample(Series::UtilCpu, 60.0, 0.5);
+        });
+        let report = rec.into_report();
+        assert_eq!(report.records.len(), 2);
+        let sp = &report.records[0];
+        assert_eq!((sp.name, sp.ph, sp.lane), ("link_reprice", 'X', 3));
+        assert_eq!(sp.sim_t, 42.0);
+        let ev = &report.records[1];
+        assert_eq!((ev.name, ev.ph, ev.a, ev.b), ("failure", 'i', 7.0, 1.0));
+        assert_eq!(report.series[Series::UtilCpu as usize].len(), 1);
+        assert_eq!(report.dropped, 0);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_overwrites_oldest() {
+        let mut rec = Recorder::new(TraceMode::Full, 0);
+        rec.cap = 4;
+        with_recorder(&mut rec, || {
+            for i in 0..10 {
+                event(TraceKind::Arrival, i as f64, i as f64, 0.0);
+            }
+        });
+        let report = rec.into_report();
+        assert_eq!(report.records.len(), 4);
+        assert_eq!(report.dropped, 6);
+        // Chronological order, oldest surviving record first.
+        let kept: Vec<f64> = report.records.iter().map(|r| r.sim_t).collect();
+        assert_eq!(kept, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn lane_merge_keeps_per_lane_attribution() {
+        let mut driver = Recorder::new(TraceMode::Full, DRIVER_LANE);
+        let anchor = driver.anchor;
+        for lane_id in 0..2u32 {
+            let mut lane = Recorder::with_anchor(TraceMode::Full, lane_id, anchor);
+            with_recorder(&mut lane, || {
+                let _s = span(Phase::ShieldCheck);
+                drop(_s);
+                event(TraceKind::Placement, 1.0, lane_id as f64, 2.0);
+            });
+            driver.absorb_lane(lane);
+        }
+        with_recorder(&mut driver, || {
+            let _b = span(Phase::EpochBarrier);
+        });
+        let report = driver.into_report();
+        assert_eq!(report.lanes.len(), 3, "two lanes + the driver row");
+        assert_eq!(report.lanes[0].0, 0);
+        assert_eq!(report.lanes[1].0, 1);
+        assert_eq!(report.lanes[2].0, DRIVER_LANE);
+        assert_eq!(report.lanes[0].1.count[Phase::ShieldCheck as usize], 1);
+        assert_eq!(report.lanes[2].1.count[Phase::EpochBarrier as usize], 1);
+        let total = report.total_profile();
+        assert_eq!(total.count[Phase::ShieldCheck as usize], 2);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_with_the_schema_keys() {
+        let mut rec = Recorder::new(TraceMode::Full, 1);
+        with_recorder(&mut rec, || {
+            sim_time(5.0);
+            let _s = span(Phase::QnetForward);
+            drop(_s);
+            event(TraceKind::Collision, 5.0, 0.0, 2.0);
+            sample(Series::CollisionsWindow, 5.0, 2.0);
+        });
+        let jsonl = rec.into_report().to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in lines {
+            let doc = Json::parse(line).expect("JSONL line parses");
+            for key in ["ts_us", "dur_us", "name", "ph", "sim_t", "lane", "a", "b"] {
+                assert!(doc.get(key).is_some(), "missing {key} in {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_carries_all_record_types() {
+        let mut rec = Recorder::new(TraceMode::Full, 0);
+        with_recorder(&mut rec, || {
+            let _s = span(Phase::EventDispatch);
+            drop(_s);
+            event(TraceKind::Handoff, 1.0, 0.0, 3.0);
+            sample(Series::QueueDepth, 1.0, 12.0);
+        });
+        let doc = rec.into_report().to_chrome_trace();
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).expect("chrome trace parses");
+        let events = parsed.get("traceEvents").and_then(|e| e.as_arr()).unwrap();
+        assert_eq!(events.len(), 3);
+        let phases: Vec<&str> =
+            events.iter().map(|e| e.get("ph").and_then(|p| p.as_str()).unwrap()).collect();
+        assert_eq!(phases, vec!["X", "i", "C"]);
+        assert!(events[0].get("dur").is_some(), "X events need dur");
+        assert_eq!(events[1].get("s").and_then(|s| s.as_str()), Some("t"));
+    }
+
+    #[test]
+    fn trace_mode_parses_and_defaults_off() {
+        assert_eq!(TraceMode::default(), TraceMode::Off);
+        assert_eq!(TraceMode::parse("off"), Some(TraceMode::Off));
+        assert_eq!(TraceMode::parse("profile"), Some(TraceMode::Profile));
+        assert_eq!(TraceMode::parse("full"), Some(TraceMode::Full));
+        assert_eq!(TraceMode::parse("verbose"), None);
+    }
+
+    #[test]
+    fn nested_installation_restores_the_outer_recorder() {
+        let mut outer = Recorder::new(TraceMode::Profile, DRIVER_LANE);
+        let mut inner = Recorder::new(TraceMode::Profile, 0);
+        with_recorder(&mut outer, || {
+            with_recorder(&mut inner, || {
+                let _s = span(Phase::ShieldCheck);
+            });
+            let _s = span(Phase::EpochBarrier);
+        });
+        assert_eq!(inner.profile.count[Phase::ShieldCheck as usize], 1);
+        assert_eq!(outer.profile.count[Phase::ShieldCheck as usize], 0);
+        assert_eq!(outer.profile.count[Phase::EpochBarrier as usize], 1);
+    }
+}

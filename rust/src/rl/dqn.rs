@@ -13,6 +13,7 @@
 //! forward (see `runtime::qnet::refill_state`).
 
 use crate::dnn::Layer;
+use crate::obs;
 use crate::runtime::qnet::{QNetSession, TdBatch};
 use crate::runtime::Engine;
 use crate::util::error::Result;
@@ -210,6 +211,9 @@ impl Policy for DqnPolicy<'_> {
                 out.push(usize::MAX); // placeholder — overwritten in pass 2
             }
         }
+        // One span covers the whole round's chunked forwards — tracing
+        // never reads the clock inside the per-decision loop.
+        let _sp = obs::span(obs::Phase::QnetForward);
         let lanes = self.session.fwd_lanes();
         let mut start = 0;
         while start < self.greedy_rows.len() {

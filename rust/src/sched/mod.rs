@@ -28,6 +28,7 @@
 
 use crate::cluster::{Deployment, Membership, NodeId, ResourceKind, Resources};
 use crate::dnn::{Layer, ModelGraph};
+use crate::obs;
 use crate::rl::{
     features::MAX_NEIGHBORS, layer_class, nearest_first, state_vector_into, table_key,
     CandidateView, Episode, EpisodeStep, Policy, RewardParams, StepPenalty, STATE_DIM,
@@ -640,7 +641,10 @@ fn marl_wave_impl(
         let mut round_shield_secs = 0.0;
         match shield.as_deref_mut() {
             Some(s) => {
-                let out = s.check(&proposals, state, dep, params.alpha);
+                let out = {
+                    let _sp = obs::span(obs::Phase::ShieldCheck);
+                    s.check(&proposals, state, dep, params.alpha)
+                };
                 collisions += out.collisions;
                 shield_corrections += out.corrections.len();
                 round_shield_secs = out.shield_secs;
@@ -1064,7 +1068,10 @@ fn reschedule_impl(
 
     let (collisions, corrections, shield_secs) = match shield.as_deref_mut() {
         Some(sh) => {
-            let out = sh.check(&proposals, state, dep, params.alpha);
+            let out = {
+                let _sp = obs::span(obs::Phase::ShieldCheck);
+                sh.check(&proposals, state, dep, params.alpha)
+            };
             let n_corrections = out.corrections.len();
             for (idx, new_target) in out.corrections {
                 targets[idx] = new_target;

@@ -20,6 +20,7 @@
 //!   delegate already ran — both leak collisions, Fig 8/13.
 
 use crate::cluster::{Deployment, NodeId, SubClusters};
+use crate::obs;
 use crate::sim::state::ResourceState;
 use crate::util::NodeSet;
 
@@ -50,6 +51,7 @@ pub struct DecentralShield {
 impl DecentralShield {
     /// Build shields for `cluster_members`, split into `k` sub-clusters.
     pub fn new(dep: &Deployment, cluster_members: &[NodeId], k: usize) -> DecentralShield {
+        let _sp = obs::span(obs::Phase::PartitionBuild);
         let subs = SubClusters::build(cluster_members, &dep.topo, k);
         DecentralShield {
             subs,
@@ -97,6 +99,7 @@ impl DecentralShield {
     /// ([`SubClusters::handoff_members`]) — the ROADMAP's batched
     /// per-tick region refresh.  Returns the number of region handoffs.
     pub fn nodes_moved(&mut self, dep: &Deployment, nodes: &[NodeId]) -> usize {
+        let _sp = obs::span(obs::Phase::PartitionBuild);
         self.subs.handoff_members(nodes, &dep.topo)
     }
 }

@@ -14,6 +14,7 @@
 
 use crate::cluster::Deployment;
 use crate::dnn::ModelGraph;
+use crate::obs;
 use crate::sched::JobSchedule;
 use crate::workload::Workload;
 
@@ -168,6 +169,8 @@ impl<'a> Executor<'a> {
 
         let mut remaining = runs.len();
         while let Some(ev) = queue.pop() {
+            obs::sim_time(ev.t);
+            let _ev_span = obs::span(obs::Phase::EventDispatch);
             match ev.kind {
                 EventKind::BgStart { bg } => {
                     let b = &self.workload.background[bg];
@@ -189,6 +192,19 @@ impl<'a> Executor<'a> {
                             report.util_cpu.push(state.actual_util(n, crate::cluster::ResourceKind::Cpu).clamp(0.0, 2.0));
                             report.util_mem.push(state.actual_util(n, crate::cluster::ResourceKind::Mem).clamp(0.0, 2.0));
                             report.util_bw.push(state.actual_util(n, crate::cluster::ResourceKind::Bw).clamp(0.0, 2.0));
+                        }
+                        // Windowed samplers: read-only over the samples
+                        // just pushed (no RNG, pinned).  The static path
+                        // has no collision/forward activity mid-run, so
+                        // only the depth + utilization series fire here.
+                        if obs::active() {
+                            let n = self.dep.n();
+                            let tail =
+                                |v: &[f64]| crate::util::stats::mean_of(&v[v.len() - n..]);
+                            obs::sample(obs::Series::QueueDepth, ev.t, queue.len() as f64);
+                            obs::sample(obs::Series::UtilCpu, ev.t, tail(&report.util_cpu));
+                            obs::sample(obs::Series::UtilMem, ev.t, tail(&report.util_mem));
+                            obs::sample(obs::Series::UtilBw, ev.t, tail(&report.util_bw));
                         }
                         queue.push(ev.t + self.sample_period, EventKind::Sample);
                     }

@@ -29,6 +29,17 @@ pub fn mean(values: &[f64]) -> f64 {
     values.iter().sum::<f64>() / values.len() as f64
 }
 
+/// Mean of a possibly-empty slice (empty → 0.0) — the shared helper
+/// behind the `RunMetrics::mean_*` accessors, where "no samples yet"
+/// must read as zero overhead rather than panic.
+pub fn mean_of(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        0.0
+    } else {
+        values.iter().sum::<f64>() / values.len() as f64
+    }
+}
+
 pub fn stddev(values: &[f64]) -> f64 {
     if values.len() < 2 {
         return 0.0;
@@ -70,6 +81,37 @@ impl Summary {
     /// Spread of the error bars (max − min), the paper's variance proxy.
     pub fn spread(&self) -> f64 {
         self.max - self.min
+    }
+}
+
+/// Tail-latency percentile summary (p50/p90/p99/p999) — the serving
+/// workload's reporting convention, also used by `figures profile` for
+/// per-phase span distributions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pcts {
+    pub n: usize,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub p999: f64,
+}
+
+impl Pcts {
+    /// `None` on an empty sample (tail percentiles of nothing are
+    /// meaningless, unlike [`mean_of`]'s zero convention).
+    pub fn of(values: &[f64]) -> Option<Pcts> {
+        if values.is_empty() {
+            return None;
+        }
+        let mut v = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Pcts {
+            n: v.len(),
+            p50: percentile(&v, 50.0),
+            p90: percentile(&v, 90.0),
+            p99: percentile(&v, 99.0),
+            p999: percentile(&v, 99.9),
+        })
     }
 }
 
@@ -171,5 +213,25 @@ mod tests {
     #[should_panic]
     fn percentile_empty_panics() {
         percentile(&[], 50.0);
+    }
+
+    #[test]
+    fn mean_of_empty_is_zero() {
+        assert_eq!(mean_of(&[]), 0.0);
+        assert_eq!(mean_of(&[3.0]), 3.0);
+        assert!((mean_of(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pcts_orders_the_tail() {
+        let v: Vec<f64> = (1..=1000).map(|i| i as f64).collect();
+        let p = Pcts::of(&v).unwrap();
+        assert_eq!(p.n, 1000);
+        assert!(p.p50 <= p.p90 && p.p90 <= p.p99 && p.p99 <= p.p999);
+        assert!((p.p50 - 500.5).abs() < 1.0);
+        assert!(p.p999 > 990.0 && p.p999 <= 1000.0);
+        assert_eq!(Pcts::of(&[]), None);
+        let single = Pcts::of(&[4.0]).unwrap();
+        assert_eq!((single.p50, single.p999), (4.0, 4.0));
     }
 }
