@@ -634,6 +634,74 @@ fn main() {
         }
     }
 
+    // --- shield tree: flat serial barriers vs group-parallel barriers ---
+    // The hierarchical-shield cells: the same sharded scenario (every
+    // lane chunked across cores) with light churn, epoch barriers
+    // handled by the flat serial driver (`tree_fanout = 0`, the pinned
+    // reference) vs bucketed by super-shield group and dispatched
+    // group-parallel (`tree_fanout = 8`, the `figures scale` setting).
+    // Byte-identity across fanout × shards is asserted at the smallest
+    // size before anything is timed; the speedup assert is full-run +
+    // multi-core only (the serial O(n) Sample/ViewRefresh barriers are
+    // the Amdahl term the tree removes).
+    let tree_cfg = |n: usize, shards: usize, fanout: usize| {
+        let mut cfg = shard_cfg(n, shards);
+        cfg.tree_fanout = fanout;
+        cfg.failure_rate = 100.0;
+        cfg.rejoin_secs = 120.0;
+        cfg
+    };
+    {
+        let base = Experiment::new(tree_cfg(5_000, 1, 0)).run(Method::SroleD).metrics;
+        for &shards in &[1usize, shard_workers] {
+            for &fanout in &[0usize, 2, 8] {
+                if shards == 1 && fanout == 0 {
+                    continue;
+                }
+                let r = Experiment::new(tree_cfg(5_000, shards, fanout))
+                    .run(Method::SroleD)
+                    .metrics;
+                assert_eq!(
+                    base.to_json().to_string(),
+                    r.to_json().to_string(),
+                    "shield tree diverged from the flat serial driver at 5k nodes \
+                     (fanout={fanout}, shards={shards})"
+                );
+            }
+        }
+        assert!(!base.jct.is_empty(), "vacuous: the 5k tree-equivalence cell ran no jobs");
+        assert!(base.node_failures > 0, "vacuous: no churn in the tree-equivalence cell");
+    }
+    let mut tree_bench =
+        Bench::with_config("hotpath_tree", srole::util::benchkit::BenchConfig::sweep());
+    let tree_sizes: &[usize] = if bench_fast { &[10_000] } else { &[30_000, 100_000, 300_000] };
+    for &n in tree_sizes {
+        let cfg_flat = tree_cfg(n, shard_workers, 0);
+        let cfg_tree = tree_cfg(n, shard_workers, 8);
+        let lanes = (n + cfg_flat.cluster_size - 1) / cfg_flat.cluster_size;
+        let t_flat = tree_bench
+            .measure(&format!("tick_engine_flat_{n}n"), || {
+                Experiment::new(cfg_flat.clone()).run(Method::SroleD).metrics.makespan
+            })
+            .median_secs();
+        let t_tree = tree_bench
+            .measure(&format!("tick_engine_tree_{n}n"), || {
+                Experiment::new(cfg_tree.clone()).run(Method::SroleD).metrics.makespan
+            })
+            .median_secs();
+        println!(
+            "shield-tree tick speedup at {n} nodes ({lanes} lanes, {shard_workers} shards, \
+             fanout 8): {:.1}x",
+            t_flat / t_tree.max(1e-12)
+        );
+        if n >= 100_000 && !bench_fast && srole::harness::default_threads() > 1 {
+            assert!(
+                t_tree < t_flat,
+                "group-parallel barriers must beat the flat serial driver at {n} nodes: \
+                 {t_tree} vs {t_flat}"
+            );
+        }
+    }
     // --- parallel harness: 4-scenario sweep, serial vs parallel ---------
     let sweep_base = ExperimentConfig {
         n_edges: 10,
@@ -890,6 +958,7 @@ fn main() {
 
     bench.print_report();
     tick_bench.print_report();
+    tree_bench.print_report();
     decision_bench.print_report();
     trace_bench.print_report();
     match bench.write_json(std::path::Path::new(".")) {
@@ -899,6 +968,10 @@ fn main() {
     match tick_bench.write_json(std::path::Path::new(".")) {
         Ok(path) => println!("bench report: {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_hotpath_tick.json: {e}"),
+    }
+    match tree_bench.write_json(std::path::Path::new(".")) {
+        Ok(path) => println!("bench report: {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_hotpath_tree.json: {e}"),
     }
     match decision_bench.write_json(std::path::Path::new(".")) {
         Ok(path) => println!("bench report: {}", path.display()),

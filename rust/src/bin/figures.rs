@@ -9,9 +9,9 @@
 //!        `[--models vgg16,googlenet,rnn] [--edges 5,10,15,20,25]`
 //!        `[--pretrain N] [--trace PATH]`
 //!
-//! `figures scale` sweeps 10→100,000-node deployments concurrently (the
-//! region-sharded tick-engine scale ceiling; `--edges` overrides the
-//! sweep points, so CI smokes just the 100,000-node cell; node density
+//! `figures scale` sweeps 10→300,000-node deployments concurrently (the
+//! shield-tree tick-engine scale ceiling; `--edges` overrides the
+//! sweep points, so CI smokes just the 300,000-node cell; node density
 //! is held constant past 256 nodes and cells of ≥30,000 nodes shard
 //! their lanes across every core); `figures churn` sweeps node-failure
 //! rates on a 100-node cluster through the dynamic event-driven driver;
@@ -388,15 +388,21 @@ const SCALE_TARGET_DEGREE: f64 = 256.0;
 const SCALE_SHARD_THRESHOLD: usize = 30_000;
 const SCALE_CLUSTER_CAP: usize = 1000;
 
-/// `figures scale`: the ROADMAP scale sweep — 10→100 000-node
+/// Super-shield fanout for the sharded scale cells: groups of 8
+/// clusters resolve their cross-region work group-locally, so the
+/// 30k–300k epoch barriers parallelize (`coordinator::shard`,
+/// byte-identical to the flat driver by the tree's pinning tests).
+const SCALE_TREE_FANOUT: usize = 8;
+
+/// `figures scale`: the ROADMAP scale sweep — 10→300 000-node
 /// deployments, all methods, one concurrent harness run.  `--edges`
-/// overrides the sweep points (CI smokes only the 100 000-node ceiling
+/// overrides the sweep points (CI smokes only the 300 000-node ceiling
 /// cell).
 fn scale_sweep(ctx: &Ctx) {
     let edges: Vec<usize> = if ctx.edges_explicit {
         ctx.edges.clone()
     } else {
-        vec![10, 25, 50, 100, 300, 1000, 3000, 10_000, 30_000, 100_000]
+        vec![10, 25, 50, 100, 300, 1000, 3000, 10_000, 30_000, 100_000, 300_000]
     };
     let model = ctx.models.first().copied().unwrap_or(ModelKind::Vgg16);
     let sweep = Sweep::new(ctx.base(model)).methods(&Method::ALL).edges(&edges);
@@ -414,6 +420,7 @@ fn scale_sweep(ctx: &Ctx) {
         sc.cfg.subclusters = (sc.cfg.cluster_size / 10).max(2);
         if sc.cfg.n_edges >= SCALE_SHARD_THRESHOLD {
             sc.cfg.shards = srole::harness::default_threads();
+            sc.cfg.tree_fanout = SCALE_TREE_FANOUT;
         }
         let profile = sc.cfg.profile.resource_profile();
         let spread =

@@ -680,35 +680,61 @@ fn grid_partition(members: &[NodeId], topo: &Topology, k: usize) -> (Vec<usize>,
             (items.to_vec(), c)
         })
         .collect();
-    let k_eff = k.min(cells.len()).max(1);
+    let centroids: Vec<(f64, f64)> = cells.iter().map(|(_, c)| *c).collect();
+    let (cell_group, k_eff) = farthest_point_assign(&centroids, k);
+    let mut assignment = vec![0usize; members.len()];
+    for ((items, _), &g) in cells.iter().zip(&cell_group) {
+        for &i in items {
+            assignment[i] = g;
+        }
+    }
+    (assignment, k_eff)
+}
+
+/// Farthest-point seeding + nearest-seed assignment over `points` — the
+/// k-means init rule without the Lloyd iterations, shared by the grid
+/// partitioner (over occupied-cell centroids) and the shield tree's
+/// cluster grouping (over cluster centroids, `shield::tree`).
+/// Deterministic: the first seed is `points[0]`, each further seed
+/// maximizes the minimum squared distance to the seeds chosen so far,
+/// and each point joins its nearest seed (ties resolve to the lowest
+/// seed index).  Returns `(assignment, k_eff)` with
+/// `k_eff = k.clamp(1, points.len())`: degenerate inputs — coincident
+/// points, `k` beyond the point count — yield fewer groups instead of
+/// fabricating empty ones.
+pub(crate) fn farthest_point_assign(points: &[(f64, f64)], k: usize) -> (Vec<usize>, usize) {
+    if points.is_empty() {
+        return (Vec::new(), 1);
+    }
+    let k_eff = k.min(points.len()).max(1);
     let mut seeds: Vec<(f64, f64)> = Vec::with_capacity(k_eff);
-    seeds.push(cells[0].1);
+    seeds.push(points[0]);
     while seeds.len() < k_eff {
-        let far = cells
+        let far = points
             .iter()
             .enumerate()
             .max_by(|(_, a), (_, b)| {
-                let da = seeds.iter().map(|s| d2(a.1, *s)).fold(f64::MAX, f64::min);
-                let db = seeds.iter().map(|s| d2(b.1, *s)).fold(f64::MAX, f64::min);
+                let da = seeds.iter().map(|s| d2(**a, *s)).fold(f64::MAX, f64::min);
+                let db = seeds.iter().map(|s| d2(**b, *s)).fold(f64::MAX, f64::min);
                 da.partial_cmp(&db).unwrap()
             })
             .map(|(i, _)| i)
             .unwrap();
-        seeds.push(cells[far].1);
+        seeds.push(points[far]);
     }
-    let mut assignment = vec![0usize; members.len()];
-    for (items, c) in &cells {
-        let mut best = (f64::MAX, 0usize);
-        for (s, seed) in seeds.iter().enumerate() {
-            let dist = d2(*c, *seed);
-            if dist < best.0 {
-                best = (dist, s);
+    let assignment = points
+        .iter()
+        .map(|p| {
+            let mut best = (f64::MAX, 0usize);
+            for (s, seed) in seeds.iter().enumerate() {
+                let dist = d2(*p, *seed);
+                if dist < best.0 {
+                    best = (dist, s);
+                }
             }
-        }
-        for &i in items {
-            assignment[i] = best.1;
-        }
-    }
+            best.1
+        })
+        .collect();
     (assignment, k_eff)
 }
 

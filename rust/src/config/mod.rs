@@ -127,6 +127,21 @@ pub struct ExperimentConfig {
     /// policy-eval costs.  Off by default so modeled `decision_secs`
     /// keeps the paper's legacy per-candidate accounting.
     pub batched_eval_cost: bool,
+    /// Super-shield group fanout for the hierarchical shield tree
+    /// (`shield::tree`): regional cluster shields are grouped under at
+    /// most `tree_fanout` clusters per group (grid-seeded over cluster
+    /// centroids), and the sharded driver buckets cross-region events by
+    /// group and handles the groups concurrently.  `0` (the default)
+    /// disables the tree — the flat serial driver is the pinned
+    /// reference.  `RunMetrics` is byte-identical for every value
+    /// (pinned by harness tests) as long as `cross_cluster` stays off.
+    pub tree_fanout: usize,
+    /// Opt-in cross-cluster placement: reschedule fallbacks may target
+    /// an alive boundary-pair neighbor in an adjacent cluster, shielded
+    /// through the tree group's visible sets.  Off by default because it
+    /// changes placements (and therefore results); requires
+    /// `tree_fanout >= 1` and the global-state driver (`shards = 0`).
+    pub cross_cluster: bool,
     /// Observability mode (`off | profile | full`, see `obs`).  `off`
     /// (the default) arms nothing — the per-decision loop keeps its
     /// uninstrumented cost.  Tracing only *reads* state and draws no
@@ -165,6 +180,8 @@ impl Default for ExperimentConfig {
             shards: 0,
             batch_decisions: true,
             batched_eval_cost: false,
+            tree_fanout: 0,
+            cross_cluster: false,
             trace: TraceMode::Off,
         }
     }
@@ -284,6 +301,14 @@ impl ExperimentConfig {
                 }
             }
             "shards" => self.shards = parse_usize(val)?,
+            "tree_fanout" => self.tree_fanout = parse_usize(val)?,
+            "cross_cluster" => {
+                self.cross_cluster = match val {
+                    "true" | "1" | "yes" => true,
+                    "false" | "0" | "no" => false,
+                    other => return Err(format!("bad boolean {other} for cross_cluster")),
+                }
+            }
             "batch_decisions" => {
                 self.batch_decisions = match val {
                     "true" | "1" | "yes" => true,
@@ -331,6 +356,14 @@ impl ExperimentConfig {
         }
         if self.cluster_spread_m.is_nan() || self.cluster_spread_m < 0.0 {
             return Err("cluster_spread_m must be non-negative".into());
+        }
+        if self.cross_cluster {
+            if self.tree_fanout == 0 {
+                return Err("cross_cluster requires tree_fanout >= 1 (the shield tree carries the boundary-pair visible sets)".into());
+            }
+            if self.shards > 0 {
+                return Err("cross_cluster requires the global-state driver (shards = 0): lane resource windows cannot host foreign-cluster layers".into());
+            }
         }
         if self.mobility_tick_secs.is_nan() || self.mobility_tick_secs <= 0.0 {
             return Err("mobility_tick_secs must be positive".into());
@@ -579,6 +612,35 @@ mod tests {
         assert_eq!(d.shards, 0, "default stays on the legacy single-stream driver");
         assert!(!d.dynamic());
         assert!(ExperimentConfig::from_toml("shards = -1").is_err());
+    }
+
+    #[test]
+    fn tree_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml("tree_fanout = 8").unwrap();
+        assert_eq!(cfg.tree_fanout, 8);
+        assert!(
+            !cfg.dynamic(),
+            "the tree knob alone must not flip the engine: fanout is byte-identical"
+        );
+        cfg.validate().unwrap();
+
+        let d = ExperimentConfig::default();
+        assert_eq!(d.tree_fanout, 0, "default stays on the flat serial-driver reference");
+        assert!(!d.cross_cluster, "cross-cluster placement is opt-in");
+
+        let xc = ExperimentConfig::from_toml("tree_fanout = 2\ncross_cluster = true").unwrap();
+        assert!(xc.cross_cluster);
+        xc.validate().unwrap();
+
+        // cross_cluster without a tree (or with lane-sliced state) is rejected.
+        let bad = ExperimentConfig::from_toml("cross_cluster = true").unwrap();
+        assert!(bad.validate().is_err());
+        let bad = ExperimentConfig::from_toml(
+            "cross_cluster = true\ntree_fanout = 2\nshards = 4",
+        )
+        .unwrap();
+        assert!(bad.validate().is_err());
+        assert!(ExperimentConfig::from_toml("cross_cluster = maybe").is_err());
     }
 
     #[test]

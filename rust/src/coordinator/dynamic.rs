@@ -21,6 +21,16 @@
 //!   (`sched::reschedule_stranded`) with full decision-latency
 //!   accounting, so the overhead figures stay regenerable under churn.
 //!
+//! With `cross_cluster = true` (requires `tree_fanout >= 1`; this
+//! engine only — lane-sliced resource windows cannot host foreign
+//! layers), reschedule fallbacks that exhaust the in-cluster search may
+//! target alive boundary-pair neighbors in adjacent clusters, shielded
+//! through the shield tree's pair visible sets (`shield::tree`).
+//! `RunMetrics` counts the placements (`cross_cluster_placements`) and
+//! the pairs that crossed super-shield groups
+//! (`shield_tree_escalations`); both counters increment only on this
+//! path, so `cross_cluster = false` runs replay byte-identically.
+//!
 //! Determinism: one RNG stream drives generation and the single-stream
 //! event loop, so a `(config, method, seed)` triple replays bit-identically
 //! regardless of harness thread count.  With `cfg.shards >= 1` the run
@@ -43,10 +53,11 @@ use crate::net::mobility::DynamicTopology;
 use crate::obs;
 use crate::rl::{Policy, TabularQ};
 use crate::sched::{
-    central_wave_dynamic, marl_wave_dynamic, noisy_demand, reschedule_migrated,
-    reschedule_stranded, DecisionConfig, DecisionMode, JobSchedule, Stranded, WaveOutcome,
+    central_wave_dynamic, cross_candidates_into, marl_wave_dynamic, noisy_demand,
+    reschedule_migrated, reschedule_stranded, DecisionConfig, DecisionMode, JobSchedule, Stranded,
+    WaveOutcome,
 };
-use crate::shield::{CentralShield, DecentralShield, Shield};
+use crate::shield::{CentralShield, DecentralShield, Shield, ShieldTree};
 use crate::sim::engine::SAMPLE_PERIOD_SECS;
 use crate::sim::event::{EventKind, EventQueue};
 use crate::sim::{timing, ResourceState};
@@ -137,6 +148,36 @@ pub(super) fn alive_head(dep: &Deployment, membership: &Membership, cluster: usi
         .unwrap_or(dep.clusters[cluster].head)
 }
 
+/// Opt-in cross-cluster rescue for a reschedule fallback
+/// (`cross_cluster`, this engine only — lane-sliced resource windows
+/// cannot host foreign-cluster layers).  The pool is the owner's alive
+/// out-of-cluster transmission neighbors, shielded through the tree:
+/// a candidate must share a boundary pair with the owner's cluster with
+/// both endpoints in the pair's build-time visible set, and placing the
+/// layer must keep it under the overload threshold against the stale
+/// view (the same report the in-cluster reschedule consults — the
+/// shields' admission rule applied to the pair's visible scope).
+/// Returns the chosen host and whether the pair crossed super-shield
+/// groups (escalated to the root rather than resolved group-locally).
+fn cross_rescue(
+    tree: &ShieldTree,
+    dep: &Deployment,
+    membership: &Membership,
+    view_demand: &[Resources],
+    est: &Resources,
+    owner: NodeId,
+    alpha: f64,
+    scratch: &mut Vec<NodeId>,
+) -> Option<(NodeId, bool)> {
+    cross_candidates_into(dep, membership, owner, scratch);
+    scratch.retain(|&c| {
+        crate::cluster::ResourceKind::ALL
+            .iter()
+            .all(|&k| dep.nodes[c].caps.utilization(&view_demand[c].add(est), k) <= alpha)
+    });
+    tree.cross_rescue_target(dep, owner, scratch)
+}
+
 /// One measured dynamic run: the event-driven counterpart of
 /// `Experiment::run_once` for configurations with churn or online
 /// arrivals.
@@ -210,6 +251,15 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
             Method::Rl | Method::Marl => ClusterShield::None,
         })
         .collect();
+
+    // Opt-in cross-cluster rescue (`validate()` requires `tree_fanout
+    // >= 1` and this global-state driver).  The shield tree carries the
+    // boundary-pair visible sets rescue proposals are shielded through;
+    // both counters below increment only on this path, so every
+    // `cross_cluster = false` run is untouched byte for byte.
+    let tree: Option<ShieldTree> =
+        cfg.cross_cluster.then(|| ShieldTree::build(&dep, cfg.tree_fanout));
+    let mut cross_scratch: Vec<NodeId> = Vec::new();
 
     let mut state = ResourceState::new(&dep);
     let pre_placed = crate::sim::engine::place_initial_background(&mut state, &workload);
@@ -531,8 +581,26 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                         for (s, &target) in stranded.iter().zip(&outcome.targets) {
                             // The cluster always keeps ≥1 alive member, so the
                             // handler's fallback guarantees a real target.
+                            // With `cross_cluster`, an exhausted in-cluster
+                            // search first tries an alive boundary-pair
+                            // neighbor in an adjacent cluster.
                             let target = if target == usize::MAX {
-                                membership.alive_members(cluster)[0]
+                                let est = graph.layers[s.layer_id].demand();
+                                match tree.as_ref().and_then(|tr| {
+                                    cross_rescue(
+                                        tr, &dep, &membership, &view_demand, &est, s.owner,
+                                        cfg.reward.alpha, &mut cross_scratch,
+                                    )
+                                }) {
+                                    Some((t, escalated)) => {
+                                        metrics.cross_cluster_placements += 1;
+                                        if escalated {
+                                            metrics.shield_tree_escalations += 1;
+                                        }
+                                        t
+                                    }
+                                    None => membership.alive_members(cluster)[0],
+                                }
                             } else {
                                 target
                             };
@@ -641,8 +709,16 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                         continue;
                     }
                     for (layer_id, &host) in run.sched.placement.iter().enumerate() {
+                        // With `cross_cluster`, a layer rescued to an
+                        // adjacent cluster stays put while its (alive)
+                        // host remains in transmission range — without
+                        // this clause the alive-neighbor index (which is
+                        // cluster-scoped) would re-strand it every tick.
                         let reachable = host == owner
-                            || membership.alive_neighbors(owner).binary_search(&host).is_ok();
+                            || membership.alive_neighbors(owner).binary_search(&host).is_ok()
+                            || (tree.is_some()
+                                && membership.is_alive(host)
+                                && dep.topo.neighbors_ref(owner).contains(&host));
                         if !reachable && membership.is_alive(host) {
                             per_cluster[run.sched.job.cluster].push(Stranded {
                                 job: ji,
@@ -675,7 +751,29 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                     for ((s, &target), &old) in
                         stranded.iter().zip(&outcome.targets).zip(&old_hosts)
                     {
-                        let target = if target == usize::MAX { old } else { target };
+                        // With `cross_cluster`, an exhausted in-cluster
+                        // search tries an adjacent-cluster host before
+                        // settling for the old (slow) placement.
+                        let target = if target == usize::MAX {
+                            let est = graph.layers[s.layer_id].demand();
+                            match tree.as_ref().and_then(|tr| {
+                                cross_rescue(
+                                    tr, &dep, &membership, &view_demand, &est, s.owner,
+                                    cfg.reward.alpha, &mut cross_scratch,
+                                )
+                            }) {
+                                Some((t, escalated)) => {
+                                    metrics.cross_cluster_placements += 1;
+                                    if escalated {
+                                        metrics.shield_tree_escalations += 1;
+                                    }
+                                    t
+                                }
+                                None => old,
+                            }
+                        } else {
+                            target
+                        };
                         if target != old {
                             metrics.migrated_layers += 1;
                         }
@@ -880,6 +978,86 @@ mod tests {
         assert_eq!(a.jct, b.jct, "churn + mobility must stay deterministic");
         assert_eq!(a.node_failures, b.node_failures);
         assert_eq!(a.region_handoffs, b.region_handoffs);
+    }
+
+    #[test]
+    fn cross_rescue_respects_view_overload_and_interior_pairs() {
+        let mut rng = Rng::new(7);
+        let dep = Deployment::generate_spread(
+            &mut rng,
+            20,
+            5,
+            &crate::cluster::CONTAINER_PROFILE,
+            40.0,
+        );
+        let membership = Membership::full(&dep);
+        let est = Resources::new(0.1, 0.1, 0.1);
+        let mut scratch = Vec::new();
+        let idle: Vec<Resources> = (0..dep.n()).map(|_| Resources::new(0.0, 0.0, 0.0)).collect();
+        let full: Vec<Resources> = dep
+            .nodes
+            .iter()
+            .map(|n| Resources::new(n.caps.cpu * 10.0, n.caps.mem * 10.0, n.caps.bw * 10.0))
+            .collect();
+
+        // Everything under one super-shield: every admitted rescue is
+        // group-local, and a saturated stale view admits nothing.
+        let one_group = ShieldTree::build(&dep, dep.clusters.len().max(1));
+        let mut hits = 0usize;
+        for owner in 0..dep.n() {
+            if let Some((t, escalated)) =
+                cross_rescue(&one_group, &dep, &membership, &idle, &est, owner, 0.8, &mut scratch)
+            {
+                hits += 1;
+                assert!(!escalated, "a single group cannot escalate");
+                assert_ne!(dep.cluster_of(t), dep.cluster_of(owner));
+                assert!(membership.is_alive(t));
+                assert_eq!(
+                    cross_rescue(
+                        &one_group, &dep, &membership, &full, &est, owner, 0.8, &mut scratch
+                    ),
+                    None,
+                    "an overloaded view must not admit a rescue"
+                );
+            }
+        }
+        assert!(hits > 0, "no cross rescue ever admitted in a 40 m spread");
+
+        // Fanout 1 (finest grouping): the escalation verdict must match
+        // the group structure for every admitted rescue.
+        let fine = ShieldTree::build(&dep, 1);
+        for owner in 0..dep.n() {
+            if let Some((t, escalated)) =
+                cross_rescue(&fine, &dep, &membership, &idle, &est, owner, 0.8, &mut scratch)
+            {
+                assert_eq!(
+                    escalated,
+                    !fine.interior(dep.cluster_of(owner), dep.cluster_of(t))
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cross_cluster_runs_are_deterministic_and_off_by_default() {
+        let mut cfg = churn_cfg();
+        cfg.cluster_spread_m = 40.0;
+        cfg.tree_fanout = 2;
+        cfg.cross_cluster = true;
+        cfg.validate().expect("cross_cluster config must validate");
+        let a = run_dynamic(&cfg, Method::SroleD, 11);
+        let b = run_dynamic(&cfg, Method::SroleD, 11);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.jct.len(), 6, "jobs must still complete with cross-cluster rescue on");
+        // Off by default: with the rescue disabled the tree knob must
+        // not perturb this engine at all.
+        cfg.cross_cluster = false;
+        let base = run_dynamic(&cfg, Method::SroleD, 11);
+        cfg.tree_fanout = 0;
+        let flat = run_dynamic(&cfg, Method::SroleD, 11);
+        assert_eq!(base.to_json().to_string(), flat.to_json().to_string());
+        assert_eq!(base.cross_cluster_placements, 0);
+        assert_eq!(base.shield_tree_escalations, 0);
     }
 
     #[test]

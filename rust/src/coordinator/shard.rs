@@ -35,6 +35,40 @@
 //! barrier event (lanes advance through `t <= T` first).  This rule is
 //! part of the engine's contract — it is what makes the epoch partition
 //! independent of the shard count.
+//!
+//! # Shield tree (`tree_fanout >= 1`)
+//!
+//! The serial barrier is the engine's Amdahl term: every cross-region
+//! event walks O(n) state on one thread while the workers idle.  With a
+//! [`ShieldTree`] (clusters grouped under super-shields, see
+//! `shield::tree`), the driver buckets barrier work by super-shield
+//! group and handles groups concurrently in a `thread::scope`
+//! ([`dispatch_groups`]) — each group worker touches only its own
+//! lanes' rng/policy/shield/state plus shared read-only context:
+//!
+//! * `Sample` / `ViewRefresh`: per-lane reads collected group-parallel,
+//!   folded into the metrics vectors / stale view serially in cluster
+//!   order (the exact push order of the flat loop).
+//! * `MobilityTick`: the topology/membership rebuild stays serial, then
+//!   the per-lane work (region handoffs, migration scan + reschedule,
+//!   overload edges) runs group-parallel; counters fold in cluster
+//!   order.
+//! * `NodeFail` / `NodeJoin`: maximal runs of consecutive
+//!   single-victim fail/join events are *batched* — guards and
+//!   membership mutations run serially in time order (the root pass),
+//!   then each event's lane-confined phase runs group-parallel.  A
+//!   batch only forms when no lane has a queued event at or before the
+//!   batch's last time (so the epoch interleaving is provably
+//!   unaffected) and each cluster appears at most once (so each
+//!   cluster's membership slice equals what the serial handler saw).
+//!   Blast-radius (multi-victim) events always escalate to the serial
+//!   root pass, as does anything that fails the batch conditions.
+//!
+//! Every group-parallel fold happens in fixed cluster/event order and
+//! no RNG moves between lanes, so `RunMetrics` stays **byte-identical
+//! for every `tree_fanout`** — fanout 0 keeps the flat serial driver
+//! verbatim as the pinned reference (equivalence tests below and in
+//! `harness`).
 
 use crate::cluster::{Deployment, Membership, NodeId, ResourceKind, Resources};
 use crate::config::ExperimentConfig;
@@ -47,9 +81,9 @@ use crate::sched::{
     central_wave_dynamic, marl_wave_dynamic, noisy_demand, reschedule_migrated,
     reschedule_stranded, DecisionConfig, DecisionMode, Stranded, WaveOutcome,
 };
-use crate::shield::{CentralShield, DecentralShield};
+use crate::shield::{CentralShield, DecentralShield, ShieldTree};
 use crate::sim::engine::SAMPLE_PERIOD_SECS;
-use crate::sim::event::{EventKind, EventQueue};
+use crate::sim::event::{Event, EventKind, EventQueue};
 use crate::sim::{timing, ResourceState, TaskHandle};
 use crate::util::Rng;
 use crate::workload::{Workload, WorkloadSpec};
@@ -282,6 +316,322 @@ fn advance_all(lanes: &mut [Lane], ctx: Ctx<'_>, until: f64, shards: usize) {
     });
 }
 
+// ---------------------------------------------------------------------
+// Shield-tree group dispatch (`tree_fanout >= 1`)
+// ---------------------------------------------------------------------
+
+/// Counters produced by one lane-confined phase of a barrier event,
+/// destined for the driver's `RunMetrics`.  Folded serially in a fixed
+/// event/cluster order after the scope join, so the merged totals never
+/// depend on worker-thread interleaving.
+#[derive(Default, Clone, Copy)]
+struct LaneOutcome {
+    handoffs: usize,
+    collisions: usize,
+    corrections: usize,
+    rescheduled: usize,
+    migrated: usize,
+}
+
+/// The lane-confined remainder of one batched churn event, planned by
+/// the serial root pass (which already applied the membership change).
+#[derive(Clone, Copy)]
+enum PlannedChurn {
+    Fail { victim: NodeId },
+    Join { node: NodeId },
+}
+
+/// Run one group-dispatch work item against `lane` with the lane's
+/// recorder installed (worker threads have no thread-local recorder of
+/// their own), under a [`obs::Phase::GroupDispatch`] span so tree
+/// barrier work is attributed to the lanes it actually touched.
+fn with_group_span<R>(lane: &mut Lane, sim_t: f64, f: impl FnOnce(&mut Lane) -> R) -> R {
+    if let Some(mut rec) = lane.obs.take() {
+        let out = obs::with_recorder(&mut rec, || {
+            obs::sim_time(sim_t);
+            let _s = obs::span(obs::Phase::GroupDispatch);
+            f(lane)
+        });
+        lane.obs = Some(rec);
+        out
+    } else {
+        f(lane)
+    }
+}
+
+/// Run `f` once per lane, with lanes bucketed by super-shield group and
+/// groups chunked across at most `shards` worker threads — the tree
+/// analogue of [`advance_all`].  Lanes sort into group order (stable,
+/// so ascending cluster within a group), each group stays whole on one
+/// worker, and the scope join is the barrier.  Results are returned in
+/// **cluster order** regardless of grouping or chunking; `f` itself
+/// must not depend on cross-lane state (the callers' lane phases touch
+/// only their own lane plus shared read-only context).  One worker (or
+/// one group) runs inline — same code path, no threads.
+fn dispatch_groups<T, F>(
+    lanes: &mut [Lane],
+    tree: &ShieldTree,
+    shards: usize,
+    sim_t: f64,
+    f: F,
+) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&mut Lane) -> T + Sync,
+{
+    let n = lanes.len();
+    let mut refs: Vec<&mut Lane> = lanes.iter_mut().collect();
+    refs.sort_by_key(|l| tree.group_of[l.cluster]);
+    // Contiguous per-group runs of the sorted lane references.
+    let mut slices: Vec<&mut [&mut Lane]> = Vec::with_capacity(tree.n_groups);
+    let mut rest = refs.as_mut_slice();
+    while !rest.is_empty() {
+        let g = tree.group_of[rest[0].cluster];
+        let len = rest.iter().take_while(|l| tree.group_of[l.cluster] == g).count();
+        let (head, tail) = rest.split_at_mut(len);
+        slices.push(head);
+        rest = tail;
+    }
+    let workers = shards.min(slices.len()).max(1);
+    let mut out: Vec<(usize, T)> = Vec::with_capacity(n);
+    if workers <= 1 {
+        for slice in slices.iter_mut() {
+            for lane in slice.iter_mut() {
+                let r = with_group_span(lane, sim_t, |l| f(l));
+                out.push((lane.cluster, r));
+            }
+        }
+    } else {
+        let chunk = (slices.len() + workers - 1) / workers;
+        let fref = &f;
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for chunk_slices in slices.chunks_mut(chunk) {
+                handles.push(s.spawn(move || {
+                    let mut res: Vec<(usize, T)> = Vec::new();
+                    for slice in chunk_slices.iter_mut() {
+                        for lane in slice.iter_mut() {
+                            let r = with_group_span(lane, sim_t, |l| fref(l));
+                            res.push((lane.cluster, r));
+                        }
+                    }
+                    res
+                }));
+            }
+            for h in handles {
+                out.extend(h.join().expect("group worker panicked"));
+            }
+        });
+    }
+    out.sort_by_key(|(c, _)| *c);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Read-only per-lane sample collection (tree path): the same per-node
+/// values the flat handler pushes, gathered per cluster so groups can
+/// read concurrently while the driver folds in cluster order.
+fn sample_lane_phase(lane: &Lane) -> [Vec<f64>; 4] {
+    let mut tasks = Vec::new();
+    let mut cpu = Vec::new();
+    let mut mem = Vec::new();
+    let mut bw = Vec::new();
+    for n in lane.state.node_ids() {
+        tasks.push(lane.state.task_count(n) as f64);
+        cpu.push(lane.state.actual_util(n, ResourceKind::Cpu).clamp(0.0, 2.0));
+        mem.push(lane.state.actual_util(n, ResourceKind::Mem).clamp(0.0, 2.0));
+        bw.push(lane.state.actual_util(n, ResourceKind::Bw).clamp(0.0, 2.0));
+    }
+    [tasks, cpu, mem, bw]
+}
+
+/// Lane-confined phase of one batched single-victim `NodeFail`:
+/// everything the flat handler does after the membership mutation —
+/// shield update, background release, strand scan, reschedule,
+/// placement, decision-cost charge, overload edges.  `membership`
+/// already reflects the whole batch, but the batch builder admits at
+/// most one event per cluster, so this cluster's slice of it (the only
+/// part any of these reads touch) is exactly what the flat handler saw.
+#[allow(clippy::too_many_arguments)]
+fn fail_lane_phase(
+    lane: &mut Lane,
+    victim: NodeId,
+    dep: &Deployment,
+    membership: &Membership,
+    graph: &ModelGraph,
+    workload: &Workload,
+    view_demand: &[Resources],
+    cfg: &ExperimentConfig,
+    dc: DecisionConfig,
+) -> LaneOutcome {
+    let cluster = lane.cluster;
+    let mut out = LaneOutcome::default();
+    match &mut lane.shield {
+        ClusterShield::Central(s) => {
+            s.set_alive(Some(membership.alive_cluster_set(cluster).clone()));
+        }
+        ClusterShield::Decentral(s) => {
+            s.node_failed(dep, victim);
+        }
+        ClusterShield::None => {}
+    }
+    for (li, &gi) in lane.own_bg.iter().enumerate() {
+        if workload.background[gi].node == victim {
+            if let Some(h) = lane.bg_slots[li].take() {
+                lane.state.release(h);
+            }
+        }
+    }
+    let mut stranded: Vec<Stranded> = Vec::new();
+    for (ji, run) in lane.runs.iter_mut().enumerate() {
+        let Some(run) = run else { continue };
+        if run.done {
+            continue;
+        }
+        for (layer_id, &host) in run.sched.placement.iter().enumerate() {
+            if host == victim {
+                lane.state.release(run.sched.handles[layer_id]);
+                stranded.push(Stranded { job: ji, owner: run.sched.job.owner, layer_id });
+            }
+        }
+    }
+    if !stranded.is_empty() {
+        let outcome = {
+            let shield = lane.shield.as_dyn();
+            let policy: &mut dyn Policy = &mut lane.policy;
+            reschedule_stranded(
+                dep, membership, &lane.state, graph, view_demand, &stranded, victim, policy,
+                shield, &cfg.reward, dc, &mut lane.rng,
+            )
+        };
+        out.collisions = outcome.collisions;
+        out.corrections = outcome.corrections;
+        out.rescheduled = stranded.len();
+        for (s, &target) in stranded.iter().zip(&outcome.targets) {
+            let target = if target == usize::MAX {
+                membership.alive_members(cluster)[0]
+            } else {
+                target
+            };
+            let est = graph.layers[s.layer_id].demand();
+            let actual = noisy_demand(&est, &mut lane.rng);
+            let h = lane.state.place(target, est, actual, true);
+            let run = lane.runs[s.job].as_mut().unwrap();
+            run.sched.placement[s.layer_id] = target;
+            run.sched.handles[s.layer_id] = h;
+        }
+        let mut charged: Vec<usize> = stranded.iter().map(|s| s.job).collect();
+        charged.sort_unstable();
+        charged.dedup();
+        for ji in charged {
+            let run = lane.runs[ji].as_mut().unwrap();
+            run.sched.decision_secs += outcome.sched_secs + outcome.shield_secs;
+            run.sched.sched_secs += outcome.sched_secs;
+            run.sched.shield_secs += outcome.shield_secs;
+        }
+    }
+    check_lane_overloads(lane, cfg.reward.alpha);
+    out
+}
+
+/// Lane-confined phase of one batched `NodeJoin`: the shield update
+/// (the root pass already applied `membership.join`).
+fn join_lane_phase(lane: &mut Lane, node: NodeId, dep: &Deployment, membership: &Membership) {
+    match &mut lane.shield {
+        ClusterShield::Central(s) => {
+            s.set_alive(Some(membership.alive_cluster_set(lane.cluster).clone()));
+        }
+        ClusterShield::Decentral(s) => {
+            s.node_joined(dep, node);
+        }
+        ClusterShield::None => {}
+    }
+}
+
+/// Per-lane phase of a `MobilityTick` after the serial topology /
+/// membership rebuild: region handoffs for this cluster's moved nodes,
+/// the migration scan + reschedule, and the overload edge check.  The
+/// flat handler runs these as three cluster-order loops; per-lane
+/// reordering is sound because each piece touches only its own lane
+/// (plus shared read-only context) and the within-lane order —
+/// handoffs, then migration, then overloads — is preserved.
+#[allow(clippy::too_many_arguments)]
+fn mobility_lane_phase(
+    lane: &mut Lane,
+    moved: &[NodeId],
+    dep: &Deployment,
+    membership: &Membership,
+    graph: &ModelGraph,
+    view_demand: &[Resources],
+    cfg: &ExperimentConfig,
+    dc: DecisionConfig,
+) -> LaneOutcome {
+    let mut out = LaneOutcome::default();
+    if !moved.is_empty() {
+        if let ClusterShield::Decentral(s) = &mut lane.shield {
+            out.handoffs = s.nodes_moved(dep, moved);
+        }
+    }
+    let mut stranded: Vec<Stranded> = Vec::new();
+    for (ji, run) in lane.runs.iter().enumerate() {
+        let Some(run) = run else { continue };
+        let owner = run.sched.job.owner;
+        if run.done || !membership.is_alive(owner) {
+            continue;
+        }
+        if membership.alive_neighbors(owner).is_empty() {
+            continue;
+        }
+        for (layer_id, &host) in run.sched.placement.iter().enumerate() {
+            let reachable =
+                host == owner || membership.alive_neighbors(owner).binary_search(&host).is_ok();
+            if !reachable && membership.is_alive(host) {
+                stranded.push(Stranded { job: ji, owner, layer_id });
+            }
+        }
+    }
+    if !stranded.is_empty() {
+        let mut old_hosts: Vec<NodeId> = Vec::with_capacity(stranded.len());
+        for s in &stranded {
+            let run = lane.runs[s.job].as_mut().unwrap();
+            old_hosts.push(run.sched.placement[s.layer_id]);
+            lane.state.release(run.sched.handles[s.layer_id]);
+        }
+        let outcome = {
+            let shield = lane.shield.as_dyn();
+            let policy: &mut dyn Policy = &mut lane.policy;
+            reschedule_migrated(
+                dep, membership, &lane.state, graph, view_demand, &stranded, policy, shield,
+                &cfg.reward, dc, &mut lane.rng,
+            )
+        };
+        out.collisions = outcome.collisions;
+        out.corrections = outcome.corrections;
+        for ((s, &target), &old) in stranded.iter().zip(&outcome.targets).zip(&old_hosts) {
+            let target = if target == usize::MAX { old } else { target };
+            if target != old {
+                out.migrated += 1;
+            }
+            let est = graph.layers[s.layer_id].demand();
+            let actual = noisy_demand(&est, &mut lane.rng);
+            let h = lane.state.place(target, est, actual, true);
+            let run = lane.runs[s.job].as_mut().unwrap();
+            run.sched.placement[s.layer_id] = target;
+            run.sched.handles[s.layer_id] = h;
+        }
+        let mut charged: Vec<usize> = stranded.iter().map(|s| s.job).collect();
+        charged.sort_unstable();
+        charged.dedup();
+        for ji in charged {
+            let run = lane.runs[ji].as_mut().unwrap();
+            run.sched.decision_secs += outcome.sched_secs + outcome.shield_secs;
+            run.sched.sched_secs += outcome.sched_secs;
+            run.sched.shield_secs += outcome.shield_secs;
+        }
+    }
+    check_lane_overloads(lane, cfg.reward.alpha);
+    out
+}
+
 /// One measured dynamic run on the region-sharded engine (`cfg.shards
 /// >= 1`).  Epoch-barrier loop: advance all lanes to the next
 /// cross-region event's time, then handle it serially.
@@ -331,6 +681,12 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     let mut membership = Membership::full(&dep);
     let n_clusters = dep.clusters.len();
     let horizon = cfg.iterations as f64 * crate::dnn::profile::TARGET_ITER_SECS * 2.5;
+
+    // Static super-shield grouping over the t = 0 deployment (draws no
+    // RNG — the churn schedule below is untouched).  `None` keeps the
+    // flat serial driver, the pinned reference for every fanout.
+    let tree: Option<ShieldTree> =
+        (cfg.tree_fanout >= 1).then(|| ShieldTree::build(&dep, cfg.tree_fanout));
 
     // Cross-region (driver) queue: sampling, view refresh, mobility and
     // the up-front churn schedule — drawn from the main stream *before*
@@ -464,24 +820,155 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
         // mutations it performs) is attributed to the driver row.
         let _barrier_span = obs::span(obs::Phase::EpochBarrier);
         let total_remaining: usize = lanes.iter().map(|l| l.remaining).sum();
+
+        // Shield-tree churn batching: maximal runs of consecutive
+        // single-victim fail/join events run their lane phases
+        // group-parallel.  A batch only forms when every batched event
+        // is strictly before every lane's next queued event (no lane
+        // event can fire inside the window, so lane state — and with it
+        // `total_remaining` — is constant across the batch; the epoch
+        // interleaving and the `t <= T` tie rule are unchanged) and
+        // each cluster appears at most once (each cluster's membership
+        // slice after the serial root pass is then exactly what the
+        // flat handler would have seen at its event).  Blast-radius
+        // churn (multi-victim, with its guard/mutation interleaving and
+        // in-batch rejoin pushes) always escalates to the flat serial
+        // handlers below.
+        if let Some(tree) = tree.as_ref() {
+            if cfg.blast_radius_m == 0.0
+                && matches!(ev.kind, EventKind::NodeFail { .. } | EventKind::NodeJoin { .. })
+            {
+                let lane_floor = lanes
+                    .iter()
+                    .filter_map(|l| l.queue.peek().map(|e| e.t))
+                    .fold(f64::INFINITY, f64::min);
+                let cluster_of = |e: &Event| match e.kind {
+                    EventKind::NodeFail { node } | EventKind::NodeJoin { node } => {
+                        dep.cluster_of(node)
+                    }
+                    _ => unreachable!("non-churn event in a churn batch"),
+                };
+                let mut seen = vec![false; n_clusters];
+                seen[cluster_of(&ev)] = true;
+                let mut batch: Vec<Event> = vec![ev];
+                while let Some(head) = driver_queue.peek() {
+                    let batchable = matches!(
+                        head.kind,
+                        EventKind::NodeFail { .. } | EventKind::NodeJoin { .. }
+                    ) && head.t < lane_floor
+                        && !seen[cluster_of(head)];
+                    if !batchable {
+                        break;
+                    }
+                    let e = driver_queue.pop().expect("peeked event vanished");
+                    seen[cluster_of(&e)] = true;
+                    batch.push(e);
+                }
+                // Root (serial) pass in time order: guards, membership
+                // mutations, failure accounting and trace events —
+                // exactly the flat handlers minus the lane-confined
+                // work, which is planned per cluster.
+                let mut plan: Vec<Option<(usize, PlannedChurn)>> = vec![None; n_clusters];
+                for (bi, bev) in batch.iter().enumerate() {
+                    obs::sim_time(bev.t);
+                    match bev.kind {
+                        EventKind::NodeFail { node } => {
+                            if total_remaining == 0 {
+                                continue;
+                            }
+                            let cluster = dep.cluster_of(node);
+                            if !membership.is_alive(node)
+                                || membership.alive_members(cluster).len() <= 1
+                            {
+                                continue;
+                            }
+                            membership.fail(&dep, node);
+                            metrics.node_failures += 1;
+                            obs::event(obs::TraceKind::Failure, bev.t, node as f64, 0.0);
+                            plan[cluster] = Some((bi, PlannedChurn::Fail { victim: node }));
+                        }
+                        EventKind::NodeJoin { node } => {
+                            if total_remaining == 0 || !membership.join(&dep, node) {
+                                continue;
+                            }
+                            obs::event(obs::TraceKind::Join, bev.t, node as f64, 0.0);
+                            plan[dep.cluster_of(node)] = Some((bi, PlannedChurn::Join { node }));
+                        }
+                        _ => unreachable!("non-churn event in a churn batch"),
+                    }
+                }
+                // Group-parallel lane phases, folded in batch (time)
+                // order — sums, so the fold order is for auditability.
+                if plan.iter().any(Option::is_some) {
+                    let t_last = batch.last().expect("batch is non-empty").t;
+                    let mut outs: Vec<(usize, LaneOutcome)> = {
+                        let plan = &plan;
+                        let (membership, dep, graph, workload, view_demand) =
+                            (&membership, &dep, &graph, &workload, &view_demand);
+                        dispatch_groups(&mut lanes, tree, shards, t_last, |lane| {
+                            plan[lane.cluster].map(|(bi, planned)| {
+                                let out = match planned {
+                                    PlannedChurn::Fail { victim } => fail_lane_phase(
+                                        lane, victim, dep, membership, graph, workload,
+                                        view_demand, cfg, dc,
+                                    ),
+                                    PlannedChurn::Join { node } => {
+                                        join_lane_phase(lane, node, dep, membership);
+                                        LaneOutcome::default()
+                                    }
+                                };
+                                (bi, out)
+                            })
+                        })
+                        .into_iter()
+                        .flatten()
+                        .collect()
+                    };
+                    outs.sort_unstable_by_key(|&(bi, _)| bi);
+                    for (_, o) in outs {
+                        metrics.collisions += o.collisions;
+                        metrics.shield_corrections += o.corrections;
+                        metrics.rescheduled_layers += o.rescheduled;
+                    }
+                }
+                continue;
+            }
+        }
         match ev.kind {
             EventKind::Sample => {
                 if total_remaining > 0 || ev.t < horizon {
-                    // Lanes hold contiguous ascending node spans, so
-                    // cluster-order iteration reproduces the legacy
-                    // whole-deployment node order.
-                    for lane in &lanes {
-                        for n in lane.state.node_ids() {
-                            metrics.tasks_per_device.push(lane.state.task_count(n) as f64);
-                            metrics.util_cpu.push(
-                                lane.state.actual_util(n, ResourceKind::Cpu).clamp(0.0, 2.0),
-                            );
-                            metrics.util_mem.push(
-                                lane.state.actual_util(n, ResourceKind::Mem).clamp(0.0, 2.0),
-                            );
-                            metrics.util_bw.push(
-                                lane.state.actual_util(n, ResourceKind::Bw).clamp(0.0, 2.0),
-                            );
+                    if let Some(tree) = tree.as_ref() {
+                        // Group-parallel read of the per-lane samples,
+                        // folded in cluster order — lanes hold
+                        // contiguous ascending node spans, so this is
+                        // the flat handler's push order exactly.
+                        for q in
+                            dispatch_groups(&mut lanes, tree, shards, ev.t, |lane| {
+                                sample_lane_phase(lane)
+                            })
+                        {
+                            metrics.tasks_per_device.extend_from_slice(&q[0]);
+                            metrics.util_cpu.extend_from_slice(&q[1]);
+                            metrics.util_mem.extend_from_slice(&q[2]);
+                            metrics.util_bw.extend_from_slice(&q[3]);
+                        }
+                    } else {
+                        // Lanes hold contiguous ascending node spans, so
+                        // cluster-order iteration reproduces the legacy
+                        // whole-deployment node order.
+                        for lane in &lanes {
+                            for n in lane.state.node_ids() {
+                                metrics.tasks_per_device.push(lane.state.task_count(n) as f64);
+                                metrics.util_cpu.push(
+                                    lane.state.actual_util(n, ResourceKind::Cpu).clamp(0.0, 2.0),
+                                );
+                                metrics.util_mem.push(
+                                    lane.state.actual_util(n, ResourceKind::Mem).clamp(0.0, 2.0),
+                                );
+                                metrics.util_bw.push(
+                                    lane.state.actual_util(n, ResourceKind::Bw).clamp(0.0, 2.0),
+                                );
+                            }
                         }
                     }
                     // Windowed samplers: read-only over the samples just
@@ -515,9 +1002,26 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 }
             }
             EventKind::ViewRefresh => {
-                for lane in &lanes {
-                    for n in lane.state.node_ids() {
-                        view_demand[n] = *lane.state.demand(n);
+                if let Some(tree) = tree.as_ref() {
+                    // Group-parallel snapshot of each lane's demand
+                    // span, written back serially in cluster order
+                    // (lanes hold contiguous ascending node spans, so
+                    // the running offset is each lane's span start).
+                    let mut at = 0usize;
+                    for v in dispatch_groups(&mut lanes, tree, shards, ev.t, |lane| {
+                        lane.state
+                            .node_ids()
+                            .map(|n| *lane.state.demand(n))
+                            .collect::<Vec<Resources>>()
+                    }) {
+                        view_demand[at..at + v.len()].copy_from_slice(&v);
+                        at += v.len();
+                    }
+                } else {
+                    for lane in &lanes {
+                        for n in lane.state.node_ids() {
+                            view_demand[n] = *lane.state.demand(n);
+                        }
                     }
                 }
                 if total_remaining > 0 {
@@ -665,6 +1169,42 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 membership = Membership::rebuild(&dep, &alive);
                 for &node in &moved {
                     moved_by_cluster[dep.cluster_of(node)].push(node);
+                }
+                if let Some(tree) = tree.as_ref() {
+                    // Group-parallel per-lane phase (handoffs, migration
+                    // scan + reschedule, overload edges); counters and
+                    // handoff trace events fold in cluster order — the
+                    // flat loops' order exactly.
+                    let outs = {
+                        let (membership, dep, graph, view_demand, moved_by_cluster) =
+                            (&membership, &dep, &graph, &view_demand, &moved_by_cluster);
+                        dispatch_groups(&mut lanes, tree, shards, ev.t, |lane| {
+                            mobility_lane_phase(
+                                lane,
+                                &moved_by_cluster[lane.cluster],
+                                dep,
+                                membership,
+                                graph,
+                                view_demand,
+                                cfg,
+                                dc,
+                            )
+                        })
+                    };
+                    for (cluster, o) in outs.iter().enumerate() {
+                        metrics.region_handoffs += o.handoffs;
+                        if o.handoffs > 0 {
+                            let (c, h) = (cluster as f64, o.handoffs as f64);
+                            obs::event(obs::TraceKind::Handoff, ev.t, c, h);
+                        }
+                        metrics.collisions += o.collisions;
+                        metrics.shield_corrections += o.corrections;
+                        metrics.migrated_layers += o.migrated;
+                    }
+                    for nodes in moved_by_cluster.iter_mut() {
+                        nodes.clear();
+                    }
+                    continue;
                 }
                 for (cluster, nodes) in moved_by_cluster.iter_mut().enumerate() {
                     if nodes.is_empty() {
@@ -864,5 +1404,60 @@ mod tests {
         }
         assert!(failures > 0, "no failure event fired across 3 seeds");
         assert!(rescheduled > 0, "failures never stranded a layer");
+    }
+
+    #[test]
+    fn metrics_are_byte_identical_across_tree_fanouts() {
+        // Fanout 0 (the flat serial driver) is the pinned reference for
+        // every tree shape, both with blast churn (which escalates to
+        // the serial root pass) and without it (where fail/join events
+        // batch group-parallel), under mobility, for every shard count.
+        for blast in [0.0f64, 200.0] {
+            let mut cfg = sharded_cfg(1);
+            cfg.mobility =
+                crate::net::MobilityModel::RandomWaypoint { speed_mps: 2.0, pause_secs: 0.0 };
+            cfg.mobility_tick_secs = 10.0;
+            cfg.blast_radius_m = blast;
+            let base = run_sharded(&cfg, Method::SroleD, 9).to_json().to_string();
+            for fanout in [2usize, 8] {
+                for shards in [1usize, 8] {
+                    cfg.shards = shards;
+                    cfg.tree_fanout = fanout;
+                    let r = run_sharded(&cfg, Method::SroleD, 9).to_json().to_string();
+                    assert_eq!(
+                        base, r,
+                        "tree diverges at fanout={fanout} shards={shards} blast={blast}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn group_parallel_driver_matches_serial_over_many_churn_steps() {
+        // Heavy single-victim churn (mean interarrival ~3 s over a
+        // ~100 s+ horizon, quick rejoins) plus mobility ticks: well over
+        // a hundred driver-queue steps, most of them fail/join events
+        // that exercise the batch builder — the group-parallel driver
+        // must replay the flat serial driver byte for byte.
+        let mut cfg = sharded_cfg(1);
+        cfg.failure_rate = 300.0;
+        cfg.rejoin_secs = 20.0;
+        cfg.mobility =
+            crate::net::MobilityModel::RandomWaypoint { speed_mps: 2.0, pause_secs: 0.0 };
+        cfg.mobility_tick_secs = 5.0;
+        let base = run_sharded(&cfg, Method::SroleD, 13);
+        assert!(
+            base.node_failures >= 20,
+            "expected heavy churn, saw {} failures",
+            base.node_failures
+        );
+        let base = base.to_json().to_string();
+        for shards in [1usize, 8] {
+            cfg.shards = shards;
+            cfg.tree_fanout = 2;
+            let r = run_sharded(&cfg, Method::SroleD, 13).to_json().to_string();
+            assert_eq!(base, r, "group-parallel driver diverges at shards={shards}");
+        }
     }
 }

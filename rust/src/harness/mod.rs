@@ -72,6 +72,12 @@ impl Scenario {
         if cfg.shards > 0 {
             label.push_str(&format!("/sh{}", cfg.shards));
         }
+        if cfg.tree_fanout > 0 {
+            label.push_str(&format!("/tree{}", cfg.tree_fanout));
+        }
+        if cfg.cross_cluster {
+            label.push_str("/xc");
+        }
         if !cfg.batch_decisions {
             label.push_str("/perdec");
         }
@@ -584,6 +590,55 @@ mod tests {
             }
         }
         assert!(failures > 0, "vacuous: no churn fired in any sharded scenario");
+    }
+
+    #[test]
+    fn shield_tree_sweeps_are_byte_identical_across_fanouts() {
+        // The shield-tree acceptance criterion at harness altitude:
+        // with `cross_cluster` off, the same churn + mobility sweep must
+        // produce byte-identical `RunMetrics` for every `tree_fanout`
+        // (0 = the flat serial driver, the pinned reference) at every
+        // shard count, and the tree knob must tag the label.
+        let mut base = tiny_base();
+        base.n_edges = 10; // two clusters → two lanes
+        base.cluster_size = 5;
+        base.failure_rate = 3.0;
+        base.rejoin_secs = 120.0;
+        base.mobility =
+            crate::net::MobilityModel::RandomWaypoint { speed_mps: 2.0, pause_secs: 0.0 };
+        base.mobility_tick_secs = 10.0;
+        let sweep = |shards: usize, fanout: usize| {
+            let mut b = base.clone();
+            b.shards = shards;
+            b.tree_fanout = fanout;
+            Sweep::new(b).methods(&[Method::Marl, Method::SroleD])
+        };
+        let mut failures = 0usize;
+        for &shards in &[1usize, 8] {
+            let flat = run_parallel(&sweep(shards, 0).scenarios(), 2);
+            for &fanout in &[2usize, 8] {
+                let tree = run_parallel(&sweep(shards, fanout).scenarios(), 2);
+                assert_eq!(flat.len(), tree.len());
+                for (f, t) in flat.iter().zip(&tree) {
+                    assert!(!f.scenario.label.contains("/tree"), "{}", f.scenario.label);
+                    assert!(
+                        t.scenario.label.contains(&format!("/tree{fanout}")),
+                        "{}",
+                        t.scenario.label
+                    );
+                    assert!(!t.scenario.label.contains("/xc"), "{}", t.scenario.label);
+                    assert_eq!(
+                        f.metrics.to_json().to_string(),
+                        t.metrics.to_json().to_string(),
+                        "{}: report diverged between fanout=0 and fanout={fanout} \
+                         at shards={shards}",
+                        f.scenario.label
+                    );
+                    failures += f.metrics.node_failures;
+                }
+            }
+        }
+        assert!(failures > 0, "vacuous: no churn fired in any tree scenario");
     }
 
     #[test]

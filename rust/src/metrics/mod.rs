@@ -56,6 +56,13 @@ pub struct RunMetrics {
     /// Zero-padding rows added to fill each chunk to the lane size
     /// (computed and discarded; a measure of ragged-batch waste).
     pub qnet_batch_pad_rows: usize,
+    /// Cross-cluster shield checks escalated past a super-shield group
+    /// to the tree root because the boundary pair crossed a group
+    /// boundary (`shield::tree`; 0 unless `cross_cluster` is on).
+    pub shield_tree_escalations: usize,
+    /// Layers placed on an alive boundary-pair neighbor in an adjacent
+    /// cluster (`cross_cluster` opt-in; 0 when the knob is off).
+    pub cross_cluster_placements: usize,
     /// Per-(node, sample) task counts.
     pub tasks_per_device: Vec<f64>,
     /// Per-(node, sample) utilization per resource.
@@ -137,6 +144,8 @@ impl RunMetrics {
             ("qnet_batch_fwds", Json::Num(self.qnet_batch_fwds as f64)),
             ("qnet_batch_rows", Json::Num(self.qnet_batch_rows as f64)),
             ("qnet_batch_pad_rows", Json::Num(self.qnet_batch_pad_rows as f64)),
+            ("shield_tree_escalations", Json::Num(self.shield_tree_escalations as f64)),
+            ("cross_cluster_placements", Json::Num(self.cross_cluster_placements as f64)),
             ("tasks_per_device", arr(&self.tasks_per_device)),
             ("util_cpu", arr(&self.util_cpu)),
             ("util_mem", arr(&self.util_mem)),
@@ -165,6 +174,8 @@ impl RunMetrics {
         self.qnet_batch_fwds += other.qnet_batch_fwds;
         self.qnet_batch_rows += other.qnet_batch_rows;
         self.qnet_batch_pad_rows += other.qnet_batch_pad_rows;
+        self.shield_tree_escalations += other.shield_tree_escalations;
+        self.cross_cluster_placements += other.cross_cluster_placements;
         self.tasks_per_device.extend_from_slice(&other.tasks_per_device);
         self.util_cpu.extend_from_slice(&other.util_cpu);
         self.util_mem.extend_from_slice(&other.util_mem);
@@ -197,6 +208,8 @@ mod tests {
             qnet_batch_fwds: 5,
             qnet_batch_rows: 40,
             qnet_batch_pad_rows: 3,
+            shield_tree_escalations: 2,
+            cross_cluster_placements: 1,
             tasks_per_device: vec![2.0, 3.0, 5.0],
             util_cpu: vec![0.5, 0.6],
             util_mem: vec![0.4, 0.5],
@@ -230,6 +243,8 @@ mod tests {
         assert_eq!(a.qnet_batch_fwds, 10);
         assert_eq!(a.qnet_batch_rows, 80);
         assert_eq!(a.qnet_batch_pad_rows, 6);
+        assert_eq!(a.shield_tree_escalations, 4);
+        assert_eq!(a.cross_cluster_placements, 2);
         assert_eq!(a.makespan, 1234.0);
     }
 
@@ -280,6 +295,8 @@ mod tests {
             qnet_batch_fwds: c(rng),
             qnet_batch_rows: c(rng),
             qnet_batch_pad_rows: c(rng),
+            shield_tree_escalations: c(rng),
+            cross_cluster_placements: c(rng),
             tasks_per_device: v(rng),
             util_cpu: v(rng),
             util_mem: v(rng),

@@ -63,10 +63,14 @@ pub enum Phase {
     /// Serial barrier section of the sharded engine (driver events +
     /// lane merges between epochs).
     EpochBarrier = 5,
+    /// Group-parallel section of a shield-tree epoch barrier: one
+    /// super-shield group's worth of cross-region work, attributed to
+    /// the lanes the group worker touched (`tree_fanout >= 1` only).
+    GroupDispatch = 6,
 }
 
 /// Number of phases (array sizes in [`PhaseProfile`]).
-pub const N_PHASES: usize = 6;
+pub const N_PHASES: usize = 7;
 
 impl Phase {
     pub const ALL: [Phase; N_PHASES] = [
@@ -76,6 +80,7 @@ impl Phase {
         Phase::LinkReprice,
         Phase::EventDispatch,
         Phase::EpochBarrier,
+        Phase::GroupDispatch,
     ];
 
     pub fn name(self) -> &'static str {
@@ -86,6 +91,7 @@ impl Phase {
             Phase::LinkReprice => "link_reprice",
             Phase::EventDispatch => "event_dispatch",
             Phase::EpochBarrier => "epoch_barrier",
+            Phase::GroupDispatch => "group_dispatch",
         }
     }
 }

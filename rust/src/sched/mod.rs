@@ -296,6 +296,28 @@ pub fn marl_candidates_proximity_into(
     out.truncate(MAX_NEIGHBORS + 1);
 }
 
+/// Alive out-of-cluster transmission neighbors of `owner`, ascending by
+/// node id — the candidate pool for opt-in cross-cluster rescue
+/// (`cross_cluster`, dynamic engine only).  In-cluster neighbors are
+/// the ordinary candidate sets' job and are excluded here; the caller
+/// (`coordinator::dynamic`) filters the pool through the shield tree's
+/// boundary-pair visible sets before placing anything.
+pub fn cross_candidates_into(
+    dep: &Deployment,
+    membership: &Membership,
+    owner: NodeId,
+    out: &mut Vec<NodeId>,
+) {
+    out.clear();
+    let co = dep.cluster_of(owner);
+    for &nb in dep.topo.neighbors_ref(owner) {
+        if dep.cluster_of(nb) != co && membership.is_alive(nb) {
+            out.push(nb);
+        }
+    }
+    out.sort_unstable();
+}
+
 /// Sample the actual (noisy) demand realized at execution time.
 pub(crate) fn noisy_demand(est: &Resources, rng: &mut Rng) -> Resources {
     let f = |v: f64, rng: &mut Rng| (v * (1.0 + DEMAND_NOISE_SD * rng.normal())).max(0.5 * v);
@@ -1101,6 +1123,39 @@ mod tests {
         let wl = Workload::generate(&mut rng, &dep, &spec, 1000.0);
         let jobs: Vec<DlJob> = wl.dl_jobs.into_iter().filter(|j| j.cluster == 0).collect();
         (dep, state, graph, jobs, rng)
+    }
+
+    #[test]
+    fn cross_candidates_are_alive_foreign_neighbors_ascending() {
+        let mut rng = Rng::new(7);
+        // Tight spread so transmission ranges cross cluster boundaries.
+        let dep = Deployment::generate_spread(&mut rng, 20, 5, &CONTAINER_PROFILE, 40.0);
+        let mut membership = crate::cluster::Membership::full(&dep);
+        let mut out = Vec::new();
+        let mut any = 0usize;
+        for owner in 0..dep.n() {
+            cross_candidates_into(&dep, &membership, owner, &mut out);
+            any += out.len();
+            assert!(out.windows(2).all(|w| w[0] < w[1]), "not ascending / not deduped");
+            for &c in &out {
+                assert_ne!(dep.cluster_of(c), dep.cluster_of(owner));
+                assert!(membership.is_alive(c));
+                assert!(dep.topo.neighbors_ref(owner).contains(&c));
+            }
+        }
+        assert!(any > 0, "no cross-cluster edge in a 40 m spread");
+        // Dead foreign neighbors drop out.
+        let owner = (0..dep.n())
+            .find(|&o| {
+                cross_candidates_into(&dep, &membership, o, &mut out);
+                !out.is_empty()
+            })
+            .expect("some owner has a cross candidate");
+        cross_candidates_into(&dep, &membership, owner, &mut out);
+        let dead = out[0];
+        membership.fail(&dep, dead);
+        cross_candidates_into(&dep, &membership, owner, &mut out);
+        assert!(!out.contains(&dead));
     }
 
     #[test]

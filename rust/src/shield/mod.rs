@@ -11,13 +11,19 @@
 //!   every action (SROLE-C).
 //! * [`decentral::DecentralShield`] — one shield per sub-cluster plus
 //!   delegate checks on sub-cluster boundaries (SROLE-D).
+//! * [`tree::ShieldTree`] — regional shields grouped under
+//!   super-shields (`tree_fanout` knob): group-local boundary checks,
+//!   root escalation only across groups, and the visible sets behind
+//!   opt-in cross-cluster placement.
 
 pub mod central;
 pub mod decentral;
 pub mod reference;
+pub mod tree;
 
 pub use central::CentralShield;
 pub use decentral::DecentralShield;
+pub use tree::ShieldTree;
 
 use crate::cluster::{Deployment, NodeId, ResourceKind, Resources};
 use crate::sim::state::ResourceState;

@@ -1,0 +1,387 @@
+//! Hierarchical shield tree (shields-of-shields): regional
+//! [`DecentralShield`](super::DecentralShield)s grouped under
+//! super-shields.
+//!
+//! The paper's scaling argument — one central shield bottlenecks, so
+//! shields decentralize per region with boundary coordination — stops
+//! one level short: with hundreds of cluster shields, the *boundary*
+//! coordination itself becomes the serial term.  The tree adds one more
+//! level: clusters are grouped under super-shields by geographic
+//! proximity (`tree_fanout` clusters per group, grid-seeded over the
+//! cluster centroids exactly like the sub-cluster partitioner seeds
+//! regions over member cells), boundary pairs *interior* to a group are
+//! checked group-locally, and only pairs crossing group boundaries
+//! escalate to the root.  `coordinator::shard` uses the grouping to
+//! bucket cross-region events and handle groups concurrently; the
+//! `cross_cluster` knob uses the boundary-pair visible sets to shield
+//! placements that leave their home cluster.
+//!
+//! The grouping is *static*: built once from the t = 0 cluster
+//! centroids and topology adjacency.  Under mobility the live adjacency
+//! drifts away from the build-time pairs — cross-cluster rescue
+//! therefore requires a candidate to be a *current* topology neighbor
+//! AND inside the build-time pair visible set, so the tree never
+//! launders a placement the boundary shields could not have seen.
+//!
+//! `tree_fanout = 0` disables the tree entirely (the flat
+//! `DecentralShield` + serial driver is the pinned reference);
+//! `RunMetrics` is byte-identical for every fanout as long as
+//! `cross_cluster` stays off (pinned in `harness` and
+//! `coordinator::shard` tests).
+
+use crate::cluster::subcluster::farthest_point_assign;
+use crate::cluster::{Deployment, NodeId};
+use crate::net::{Pos, SpatialGrid};
+use crate::util::NodeSet;
+
+/// The super-shield grouping of a deployment's clusters, plus the
+/// cluster-level boundary pairs the groups coordinate over.
+#[derive(Debug, Clone)]
+pub struct ShieldTree {
+    /// The `tree_fanout` the tree was built with (≥ 1).
+    pub fanout: usize,
+    /// Number of super-shield groups (≤ ceil(clusters / fanout);
+    /// degenerate centroid layouts collapse to fewer).
+    pub n_groups: usize,
+    /// `group_of[cluster]` = super-shield group of that cluster.
+    pub group_of: Vec<usize>,
+    /// Clusters per group, ascending cluster order.
+    pub groups: Vec<Vec<usize>>,
+    /// Adjacent cluster pairs `(a, b)`, `a < b`, ascending: clusters
+    /// are adjacent when some node of one has a topology neighbor in
+    /// the other (at build time).
+    pub pairs: Vec<(usize, usize)>,
+    /// Per pair (parallel to `pairs`): the nodes of either cluster with
+    /// a build-time topology neighbor in the other — the visible set
+    /// the pair's boundary shields coordinate over.
+    pair_visible: Vec<NodeSet>,
+    /// `pairs_of[cluster]` = indices into `pairs` involving the cluster.
+    pairs_of: Vec<Vec<usize>>,
+}
+
+impl ShieldTree {
+    /// Group `dep`'s clusters under super-shields, at most `fanout`
+    /// clusters per group (`fanout` is clamped to ≥ 1).
+    ///
+    /// Grouping is grid-seeded over the cluster centroids, reusing
+    /// [`SpatialGrid`] the same way the sub-cluster partitioner does
+    /// over member positions: centroids bin into range-sized cells,
+    /// occupied-cell centroids are farthest-point-seeded down to
+    /// `ceil(clusters / fanout)` seeds, each cell joins its nearest
+    /// seed, and every cluster inherits its cell's group.  Degenerate
+    /// layouts (one cluster, coincident centroids, fanout beyond the
+    /// cluster count) collapse to fewer groups instead of panicking.
+    pub fn build(dep: &Deployment, fanout: usize) -> ShieldTree {
+        let fanout = fanout.max(1);
+        let n_clusters = dep.clusters.len();
+        let centroids: Vec<Pos> = dep
+            .clusters
+            .iter()
+            .map(|c| {
+                let (sx, sy) = c.members.iter().fold((0.0, 0.0), |(x, y), &m| {
+                    (x + dep.topo.positions[m].x, y + dep.topo.positions[m].y)
+                });
+                let n = c.members.len().max(1) as f64;
+                Pos { x: sx / n, y: sy / n }
+            })
+            .collect();
+        let k_groups = n_clusters.div_ceil(fanout).max(1);
+
+        // Grid-seeded grouping: near-coincident centroids share a cell
+        // (and therefore a group), exactly like the grid partitioner's
+        // cell-merge over member positions.
+        let grid = SpatialGrid::build(&centroids, dep.topo.range.max(1e-9));
+        let cells: Vec<(Vec<usize>, (f64, f64))> = grid
+            .cells()
+            .map(|(_, items)| {
+                let (sx, sy) = items
+                    .iter()
+                    .fold((0.0, 0.0), |(x, y), &i| (x + centroids[i].x, y + centroids[i].y));
+                let c = (sx / items.len() as f64, sy / items.len() as f64);
+                (items.to_vec(), c)
+            })
+            .collect();
+        let cell_centroids: Vec<(f64, f64)> = cells.iter().map(|(_, c)| *c).collect();
+        let (cell_group, n_groups) = farthest_point_assign(&cell_centroids, k_groups);
+        let mut group_of = vec![0usize; n_clusters];
+        for ((clusters, _), &g) in cells.iter().zip(&cell_group) {
+            for &ci in clusters {
+                group_of[ci] = g;
+            }
+        }
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n_groups];
+        for (ci, &g) in group_of.iter().enumerate() {
+            groups[g].push(ci);
+        }
+
+        // Cluster-adjacency pairs + visible sets from the build-time
+        // topology: every in-range edge crossing a cluster boundary
+        // makes its endpoints' clusters adjacent and both endpoints
+        // visible to the pair's boundary shields.  O(n·k).
+        let mut pairs: Vec<(usize, usize)> = Vec::new();
+        for m in 0..dep.n() {
+            let ci = dep.cluster_of(m);
+            for &nb in dep.topo.neighbors_ref(m) {
+                let cj = dep.cluster_of(nb);
+                if ci != cj {
+                    pairs.push((ci.min(cj), ci.max(cj)));
+                }
+            }
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+        let mut pair_visible: Vec<NodeSet> =
+            pairs.iter().map(|_| NodeSet::with_universe(dep.n())).collect();
+        let mut pairs_of: Vec<Vec<usize>> = vec![Vec::new(); n_clusters];
+        for (pi, &(a, b)) in pairs.iter().enumerate() {
+            pairs_of[a].push(pi);
+            pairs_of[b].push(pi);
+        }
+        for m in 0..dep.n() {
+            let ci = dep.cluster_of(m);
+            for &nb in dep.topo.neighbors_ref(m) {
+                let cj = dep.cluster_of(nb);
+                if ci != cj {
+                    let pi = pair_index_in(&pairs, ci, cj).expect("pair recorded above");
+                    pair_visible[pi].insert(m);
+                    pair_visible[pi].insert(nb);
+                }
+            }
+        }
+
+        ShieldTree { fanout, n_groups, group_of, groups, pairs, pair_visible, pairs_of }
+    }
+
+    /// Super-shield group of `cluster`.
+    #[inline]
+    pub fn group_of_cluster(&self, cluster: usize) -> usize {
+        self.group_of[cluster]
+    }
+
+    /// Clusters of one group, ascending.
+    #[inline]
+    pub fn clusters_of(&self, group: usize) -> &[usize] {
+        &self.groups[group]
+    }
+
+    /// Whether the cluster pair is *interior* to one super-shield group
+    /// (checked group-locally) rather than crossing group boundaries
+    /// (escalates to the tree root).
+    #[inline]
+    pub fn interior(&self, a: usize, b: usize) -> bool {
+        self.group_of[a] == self.group_of[b]
+    }
+
+    /// Index into `pairs` of the adjacent cluster pair, if adjacent.
+    #[inline]
+    pub fn pair_index(&self, a: usize, b: usize) -> Option<usize> {
+        pair_index_in(&self.pairs, a, b)
+    }
+
+    /// Visible set of pair `pi`: the nodes of either cluster with a
+    /// build-time topology neighbor in the other.
+    #[inline]
+    pub fn pair_visible_set(&self, pi: usize) -> &NodeSet {
+        &self.pair_visible[pi]
+    }
+
+    /// Indices into `pairs` involving `cluster`, ascending.
+    #[inline]
+    pub fn pairs_of_cluster(&self, cluster: usize) -> &[usize] {
+        &self.pairs_of[cluster]
+    }
+
+    /// Pick the cross-cluster rescue target for `owner` among
+    /// `candidates` (its alive out-of-cluster topology neighbors,
+    /// ascending — see `sched::cross_candidates_into`): the first
+    /// candidate inside a boundary-pair visible set whose pair is
+    /// *interior* to `owner`'s super-shield group, else the first in
+    /// any pair's visible set (an escalation past the group to the
+    /// root).  Returns `(target, escalated)`; `None` when no candidate
+    /// is visible to any boundary pair.
+    pub fn cross_rescue_target(
+        &self,
+        dep: &Deployment,
+        owner: NodeId,
+        candidates: &[NodeId],
+    ) -> Option<(NodeId, bool)> {
+        let co = dep.cluster_of(owner);
+        let mut escalated: Option<NodeId> = None;
+        for &c in candidates {
+            let Some(pi) = self.pair_index(co, dep.cluster_of(c)) else {
+                continue;
+            };
+            if !self.pair_visible[pi].contains(c) || !self.pair_visible[pi].contains(owner) {
+                continue;
+            }
+            if self.interior(co, dep.cluster_of(c)) {
+                return Some((c, false));
+            }
+            if escalated.is_none() {
+                escalated = Some(c);
+            }
+        }
+        escalated.map(|c| (c, true))
+    }
+}
+
+/// Binary search for the normalized pair `(min, max)` in the sorted,
+/// deduplicated pair list.
+#[inline]
+fn pair_index_in(pairs: &[(usize, usize)], a: usize, b: usize) -> Option<usize> {
+    let key = (a.min(b), a.max(b));
+    pairs.binary_search(&key).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::CONTAINER_PROFILE;
+    use crate::util::Rng;
+
+    fn dep(n: usize, cluster_size: usize, seed: u64) -> Deployment {
+        let mut rng = Rng::new(seed);
+        Deployment::generate(&mut rng, n, cluster_size, &CONTAINER_PROFILE)
+    }
+
+    fn assert_well_formed(tree: &ShieldTree, dep: &Deployment) {
+        assert_eq!(tree.group_of.len(), dep.clusters.len());
+        assert_eq!(tree.groups.len(), tree.n_groups);
+        let mut covered = 0usize;
+        for (g, clusters) in tree.groups.iter().enumerate() {
+            assert!(!clusters.is_empty(), "no fabricated empty group {g}");
+            assert!(clusters.windows(2).all(|w| w[0] < w[1]), "ascending clusters");
+            for &ci in clusters {
+                assert_eq!(tree.group_of_cluster(ci), g);
+            }
+            covered += clusters.len();
+        }
+        assert_eq!(covered, dep.clusters.len(), "every cluster in exactly one group");
+        for (pi, &(a, b)) in tree.pairs.iter().enumerate() {
+            assert!(a < b);
+            assert_eq!(tree.pair_index(a, b), Some(pi));
+            assert_eq!(tree.pair_index(b, a), Some(pi), "pair lookup is symmetric");
+            assert!(tree.pairs_of_cluster(a).contains(&pi));
+            assert!(tree.pairs_of_cluster(b).contains(&pi));
+            let vis = tree.pair_visible_set(pi);
+            assert!(vis.len() >= 2, "an adjacent pair has ≥ 1 crossing edge");
+            for m in vis.iter() {
+                let cm = dep.cluster_of(m);
+                assert!(cm == a || cm == b, "visible nodes belong to the pair");
+                let other = if cm == a { b } else { a };
+                assert!(
+                    dep.topo.neighbors_ref(m).iter().any(|&nb| dep.cluster_of(nb) == other),
+                    "visible node {m} has no crossing neighbor"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_cluster_is_one_group_with_no_pairs() {
+        let d = dep(8, 8, 3);
+        assert_eq!(d.clusters.len(), 1);
+        let tree = ShieldTree::build(&d, 4);
+        assert_eq!(tree.n_groups, 1);
+        assert_eq!(tree.clusters_of(0), &[0]);
+        assert!(tree.pairs.is_empty());
+        assert_well_formed(&tree, &d);
+    }
+
+    #[test]
+    fn fanout_beyond_cluster_count_collapses_to_one_group() {
+        let d = dep(40, 10, 5);
+        assert_eq!(d.clusters.len(), 4);
+        let tree = ShieldTree::build(&d, 100);
+        assert_eq!(tree.n_groups, 1, "ceil(4/100) = 1 group");
+        assert_eq!(tree.clusters_of(0), &[0, 1, 2, 3]);
+        for &(a, b) in &tree.pairs {
+            assert!(tree.interior(a, b), "one group: every pair is interior");
+        }
+        assert_well_formed(&tree, &d);
+    }
+
+    #[test]
+    fn coincident_cluster_centroids_collapse_without_panicking() {
+        // Stack every node on one point: all centroids coincide, the
+        // centroid grid has a single occupied cell, and the grouping
+        // must collapse to one group instead of panicking or
+        // fabricating empty ones.
+        let mut d = dep(40, 10, 7);
+        for p in &mut d.topo.positions {
+            *p = Pos { x: 5.0, y: 5.0 };
+        }
+        d.refresh_adjacency();
+        let tree = ShieldTree::build(&d, 2);
+        assert_eq!(tree.n_groups, 1, "coincident centroids share a cell");
+        assert_well_formed(&tree, &d);
+        // Everything in range of everything: all cluster pairs adjacent.
+        assert_eq!(tree.pairs.len(), 4 * 3 / 2);
+    }
+
+    #[test]
+    fn fanout_one_gives_each_cluster_its_own_group_when_spread() {
+        // Centroids far enough apart for distinct grid cells.
+        let d = dep(60, 10, 11);
+        let tree = ShieldTree::build(&d, 1);
+        assert!(tree.n_groups >= 1 && tree.n_groups <= d.clusters.len());
+        assert_well_formed(&tree, &d);
+        // fanout 0 clamps to 1 and is identical.
+        let t0 = ShieldTree::build(&d, 0);
+        assert_eq!(t0.group_of, tree.group_of);
+        assert_eq!(t0.fanout, 1);
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let d = dep(80, 10, 13);
+        let a = ShieldTree::build(&d, 3);
+        let b = ShieldTree::build(&d, 3);
+        assert_eq!(a.group_of, b.group_of);
+        assert_eq!(a.pairs, b.pairs);
+        assert_well_formed(&a, &d);
+    }
+
+    #[test]
+    fn cross_rescue_prefers_interior_pairs_and_is_deterministic() {
+        let d = dep(40, 10, 17);
+        let tree = ShieldTree::build(&d, 2);
+        // Find any owner with cross-cluster neighbors.
+        let mut checked = 0usize;
+        for owner in 0..d.n() {
+            let co = d.cluster_of(owner);
+            let candidates: Vec<NodeId> = d
+                .topo
+                .neighbors_ref(owner)
+                .iter()
+                .copied()
+                .filter(|&nb| d.cluster_of(nb) != co)
+                .collect();
+            let Some((t, escalated)) = tree.cross_rescue_target(&d, owner, &candidates)
+            else {
+                continue;
+            };
+            checked += 1;
+            assert!(candidates.contains(&t));
+            assert_ne!(d.cluster_of(t), co);
+            assert_eq!(escalated, !tree.interior(co, d.cluster_of(t)));
+            if !escalated {
+                // Interior wins over any earlier escalated candidate.
+                let first_interior = candidates
+                    .iter()
+                    .copied()
+                    .find(|&c| {
+                        tree.pair_index(co, d.cluster_of(c)).is_some_and(|pi| {
+                            tree.pair_visible_set(pi).contains(c)
+                                && tree.pair_visible_set(pi).contains(owner)
+                        }) && tree.interior(co, d.cluster_of(c))
+                    })
+                    .unwrap();
+                assert_eq!(t, first_interior);
+            }
+            // Deterministic.
+            assert_eq!(tree.cross_rescue_target(&d, owner, &candidates), Some((t, escalated)));
+        }
+        assert!(checked > 0, "no node ever had a visible cross-cluster neighbor");
+    }
+}
