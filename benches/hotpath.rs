@@ -33,6 +33,13 @@
 //!   with byte-identical outcomes asserted before timing (batched must
 //!   be strictly faster at 300+ — asserted in full runs; smoke runs only
 //!   the 1000-agent cell);
+//! * open-loop serving workload: one full `workload = "serving"`
+//!   SROLE-D scenario (constant rate shape) on the legacy single-stream
+//!   driver (`shards = 0`) vs the sharded engine across every core, at
+//!   2000 / 10 000 nodes, with serving's cross-engine byte-identity
+//!   (shards 0 vs 1 vs N) asserted before timing (ratios printed only —
+//!   per-lane request streams are serial, so the speedup is
+//!   lane-count-bounded; smoke runs only the 2000 cell);
 //! * in-sim tracing: byte-identity of `RunMetrics` across trace
 //!   off / profile / full on a sharded SROLE-D scenario, the inert-guard
 //!   microbench (span + event + sample with no recorder installed)
@@ -702,6 +709,55 @@ fn main() {
             );
         }
     }
+    // --- serving workload: legacy driver vs sharded engine ---------------
+    // One full open-loop serving scenario (`workload = "serving"`,
+    // constant shape) in the scale-sweep geometry.  Serving is pinned
+    // byte-identical ACROSS engines — the request table is drawn before
+    // the engines diverge and every request uses a private RNG stream —
+    // so, unlike training, `shards = 0` vs sharded equality is asserted
+    // before anything is timed.  No strictly-faster assert: each lane's
+    // request stream is serial, so the speedup is bounded by lane count.
+    let serving_cfg = |n: usize, shards: usize| {
+        let mut cfg = shard_cfg(n, shards);
+        cfg.serving = true;
+        cfg.request_rate = 0.2;
+        cfg
+    };
+    {
+        let a = Experiment::new(serving_cfg(2_000, 0)).run(Method::SroleD).metrics;
+        for &shards in &[1usize, shard_workers] {
+            let b = Experiment::new(serving_cfg(2_000, shards)).run(Method::SroleD).metrics;
+            assert_eq!(
+                a.to_json().to_string(),
+                b.to_json().to_string(),
+                "serving diverged between the legacy driver and shards={shards} at 2k nodes"
+            );
+        }
+        assert!(a.requests_served > 0, "vacuous: the 2k serving cell served no requests");
+        assert!(a.jct.is_empty(), "serving must suppress training waves");
+    }
+    let mut serving_bench =
+        Bench::with_config("hotpath_serving", srole::util::benchkit::BenchConfig::sweep());
+    let serving_sizes: &[usize] = if bench_fast { &[2_000] } else { &[2_000, 10_000] };
+    for &n in serving_sizes {
+        let cfg_legacy = serving_cfg(n, 0);
+        let cfg_sharded = serving_cfg(n, shard_workers);
+        let t_legacy = serving_bench
+            .measure(&format!("serving_open_loop_legacy_{n}n"), || {
+                Experiment::new(cfg_legacy.clone()).run(Method::SroleD).metrics.requests_served
+            })
+            .median_secs();
+        let t_sharded = serving_bench
+            .measure(&format!("serving_open_loop_sharded_{n}n"), || {
+                Experiment::new(cfg_sharded.clone()).run(Method::SroleD).metrics.requests_served
+            })
+            .median_secs();
+        println!(
+            "serving sharded speedup at {n} nodes ({shard_workers} shards): {:.1}x",
+            t_legacy / t_sharded.max(1e-12)
+        );
+    }
+
     // --- parallel harness: 4-scenario sweep, serial vs parallel ---------
     let sweep_base = ExperimentConfig {
         n_edges: 10,
@@ -961,6 +1017,7 @@ fn main() {
     tree_bench.print_report();
     decision_bench.print_report();
     trace_bench.print_report();
+    serving_bench.print_report();
     match bench.write_json(std::path::Path::new(".")) {
         Ok(path) => println!("bench report: {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
@@ -980,5 +1037,9 @@ fn main() {
     match trace_bench.write_json(std::path::Path::new(".")) {
         Ok(path) => println!("bench report: {}", path.display()),
         Err(e) => eprintln!("could not write BENCH_hotpath_trace.json: {e}"),
+    }
+    match serving_bench.write_json(std::path::Path::new(".")) {
+        Ok(path) => println!("bench report: {}", path.display()),
+        Err(e) => eprintln!("could not write BENCH_hotpath_serving.json: {e}"),
     }
 }

@@ -4,7 +4,7 @@
 //! `(method × configuration)` cell is an independent, deterministic
 //! scenario, executed across OS threads.
 //!
-//! Usage: `figures <fig4|fig5|...|fig13|scale|churn|mobility|profile|all>`
+//! Usage: `figures <fig4|fig5|...|fig13|scale|churn|mobility|profile|serve|all>`
 //!        `[--reps N] [--seed S] [--iterations N] [--threads T]`
 //!        `[--models vgg16,googlenet,rnn] [--edges 5,10,15,20,25]`
 //!        `[--pretrain N] [--trace PATH]`
@@ -23,6 +23,10 @@
 //! by default) and prints the per-phase per-lane wall-clock attribution
 //! table plus sampled-series percentiles — `--trace PATH` additionally
 //! writes the JSONL event trace and its Chrome `trace_event` twin;
+//! `figures serve` sweeps the inference-serving workload over a
+//! rate-shape × SLO grid (latency p50/p99/p999, SLO violations,
+//! admission rejections; `--edges` picks the deployment size, cells of
+//! ≥1000 nodes shard their lanes) and writes `BENCH_serving.json`;
 //! `--edges` reshapes the
 //! Fig 4 sweep the same way.  Absolute numbers live on this simulated
 //! testbed, not the authors' EC2 cluster; the *shape* (who wins, by what
@@ -139,9 +143,14 @@ fn main() {
         matched = true;
         profile_figure(&ctx);
     }
+    if which == "serve" {
+        matched = true;
+        serve_figure(&ctx);
+    }
     if !matched {
         eprintln!(
-            "unknown figure {which}; use fig4..fig13, scale, churn, mobility, profile, or all"
+            "unknown figure {which}; use fig4..fig13, scale, churn, mobility, profile, \
+             serve, or all"
         );
         std::process::exit(2);
     }
@@ -644,6 +653,87 @@ fn profile_figure(ctx: &Ctx) {
             }
         }
     }
+}
+
+/// `figures serve`: the inference-serving sweep — a rate-shape × SLO
+/// grid (`workload = "serving"`), MARL vs SROLE-C vs SROLE-D, reporting
+/// end-to-end request latency p50/p99/p999 alongside the SLO-violation
+/// and admission-rejection counters.  `--edges` picks the deployment
+/// size (default 50); cells of ≥1000 nodes take the scale sweep's
+/// shape rules (capped cluster size, lanes sharded across every core),
+/// so a sharded 10 000-node cell is one `--edges 10000` away.  The
+/// sweep's wall-clock profile lands in `BENCH_serving.json`.
+fn serve_figure(ctx: &Ctx) {
+    use srole::workload::serving::RateShape;
+    const SERVE_METHODS: [Method; 3] = [Method::Marl, Method::SroleC, Method::SroleD];
+    const SHAPES: [RateShape; 3] =
+        [RateShape::Constant, RateShape::Diurnal, RateShape::Bursty];
+    const SLOS: [f64; 3] = [0.5, 2.0, 5.0];
+
+    let model = ctx.models.first().copied().unwrap_or(ModelKind::Vgg16);
+    let mut base = ctx.base(model);
+    base.n_edges =
+        if ctx.edges_explicit { *ctx.edges.first().expect("one edge count") } else { 50 };
+    base.cluster_size = base.n_edges.min(SCALE_CLUSTER_CAP);
+    base.subclusters = (base.cluster_size / 10).max(2);
+    if base.n_edges >= 1000 {
+        base.shards = srole::harness::default_threads();
+    }
+    base.serving = true;
+    base.request_rate = 0.2;
+
+    // The serving axes live outside `Sweep`'s dimensions: expand the
+    // rate-shape × SLO grid directly, methods varying fastest so each
+    // table row's cells are adjacent (the `Sweep` convention).
+    let mut scenarios = Vec::new();
+    for &shape in &SHAPES {
+        for &slo in &SLOS {
+            for &method in &SERVE_METHODS {
+                let mut cfg = base.clone();
+                cfg.rate_shape = shape;
+                cfg.slo_secs = slo;
+                scenarios.push(Scenario::new(method, cfg));
+            }
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let reports = run_parallel(&scenarios, ctx.threads);
+    let wall = t0.elapsed().as_secs_f64();
+    for (si, shape_rows) in reports.chunks(SLOS.len() * SERVE_METHODS.len()).enumerate() {
+        let mut t = Table::new(
+            &format!(
+                "serving sweep ({}, {}): latency p50/p99/p999 [s] / SLO viol / rejected",
+                model.name(),
+                SHAPES[si].label()
+            ),
+            &["slo_s", "MARL", "SROLE-C", "SROLE-D"],
+        );
+        for (li, row) in shape_rows.chunks(SERVE_METHODS.len()).enumerate() {
+            let mut cells = vec![format!("{:.1}", SLOS[li])];
+            for r in row {
+                match r.metrics.request_summary() {
+                    Some(p) => cells.push(format!(
+                        "{}/{}/{} / {} / {}",
+                        f(p.p50),
+                        f(p.p99),
+                        f(p.p999),
+                        r.metrics.slo_violations,
+                        r.metrics.requests_rejected
+                    )),
+                    None => cells.push("-".into()),
+                }
+            }
+            t.row(cells);
+        }
+        t.print();
+    }
+    let served: usize = reports.iter().map(|r| r.metrics.requests_served).sum();
+    let rejected: usize = reports.iter().map(|r| r.metrics.requests_rejected).sum();
+    println!(
+        "{} scenarios in {wall:.1}s wall, {served} requests served, {rejected} rejected",
+        reports.len()
+    );
+    write_bench("serving", &reports);
 }
 
 /// Persist a sweep's wall-clock profile as `BENCH_<name>.json` (perf

@@ -13,6 +13,7 @@ use crate::dnn::ModelKind;
 use crate::net::mobility::{self, MobilityModel};
 use crate::obs::TraceMode;
 use crate::rl::RewardParams;
+use crate::workload::serving::{RateShape, ServingSpec};
 use crate::workload::ArrivalProcess;
 
 /// Which testbed profile (Table I row group) to emulate.
@@ -148,6 +149,20 @@ pub struct ExperimentConfig {
     /// RNG, so `RunMetrics` is byte-identical across modes (pinned by
     /// harness tests).
     pub trace: TraceMode,
+    /// Run the open-loop inference-serving workload instead of training
+    /// waves (`workload = "serving"` in TOML, or `serving = true`).
+    /// DL training jobs are suppressed; `workload::serving` generates a
+    /// request stream that both event drivers route through the
+    /// admission gate + shielded per-request placement path.
+    pub serving: bool,
+    /// Mean serving request rate per cluster, requests/second.
+    pub request_rate: f64,
+    /// Serving rate envelope (`const | diurnal | bursty`).
+    pub rate_shape: RateShape,
+    /// Serving latency objective in seconds; a served request whose
+    /// end-to-end latency (queue + decision + transfer + service)
+    /// exceeds it counts as one SLO violation.
+    pub slo_secs: f64,
 }
 
 impl Default for ExperimentConfig {
@@ -183,6 +198,10 @@ impl Default for ExperimentConfig {
             tree_fanout: 0,
             cross_cluster: false,
             trace: TraceMode::Off,
+            serving: false,
+            request_rate: 0.5,
+            rate_shape: RateShape::Constant,
+            slo_secs: 5.0,
         }
     }
 }
@@ -222,7 +241,27 @@ impl ExperimentConfig {
                 self.profile = Profile::parse(val).ok_or(format!("unknown profile {val}"))?
             }
             "model" => self.model = ModelKind::parse(val).ok_or(format!("unknown model {val}"))?,
-            "workload" => self.workload = parse_f64(val)?,
+            // `workload` keeps its historical numeric meaning (the
+            // PageRank load fraction) and additionally selects the
+            // workload *kind*: `training` (the default) or `serving`.
+            "workload" => match val {
+                "training" => self.serving = false,
+                "serving" => self.serving = true,
+                num => self.workload = parse_f64(num)?,
+            },
+            "serving" => {
+                self.serving = match val {
+                    "true" | "1" | "yes" => true,
+                    "false" | "0" | "no" => false,
+                    other => return Err(format!("bad boolean {other} for serving")),
+                }
+            }
+            "request_rate" => self.request_rate = parse_f64(val)?,
+            "rate_shape" => {
+                self.rate_shape =
+                    RateShape::parse(val).ok_or(format!("unknown rate shape {val}"))?
+            }
+            "slo_secs" | "slo" => self.slo_secs = parse_f64(val)?,
             "jobs_per_cluster" => self.jobs_per_cluster = parse_usize(val)?,
             "iterations" => self.iterations = parse_usize(val)?,
             "reward.alpha" | "alpha" => self.reward.alpha = parse_f64(val)?,
@@ -368,6 +407,12 @@ impl ExperimentConfig {
         if self.mobility_tick_secs.is_nan() || self.mobility_tick_secs <= 0.0 {
             return Err("mobility_tick_secs must be positive".into());
         }
+        if !self.request_rate.is_finite() || self.request_rate < 0.0 {
+            return Err("request_rate must be a finite non-negative rate".into());
+        }
+        if !self.slo_secs.is_finite() || self.slo_secs < 0.0 {
+            return Err("slo_secs must be a finite non-negative latency objective".into());
+        }
         match &self.mobility {
             MobilityModel::Static => {}
             MobilityModel::RandomWaypoint { speed_mps, pause_secs } => {
@@ -398,10 +443,16 @@ impl ExperimentConfig {
     /// explicit opt-in) instead of the static pre-batched wave path.
     pub fn dynamic(&self) -> bool {
         self.event_driven
+            || self.serving
             || self.shards > 0
             || self.failure_rate > 0.0
             || self.mobility.enabled()
             || !matches!(self.arrival, ArrivalProcess::Batched { .. })
+    }
+
+    /// Serving-workload knobs bundled for `workload::serving`.
+    pub fn serving_spec(&self) -> ServingSpec {
+        ServingSpec { shape: self.rate_shape, rate: self.request_rate, slo_secs: self.slo_secs }
     }
 }
 
@@ -679,6 +730,57 @@ mod tests {
         let d = ExperimentConfig::default();
         assert_eq!(d.trace, TraceMode::Off, "tracing must be off by default");
         assert!(ExperimentConfig::from_toml("trace = \"verbose\"").is_err());
+    }
+
+    #[test]
+    fn serving_keys_parse_and_validate() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            workload = "serving"
+            request_rate = 2.5
+            rate_shape = "diurnal"
+            slo_secs = 1.5
+            "#,
+        )
+        .unwrap();
+        assert!(cfg.serving);
+        assert_eq!(cfg.request_rate, 2.5);
+        assert_eq!(cfg.rate_shape, RateShape::Diurnal);
+        assert_eq!(cfg.slo_secs, 1.5);
+        assert!(cfg.dynamic(), "serving must route through the event drivers");
+        cfg.validate().unwrap();
+
+        // The numeric meaning of `workload` is unchanged, and
+        // `workload = "training"` switches back off.
+        let cfg = ExperimentConfig::from_toml("workload = 0.8").unwrap();
+        assert!(!cfg.serving);
+        assert_eq!(cfg.workload, 0.8);
+        let cfg =
+            ExperimentConfig::from_toml("serving = true\nworkload = \"training\"").unwrap();
+        assert!(!cfg.serving, "workload = training must override serving = true");
+
+        let d = ExperimentConfig::default();
+        assert!(!d.serving, "training is the default workload");
+        assert_eq!(d.rate_shape, RateShape::Constant);
+        assert!(!d.dynamic());
+
+        // SLO of 0 is a legal (degenerate) objective; negatives and
+        // non-finite rates are not.
+        let mut zero = ExperimentConfig::default();
+        zero.serving = true;
+        zero.slo_secs = 0.0;
+        zero.validate().unwrap();
+        let mut bad = ExperimentConfig::default();
+        bad.request_rate = -1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.request_rate = f64::INFINITY;
+        assert!(bad.validate().is_err());
+        let mut bad = ExperimentConfig::default();
+        bad.slo_secs = -0.5;
+        assert!(bad.validate().is_err());
+        assert!(ExperimentConfig::from_toml("rate_shape = \"sawtooth\"").is_err());
+        assert!(ExperimentConfig::from_toml("serving = \"maybe\"").is_err());
     }
 
     #[test]

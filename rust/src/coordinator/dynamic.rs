@@ -19,7 +19,13 @@
 //!   re-partition region responsibility incrementally, and layers
 //!   stranded on the failed host are rescheduled by the owning agents
 //!   (`sched::reschedule_stranded`) with full decision-latency
-//!   accounting, so the overhead figures stay regenerable under churn.
+//!   accounting, so the overhead figures stay regenerable under churn;
+//! * `RequestArrival` / `RequestDone` — the inference-serving workload
+//!   (`workload = "serving"`): an open-loop request stream placed one
+//!   request at a time through the same shield/policy stack, with
+//!   admission control against the stale view and full latency
+//!   accounting (queue + decision + transfer + service) into
+//!   `RunMetrics::request_latency`.
 //!
 //! With `cross_cluster = true` (requires `tree_fanout >= 1`; this
 //! engine only — lane-sliced resource windows cannot host foreign
@@ -53,16 +59,19 @@ use crate::net::mobility::DynamicTopology;
 use crate::obs;
 use crate::rl::{Policy, TabularQ};
 use crate::sched::{
-    central_wave_dynamic, cross_candidates_into, marl_wave_dynamic, noisy_demand,
+    central_wave_dynamic, cross_candidates_into, marl_wave_dynamic, noisy_demand, place_request,
     reschedule_migrated, reschedule_stranded, DecisionConfig, DecisionMode, JobSchedule, Stranded,
     WaveOutcome,
 };
 use crate::shield::{CentralShield, DecentralShield, Shield, ShieldTree};
 use crate::sim::engine::SAMPLE_PERIOD_SECS;
 use crate::sim::event::{EventKind, EventQueue};
-use crate::sim::{timing, ResourceState};
+use crate::sim::{timing, ResourceState, TaskHandle};
 use crate::util::Rng;
+use crate::workload::serving::{generate_requests, Request};
 use crate::workload::{DlJob, Workload, WorkloadSpec};
+
+use std::collections::BTreeMap;
 
 use super::{pretrain, Method};
 
@@ -74,6 +83,31 @@ pub const VIEW_REFRESH_SECS: f64 = 60.0;
 /// scheduled in one concurrent wave (simultaneous decisions are what
 /// makes action collisions possible).
 pub const WAVE_BATCH_SECS: f64 = 5.0;
+
+/// RNG fork tag for the serving request schedule.  Both engines fork it
+/// from the main stream immediately after `Workload::generate` (and only
+/// when `workload = "serving"`), so the request schedules — and every
+/// later main-stream draw — match byte for byte across engines.
+pub(super) const SERVING_FORK: u64 = 0x5e7e;
+
+/// Per-request private RNG stream base: request `i` draws its decision
+/// noise and demand perturbation from `Rng::with_stream(seed,
+/// REQ_STREAM_BASE + i)`.  Every per-request draw is a function of
+/// `(run seed, request id)` alone — independent of event interleaving
+/// and engine — which is the keystone of the sharded engine's
+/// byte-identity with this driver on serving runs.
+pub(super) const REQ_STREAM_BASE: u64 = 0x5e7e_0000;
+
+/// Bookkeeping for an admitted, in-flight inference request.  Dropped
+/// from the live map either at `RequestDone` (served) or when its host
+/// fails mid-service (counted as `requests_failed`, never retried — the
+/// open-loop client's perspective).
+pub(super) struct LiveRequest {
+    pub(super) handle: TaskHandle,
+    pub(super) host: NodeId,
+    /// Full accounted latency: queue + decision + transfer + service.
+    pub(super) latency: f64,
+}
 
 /// Per-cluster shield instance (lives across waves and churn events, so
 /// its incremental region state persists).  Shared with the sharded
@@ -202,12 +236,31 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     let graph = cfg.model.build();
     let spec = WorkloadSpec {
         model: cfg.model,
-        jobs_per_cluster: cfg.jobs_per_cluster,
+        // Serving runs host no training jobs: the request stream is the
+        // workload (background jobs still churn underneath it).  Both
+        // engines apply the same override, so no wave ever fires and the
+        // main RNG stream stays engine-independent.
+        jobs_per_cluster: if cfg.serving { 0 } else { cfg.jobs_per_cluster },
         iterations: cfg.iterations,
         workload: cfg.workload,
         arrival: cfg.arrival.clone(),
     };
     let workload = Workload::generate(&mut rng, &dep, &spec, 500_000.0);
+
+    // Horizon shared with the static path: the nominal experiment
+    // duration at the target iteration rate (plus slack).  Serving runs
+    // use it as the request-stream window.
+    let horizon = cfg.iterations as f64 * crate::dnn::profile::TARGET_ITER_SECS * 2.5;
+
+    // Serving workload: draw the open-loop request schedule on its own
+    // fork (fires only when serving, like the mobility fork below, so
+    // training runs replay their pre-serving RNG streams exactly).
+    let requests: Vec<Request> = if cfg.serving {
+        let mut req_rng = rng.fork(SERVING_FORK);
+        generate_requests(&mut req_rng, &dep, &cfg.serving_spec(), &cfg.arrival, horizon)
+    } else {
+        Vec::new()
+    };
 
     // Mobility: couple the topology to its motion process (own forked
     // RNG stream, separate from scheduling draws).  The fork fires only
@@ -278,15 +331,15 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
         }
     }
 
-    // Arrival waves.
+    // Arrival waves (empty on serving runs) and the request stream.
     let waves = build_waves(&dep, &workload);
     for (wi, w) in waves.iter().enumerate() {
         queue.push(w.t, EventKind::JobArrival { wave: wi });
     }
+    for r in &requests {
+        queue.push(r.arrival, EventKind::RequestArrival { req: r.id });
+    }
 
-    // Sampling horizon shared with the static path: the nominal
-    // experiment duration at the target iteration rate (plus slack).
-    let horizon = cfg.iterations as f64 * crate::dnn::profile::TARGET_ITER_SECS * 2.5;
     queue.push(SAMPLE_PERIOD_SECS, EventKind::Sample);
     queue.push(VIEW_REFRESH_SECS, EventKind::ViewRefresh);
     if mobility.is_some() {
@@ -309,8 +362,17 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     }
 
     let mut runs: Vec<Option<Run>> = (0..workload.dl_jobs.len()).map(|_| None).collect();
-    let mut remaining = workload.dl_jobs.len();
+    let mut remaining = workload.dl_jobs.len() + requests.len();
     let n_clusters = dep.clusters.len();
+
+    // Serving bookkeeping: in-flight requests, the per-origin decision
+    // queue (an origin handles one placement decision at a time — the
+    // queueing term of the latency account), and per-cluster latency
+    // buffers appended in cluster order at run end, matching the sharded
+    // engine's lane-merge order byte for byte.
+    let mut live: BTreeMap<usize, LiveRequest> = BTreeMap::new();
+    let mut origin_busy: Vec<f64> = vec![0.0; dep.n()];
+    let mut req_latency: Vec<Vec<f64>> = vec![Vec::new(); n_clusters];
     // Stale state view for the failure handler (paper §III: agents and
     // shields act on periodic reports, not live state).
     let mut view_demand: Vec<Resources> = (0..state.n()).map(|n| *state.demand(n)).collect();
@@ -549,6 +611,22 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                             if let Some(h) = slot.take() {
                                 state.release(h);
                             }
+                        }
+                    }
+                    // In-flight requests served by the node die with it
+                    // (open-loop clients never retry); their stale
+                    // `RequestDone` events no-op against the live map.
+                    if !live.is_empty() {
+                        let lost: Vec<usize> = live
+                            .iter()
+                            .filter(|(_, lr)| lr.host == victim)
+                            .map(|(&id, _)| id)
+                            .collect();
+                        for id in lost {
+                            let lr = live.remove(&id).unwrap();
+                            state.release(lr.handle);
+                            metrics.requests_failed += 1;
+                            remaining -= 1;
                         }
                     }
                     // Strand and reschedule the DL layers the node hosted.
@@ -798,7 +876,74 @@ pub fn run_dynamic(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 }
                 check_overloads(&state, &mut metrics, &mut was_overloaded);
             }
+            EventKind::RequestArrival { req } => {
+                let r = &requests[req];
+                // Queueing: the origin serializes its placement
+                // decisions, so a request arriving while the previous
+                // decision is still in flight waits its turn.
+                let queue_wait = (origin_busy[r.origin] - ev.t).max(0.0);
+                // Per-request private stream (see `REQ_STREAM_BASE`):
+                // decision noise depends on (seed, id) alone, never on
+                // event interleaving, so the sharded engine replays it.
+                let mut req_rng = Rng::with_stream(seed, REQ_STREAM_BASE + req as u64);
+                let shield = shields[r.cluster].as_dyn();
+                let out = place_request(
+                    &dep, &membership, &state, &graph.layers[0], &view_demand, req, r.origin,
+                    &r.demand, policy, shield, &cfg.reward, &mut req_rng,
+                );
+                metrics.collisions += out.collisions;
+                metrics.shield_corrections += out.corrections;
+                let decision = out.sched_secs + out.shield_secs;
+                origin_busy[r.origin] = ev.t + queue_wait + decision;
+                match out.target {
+                    None => {
+                        // Admission control refused: the stale view says
+                        // every candidate would cross α.  Open-loop
+                        // clients don't retry.
+                        metrics.requests_rejected += 1;
+                        remaining -= 1;
+                    }
+                    Some(host) => {
+                        let actual = noisy_demand(&r.demand, &mut req_rng);
+                        let h = state.place(host, r.demand, actual, true);
+                        // Latency account: queue + decision + transfer
+                        // (input shipped origin→host through both NICs'
+                        // contention shares) + service (processor
+                        // sharing and memory pressure on the host).
+                        let transfer = dep.topo.transfer_secs(r.origin, host, r.mb, 1)
+                            / state.bw_share(r.origin).min(state.bw_share(host));
+                        let service = r.service_secs
+                            * (r.demand.cpu / state.cpu_share(host, r.demand.cpu)).max(1.0)
+                            * state.mem_pressure(host);
+                        let latency = queue_wait + decision + transfer + service;
+                        live.insert(req, LiveRequest { handle: h, host, latency });
+                        queue.push(ev.t + latency, EventKind::RequestDone { req });
+                        check_overloads(&state, &mut metrics, &mut was_overloaded);
+                    }
+                }
+            }
+            EventKind::RequestDone { req } => {
+                // Already evicted by a mid-service host failure.
+                let Some(lr) = live.remove(&req) else { continue };
+                state.release(lr.handle);
+                req_latency[requests[req].cluster].push(lr.latency);
+                metrics.requests_served += 1;
+                if lr.latency > cfg.slo_secs {
+                    metrics.slo_violations += 1;
+                }
+                metrics.makespan = metrics.makespan.max(ev.t);
+                // No early loop break (unlike `IterEnd`): the sharded
+                // engine's lanes cannot observe the global remaining
+                // count mid-epoch, so serving runs drain their queues in
+                // both engines — that shared semantics is what makes
+                // them byte-identical, unlike training.
+                remaining -= 1;
+                check_overloads(&state, &mut metrics, &mut was_overloaded);
+            }
         }
+    }
+    for lane in &mut req_latency {
+        metrics.request_latency.append(lane);
     }
     metrics.qnet_fwd_errors = policy.fwd_errors().saturating_sub(fwd_errors_baseline);
     let (fwds, rows, pads) = policy.batch_stats();
@@ -1058,6 +1203,79 @@ mod tests {
         assert_eq!(base.to_json().to_string(), flat.to_json().to_string());
         assert_eq!(base.cross_cluster_placements, 0);
         assert_eq!(base.shield_tree_escalations, 0);
+    }
+
+    fn serving_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            n_edges: 10,
+            cluster_size: 5,
+            model: ModelKind::Rnn,
+            iterations: 1,
+            pretrain_episodes: 20,
+            repetitions: 1,
+            serving: true,
+            request_rate: 0.05,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serving_runs_serve_requests_with_latency_accounting() {
+        let cfg = serving_cfg();
+        assert!(cfg.dynamic(), "serving must route through the event driver");
+        for m in Method::ALL {
+            let r = run_dynamic(&cfg, m, 5);
+            assert!(r.requests_served > 0, "{}: no request served", m.name());
+            assert_eq!(
+                r.request_latency.len(),
+                r.requests_served,
+                "{}: one latency sample per served request",
+                m.name()
+            );
+            assert!(r.request_latency.iter().all(|&l| l.is_finite() && l > 0.0), "{}", m.name());
+            assert!(r.jct.is_empty(), "{}: serving runs host no training jobs", m.name());
+            let p = r.request_summary().expect("served requests imply a summary");
+            assert!(p.p50 <= p.p99 && p.p99 <= p.p999, "{}", m.name());
+        }
+    }
+
+    #[test]
+    fn serving_runs_are_deterministic_and_training_is_untouched() {
+        let cfg = serving_cfg();
+        let a = run_dynamic(&cfg, Method::SroleD, 11);
+        let b = run_dynamic(&cfg, Method::SroleD, 11);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        // Training runs must not grow serving metrics.
+        let t = run_dynamic(&churn_cfg(), Method::SroleD, 11);
+        assert!(t.request_latency.is_empty());
+        assert_eq!(
+            (t.requests_served, t.requests_rejected, t.requests_failed, t.slo_violations),
+            (0, 0, 0, 0)
+        );
+    }
+
+    #[test]
+    fn zero_slo_flags_every_served_request() {
+        let mut cfg = serving_cfg();
+        cfg.slo_secs = 0.0;
+        let r = run_dynamic(&cfg, Method::SroleC, 3);
+        assert!(r.requests_served > 0);
+        assert_eq!(r.slo_violations, r.requests_served, "every positive latency violates SLO 0");
+    }
+
+    #[test]
+    fn serving_composes_with_churn_and_mobility() {
+        let mut cfg = serving_cfg();
+        cfg.failure_rate = 3.0;
+        cfg.rejoin_secs = 120.0;
+        cfg.mobility =
+            crate::net::MobilityModel::RandomWaypoint { speed_mps: 2.0, pause_secs: 0.0 };
+        cfg.mobility_tick_secs = 10.0;
+        let a = run_dynamic(&cfg, Method::SroleD, 9);
+        let b = run_dynamic(&cfg, Method::SroleD, 9);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert!(a.requests_served > 0, "churn + mobility must not starve the stream");
+        assert_eq!(a.requests_served, a.request_latency.len());
     }
 
     #[test]

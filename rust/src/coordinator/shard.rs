@@ -7,11 +7,12 @@
 //! which is exactly the granularity at which the paper's agents, shields
 //! and placements are confined:
 //!
-//! * **Lane-local events** (`JobArrival`, `IterEnd`, `BgStart`, `BgEnd`)
-//!   touch only their cluster's nodes — placements are always
-//!   within-cluster — so each lane owns a private event queue, RNG
-//!   stream, policy, shield and an O(cluster)-memory
-//!   [`ResourceState::for_cluster`] slice, and advances independently.
+//! * **Lane-local events** (`JobArrival`, `IterEnd`, `BgStart`, `BgEnd`,
+//!   and on serving runs `RequestArrival` / `RequestDone`) touch only
+//!   their cluster's nodes — placements are always within-cluster — so
+//!   each lane owns a private event queue, RNG stream, policy, shield
+//!   and an O(cluster)-memory [`ResourceState::for_cluster`] slice, and
+//!   advances independently.
 //! * **Cross-region events** (`Sample`, `ViewRefresh`, `NodeFail`,
 //!   `NodeJoin`, `MobilityTick`) live on a driver-owned queue.  Each
 //!   iteration the driver peeks the next cross-region time `T`, advances
@@ -30,6 +31,14 @@
 //! tests below).  `shards = 0` keeps the single-stream legacy driver
 //! bit-for-bit untouched; its interleaved draw order is a different (also
 //! deterministic) stream, so the two engines are separate baselines.
+//!
+//! **Serving runs are the exception**: with `workload = "serving"` no
+//! training wave ever fires, both engines share the same setup prefix,
+//! the request schedule comes off a dedicated fork, every per-request
+//! draw uses a private `(seed, request id)` stream, and neither engine
+//! breaks its loop early — so serving `RunMetrics` are byte-identical
+//! across `shards = 0` **and** every `shards >= 1`, unlike training
+//! (pinned by the `/serve` harness scenarios).
 //!
 //! Ties: a lane event at exactly the barrier time fires before the
 //! barrier event (lanes advance through `t <= T` first).  This rule is
@@ -78,7 +87,7 @@ use crate::net::mobility::DynamicTopology;
 use crate::obs;
 use crate::rl::{Policy, TabularQ};
 use crate::sched::{
-    central_wave_dynamic, marl_wave_dynamic, noisy_demand, reschedule_migrated,
+    central_wave_dynamic, marl_wave_dynamic, noisy_demand, place_request, reschedule_migrated,
     reschedule_stranded, DecisionConfig, DecisionMode, Stranded, WaveOutcome,
 };
 use crate::shield::{CentralShield, DecentralShield, ShieldTree};
@@ -86,9 +95,15 @@ use crate::sim::engine::SAMPLE_PERIOD_SECS;
 use crate::sim::event::{Event, EventKind, EventQueue};
 use crate::sim::{timing, ResourceState, TaskHandle};
 use crate::util::Rng;
+use crate::workload::serving::{generate_requests, Request};
 use crate::workload::{Workload, WorkloadSpec};
 
-use super::dynamic::{alive_head, build_waves, ClusterShield, Run, Wave, VIEW_REFRESH_SECS};
+use std::collections::BTreeMap;
+
+use super::dynamic::{
+    alive_head, build_waves, ClusterShield, LiveRequest, Run, Wave, REQ_STREAM_BASE, SERVING_FORK,
+    VIEW_REFRESH_SECS,
+};
 use super::{pretrain, Method};
 
 /// One shield region's independent slice of the simulation: private
@@ -109,7 +124,14 @@ struct Lane {
     bg_slots: Vec<Option<TaskHandle>>,
     /// Indexed by global job id; only this cluster's jobs are `Some`.
     runs: Vec<Option<Run>>,
-    /// This cluster's jobs not yet completed.
+    /// In-flight inference requests hosted in this cluster (serving
+    /// runs), keyed by global request id.
+    live: BTreeMap<usize, LiveRequest>,
+    /// Per tracked node (`state.node_ids()` order, base-relative): when
+    /// the node's serving decision pipe frees up — the queueing term of
+    /// the request latency account.
+    origin_busy: Vec<f64>,
+    /// This cluster's jobs and requests not yet completed.
     remaining: usize,
     /// Set when the lane's last job completes past the horizon — the
     /// lane-local analogue of the legacy driver's loop `break`.
@@ -135,6 +157,14 @@ struct Ctx<'a> {
     graph: &'a ModelGraph,
     workload: &'a Workload,
     waves: &'a [Wave],
+    /// Serving request table (empty on training runs); lane request
+    /// events index into it by global request id.
+    requests: &'a [Request],
+    /// Stale state view (paper §III) — frozen between barriers, so
+    /// lane-confined admission gates can read it while lanes advance.
+    view_demand: &'a [Resources],
+    /// The run seed: per-request private RNG streams derive from it.
+    seed: u64,
     cfg: &'a ExperimentConfig,
     method: Method,
     horizon: f64,
@@ -284,6 +314,63 @@ fn advance_lane_events(lane: &mut Lane, ctx: Ctx<'_>, until: f64) {
                 if let Some(h) = lane.bg_slots[bg].take() {
                     lane.state.release(h);
                 }
+                check_lane_overloads(lane, alpha);
+            }
+            EventKind::RequestArrival { req } => {
+                // Mirrors the legacy driver's handler exactly: the
+                // lane's state slice and the frozen stale view hold the
+                // same values for this cluster's nodes, and every RNG
+                // draw comes from the request's private stream.
+                let r = &ctx.requests[req];
+                let base = lane.state.base();
+                let queue_wait = (lane.origin_busy[r.origin - base] - ev.t).max(0.0);
+                let mut req_rng = Rng::with_stream(ctx.seed, REQ_STREAM_BASE + req as u64);
+                let out = {
+                    let shield = lane.shield.as_dyn();
+                    let policy: &mut dyn Policy = &mut lane.policy;
+                    place_request(
+                        ctx.dep, ctx.membership, &lane.state, &ctx.graph.layers[0],
+                        ctx.view_demand, req, r.origin, &r.demand, policy, shield,
+                        &ctx.cfg.reward, &mut req_rng,
+                    )
+                };
+                lane.metrics.collisions += out.collisions;
+                lane.metrics.shield_corrections += out.corrections;
+                let decision = out.sched_secs + out.shield_secs;
+                lane.origin_busy[r.origin - base] = ev.t + queue_wait + decision;
+                match out.target {
+                    None => {
+                        lane.metrics.requests_rejected += 1;
+                        lane.remaining -= 1;
+                    }
+                    Some(host) => {
+                        let actual = noisy_demand(&r.demand, &mut req_rng);
+                        let h = lane.state.place(host, r.demand, actual, true);
+                        let transfer = ctx.dep.topo.transfer_secs(r.origin, host, r.mb, 1)
+                            / lane.state.bw_share(r.origin).min(lane.state.bw_share(host));
+                        let service = r.service_secs
+                            * (r.demand.cpu / lane.state.cpu_share(host, r.demand.cpu)).max(1.0)
+                            * lane.state.mem_pressure(host);
+                        let latency = queue_wait + decision + transfer + service;
+                        lane.live.insert(req, LiveRequest { handle: h, host, latency });
+                        lane.queue.push(ev.t + latency, EventKind::RequestDone { req });
+                        check_lane_overloads(lane, alpha);
+                    }
+                }
+            }
+            EventKind::RequestDone { req } => {
+                // Already evicted by a mid-service host failure.
+                let Some(lr) = lane.live.remove(&req) else { continue };
+                lane.state.release(lr.handle);
+                lane.metrics.request_latency.push(lr.latency);
+                lane.metrics.requests_served += 1;
+                if lr.latency > ctx.cfg.slo_secs {
+                    lane.metrics.slo_violations += 1;
+                }
+                lane.metrics.makespan = lane.metrics.makespan.max(ev.t);
+                // Never sets `lane.done`: serving runs drain in both
+                // engines (see the module docs' serving exception).
+                lane.remaining -= 1;
                 check_lane_overloads(lane, alpha);
             }
             _ => unreachable!("cross-region event in a lane queue"),
@@ -444,6 +531,25 @@ fn sample_lane_phase(lane: &Lane) -> [Vec<f64>; 4] {
     [tasks, cpu, mem, bw]
 }
 
+/// Kill the lane's in-flight requests served by `victim` (mid-service
+/// host failure): open-loop clients never retry, and each orphaned
+/// `RequestDone` event later no-ops against the live map.  Runs between
+/// the background release and the strand scan, exactly where the legacy
+/// driver does it.
+fn fail_lane_requests(lane: &mut Lane, victim: NodeId) {
+    if lane.live.is_empty() {
+        return;
+    }
+    let lost: Vec<usize> =
+        lane.live.iter().filter(|(_, lr)| lr.host == victim).map(|(&id, _)| id).collect();
+    for id in lost {
+        let lr = lane.live.remove(&id).unwrap();
+        lane.state.release(lr.handle);
+        lane.metrics.requests_failed += 1;
+        lane.remaining -= 1;
+    }
+}
+
 /// Lane-confined phase of one batched single-victim `NodeFail`:
 /// everything the flat handler does after the membership mutation —
 /// shield update, background release, strand scan, reschedule,
@@ -481,6 +587,7 @@ fn fail_lane_phase(
             }
         }
     }
+    fail_lane_requests(lane, victim);
     let mut stranded: Vec<Stranded> = Vec::new();
     for (ji, run) in lane.runs.iter_mut().enumerate() {
         let Some(run) = run else { continue };
@@ -652,12 +759,25 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
     let graph = cfg.model.build();
     let spec = WorkloadSpec {
         model: cfg.model,
-        jobs_per_cluster: cfg.jobs_per_cluster,
+        // Serving: no training jobs — same override as the legacy
+        // driver, so the setup RNG prefixes stay engine-identical.
+        jobs_per_cluster: if cfg.serving { 0 } else { cfg.jobs_per_cluster },
         iterations: cfg.iterations,
         workload: cfg.workload,
         arrival: cfg.arrival.clone(),
     };
     let workload = Workload::generate(&mut rng, &dep, &spec, 500_000.0);
+
+    let horizon = cfg.iterations as f64 * crate::dnn::profile::TARGET_ITER_SECS * 2.5;
+
+    // Serving request schedule, forked at the exact stream position the
+    // legacy driver forks it (immediately after workload generation).
+    let requests: Vec<Request> = if cfg.serving {
+        let mut req_rng = rng.fork(SERVING_FORK);
+        generate_requests(&mut req_rng, &dep, &cfg.serving_spec(), &cfg.arrival, horizon)
+    } else {
+        Vec::new()
+    };
 
     // Same fork discipline as the legacy driver: mobility gets its own
     // stream only when enabled, pretraining always forks.
@@ -680,7 +800,6 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
 
     let mut membership = Membership::full(&dep);
     let n_clusters = dep.clusters.len();
-    let horizon = cfg.iterations as f64 * crate::dnn::profile::TARGET_ITER_SECS * 2.5;
 
     // Static super-shield grouping over the t = 0 deployment (draws no
     // RNG — the churn schedule below is untouched).  `None` keeps the
@@ -712,6 +831,10 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
 
     let waves = build_waves(&dep, &workload);
     let n_jobs = workload.dl_jobs.len();
+    let mut req_count = vec![0usize; n_clusters];
+    for r in &requests {
+        req_count[r.cluster] += 1;
+    }
 
     // Lane construction: fork one child RNG per lane in cluster order
     // (the only draws after this point are lane-local or handler-local),
@@ -740,7 +863,10 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 own_bg: Vec::new(),
                 bg_slots: Vec::new(),
                 runs: (0..n_jobs).map(|_| None).collect(),
-                remaining: workload.dl_jobs.iter().filter(|j| j.cluster == ci).count(),
+                live: BTreeMap::new(),
+                origin_busy: Vec::new(),
+                remaining: workload.dl_jobs.iter().filter(|j| j.cluster == ci).count()
+                    + req_count[ci],
                 done: false,
                 was_overloaded: Vec::new(),
                 metrics: RunMetrics::default(),
@@ -777,13 +903,17 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 .node_ids()
                 .map(|n| lane.state.actual_overloaded(n, cfg.reward.alpha))
                 .collect();
+            lane.origin_busy = vec![0.0; lane.state.n()];
             lane
         })
         .collect();
 
-    // Route arrival waves into their cluster's lane.
+    // Route arrival waves and serving requests into their cluster's lane.
     for (wi, w) in waves.iter().enumerate() {
         lanes[w.cluster].queue.push(w.t, EventKind::JobArrival { wave: wi });
+    }
+    for r in &requests {
+        lanes[r.cluster].queue.push(r.arrival, EventKind::RequestArrival { req: r.id });
     }
 
     // Stale state view for failure/migration handlers (paper §III).
@@ -806,6 +936,9 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                 graph: &graph,
                 workload: &workload,
                 waves: &waves,
+                requests: &requests,
+                view_demand: &view_demand,
+                seed,
                 cfg,
                 method,
                 horizon,
@@ -835,7 +968,13 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
         // in-batch rejoin pushes) always escalates to the flat serial
         // handlers below.
         if let Some(tree) = tree.as_ref() {
+            // Serving runs always escalate churn to the flat serial
+            // handlers: a mid-service host failure decrements a lane's
+            // `remaining`, so a later event in the same batch could see
+            // a stale `total_remaining` guard — the flat path re-reads
+            // it per event, exactly like the legacy driver.
             if cfg.blast_radius_m == 0.0
+                && !cfg.serving
                 && matches!(ev.kind, EventKind::NodeFail { .. } | EventKind::NodeJoin { .. })
             {
                 let lane_floor = lanes
@@ -1082,6 +1221,7 @@ pub fn run_sharded(cfg: &ExperimentConfig, method: Method, seed: u64) -> RunMetr
                             }
                         }
                     }
+                    fail_lane_requests(lane, victim);
                     let mut stranded: Vec<Stranded> = Vec::new();
                     for (ji, run) in lane.runs.iter_mut().enumerate() {
                         let Some(run) = run else { continue };
@@ -1430,6 +1570,55 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    fn serving_cfg(shards: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            n_edges: 10,
+            cluster_size: 5,
+            model: ModelKind::Rnn,
+            iterations: 1,
+            pretrain_episodes: 20,
+            repetitions: 1,
+            serving: true,
+            request_rate: 0.05,
+            failure_rate: 3.0,
+            rejoin_secs: 120.0,
+            shards,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serving_metrics_are_byte_identical_across_engines_and_shards() {
+        // The serving headline claim: unlike training, the legacy
+        // single-stream driver (shards = 0) and every sharded
+        // configuration produce bitwise-equal RunMetrics — under churn.
+        for m in [Method::Marl, Method::SroleD] {
+            let legacy = super::super::dynamic::run_dynamic(&serving_cfg(0), m, 11);
+            assert!(legacy.requests_served > 0, "{}: vacuous equivalence", m.name());
+            let legacy = legacy.to_json().to_string();
+            for shards in [1usize, 2, 8] {
+                let r = run_sharded(&serving_cfg(shards), m, 11).to_json().to_string();
+                assert_eq!(legacy, r, "{} diverges at shards={}", m.name(), shards);
+            }
+        }
+    }
+
+    #[test]
+    fn serving_byte_identity_survives_the_shield_tree() {
+        // Churn always escalates to the flat serial handlers on serving
+        // runs (a mid-service failure moves `remaining`), so the tree
+        // driver must still replay the legacy engine byte for byte.
+        let legacy = super::super::dynamic::run_dynamic(&serving_cfg(0), Method::SroleD, 13);
+        assert!(legacy.requests_served > 0);
+        let legacy = legacy.to_json().to_string();
+        for fanout in [1usize, 4] {
+            let mut cfg = serving_cfg(8);
+            cfg.tree_fanout = fanout;
+            let r = run_sharded(&cfg, Method::SroleD, 13).to_json().to_string();
+            assert_eq!(legacy, r, "serving diverges under tree_fanout={fanout}");
         }
     }
 

@@ -87,6 +87,9 @@ impl Scenario {
         if cfg.trace != TraceMode::Off {
             label.push_str(&format!("/tr{}", cfg.trace.name()));
         }
+        if cfg.serving {
+            label.push_str("/serve");
+        }
         Scenario { label, method, cfg }
     }
 }
@@ -366,6 +369,7 @@ pub fn write_bench_json(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workload::serving::RateShape;
 
     fn tiny_base() -> ExperimentConfig {
         ExperimentConfig {
@@ -803,6 +807,170 @@ mod tests {
         }
         assert!(failures > 0, "vacuous: no churn fired in any scenario");
         assert!(moves > 0, "vacuous: nothing moved in any scenario");
+    }
+
+    /// Serving harness base: two clusters (two lanes when sharded) under
+    /// churn + mobility, training waves suppressed by `serving = true`.
+    fn serving_base() -> ExperimentConfig {
+        let mut base = tiny_base();
+        base.n_edges = 10;
+        base.cluster_size = 5;
+        base.iterations = 1;
+        base.serving = true;
+        base.request_rate = 0.05;
+        base.failure_rate = 3.0;
+        base.rejoin_secs = 120.0;
+        base.mobility = MobilityModel::RandomWaypoint { speed_mps: 2.0, pause_secs: 0.0 };
+        base.mobility_tick_secs = 10.0;
+        base
+    }
+
+    #[test]
+    fn serving_sweeps_are_byte_identical_across_shards_and_trace_modes() {
+        // The serving acceptance criterion at harness altitude: unlike
+        // training (where the legacy driver and the sharded engine are
+        // pinned as separate references), serving runs no waves and
+        // draws its request table before the engines diverge, so
+        // shards = 0 and every sharded width must agree byte for byte —
+        // with or without the tracer armed — under churn + mobility.
+        // The serving knob must also tag the label.
+        let base = serving_base();
+        let sweep = |shards: usize, trace: TraceMode| {
+            let mut b = base.clone();
+            b.shards = shards;
+            b.trace = trace;
+            Sweep::new(b).methods(&[Method::Marl, Method::SroleD])
+        };
+        let reference = run_parallel(&sweep(0, TraceMode::Off).scenarios(), 2);
+        let (mut served, mut failures, mut moves) = (0usize, 0usize, 0usize);
+        for r in &reference {
+            assert!(r.scenario.label.ends_with("/serve"), "{}", r.scenario.label);
+            assert!(r.metrics.jct.is_empty(), "{}: serving must suppress waves", r.scenario.label);
+            served += r.metrics.requests_served;
+            failures += r.metrics.node_failures;
+            moves += r.metrics.mobility_moves;
+        }
+        assert!(served > 0, "vacuous: no request was ever served");
+        assert!(failures > 0, "vacuous: no churn fired");
+        assert!(moves > 0, "vacuous: nothing moved");
+        for &shards in &[1usize, 8] {
+            for mode in [TraceMode::Off, TraceMode::Profile, TraceMode::Full] {
+                let cell = run_parallel(&sweep(shards, mode).scenarios(), 2);
+                assert_eq!(reference.len(), cell.len());
+                for (a, b) in reference.iter().zip(&cell) {
+                    assert!(
+                        b.scenario.label.contains(&format!("/sh{shards}")),
+                        "{}",
+                        b.scenario.label
+                    );
+                    assert_eq!(
+                        a.metrics.to_json().to_string(),
+                        b.metrics.to_json().to_string(),
+                        "{}: serving diverged at shards={shards} trace={}",
+                        a.scenario.label,
+                        mode.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serving_trace_replay_is_byte_identical_across_thread_counts() {
+        // Real-trace replay: the trace offsets ARE each cluster's request
+        // schedule, and the same sweep must reproduce byte-identically
+        // whatever the harness thread count.  Offsets deliberately avoid
+        // the 60 s view-refresh / 600 s sample barriers so no request
+        // ties an engine barrier event.
+        let mut base = serving_base();
+        base.arrival = ArrivalProcess::Trace(vec![7.3, 13.9, 101.7, 250.1, 333.3, 487.9]);
+        let sw = Sweep::new(base)
+            .methods(&[Method::Marl, Method::SroleC, Method::SroleD, Method::Rl]);
+        let scenarios = sw.scenarios();
+        assert!(scenarios.iter().all(|s| s.cfg.dynamic()), "serving must be dynamic");
+        let serial = run_parallel(&scenarios, 1);
+        let parallel = run_parallel(&scenarios, 4);
+        assert_eq!(serial.len(), parallel.len());
+        let mut served = 0usize;
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.scenario.label, p.scenario.label);
+            assert!(s.scenario.label.ends_with("/serve"), "{}", s.scenario.label);
+            assert_eq!(
+                s.metrics.to_json().to_string(),
+                p.metrics.to_json().to_string(),
+                "{}: trace replay not byte-identical across thread counts",
+                s.scenario.label
+            );
+            served += s.metrics.requests_served;
+        }
+        assert!(served > 0, "vacuous: trace replay served nothing");
+    }
+
+    #[test]
+    fn zero_rate_serving_yields_empty_serving_metrics() {
+        // Degenerate input: a zero-rate generator produces no requests,
+        // so every serving metric must stay at its empty default — on
+        // the legacy driver and on the sharded engine alike.
+        let mut base = serving_base();
+        base.request_rate = 0.0;
+        for &shards in &[0usize, 8] {
+            let mut b = base.clone();
+            b.shards = shards;
+            let sw = Sweep::new(b).methods(&[Method::Marl, Method::SroleD]);
+            for r in &run_parallel(&sw.scenarios(), 2) {
+                assert!(r.scenario.label.ends_with("/serve"), "{}", r.scenario.label);
+                assert_eq!(r.metrics.requests_served, 0, "{}", r.scenario.label);
+                assert_eq!(r.metrics.requests_rejected, 0, "{}", r.scenario.label);
+                assert_eq!(r.metrics.requests_failed, 0, "{}", r.scenario.label);
+                assert_eq!(r.metrics.slo_violations, 0, "{}", r.scenario.label);
+                assert!(r.metrics.request_latency.is_empty(), "{}", r.scenario.label);
+                assert!(r.metrics.request_summary().is_none(), "{}", r.scenario.label);
+                assert!(r.metrics.jct.is_empty(), "{}: waves not suppressed", r.scenario.label);
+            }
+        }
+    }
+
+    #[test]
+    fn bursty_blast_requests_flow_through_the_serving_pipeline() {
+        // Degenerate input: requests arriving inside a Bursty
+        // correlated-blast window must be served like any other.
+        // Observable at metrics altitude: at equal base rate the 8×
+        // blast windows add ~56% more arrivals, so the bursty cell must
+        // serve strictly more than the constant cell — which can only
+        // happen if blast-window requests traverse the full pipeline —
+        // with the latency tail still ordered and SLO accounting sane.
+        let mut base = serving_base();
+        base.request_rate = 0.1;
+        base.failure_rate = 0.0; // isolate the rate shape: no churn losses
+        base.mobility = MobilityModel::Static;
+        let run = |shape: RateShape| {
+            let mut b = base.clone();
+            b.rate_shape = shape;
+            run_parallel(&Sweep::new(b).methods(&[Method::SroleD]).scenarios(), 1)
+        };
+        let constant = &run(RateShape::Constant)[0];
+        let bursty = &run(RateShape::Bursty)[0];
+        assert!(constant.metrics.requests_served > 0, "vacuous: constant cell served nothing");
+        assert!(
+            bursty.metrics.requests_served > constant.metrics.requests_served,
+            "blast windows invisible: {} vs {} served",
+            bursty.metrics.requests_served,
+            constant.metrics.requests_served
+        );
+        for r in [constant, bursty] {
+            let m = &r.metrics;
+            assert_eq!(m.request_latency.len(), m.requests_served, "{}", r.scenario.label);
+            let p = m.request_summary().expect("served requests must summarize");
+            assert!(p.p50 <= p.p99 && p.p99 <= p.p999, "{}: tail disordered", r.scenario.label);
+            assert!(m.slo_violations <= m.requests_served, "{}", r.scenario.label);
+        }
+        // Fixed seed → the bursty cell itself replays byte-identically.
+        let again = &run(RateShape::Bursty)[0];
+        assert_eq!(
+            bursty.metrics.to_json().to_string(),
+            again.metrics.to_json().to_string(),
+            "bursty serving run not deterministic"
+        );
     }
 
     #[test]

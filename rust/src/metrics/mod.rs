@@ -3,7 +3,7 @@
 //! utilization, computation-time overhead — plus action collisions.
 
 use crate::util::json::{obj, Json};
-use crate::util::stats::{mean_of, Summary};
+use crate::util::stats::{mean_of, Pcts, Summary};
 
 /// Raw metrics of one experiment run (one method × one configuration ×
 /// one seed).
@@ -63,6 +63,19 @@ pub struct RunMetrics {
     /// Layers placed on an alive boundary-pair neighbor in an adjacent
     /// cluster (`cross_cluster` opt-in; 0 when the knob is off).
     pub cross_cluster_placements: usize,
+    /// Per-request end-to-end serving latency (queue + decision +
+    /// transfer + service), pushed in cluster order at run end so both
+    /// event drivers emit the identical vector (serving workload only).
+    pub request_latency: Vec<f64>,
+    /// Requests admitted, placed, and completed.
+    pub requests_served: usize,
+    /// Requests refused by the admission gate (every candidate host
+    /// over the α view-overload threshold at decision time).
+    pub requests_rejected: usize,
+    /// Admitted requests lost in flight (host failed mid-service).
+    pub requests_failed: usize,
+    /// Served requests whose end-to-end latency exceeded the SLO.
+    pub slo_violations: usize,
     /// Per-(node, sample) task counts.
     pub tasks_per_device: Vec<f64>,
     /// Per-(node, sample) utilization per resource.
@@ -122,6 +135,12 @@ impl RunMetrics {
         self.mean_decision_secs()
     }
 
+    /// Request-latency percentiles of the serving workload (`None` when
+    /// no request completed — training runs, or full rejection).
+    pub fn request_summary(&self) -> Option<Pcts> {
+        Pcts::of(&self.request_latency)
+    }
+
     /// Serialize for `--json` output.
     pub fn to_json(&self) -> Json {
         let arr = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
@@ -146,6 +165,11 @@ impl RunMetrics {
             ("qnet_batch_pad_rows", Json::Num(self.qnet_batch_pad_rows as f64)),
             ("shield_tree_escalations", Json::Num(self.shield_tree_escalations as f64)),
             ("cross_cluster_placements", Json::Num(self.cross_cluster_placements as f64)),
+            ("request_latency", arr(&self.request_latency)),
+            ("requests_served", Json::Num(self.requests_served as f64)),
+            ("requests_rejected", Json::Num(self.requests_rejected as f64)),
+            ("requests_failed", Json::Num(self.requests_failed as f64)),
+            ("slo_violations", Json::Num(self.slo_violations as f64)),
             ("tasks_per_device", arr(&self.tasks_per_device)),
             ("util_cpu", arr(&self.util_cpu)),
             ("util_mem", arr(&self.util_mem)),
@@ -176,6 +200,11 @@ impl RunMetrics {
         self.qnet_batch_pad_rows += other.qnet_batch_pad_rows;
         self.shield_tree_escalations += other.shield_tree_escalations;
         self.cross_cluster_placements += other.cross_cluster_placements;
+        self.request_latency.extend_from_slice(&other.request_latency);
+        self.requests_served += other.requests_served;
+        self.requests_rejected += other.requests_rejected;
+        self.requests_failed += other.requests_failed;
+        self.slo_violations += other.slo_violations;
         self.tasks_per_device.extend_from_slice(&other.tasks_per_device);
         self.util_cpu.extend_from_slice(&other.util_cpu);
         self.util_mem.extend_from_slice(&other.util_mem);
@@ -210,6 +239,11 @@ mod tests {
             qnet_batch_pad_rows: 3,
             shield_tree_escalations: 2,
             cross_cluster_placements: 1,
+            request_latency: vec![0.5, 1.5, 6.0],
+            requests_served: 3,
+            requests_rejected: 1,
+            requests_failed: 1,
+            slo_violations: 1,
             tasks_per_device: vec![2.0, 3.0, 5.0],
             util_cpu: vec![0.5, 0.6],
             util_mem: vec![0.4, 0.5],
@@ -229,11 +263,26 @@ mod tests {
     }
 
     #[test]
+    fn request_summary_reports_percentiles() {
+        let m = sample();
+        let p = m.request_summary().unwrap();
+        assert_eq!(p.n, 3);
+        assert_eq!(p.p50, 1.5);
+        assert!(p.p999 > p.p50 && p.p999 <= 6.0);
+        assert!(RunMetrics::default().request_summary().is_none());
+    }
+
+    #[test]
     fn absorb_pools_samples() {
         let mut a = sample();
         let b = sample();
         a.absorb(&b);
         assert_eq!(a.jct.len(), 6);
+        assert_eq!(a.request_latency.len(), 6);
+        assert_eq!(a.requests_served, 6);
+        assert_eq!(a.requests_rejected, 2);
+        assert_eq!(a.requests_failed, 2);
+        assert_eq!(a.slo_violations, 2);
         assert_eq!(a.collisions, 8);
         assert_eq!(a.region_handoffs, 4);
         assert_eq!(a.correlated_failures, 2);
@@ -297,6 +346,11 @@ mod tests {
             qnet_batch_pad_rows: c(rng),
             shield_tree_escalations: c(rng),
             cross_cluster_placements: c(rng),
+            request_latency: v(rng),
+            requests_served: c(rng),
+            requests_rejected: c(rng),
+            requests_failed: c(rng),
+            slo_violations: c(rng),
             tasks_per_device: v(rng),
             util_cpu: v(rng),
             util_mem: v(rng),

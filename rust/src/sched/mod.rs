@@ -846,6 +846,131 @@ fn central_wave_impl(
     WaveOutcome { schedules, collisions, shield_corrections: 0 }
 }
 
+/// Outcome of one per-request serving decision.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestOutcome {
+    /// Chosen host; `None` when the admission gate refused the request
+    /// (every candidate's view-estimated post-placement utilization
+    /// exceeded α).
+    pub target: Option<NodeId>,
+    /// Scheduling-only latency (observation + policy evaluation).
+    pub sched_secs: f64,
+    /// Shield-check latency.
+    pub shield_secs: f64,
+    /// Pre-correction collisions (view-blind overload) of the proposal.
+    pub collisions: usize,
+    /// Shield corrections applied to the proposal.
+    pub corrections: usize,
+}
+
+/// One inference-request placement: the origin node (acting as its own
+/// agent) picks a host among its alive in-cluster candidates, gated by
+/// admission control and vetted by the shield.
+///
+/// The open-loop serving path deliberately mirrors [`reschedule_impl`]'s
+/// conventions, because both run *outside* the wave structure:
+///
+/// * Decisions read the driver's *stale* periodic view (`view_demand`,
+///   refreshed by `ViewRefresh` events), not live state — per-request
+///   placement is still a distributed decision on reported state.
+/// * The featurized state keeps zeroed owner-utilization slots and the
+///   recorded episode is NOT extended: serving a request is an
+///   infrastructure action, the RL reward closes over training
+///   decisions only.  For the same reason shield corrections do *not*
+///   call `Policy::notify_shielded` — the sharded engine runs per-lane
+///   policy clones, and a κ table update here would diverge from the
+///   single-stream driver's shared policy.
+/// * `layer` is a deterministic representative layer of the model graph
+///   (both drivers pass `&graph.layers[0]`), so featurization sees the
+///   served model's class while the request's own [`Resources`] drive
+///   admission, the shield check, and the committed placement.
+///
+/// Admission control: candidates whose view-estimated utilization after
+/// adding `demand` exceeds `params.alpha` on any resource are filtered
+/// out *before* the policy runs; an empty admissible set rejects the
+/// request outright (`target: None`) — under view-based overload the
+/// deployment sheds load instead of stacking it.
+#[allow(clippy::too_many_arguments)]
+pub fn place_request(
+    dep: &Deployment,
+    membership: &Membership,
+    state: &ResourceState,
+    layer: &Layer,
+    view_demand: &[Resources],
+    req_id: usize,
+    origin: NodeId,
+    demand: &Resources,
+    policy: &mut dyn Policy,
+    mut shield: Option<&mut dyn Shield>,
+    params: &RewardParams,
+    rng: &mut Rng,
+) -> RequestOutcome {
+    let mut cands: Vec<NodeId> = Vec::with_capacity(MAX_NEIGHBORS + 1);
+    marl_candidates_alive_into(dep, membership, origin, &mut cands);
+    // Observation cost covers every candidate the origin polls, whether
+    // or not the gate later admits it.
+    let obs_secs = cands.len() as f64 * OBS_SECS_PER_NODE;
+    // Admission gate on the stale view: would this request push the
+    // candidate past α on any resource, as far as the origin can see?
+    cands.retain(|&c| {
+        membership.is_alive(c)
+            && ResourceKind::ALL.iter().all(|&k| {
+                dep.nodes[c].caps.utilization(&view_demand[c].add(demand), k) <= params.alpha
+            })
+    });
+    if cands.is_empty() {
+        return RequestOutcome {
+            target: None,
+            sched_secs: obs_secs,
+            shield_secs: 0.0,
+            collisions: 0,
+            corrections: 0,
+        };
+    }
+    let view = View { base: 0, demand: view_demand.to_vec() };
+    let mut cviews: Vec<CandidateView> = Vec::with_capacity(cands.len());
+    candidate_views_into(dep, state, &view, origin, &cands, &mut cviews);
+    let mut state_scratch = [0.0f32; STATE_DIM];
+    state_vector_into(layer, [0.0; 3], &cviews, &mut state_scratch);
+    // Single-row decision: the batched wave machinery degenerates to one
+    // forward here, so requests always take the plain `choose` path and
+    // serving results are invariant under the `batch_decisions` knob.
+    let choice = policy.choose(layer, &state_scratch, &cviews, rng, true);
+    let target = cands[choice];
+    let sched_secs = obs_secs + cands.len() as f64 * POLICY_EVAL_SECS_PER_CAND;
+
+    let proposal = [ProposedAction {
+        idx: 0,
+        agent: origin,
+        job: req_id,
+        layer_id: 0,
+        demand: *demand,
+        target,
+    }];
+    let (final_target, collisions, corrections, shield_secs) = match shield.as_deref_mut() {
+        Some(s) => {
+            let out = {
+                let _sp = obs::span(obs::Phase::ShieldCheck);
+                s.check(&proposal, state, dep, params.alpha)
+            };
+            let mut t = target;
+            let n_corrections = out.corrections.len();
+            for (_, new_target) in out.corrections {
+                t = new_target;
+            }
+            (t, out.collisions, n_corrections, out.shield_secs)
+        }
+        None => (target, detect_collisions(&proposal, state, params.alpha), 0, 0.0),
+    };
+    RequestOutcome {
+        target: Some(final_target),
+        sched_secs,
+        shield_secs,
+        collisions,
+        corrections,
+    }
+}
+
 /// One stranded pipeline stage: a `(job, layer)` that must be re-placed
 /// by its owning agent — because its host failed, or because mobility
 /// carried the host out of the owner's transmission range.

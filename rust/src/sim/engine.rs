@@ -262,8 +262,12 @@ impl<'a> Executor<'a> {
                 | EventKind::ViewRefresh
                 | EventKind::NodeFail { .. }
                 | EventKind::NodeJoin { .. }
-                | EventKind::MobilityTick => {
-                    unreachable!("the static executor does not schedule churn/mobility events")
+                | EventKind::MobilityTick
+                | EventKind::RequestArrival { .. }
+                | EventKind::RequestDone { .. } => {
+                    unreachable!(
+                        "the static executor does not schedule churn/mobility/serving events"
+                    )
                 }
             }
         }

@@ -51,6 +51,12 @@ pub enum EventKind {
     /// position-derived structure refreshes (adjacency, link matrices,
     /// shield regions, candidate sets).
     MobilityTick,
+    /// Inference request `req` (an index into the driver's request
+    /// table) arrives at its origin node and asks for placement —
+    /// admission control, one shielded policy decision, then service.
+    RequestArrival { req: usize },
+    /// Inference request `req` finishes service and releases its host.
+    RequestDone { req: usize },
 }
 
 /// A scheduled event: fire time plus insertion sequence (the tie-break).

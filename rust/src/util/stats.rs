@@ -234,4 +234,52 @@ mod tests {
         let single = Pcts::of(&[4.0]).unwrap();
         assert_eq!((single.p50, single.p999), (4.0, 4.0));
     }
+
+    #[test]
+    fn pcts_empty_is_none_and_single_is_flat() {
+        assert_eq!(Pcts::of(&[]), None);
+        let p = Pcts::of(&[2.5]).unwrap();
+        assert_eq!(p.n, 1);
+        assert_eq!((p.p50, p.p90, p.p99, p.p999), (2.5, 2.5, 2.5, 2.5));
+    }
+
+    #[test]
+    fn pcts_all_equal_values_collapse() {
+        // A degenerate latency series (every request identical) must
+        // report that value at every percentile, with no interpolation
+        // drift.
+        for n in [2usize, 3, 17, 1000] {
+            let v = vec![0.125f64; n];
+            let p = Pcts::of(&v).unwrap();
+            assert_eq!(p.n, n);
+            assert_eq!((p.p50, p.p90, p.p99, p.p999), (0.125, 0.125, 0.125, 0.125));
+        }
+    }
+
+    #[test]
+    fn pcts_is_order_invariant() {
+        // `of` sorts internally: an unsorted (even adversarially
+        // reversed or interleaved) sample must summarize identically to
+        // its sorted twin, bit for bit.
+        let sorted: Vec<f64> = (1..=101).map(|i| i as f64 * 0.37).collect();
+        let mut reversed = sorted.clone();
+        reversed.reverse();
+        let mut interleaved = Vec::with_capacity(sorted.len());
+        for (i, &x) in sorted.iter().enumerate() {
+            if i % 2 == 0 {
+                interleaved.push(x);
+            } else {
+                interleaved.insert(0, x);
+            }
+        }
+        let p0 = Pcts::of(&sorted).unwrap();
+        for v in [&reversed, &interleaved] {
+            let p = Pcts::of(v).unwrap();
+            assert_eq!(p.n, p0.n);
+            assert_eq!(p.p50.to_bits(), p0.p50.to_bits());
+            assert_eq!(p.p90.to_bits(), p0.p90.to_bits());
+            assert_eq!(p.p99.to_bits(), p0.p99.to_bits());
+            assert_eq!(p.p999.to_bits(), p0.p999.to_bits());
+        }
+    }
 }

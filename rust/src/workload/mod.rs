@@ -9,6 +9,8 @@
 //! simultaneously."  Three DL jobs of the same model run per cluster,
 //! initiated by randomly chosen edge nodes.
 
+pub mod serving;
+
 use crate::cluster::{Deployment, NodeId, Resources};
 use crate::dnn::ModelKind;
 use crate::util::Rng;

@@ -1,0 +1,322 @@
+//! Open-loop inference-request generation: the "millions of users"
+//! serving workload (ROADMAP north star; Castellano et al.,
+//! arXiv:2301.13618 framing).
+//!
+//! Training jobs are a *closed* set the drivers schedule once per wave;
+//! serving is an *open loop*: requests keep arriving at a configured
+//! rate whether or not the deployment keeps up, which is exactly the
+//! regime where admission control and the shields' overload vetoes
+//! matter.  The whole schedule is drawn up-front from one dedicated RNG
+//! fork — both drivers (`coordinator::dynamic` and `coordinator::shard`)
+//! replay the identical request table, which is what keeps serving
+//! RunMetrics byte-identical across shard counts.
+//!
+//! Rate shapes are deterministic functions of simulated time; the
+//! non-constant shapes are sampled by Lewis–Shedler thinning (draw a
+//! Poisson stream at the peak rate, accept each point with probability
+//! `rate(t) / peak`), so a shape's schedule is reproducible from the
+//! seed alone.  [`ArrivalProcess::Trace`] bypasses the generator: the
+//! trace offsets *are* the per-cluster request schedule (real-trace
+//! replay through the same path the training arrivals already use).
+
+use crate::cluster::{Deployment, NodeId, Resources};
+use crate::util::Rng;
+use crate::workload::ArrivalProcess;
+
+/// Deterministic request-rate envelope over simulated time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RateShape {
+    /// Flat `rate` requests/second per cluster.
+    Constant,
+    /// One sinusoidal "day" across the horizon: `rate · (1 + 0.8·sin)`,
+    /// peaking at 1.8× and troughing at 0.2× the mean.
+    Diurnal,
+    /// Flat base with periodic correlated blasts: 8% of every quarter
+    /// horizon runs at [`BURST_MULT`]× the base rate.
+    Bursty,
+}
+
+/// Burst multiplier of [`RateShape::Bursty`] windows.
+pub const BURST_MULT: f64 = 8.0;
+/// Diurnal amplitude (fraction of the mean rate).
+pub const DIURNAL_AMP: f64 = 0.8;
+/// Fraction of each quarter-horizon a burst window covers.
+const BURST_FRAC: f64 = 0.08;
+
+impl RateShape {
+    /// Instantaneous rate at simulated time `t` for mean rate `base`.
+    pub fn rate_at(&self, base: f64, t: f64, horizon: f64) -> f64 {
+        let h = horizon.max(1e-9);
+        match self {
+            RateShape::Constant => base,
+            RateShape::Diurnal => {
+                base * (1.0 + DIURNAL_AMP * (std::f64::consts::TAU * t / h).sin())
+            }
+            RateShape::Bursty => {
+                if Self::in_burst(t, h) {
+                    base * BURST_MULT
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// Whether `t` falls inside a correlated-blast window.
+    pub fn in_burst(t: f64, horizon: f64) -> bool {
+        let quarter = horizon.max(1e-9) / 4.0;
+        (t / quarter).fract() < BURST_FRAC
+    }
+
+    /// Upper bound of `rate_at` over the horizon (the thinning envelope).
+    pub fn peak(&self, base: f64) -> f64 {
+        match self {
+            RateShape::Constant => base,
+            RateShape::Diurnal => base * (1.0 + DIURNAL_AMP),
+            RateShape::Bursty => base * BURST_MULT,
+        }
+    }
+
+    /// Short tag for scenario labels and the `rate_shape` config knob.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RateShape::Constant => "const",
+            RateShape::Diurnal => "diurnal",
+            RateShape::Bursty => "bursty",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RateShape> {
+        match s.to_ascii_lowercase().as_str() {
+            "const" | "constant" => Some(RateShape::Constant),
+            "diurnal" => Some(RateShape::Diurnal),
+            "bursty" | "burst" => Some(RateShape::Bursty),
+            _ => None,
+        }
+    }
+}
+
+/// Serving-workload knobs (threaded from `ExperimentConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct ServingSpec {
+    pub shape: RateShape,
+    /// Mean request rate per cluster, requests/second.
+    pub rate: f64,
+    /// End-to-end latency objective; a served request whose total latency
+    /// exceeds this counts as one SLO violation.
+    pub slo_secs: f64,
+}
+
+impl Default for ServingSpec {
+    fn default() -> Self {
+        ServingSpec { shape: RateShape::Constant, rate: 0.5, slo_secs: 5.0 }
+    }
+}
+
+/// One inference request: arrives at `arrival` on `origin`, needs one
+/// model replica placed somewhere in its own cluster.  Requests are
+/// cluster-local by construction — in the sharded engine they are
+/// lane-local events, never barrier work.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub cluster: usize,
+    pub origin: NodeId,
+    pub arrival: f64,
+    /// Estimated resident demand of serving this request.
+    pub demand: Resources,
+    /// Nominal service time on an uncontended host.
+    pub service_secs: f64,
+    /// Request + response payload priced over the origin→host link.
+    pub mb: f64,
+}
+
+/// Draw the full request schedule: cluster-major, time-ascending within
+/// each cluster, ids sequential in emission order.  `ArrivalProcess::
+/// Trace` replays its offsets verbatim as each cluster's schedule (one
+/// request per offset); every other arrival process uses the open-loop
+/// `spec.shape` generator.  A non-positive rate yields an empty
+/// schedule.
+pub fn generate_requests(
+    rng: &mut Rng,
+    dep: &Deployment,
+    spec: &ServingSpec,
+    arrival: &ArrivalProcess,
+    horizon: f64,
+) -> Vec<Request> {
+    let mut out = Vec::new();
+    for (ci, cluster) in dep.clusters.iter().enumerate() {
+        match arrival {
+            ArrivalProcess::Trace(offsets) => {
+                for &t in offsets {
+                    if t < horizon {
+                        push_request(rng, &mut out, ci, &cluster.members, t);
+                    }
+                }
+            }
+            _ => {
+                let peak = spec.shape.peak(spec.rate);
+                if peak <= 0.0 {
+                    continue;
+                }
+                let mut t = 0.0f64;
+                loop {
+                    t += rng.exp(peak);
+                    if t >= horizon {
+                        break;
+                    }
+                    // Thinning: accept with probability rate(t)/peak.
+                    // The uniform is drawn unconditionally so Constant
+                    // (where it always accepts) stays on the same RNG
+                    // stream as the shaped variants.
+                    let u = rng.range_f64(0.0, 1.0);
+                    if u * peak <= spec.shape.rate_at(spec.rate, t, horizon) {
+                        push_request(rng, &mut out, ci, &cluster.members, t);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Emit one request at `t` in cluster `ci` (origin, footprint, and
+/// payload drawn from `rng`).  Inference footprints are small next to a
+/// training layer: a model replica answering one query, not a pipeline
+/// stage.
+fn push_request(rng: &mut Rng, out: &mut Vec<Request>, ci: usize, members: &[NodeId], t: f64) {
+    let origin = *rng.choose(members);
+    let demand = Resources {
+        cpu: rng.range_f64(0.05, 0.20),
+        mem: rng.range_f64(32.0, 128.0),
+        bw: rng.range_f64(1.0, 8.0),
+    };
+    let service_secs = rng.range_f64(0.05, 0.50);
+    let mb = rng.range_f64(0.2, 2.0);
+    out.push(Request {
+        id: out.len(),
+        cluster: ci,
+        origin,
+        arrival: t,
+        demand,
+        service_secs,
+        mb,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Deployment, CONTAINER_PROFILE};
+
+    fn dep() -> Deployment {
+        let mut rng = Rng::new(5);
+        Deployment::generate(&mut rng, 25, 5, &CONTAINER_PROFILE)
+    }
+
+    fn gen(shape: RateShape, rate: f64, seed: u64) -> Vec<Request> {
+        let d = dep();
+        let spec = ServingSpec { shape, rate, slo_secs: 5.0 };
+        let mut rng = Rng::new(seed);
+        generate_requests(&mut rng, &d, &spec, &ArrivalProcess::default(), 1000.0)
+    }
+
+    #[test]
+    fn identical_seed_identical_schedule() {
+        let a = gen(RateShape::Diurnal, 0.2, 42);
+        let b = gen(RateShape::Diurnal, 0.2, 42);
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.cluster, y.cluster);
+            assert_eq!(x.origin, y.origin);
+            assert_eq!(x.arrival.to_bits(), y.arrival.to_bits());
+            assert_eq!(x.service_secs.to_bits(), y.service_secs.to_bits());
+            assert_eq!(x.demand.cpu.to_bits(), y.demand.cpu.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_rate_generates_nothing() {
+        assert!(gen(RateShape::Constant, 0.0, 1).is_empty());
+        assert!(gen(RateShape::Bursty, 0.0, 1).is_empty());
+    }
+
+    #[test]
+    fn requests_are_cluster_local_ordered_and_ided() {
+        let reqs = gen(RateShape::Constant, 0.3, 7);
+        let d = dep();
+        assert!(!reqs.is_empty());
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i, "ids must be sequential in emission order");
+            assert!(d.clusters[r.cluster].members.contains(&r.origin));
+            assert!(r.arrival >= 0.0 && r.arrival < 1000.0);
+            assert!(r.service_secs > 0.0 && r.mb > 0.0);
+        }
+        // Cluster-major, time-ascending within each cluster.
+        for w in reqs.windows(2) {
+            assert!(
+                w[0].cluster < w[1].cluster
+                    || (w[0].cluster == w[1].cluster && w[0].arrival < w[1].arrival)
+            );
+        }
+    }
+
+    #[test]
+    fn trace_replays_offsets_per_cluster() {
+        let d = dep();
+        let spec = ServingSpec::default();
+        let mut rng = Rng::new(3);
+        let offsets = vec![1.0, 30.0, 90.0, 2000.0];
+        let reqs = generate_requests(
+            &mut rng,
+            &d,
+            &spec,
+            &ArrivalProcess::Trace(offsets.clone()),
+            1000.0,
+        );
+        // One request per in-horizon offset per cluster.
+        assert_eq!(reqs.len(), 3 * d.clusters.len());
+        for ci in 0..d.clusters.len() {
+            let times: Vec<f64> =
+                reqs.iter().filter(|r| r.cluster == ci).map(|r| r.arrival).collect();
+            assert_eq!(times, vec![1.0, 30.0, 90.0]);
+        }
+    }
+
+    #[test]
+    fn diurnal_peak_half_outweighs_trough_half() {
+        let reqs = gen(RateShape::Diurnal, 0.5, 11);
+        // sin > 0 over the first half horizon: the peak half must carry
+        // clearly more arrivals than the trough half.
+        let first: usize = reqs.iter().filter(|r| r.arrival < 500.0).count();
+        let second = reqs.len() - first;
+        assert!(first > second + second / 2, "diurnal shape invisible: {first} vs {second}");
+    }
+
+    #[test]
+    fn bursty_windows_are_denser_than_baseline() {
+        let reqs = gen(RateShape::Bursty, 0.5, 13);
+        let horizon = 1000.0;
+        let in_burst =
+            reqs.iter().filter(|r| RateShape::in_burst(r.arrival, horizon)).count() as f64;
+        let outside = reqs.len() as f64 - in_burst;
+        // Burst windows cover 8% of the horizon at 8x rate: per-second
+        // density inside must far exceed outside.
+        let dens_in = in_burst / (horizon * BURST_FRAC);
+        let dens_out = outside / (horizon * (1.0 - BURST_FRAC));
+        assert!(dens_in > 3.0 * dens_out, "burst density {dens_in} vs {dens_out}");
+    }
+
+    #[test]
+    fn rate_shape_labels_and_parse_roundtrip() {
+        for s in [RateShape::Constant, RateShape::Diurnal, RateShape::Bursty] {
+            assert_eq!(RateShape::parse(s.label()), Some(s));
+        }
+        assert_eq!(RateShape::parse("nope"), None);
+        assert_eq!(RateShape::Constant.peak(2.0), 2.0);
+        assert!(RateShape::Diurnal.peak(2.0) > 2.0);
+        assert_eq!(RateShape::Bursty.peak(2.0), 2.0 * BURST_MULT);
+    }
+}

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate: release build + full test suite.
+#
+# This is the ROADMAP's "tier-1" bar and the single entry point CI and
+# humans share.  It fails LOUDLY when the Rust toolchain is missing
+# instead of skipping silently — a container without cargo must show up
+# as a red gate, not as a quietly unverified PR (PRs 5–9 shipped from
+# exactly such a container; see ROADMAP.md "Verification status").
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "FATAL: tier-1 gate cannot run — cargo is not on PATH." >&2
+    echo "Install the Rust toolchain (https://rustup.rs) and re-run" >&2
+    echo "scripts/verify.sh.  Do not merge on a silently skipped gate." >&2
+    exit 1
+fi
+
+cargo build --release
+cargo test -q
